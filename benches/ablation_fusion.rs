@@ -1,0 +1,127 @@
+//! Ablation — fusion communication: message count vs fused-chunk size
+//! for the dense ZeRO-3 gather, measured on the real mesh (op counts,
+//! bytes) and priced with a per-message software-latency model (the
+//! quantity the paper's §2.3 optimizes).
+//!
+//! Also covers gradient buckets: bucket capacity vs number of
+//! collectives per backward pass.
+//!
+//! `cargo bench --bench ablation_fusion`.
+
+use semoe::comm::{FusionBuffer, GradientBuckets, Mesh};
+use semoe::metrics::Report;
+
+/// The dense parameter layout of one 12-layer model (tensor sizes in
+/// elements), flattened: 14 dense tensors per layer.
+fn dense_layout() -> Vec<(String, usize)> {
+    let h = 256usize;
+    let mut v = Vec::new();
+    for l in 0..12 {
+        for (n, len) in [
+            ("ln1_s", h), ("ln1_b", h),
+            ("wq", h * h), ("bq", h), ("wk", h * h), ("bk", h),
+            ("wv", h * h), ("bv", h), ("wo", h * h), ("bo", h),
+            ("ln2_s", h), ("ln2_b", h),
+            ("router_w", h * 8), ("router_b", 8),
+        ] {
+            v.push((format!("l{}.{}", l, n), len));
+        }
+    }
+    v
+}
+
+fn main() {
+    let mut rep = Report::new("ablation_fusion");
+    let layout = dense_layout();
+    let total: usize = layout.iter().map(|(_, l)| l).sum();
+
+    // ---- parameter fusion: chunk-size sweep
+    let msg_lat = 30e-6; // per-collective software latency
+    let wire_bw = 25e9; // bytes/s
+    let t = rep.table(
+        &format!("parameter fusion ({} tensors, {} elements total)", layout.len(), total),
+        &["max chunk elems", "messages", "software ms", "wire ms", "total ms", "vs per-tensor"],
+    );
+    let per_tensor_total = layout.len() as f64 * msg_lat + (total * 4) as f64 / wire_bw;
+    for max_chunk in [usize::MAX, 1 << 22, 1 << 20, 1 << 16, 1 << 12] {
+        let mut fb = FusionBuffer::new();
+        for (n, l) in &layout {
+            fb.register(n, *l);
+        }
+        let chunks = fb.chunked(max_chunk.min(fb.len()));
+        let n_msgs = chunks.len();
+        let software = n_msgs as f64 * msg_lat;
+        let wire = (total * 4) as f64 / wire_bw;
+        rep.row(
+            t,
+            vec![
+                if max_chunk == usize::MAX { "∞ (one msg)".into() } else { format!("{}", max_chunk) },
+                n_msgs.to_string(),
+                format!("{:.3}", software * 1e3),
+                format!("{:.3}", wire * 1e3),
+                format!("{:.3}", (software + wire) * 1e3),
+                format!("{:.2}x", per_tensor_total / (software + wire)),
+            ],
+        );
+    }
+    rep.row(
+        t,
+        vec![
+            "per-tensor (baseline)".into(),
+            layout.len().to_string(),
+            format!("{:.3}", layout.len() as f64 * msg_lat * 1e3),
+            format!("{:.3}", (total * 4) as f64 / wire_bw * 1e3),
+            format!("{:.3}", per_tensor_total * 1e3),
+            "1.00x".into(),
+        ],
+    );
+
+    // ---- gradient buckets: capacity sweep, real mesh collective count
+    let t2 = rep.table(
+        "gradient buckets (2-rank mesh, real allreduce count)",
+        &["bucket capacity", "buckets", "collectives/pass"],
+    );
+    for cap in [usize::MAX, 1 << 20, 1 << 18, 1 << 14] {
+        let mut gb = GradientBuckets::new(cap.min(total));
+        for (n, l) in &layout {
+            gb.register(n, *l);
+        }
+        let n_buckets = gb.n_buckets();
+        // run a real pass over the mesh and count ops
+        let handles = Mesh::new(2);
+        let layout2 = layout.clone();
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                let layout = layout2.clone();
+                std::thread::spawn(move || {
+                    let mut gb = GradientBuckets::new(cap.min(layout.iter().map(|(_, l)| l).sum()));
+                    for (n, l) in &layout {
+                        gb.register(n, *l);
+                    }
+                    gb.start_pass();
+                    for (n, l) in layout.iter().rev() {
+                        if let Some(ready) = gb.deposit(n, &vec![1.0f32; *l]) {
+                            let mut fused = ready.data;
+                            h.all_reduce_sum(&mut fused);
+                        }
+                    }
+                    h.stats().ops
+                })
+            })
+            .collect();
+        let ops = joins.into_iter().map(|j| j.join().unwrap()).max().unwrap();
+        rep.row(
+            t2,
+            vec![
+                if cap == usize::MAX { "∞".into() } else { format!("{}", cap) },
+                n_buckets.to_string(),
+                ops.to_string(),
+            ],
+        );
+    }
+    rep.note("fewer, larger messages amortize per-collective latency; buckets trade memory \
+              for deterministic aggregation order (§2.3)");
+    println!("{}", rep.to_markdown());
+    rep.save(std::path::Path::new("reports")).expect("write report");
+}

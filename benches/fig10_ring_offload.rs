@@ -1,0 +1,103 @@
+//! Figure 10 — ring-memory offload: inference performance w/ and w/o
+//! overlapped offloading, plus the compute-vs-copy breakdown and the
+//! device-memory saving.
+//!
+//! Two parts:
+//!   1. REAL execution: the `deep` (12-layer) engine with a throttled
+//!      copy stream, in resident / ring(K) / blocking(K=1) modes — the
+//!      same code path a GPU deployment would run.
+//!   2. Paper scale: the 58.2B / 32-expert model on 16×A100-40G via the
+//!      pipeline-makespan simulator, including the K ablation.
+//!
+//! `cargo bench --bench fig10_ring_offload`.
+
+use std::rc::Rc;
+
+use semoe::config::presets::{cluster_for_gpus, fig10_model};
+use semoe::infer::{InferMode, InferenceEngine};
+use semoe::metrics::Report;
+use semoe::runtime::{HostTensor, ModelArtifacts};
+use semoe::sim::simulate_ring_offload;
+use semoe::util::Rng;
+
+fn measured(rep: &mut Report) {
+    let arts = Rc::new(ModelArtifacts::load("deep").expect("deep artifacts"));
+    let model = arts.preset.clone();
+    let mut rng = Rng::new(5);
+    let toks: Vec<i32> = (0..model.batch_size * model.seq_len)
+        .map(|_| rng.below(model.vocab_size) as i32)
+        .collect();
+    let batch = HostTensor::from_i32(&[model.batch_size, model.seq_len], toks);
+
+    // Throttle the copy stream to a "PCIe" that makes copies comparable
+    // to this substrate's per-layer compute (~few ms).
+    let layer_bytes = model.param_counts().per_layer as f64 * 4.0;
+    let throttle = Some(layer_bytes / 4e-3); // ≈4 ms per layer copy
+
+    let t = rep.table(
+        "measured (deep preset, 12 layers, throttled copy stream)",
+        &["mode", "pass ms", "compute ms", "copy ms", "stall ms", "device weights MB"],
+    );
+    let reps = 4;
+    for (name, mode) in [
+        ("resident", InferMode::Resident),
+        ("ring K=4", InferMode::Ring { k: 4 }),
+        ("ring K=2", InferMode::Ring { k: 2 }),
+        ("blocking K=1", InferMode::Ring { k: 1 }),
+    ] {
+        let thr = if matches!(mode, InferMode::Resident) { None } else { throttle };
+        let mut engine = InferenceEngine::new(arts.clone(), mode, 7, thr).expect("engine");
+        let _ = engine.forward(&batch).expect("warmup");
+        engine.timing = Default::default();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let _ = engine.forward(&batch).expect("forward");
+        }
+        let pass = t0.elapsed().as_secs_f64() / reps as f64;
+        let tm = engine.timing;
+        rep.row(
+            t,
+            vec![
+                name.to_string(),
+                format!("{:.1}", pass * 1e3),
+                format!("{:.1}", tm.compute_secs / reps as f64 * 1e3),
+                format!("{:.1}", tm.copy_secs / reps as f64 * 1e3),
+                format!("{:.1}", tm.stall_secs / reps as f64 * 1e3),
+                format!("{:.1}", engine.device_weight_bytes() as f64 / 1e6),
+            ],
+        );
+    }
+}
+
+fn paper_scale(rep: &mut Report) {
+    let m = fig10_model();
+    let mut cl = cluster_for_gpus(16);
+    cl.gpu_mem = 40 * (1 << 30); // the paper's A100-40G testbed
+    let t = rep.table(
+        "paper scale (58.2B, 32 experts, 16×A100-40G, simulated)",
+        &["K", "resident ms", "ring ms", "blocking ms", "ring overhead", "mem GB (resident→ring)"],
+    );
+    for k in [1usize, 2, 4, 8] {
+        let r = simulate_ring_offload(&m, &cl, k);
+        rep.row(
+            t,
+            vec![
+                k.to_string(),
+                format!("{:.1}", r.t_resident * 1e3),
+                format!("{:.1}", r.t_ring * 1e3),
+                format!("{:.1}", r.t_blocking * 1e3),
+                format!("{:.1}%", (r.t_ring / r.t_resident - 1.0) * 100.0),
+                format!("{:.1} → {:.1}", r.mem_resident / 1e9, r.mem_ring / 1e9),
+            ],
+        );
+    }
+    rep.note("paper: overlapped offload ≈ unaffected performance, ≥30% less GPU memory");
+}
+
+fn main() {
+    let mut rep = Report::new("fig10_ring_offload");
+    measured(&mut rep);
+    paper_scale(&mut rep);
+    println!("{}", rep.to_markdown());
+    rep.save(std::path::Path::new("reports")).expect("write report");
+}

@@ -1,0 +1,100 @@
+//! Micro-benchmarks of the runtime hot path: per-artifact execute times
+//! on the `small` and `deep` presets, plus the H2D staging cost. This is
+//! the baseline/after instrument of the §Perf pass (EXPERIMENTS.md).
+//!
+//! `cargo bench --bench micro_runtime`.
+
+use std::rc::Rc;
+
+use semoe::metrics::Report;
+use semoe::runtime::{HostTensor, ModelArtifacts};
+use semoe::util::stats::Summary;
+use semoe::util::Rng;
+
+fn bench_artifact(arts: &ModelArtifacts, name: &str, reps: usize) -> (f64, f64, usize) {
+    let exe = arts.load_exe(name).expect(name);
+    let mut rng = Rng::new(42);
+    let inputs: Vec<HostTensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|s| match s.dtype {
+            semoe::runtime::DType::F32 => HostTensor::randn(&s.shape, 0.05, &mut rng),
+            semoe::runtime::DType::I32 => {
+                let v = (0..s.numel()).map(|_| rng.below(16) as i32).collect();
+                HostTensor::from_i32(&s.shape, v)
+            }
+        })
+        .collect();
+    let in_bytes: usize = inputs.iter().map(|t| t.byte_len()).sum();
+    let _ = exe.run(&inputs).expect("warmup");
+    let mut s = Summary::new();
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let _ = exe.run(&inputs).expect("run");
+        s.add(t0.elapsed().as_secs_f64());
+    }
+    (s.mean(), s.std(), in_bytes)
+}
+
+fn main() {
+    let mut rep = Report::new("micro_runtime");
+    for preset in ["small", "deep"] {
+        let arts = Rc::new(ModelArtifacts::load(preset).expect("artifacts"));
+        let t = rep.table(
+            &format!("artifact execute times — preset '{}'", preset),
+            &["artifact", "mean ms", "std ms", "input bytes"],
+        );
+        let mut names = arts.artifact_names();
+        names.retain(|n| n != "train_step" && n != "fwd_loss"); // benched separately below
+        for name in names {
+            let reps = 10;
+            let (mean, std, bytes) = bench_artifact(&arts, &name, reps);
+            rep.row(
+                t,
+                vec![
+                    name.clone(),
+                    format!("{:.3}", mean * 1e3),
+                    format!("{:.3}", std * 1e3),
+                    format!("{}", bytes),
+                ],
+            );
+        }
+        if arts.has("train_step") {
+            let (mean, std, bytes) = bench_artifact(&arts, "train_step", 5);
+            rep.row(
+                t,
+                vec![
+                    "train_step".into(),
+                    format!("{:.3}", mean * 1e3),
+                    format!("{:.3}", std * 1e3),
+                    format!("{}", bytes),
+                ],
+            );
+        }
+    }
+
+    // H2D staging cost (Literal creation + buffer_from_host).
+    let arts = ModelArtifacts::load("deep").expect("artifacts");
+    let exe = arts.load_exe("layer_fwd").expect("layer_fwd");
+    let mut rng = Rng::new(7);
+    let big = HostTensor::randn(&[1 << 20], 1.0, &mut rng); // 4 MB
+    let mut s = Summary::new();
+    for _ in 0..20 {
+        let t0 = std::time::Instant::now();
+        let buf = exe.to_device(&big).expect("to_device");
+        s.add(t0.elapsed().as_secs_f64());
+        drop(buf);
+    }
+    let t = rep.table("H2D staging (4 MB tensor)", &["op", "mean ms", "GB/s"]);
+    rep.row(
+        t,
+        vec![
+            "to_device".into(),
+            format!("{:.3}", s.mean() * 1e3),
+            format!("{:.2}", 4e6 / s.mean() / 1e9),
+        ],
+    );
+    println!("{}", rep.to_markdown());
+    rep.save(std::path::Path::new("reports")).expect("write report");
+}

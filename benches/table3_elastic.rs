@@ -1,0 +1,79 @@
+//! Table 3 — elastic MoE training on the UFO multi-task loads
+//! (512/256/128/128): load-imbalanced one-GPU-per-task vs the elastic
+//! 4/2/1/1 placement. Reports the analytic cask-effect model (pure +
+//! fixed-overhead-calibrated) and, when enough cores exist, the
+//! thread-emulated measurement. `cargo bench --bench table3_elastic`.
+
+use semoe::config::presets::table3_setup;
+use semoe::metrics::Report;
+use semoe::train::elastic::simulate_throughput;
+use semoe::train::{ElasticPlan, TaskLoad};
+
+fn main() {
+    let setup = table3_setup();
+    let tasks: Vec<TaskLoad> = setup
+        .task_batches
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| TaskLoad { name: format!("task{}", i + 1), batch: b })
+        .collect();
+    let base = ElasticPlan::one_per_task(&tasks);
+    let bal = ElasticPlan::balance(&tasks, 8);
+    assert_eq!(bal.gpus_per_task, setup.balanced_gpus_per_task);
+
+    let unit = 1e-3;
+    let fixed = 153.5 * unit; // calibration: see elastic.rs tests
+
+    let mut rep = Report::new("table3_elastic");
+    let t = rep.table(
+        "elastic MoE training (UFO, batches 512/256/128/128)",
+        &["placement", "GPUs/task", "imbalance", "total samples/s", "per-card", "per-card (paper)"],
+    );
+    for (name, plan, paper) in [
+        ("load imbalance", &base, setup.paper_imbalanced_speed_per_card),
+        ("load balance (elastic)", &bal, setup.paper_balanced_speed_per_card),
+    ] {
+        let (total, per) = plan.throughput_with(unit, fixed);
+        rep.row(
+            t,
+            vec![
+                name.to_string(),
+                format!("{:?}", plan.gpus_per_task),
+                format!("{:.2}", plan.imbalance()),
+                format!("{:.1}", total),
+                format!("{:.1}", per),
+                format!("{:.1}", paper),
+            ],
+        );
+    }
+    let (_, pb) = base.throughput_with(unit, fixed);
+    let (_, pe) = bal.throughput_with(unit, fixed);
+    rep.note(&format!(
+        "per-card speedup {:.1}% (paper: +18.2%); pure cask-effect upper bound: {:.0}%",
+        (pe / pb - 1.0) * 100.0,
+        {
+            let (_, a) = base.throughput(unit);
+            let (_, b) = bal.throughput(unit);
+            (b / a - 1.0) * 100.0
+        }
+    ));
+
+    // Thread-emulated measurement (meaningful only with >= 8 cores).
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    if cores >= bal.total_gpus() {
+        let (_, mb) = simulate_throughput(&base, 20e-6, 10);
+        let (_, me) = simulate_throughput(&bal, 20e-6, 10);
+        rep.note(&format!(
+            "measured (threaded, {} cores): per-card {:.1} → {:.1} (+{:.1}%)",
+            cores, mb, me, (me / mb - 1.0) * 100.0
+        ));
+    } else {
+        rep.note(&format!(
+            "threaded emulation skipped: {} core(s) < {} emulated GPUs (threads would timeshare)",
+            cores,
+            bal.total_gpus()
+        ));
+    }
+    println!("{}", rep.to_markdown());
+    rep.save(std::path::Path::new("reports")).expect("write report");
+}

@@ -1,0 +1,141 @@
+//! End-to-end validation driver (DESIGN.md §End-to-end validation):
+//! train the ~100M-parameter `base` MoE transformer (4 layers × 48
+//! experts, d=256) for a few hundred steps on the synthetic Zipf+bigram
+//! corpus through the full stack, logging the loss curve and writing
+//! `reports/e2e_train_moe_gpt.{md,json}` for EXPERIMENTS.md.
+//!
+//!     cargo run --release --example train_moe_gpt -- --steps 300
+//!
+//! Flags: --steps N (default 200), --lr F (1e-3), --preset P (base),
+//!        --resident (fused-train_step trainer instead of the default
+//!        hierarchical-offload trainer), --ckpt DIR.
+
+use std::rc::Rc;
+
+use semoe::config::train::TrainConfig;
+use semoe::metrics::Report;
+use semoe::runtime::ModelArtifacts;
+use semoe::train::{checkpoint, OffloadTrainer, ResidentTrainer, SyntheticCorpus};
+use semoe::util::cli::Args;
+use semoe::util::human_count;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false).map_err(|e| anyhow::anyhow!(e))?;
+    let preset = args.str("preset", "base");
+    let steps = args.usize("steps", 200);
+    let lr = args.f64("lr", 1e-3);
+    // The offload trainer IS the paper's system (§2) — and on this
+    // substrate it is also the fast path: the fused train_step keeps
+    // AdamW inside XLA 0.5.1, which executes elementwise ops ~13x
+    // slower than the coordinator's CPU-Adam (EXPERIMENTS.md §Perf).
+    let offload = !args.flag("resident");
+
+    let arts = Rc::new(ModelArtifacts::load(&preset)?);
+    let m = arts.preset.clone();
+    let total = m.param_counts().total;
+    println!(
+        "e2e training: preset '{}' — {} params ({}% sparse), {} layers × {} experts, \
+         batch {}×{} tokens, {} steps [{}]",
+        m.name,
+        human_count(total as u64),
+        (100 * m.sparse_params()) / total,
+        m.n_layers,
+        m.n_experts,
+        m.batch_size,
+        m.seq_len,
+        steps,
+        if offload { "offload" } else { "resident" }
+    );
+
+    let cfg = TrainConfig {
+        preset: preset.clone(),
+        steps,
+        lr,
+        log_every: 10,
+        ..Default::default()
+    };
+
+    let corpus_floor = SyntheticCorpus::new(m.vocab_size, cfg.corpus_skew, 0).entropy_floor();
+    let mut curve: Vec<(usize, f32, f32)> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let mut tokens = 0usize;
+
+    let run = |curve: &mut Vec<(usize, f32, f32)>, tokens: &mut usize| -> anyhow::Result<(f32, f32)> {
+        let mut first_loss = f32::NAN;
+        let mut last_loss = f32::NAN;
+        if offload {
+            let mut tr = OffloadTrainer::new(arts.clone(), cfg.clone(), None)?;
+            for s in 0..steps {
+                let sm = tr.step()?;
+                *tokens += sm.tokens;
+                if s == 0 {
+                    first_loss = sm.loss;
+                }
+                last_loss = sm.loss;
+                if s % cfg.log_every == 0 || s + 1 == steps {
+                    println!("  step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", sm.step, sm.loss, sm.ce, sm.aux);
+                    curve.push((sm.step, sm.loss, sm.ce));
+                }
+            }
+            tr.flush()?;
+        } else {
+            let mut tr = ResidentTrainer::new(arts.clone(), cfg.clone())?;
+            for s in 0..steps {
+                let sm = tr.step()?;
+                *tokens += sm.tokens;
+                if s == 0 {
+                    first_loss = sm.loss;
+                }
+                last_loss = sm.loss;
+                if s % cfg.log_every == 0 || s + 1 == steps {
+                    println!("  step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", sm.step, sm.loss, sm.ce, sm.aux);
+                    curve.push((sm.step, sm.loss, sm.ce));
+                }
+            }
+            if let Some(dir) = args.get("ckpt") {
+                checkpoint::save(std::path::Path::new(dir), &arts, tr.params())?;
+                println!("checkpoint saved to {}", dir);
+            }
+        }
+        Ok((first_loss, last_loss))
+    };
+
+    let (first_loss, last_loss) = run(&mut curve, &mut tokens)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let tps = tokens as f64 / secs;
+    println!(
+        "\n{} tokens in {:.1}s → {:.0} tokens/s; loss {:.3} → {:.3} (ln V = {:.3}, generator floor ≈ {:.2})",
+        tokens,
+        secs,
+        tps,
+        first_loss,
+        last_loss,
+        (m.vocab_size as f64).ln(),
+        corpus_floor
+    );
+    assert!(
+        last_loss < first_loss - 0.5,
+        "e2e run must show a real learning signal"
+    );
+
+    // ---- Report for EXPERIMENTS.md.
+    let mut rep = Report::new("e2e_train_moe_gpt");
+    let t = rep.table(
+        "loss curve",
+        &["step", "loss", "ce"],
+    );
+    for (s, loss, ce) in &curve {
+        rep.row(t, vec![s.to_string(), format!("{:.4}", loss), format!("{:.4}", ce)]);
+    }
+    let s = rep.table("summary", &["metric", "value"]);
+    rep.row(s, vec!["params".into(), human_count(total as u64)]);
+    rep.row(s, vec!["steps".into(), steps.to_string()]);
+    rep.row(s, vec!["tokens/s".into(), format!("{:.0}", tps)]);
+    rep.row(s, vec!["first loss".into(), format!("{:.4}", first_loss)]);
+    rep.row(s, vec!["final loss".into(), format!("{:.4}", last_loss)]);
+    rep.row(s, vec!["ln(vocab)".into(), format!("{:.4}", (m.vocab_size as f64).ln())]);
+    rep.note(&format!("trainer = {}", if offload { "offload (hierarchical storage + 2D prefetch)" } else { "resident (fused train_step)" }));
+    rep.save(std::path::Path::new("reports"))?;
+    println!("report written to reports/e2e_train_moe_gpt.md");
+    Ok(())
+}

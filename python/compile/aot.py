@@ -1,0 +1,345 @@
+"""AOT pipeline: lower every L2 entry point to HLO **text** + manifest.
+
+HLO text (NOT `lowered.compile()` / serialized protos) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+the rust side's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`);
+the HLO text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs, per preset:
+  artifacts/<preset>/<entry>.hlo.txt
+  artifacts/<preset>/manifest.json     — preset config + per-artifact
+                                         input/output names/shapes/dtypes +
+                                         the flat parameter layout (the rust
+                                         "parameter management unit" reads
+                                         this instead of hard-coding shapes)
+
+Idempotent: an artifact is re-lowered only if missing or if the preset
+fingerprint changed (`make artifacts` stays a no-op when inputs are
+unchanged).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--preset tiny ...]
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import MoEConfig, PRESETS, get_config
+from .layers import layer_param_shapes
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _io(name, arr_spec):
+    dt = {jnp.float32: "f32", jnp.int32: "i32"}[
+        jnp.float32 if arr_spec.dtype == jnp.float32 else jnp.int32]
+    return {"name": name, "dtype": dt, "shape": list(arr_spec.shape)}
+
+
+# ---------------------------------------------------------------------------
+# Entry-point catalogue. Each entry: fn(cfg) -> (callable, [(name, spec)...],
+# [(out_name, spec)...]). The callable takes positional args in input order.
+# ---------------------------------------------------------------------------
+
+def _params_specs(cfg, prefix=""):
+    return [(prefix + n, _spec(s)) for n, s, _ in M.param_spec(cfg)]
+
+
+def _layer_specs(cfg, prefix=""):
+    return [(prefix + n, _spec(s)) for n, s, _ in layer_param_shapes(cfg)]
+
+
+def entry_train_step(cfg):
+    P = len(M.param_spec(cfg))
+    ins = (_params_specs(cfg, "p.")
+           + _params_specs(cfg, "m.")
+           + _params_specs(cfg, "v.")
+           + [("step", _spec((), jnp.float32)), ("lr", _spec((), jnp.float32)),
+              ("tokens", _spec((cfg.batch_size, cfg.seq_len), jnp.int32)),
+              ("labels", _spec((cfg.batch_size, cfg.seq_len), jnp.int32))])
+
+    def fn(*args):
+        params = list(args[:P])
+        ms = list(args[P:2 * P])
+        vs = list(args[2 * P:3 * P])
+        step, lr, tokens, labels = args[3 * P:]
+        p2, m2, v2, loss, ce, aux = M.train_step(cfg, params, ms, vs, step, lr,
+                                                 tokens, labels)
+        return tuple(p2) + tuple(m2) + tuple(v2) + (loss, ce, aux)
+
+    outs = (_params_specs(cfg, "p'.") + _params_specs(cfg, "m'.")
+            + _params_specs(cfg, "v'.")
+            + [("loss", _spec(())), ("ce", _spec(())), ("aux", _spec(()))])
+    return fn, ins, outs
+
+
+def entry_fwd_loss(cfg):
+    P = len(M.param_spec(cfg))
+    ins = _params_specs(cfg, "p.") + [
+        ("tokens", _spec((cfg.batch_size, cfg.seq_len), jnp.int32)),
+        ("labels", _spec((cfg.batch_size, cfg.seq_len), jnp.int32))]
+
+    def fn(*args):
+        return M.forward(cfg, list(args[:P]), args[P], args[P + 1])
+
+    outs = [("loss", _spec(())), ("ce", _spec(())), ("aux", _spec(()))]
+    return fn, ins, outs
+
+
+def entry_embed_fwd(cfg):
+    B, T, H, V = cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    ins = [("tokens", _spec((B, T), jnp.int32)), ("embed", _spec((V, H)))]
+    fn = lambda tokens, embed: (M.embed_fwd(tokens, embed),)
+    outs = [("x", _spec((B, T, H)))]
+    return fn, ins, outs
+
+
+def entry_embed_bwd(cfg):
+    B, T, H, V = cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    ins = [("tokens", _spec((B, T), jnp.int32)), ("dx", _spec((B, T, H)))]
+    fn = lambda tokens, dx: (M.embed_bwd(tokens, dx, V),)
+    outs = [("dembed", _spec((V, H)))]
+    return fn, ins, outs
+
+
+def entry_layer_fwd(cfg):
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+    ins = [("x", _spec((B, T, H)))] + _layer_specs(cfg)
+
+    def fn(x, *lps):
+        y, aux = M.layer_fwd(cfg, x, list(lps))
+        return y, aux
+
+    outs = [("y", _spec((B, T, H))), ("aux", _spec(()))]
+    return fn, ins, outs
+
+
+def entry_layer_bwd(cfg):
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+    nl = len(layer_param_shapes(cfg))
+    ins = ([("x", _spec((B, T, H)))] + _layer_specs(cfg)
+           + [("dy", _spec((B, T, H))), ("daux", _spec(()))])
+
+    def fn(x, *rest):
+        lps = list(rest[:nl])
+        dy, daux = rest[nl], rest[nl + 1]
+        dx, dps = M.layer_bwd(cfg, x, lps, dy, daux)
+        return tuple([dx] + list(dps))
+
+    outs = [("dx", _spec((B, T, H)))] + [
+        ("d" + n, s) for n, s in _layer_specs(cfg)]
+    return fn, ins, outs
+
+
+def entry_head_fwd(cfg):
+    B, T, H, V = cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    ins = [("x", _spec((B, T, H))), ("lnf_scale", _spec((H,))),
+           ("lnf_bias", _spec((H,))), ("wout", _spec((H, V))),
+           ("labels", _spec((B, T), jnp.int32))]
+    fn = lambda x, a, b, w, l: (M.head_fwd(cfg, x, a, b, w, l),)
+    outs = [("loss", _spec(()))]
+    return fn, ins, outs
+
+
+def entry_head_grad(cfg):
+    B, T, H, V = cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    ins = [("x", _spec((B, T, H))), ("lnf_scale", _spec((H,))),
+           ("lnf_bias", _spec((H,))), ("wout", _spec((H, V))),
+           ("labels", _spec((B, T), jnp.int32))]
+    fn = lambda x, a, b, w, l: M.head_grad(cfg, x, a, b, w, l)
+    outs = [("loss", _spec(())), ("dx", _spec((B, T, H))),
+            ("dlnf_scale", _spec((H,))), ("dlnf_bias", _spec((H,))),
+            ("dwout", _spec((H, V)))]
+    return fn, ins, outs
+
+
+def entry_head_infer(cfg):
+    B, T, H, V = cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size
+    ins = [("x", _spec((B, T, H))), ("lnf_scale", _spec((H,))),
+           ("lnf_bias", _spec((H,))), ("wout", _spec((H, V)))]
+    fn = lambda x, a, b, w: (M.head_infer(cfg, x, a, b, w),)
+    outs = [("next_token", _spec((B,), jnp.int32))]
+    return fn, ins, outs
+
+
+def _entry_adamw(cfg, n):
+    ins = [("p", _spec((n,))), ("g", _spec((n,))), ("m", _spec((n,))),
+           ("v", _spec((n,))), ("step", _spec(())), ("lr", _spec(()))]
+
+    def fn(p, g, m, v, step, lr):
+        return M.adamw_flat(cfg, p, g, m, v, step, lr)
+
+    outs = [("p2", _spec((n,))), ("m2", _spec((n,))), ("v2", _spec((n,)))]
+    return fn, ins, outs
+
+
+def entry_adamw_layer(cfg):
+    return _entry_adamw(cfg, cfg.param_counts()["per_layer"])
+
+
+def entry_adamw_embed(cfg):
+    return _entry_adamw(cfg, cfg.param_counts()["embed"])
+
+
+def entry_adamw_head(cfg):
+    return _entry_adamw(cfg, cfg.param_counts()["head"])
+
+
+# Kernel micro-artifacts (runtime tests + micro-benches against rust).
+
+def entry_gating(cfg):
+    from . import kernels as K
+    T, E, C = cfg.tokens_per_batch, cfg.n_experts, cfg.expert_capacity
+    ins = [("logits", _spec((T, E)))]
+    fn = lambda lg: K.top1_gating_pallas(lg, C)
+    outs = [("expert", _spec((T,), jnp.int32)), ("gate", _spec((T,))),
+            ("pos", _spec((T,), jnp.int32)), ("keep", _spec((T,))),
+            ("me", _spec((E,))), ("ce", _spec((E,)))]
+    return fn, ins, outs
+
+
+def entry_expert_ffn(cfg):
+    from . import kernels as K
+    E, C, H, F = cfg.n_experts, cfg.expert_capacity, cfg.d_model, cfg.d_ff
+    ins = [("x_buf", _spec((E, C, H))), ("w1", _spec((E, H, F))),
+           ("b1", _spec((E, F))), ("w2", _spec((E, F, H))), ("b2", _spec((E, H)))]
+    fn = lambda *a: (K.expert_ffn_pallas(*a),)
+    outs = [("y_buf", _spec((E, C, H)))]
+    return fn, ins, outs
+
+
+def entry_attention(cfg):
+    from . import kernels as K
+    B, N, T, Dh = cfg.batch_size, cfg.n_heads, cfg.seq_len, cfg.d_head
+    s = _spec((B, N, T, Dh))
+    ins = [("q", s), ("k", s), ("v", s)]
+    fn = lambda q, k, v: (K.attention_pallas(q, k, v),)
+    outs = [("o", s)]
+    return fn, ins, outs
+
+
+ENTRIES = {
+    "train_step": entry_train_step,
+    "fwd_loss": entry_fwd_loss,
+    "embed_fwd": entry_embed_fwd,
+    "embed_bwd": entry_embed_bwd,
+    "layer_fwd": entry_layer_fwd,
+    "layer_bwd": entry_layer_bwd,
+    "head_fwd": entry_head_fwd,
+    "head_grad": entry_head_grad,
+    "head_infer": entry_head_infer,
+    "adamw_layer": entry_adamw_layer,
+    "adamw_embed": entry_adamw_embed,
+    "adamw_head": entry_adamw_head,
+    "gating": entry_gating,
+    "expert_ffn": entry_expert_ffn,
+    "attention": entry_attention,
+}
+
+# Which entries each preset gets. tiny/small get everything (tests);
+# deep feeds the ring-memory inference path; base feeds the resident e2e
+# trainer plus the offload trainer.
+PRESET_ENTRIES = {
+    "tiny": list(ENTRIES),
+    "small": list(ENTRIES),
+    "deep": ["embed_fwd", "layer_fwd", "head_infer", "head_fwd",
+             "gating", "expert_ffn", "attention"],
+    "base": ["train_step", "fwd_loss", "embed_fwd", "embed_bwd", "layer_fwd",
+             "layer_bwd", "head_grad", "head_infer", "adamw_layer",
+             "adamw_embed", "adamw_head"],
+}
+
+
+AOT_CODE_VERSION = 2  # bump to force re-lowering after kernel changes
+
+
+def _fingerprint(cfg: MoEConfig, entry: str) -> str:
+    blob = json.dumps({"cfg": cfg.to_dict(), "entry": entry, "v": AOT_CODE_VERSION}, sort_keys=True)
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def lower_preset(preset: str, out_dir: str, only=None, force=False, verbose=True):
+    cfg = get_config(preset)
+    pdir = os.path.join(out_dir, preset)
+    os.makedirs(pdir, exist_ok=True)
+    mpath = os.path.join(pdir, "manifest.json")
+    manifest = {"preset": cfg.to_dict(), "artifacts": {}, "params": []}
+    if os.path.exists(mpath):
+        try:
+            with open(mpath) as f:
+                manifest = json.load(f)
+        except Exception:
+            pass
+    manifest["preset"] = cfg.to_dict()
+    manifest["params"] = [
+        {"name": n, "shape": list(s), "sparse": sp,
+         "numel": int(__import__("numpy").prod(s)) if s else 1}
+        for n, s, sp in M.param_spec(cfg)]
+
+    entries = PRESET_ENTRIES[preset] if only is None else only
+    for entry in entries:
+        fp = _fingerprint(cfg, entry)
+        fname = f"{entry}.hlo.txt"
+        fpath = os.path.join(pdir, fname)
+        prev = manifest["artifacts"].get(entry)
+        if (not force and prev and prev.get("fingerprint") == fp
+                and os.path.exists(fpath)):
+            continue
+        t0 = time.time()
+        fn, ins, outs = ENTRIES[entry](cfg)
+        lowered = jax.jit(fn).lower(*[s for _, s in ins])
+        text = to_hlo_text(lowered)
+        with open(fpath, "w") as f:
+            f.write(text)
+        manifest["artifacts"][entry] = {
+            "file": fname,
+            "fingerprint": fp,
+            "inputs": [_io(n, s) for n, s in ins],
+            "outputs": [_io(n, s) for n, s in outs],
+        }
+        if verbose:
+            print(f"[aot] {preset}/{entry}: {len(text)} chars "
+                  f"({time.time() - t0:.1f}s)")
+        # Persist incrementally so an interrupted run resumes.
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--preset", action="append", default=None,
+                    help="preset(s) to lower; default: all")
+    ap.add_argument("--entry", action="append", default=None,
+                    help="restrict to specific entries")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    presets = args.preset or list(PRESET_ENTRIES)
+    for p in presets:
+        lower_preset(p, args.out_dir, only=args.entry, force=args.force)
+
+
+if __name__ == "__main__":
+    main()

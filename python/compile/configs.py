@@ -1,0 +1,110 @@
+"""Model/preset configuration shared by the L2 model and the AOT pipeline.
+
+Presets are mirrored in `rust/src/config/presets.rs`; the AOT pipeline also
+emits `artifacts/<preset>/manifest.json` so the rust side never hard-codes
+shapes — it reads them from the manifest at load time.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    """Switch-Transformer style decoder-only MoE LM.
+
+    Every decoder block is: LN -> fused MHA -> residual -> LN -> MoE FFN
+    (top-1 gated switching FFN, GShard capacity) -> residual.
+    """
+
+    name: str
+    vocab_size: int
+    d_model: int
+    n_heads: int
+    n_layers: int
+    d_ff: int
+    n_experts: int
+    seq_len: int
+    batch_size: int
+    capacity_factor: float = 2.0
+    aux_loss_weight: float = 1e-2
+    # AdamW hyperparameters baked into the train_step artifact.
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def tokens_per_batch(self) -> int:
+        return self.batch_size * self.seq_len
+
+    @property
+    def expert_capacity(self) -> int:
+        """GShard capacity: ceil(cf * tokens / experts)."""
+        t = self.tokens_per_batch
+        return max(1, -(-int(self.capacity_factor * t) // self.n_experts))
+
+    def param_counts(self) -> dict:
+        """Parameter counts by group (mirrors rust config::model)."""
+        h, f, e, v = self.d_model, self.d_ff, self.n_experts, self.vocab_size
+        attn = 4 * h * h + 4 * h  # qkvo + biases
+        ln = 4 * h  # two layernorms (scale+bias each)
+        router = h * e + e
+        experts = e * (h * f + f + f * h + h)
+        per_layer = attn + ln + router + experts
+        embed = v * h
+        head = h * v + 2 * h  # final ln + output proj (untied)
+        total = embed + self.n_layers * per_layer + head
+        return {
+            "embed": embed,
+            "per_layer": per_layer,
+            "per_layer_dense": attn + ln + router,
+            "per_layer_sparse": experts,
+            "head": head,
+            "total": total,
+        }
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        d["expert_capacity"] = self.expert_capacity
+        d["param_counts"] = self.param_counts()
+        return d
+
+
+# ---------------------------------------------------------------------------
+# Presets. `tiny` is the unit-test scale; `small` is quickstart/integration;
+# `deep` exercises the ring-memory offload path (many layers, small width);
+# `base` is the ~100M end-to-end training target (params live in experts, so
+# top-1 gating keeps the compute laptop-scale while the state is 100M+).
+# ---------------------------------------------------------------------------
+
+PRESETS = {
+    "tiny": MoEConfig(
+        name="tiny", vocab_size=256, d_model=64, n_heads=4, n_layers=2,
+        d_ff=256, n_experts=4, seq_len=32, batch_size=4,
+    ),
+    "small": MoEConfig(
+        name="small", vocab_size=1024, d_model=128, n_heads=4, n_layers=2,
+        d_ff=512, n_experts=8, seq_len=32, batch_size=4,
+    ),
+    "deep": MoEConfig(
+        name="deep", vocab_size=1024, d_model=128, n_heads=4, n_layers=12,
+        d_ff=512, n_experts=8, seq_len=32, batch_size=4,
+    ),
+    "base": MoEConfig(
+        name="base", vocab_size=4096, d_model=256, n_heads=8, n_layers=4,
+        d_ff=1024, n_experts=48, seq_len=64, batch_size=4,
+    ),
+}
+
+
+def get_config(name: str) -> MoEConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(f"unknown preset {name!r}; have {sorted(PRESETS)}")

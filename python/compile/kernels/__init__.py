@@ -1,0 +1,28 @@
+"""L1 Pallas kernels for the SE-MoE compute hot spots.
+
+Every kernel has a pure-jnp oracle in `ref.py`; pytest compares them under
+hypothesis-driven shape/seed sweeps. All kernels lower with interpret=True
+so the AOT HLO runs on the CPU PJRT client (real-TPU lowering would emit
+Mosaic custom-calls the CPU plugin cannot execute).
+"""
+
+from . import ref
+from .gating import top1_gating, top1_gating_pallas
+from .expert_ffn import (
+    expert_ffn, expert_ffn_pallas, expert_ffn_bwd_pallas,
+    expert_ffn_pallas_fused, expert_ffn_bwd_pallas_fused,
+)
+from .dispatch import (
+    dispatch, dispatch_pallas, dispatch_transpose_pallas,
+    combine, combine_pallas,
+)
+from .attention import attention, attention_pallas, attention_bwd_pallas
+
+__all__ = [
+    "ref",
+    "top1_gating", "top1_gating_pallas",
+    "expert_ffn", "expert_ffn_pallas", "expert_ffn_bwd_pallas",
+    "dispatch", "dispatch_pallas", "dispatch_transpose_pallas",
+    "combine", "combine_pallas",
+    "attention", "attention_pallas", "attention_bwd_pallas",
+]

@@ -1,0 +1,113 @@
+"""Pallas fused causal multi-head attention kernel.
+
+This is the MLPerf-style fused attention §3.1 cites ("Fused Multi-head
+Attention ... effective to reduce kernel launch time"). Hardware
+adaptation (DESIGN.md §Hardware-Adaptation): instead of CUDA's
+three-kernel QK^T / softmax / PV pipeline staged through shared memory,
+one Pallas grid cell per (batch, head) holds the full [T, T] score tile
+in VMEM — at our sequence lengths (T <= 512) that is <= 1 MB, far under
+the ~16 MB VMEM budget — and applies scale, causal mask, softmax and the
+value matmul in-register. This is the TPU-idiomatic fusion point; a
+flash-style streaming split over T only pays off once T*T*4B outgrows
+VMEM.
+
+Backward: custom_vjp recomputes probabilities in the backward kernel
+(checkpointing — nothing saved but q,k,v) and emits dq, dk, dv; also a
+single fused Pallas kernel over the same grid.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_NEG = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref):
+    q = q_ref[0, 0]  # [T, Dh]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    T, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    ti = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    s = jnp.where(ti >= tj, s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+
+def _specs(B, N, T, Dh):
+    return pl.BlockSpec((1, 1, T, Dh), lambda b, n: (b, n, 0, 0))
+
+
+def attention_pallas(q, k, v):
+    """Fused causal MHA forward. q,k,v: [B,N,T,Dh] -> [B,N,T,Dh]."""
+    B, N, T, Dh = q.shape
+    spec = _specs(B, N, T, Dh)
+    return pl.pallas_call(
+        _attn_fwd_kernel,
+        grid=(B, N),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, N, T, Dh), jnp.float32),
+        interpret=True,
+    )(q, k, v)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref):
+    q = q_ref[0, 0]
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    do = do_ref[0, 0]
+    T, Dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    ti = jax.lax.broadcasted_iota(jnp.int32, (T, T), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (T, T), 1)
+    s = jnp.where(ti >= tj, s, _NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)      # [T, T] recomputed probs
+    dv_ref[0, 0] = jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    # Softmax VJP: ds = p * (dp - sum(dp * p, axis=-1))
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    ds = ds * scale
+    dq_ref[0, 0] = jnp.dot(ds, k, preferred_element_type=jnp.float32)
+    dk_ref[0, 0] = jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+
+def attention_bwd_pallas(q, k, v, do):
+    B, N, T, Dh = q.shape
+    spec = _specs(B, N, T, Dh)
+    shape = jax.ShapeDtypeStruct((B, N, T, Dh), jnp.float32)
+    return pl.pallas_call(
+        _attn_bwd_kernel,
+        grid=(B, N),
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(spec, spec, spec),
+        out_shape=(shape, shape, shape),
+        interpret=True,
+    )(q, k, v, do)
+
+
+@jax.custom_vjp
+def attention(q, k, v):
+    """Differentiable fused causal MHA (pallas fwd + pallas bwd)."""
+    return attention_pallas(q, k, v)
+
+
+def _fwd(q, k, v):
+    return attention_pallas(q, k, v), (q, k, v)
+
+
+def _bwd(res, do):
+    q, k, v = res
+    return attention_bwd_pallas(q, k, v, do)
+
+
+attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,129 @@
+"""Pallas dispatch/combine kernels — GShard one-hot-matmul token routing.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA
+implementation scatters tokens into per-expert buffers with atomics /
+indexed copies (the H2D-pinned-memory "unique kernels" of §3.1). A
+gather/scatter is hostile to the TPU's vector memory, so we use GShard's
+formulation: build the [T, E*C] one-hot dispatch matrix in VMEM from the
+routing decisions (iota compare — no scatter) and turn dispatch & combine
+into MXU matmuls. Combine additionally folds the gate weighting in.
+
+Both ops are linear in x / y_buf, so their VJPs are the transposed
+matmuls with the SAME one-hot matrix — also expressed as pallas calls.
+No gradient flows to the integer routing decisions; the gate gradient is
+produced by the combine VJP.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onehot(expert, pos, keep, n_experts, capacity):
+    """[T, E*C] dispatch matrix built with vector compares (in-kernel)."""
+    T = expert.shape[0]
+    slot = expert * capacity + jnp.minimum(pos, capacity - 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (T, n_experts * capacity), 1)
+    return (slot[:, None] == iota).astype(jnp.float32) * keep[:, None]
+
+
+def _dispatch_kernel(n_experts, capacity, x_ref, e_ref, p_ref, k_ref, o_ref):
+    oh = _onehot(e_ref[...], p_ref[...], k_ref[...], n_experts, capacity)
+    buf = jnp.dot(oh.T, x_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = buf.reshape(n_experts, capacity, x_ref.shape[-1])
+
+
+def dispatch_pallas(x, expert, pos, keep, n_experts: int, capacity: int):
+    """Scatter tokens [T,H] -> per-expert buffers [E,C,H] (pallas)."""
+    T, H = x.shape
+    return pl.pallas_call(
+        functools.partial(_dispatch_kernel, n_experts, capacity),
+        out_shape=jax.ShapeDtypeStruct((n_experts, capacity, H), jnp.float32),
+        interpret=True,
+    )(x, expert, pos, keep)
+
+
+def _dispatch_t_kernel(n_experts, capacity, buf_ref, e_ref, p_ref, k_ref, o_ref):
+    # Transpose of dispatch: tokens get back their (unweighted) slot rows.
+    oh = _onehot(e_ref[...], p_ref[...], k_ref[...], n_experts, capacity)
+    flat = buf_ref[...].reshape(n_experts * capacity, -1)
+    o_ref[...] = jnp.dot(oh, flat, preferred_element_type=jnp.float32)
+
+
+def dispatch_transpose_pallas(buf, expert, pos, keep):
+    """[E,C,H] -> [T,H] unweighted gather; the VJP of dispatch."""
+    E, C, H = buf.shape
+    T = expert.shape[0]
+    return pl.pallas_call(
+        functools.partial(_dispatch_t_kernel, E, C),
+        out_shape=jax.ShapeDtypeStruct((T, H), jnp.float32),
+        interpret=True,
+    )(buf, expert, pos, keep)
+
+
+def _combine_kernel(n_experts, capacity, buf_ref, e_ref, p_ref, k_ref, g_ref, o_ref):
+    oh = _onehot(e_ref[...], p_ref[...], k_ref[...], n_experts, capacity)
+    oh = oh * g_ref[...][:, None]
+    flat = buf_ref[...].reshape(n_experts * capacity, -1)
+    o_ref[...] = jnp.dot(oh, flat, preferred_element_type=jnp.float32)
+
+
+def combine_pallas(y_buf, expert, pos, keep, gate):
+    """Gate-weighted gather [E,C,H] -> [T,H] (pallas)."""
+    E, C, H = y_buf.shape
+    T = expert.shape[0]
+    return pl.pallas_call(
+        functools.partial(_combine_kernel, E, C),
+        out_shape=jax.ShapeDtypeStruct((T, H), jnp.float32),
+        interpret=True,
+    )(y_buf, expert, pos, keep, gate)
+
+
+# ---------------------------------------------------------------------------
+# Differentiable wrappers.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def dispatch(x, expert, pos, keep, n_experts: int, capacity: int):
+    """Differentiable dispatch (linear in x)."""
+    return dispatch_pallas(x, expert, pos, keep, n_experts, capacity)
+
+
+def _dispatch_fwd(x, expert, pos, keep, n_experts, capacity):
+    out = dispatch_pallas(x, expert, pos, keep, n_experts, capacity)
+    return out, (expert, pos, keep)
+
+
+def _dispatch_bwd(n_experts, capacity, res, dbuf):
+    expert, pos, keep = res
+    dx = dispatch_transpose_pallas(dbuf, expert, pos, keep)
+    return dx, None, None, None
+
+
+dispatch.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@jax.custom_vjp
+def combine(y_buf, expert, pos, keep, gate):
+    """Differentiable combine (linear in y_buf and gate)."""
+    return combine_pallas(y_buf, expert, pos, keep, gate)
+
+
+def _combine_fwd(y_buf, expert, pos, keep, gate):
+    return combine_pallas(y_buf, expert, pos, keep, gate), (y_buf, expert, pos, keep, gate)
+
+
+def _combine_bwd(res, dy):
+    y_buf, expert, pos, keep, gate = res
+    E, C, H = y_buf.shape
+    # d y_buf = dispatch of (gate-weighted dy).
+    dbuf = dispatch_pallas(dy * gate[:, None], expert, pos, keep, E, C)
+    # d gate[t] = <dy[t], y_buf[slot(t)]> — gather rows then dot.
+    rows = dispatch_transpose_pallas(y_buf, expert, pos, keep)
+    dgate = jnp.sum(dy * rows, axis=-1)
+    return dbuf, None, None, None, dgate
+
+
+combine.defvjp(_combine_fwd, _combine_bwd)

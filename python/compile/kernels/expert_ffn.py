@@ -1,0 +1,216 @@
+"""Pallas grouped expert-FFN kernel — the switching-FFN hot spot.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA expert FFN
+launches one threadblock per (expert, token-tile) and keeps the expert's
+weights in shared memory across its token loop. Here the *grid* is the
+expert axis: each grid cell streams one expert's W1/W2 tile HBM->VMEM via
+BlockSpec and runs both matmuls + GELU on the whole capacity block while
+the tile is resident — MXU-shaped (H, F multiples of 128 at real scale),
+fp32 accumulation via preferred_element_type, mirroring MXU semantics.
+
+VMEM per grid cell (f32): C*H + H*F + F + C*F + F*H + H + C*H bytes*4.
+For the `base` preset (C=11->pad, H=256, F=1024): ~2.4 MB — well under
+the ~16 MB VMEM budget; DESIGN.md §Perf records the estimate per preset.
+
+The backward is also a Pallas kernel (same grid layout): recompute the
+hidden activation in-cell and produce dX, dW1, db1, dW2, db2. This is the
+recompute-in-backward (per-layer checkpointing) strategy the offloading
+runtime uses anyway, so nothing extra is saved between passes.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+_SQRT_2_OVER_PI = 0.7978845608028654
+
+
+def _gelu(x):
+    # tanh-approximation GELU, matching jax.nn.gelu(approximate=True).
+    return 0.5 * x * (1.0 + jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x ** 3)))
+
+
+def _gelu_grad(x):
+    t = jnp.tanh(_SQRT_2_OVER_PI * (x + 0.044715 * x ** 3))
+    dt = (1.0 - t ** 2) * _SQRT_2_OVER_PI * (1.0 + 3 * 0.044715 * x ** 2)
+    return 0.5 * (1.0 + t) + 0.5 * x * dt
+
+
+def _ffn_fwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[0]            # [C, H] — this expert's token slots
+    w1 = w1_ref[0]          # [H, F]
+    h = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1_ref[0]
+    h = _gelu(h)
+    o_ref[0] = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32) + b2_ref[0]
+
+
+def expert_ffn_pallas(x_buf, w1, b1, w2, b2):
+    """Grouped FFN forward. x_buf [E,C,H] -> [E,C,H]."""
+    E, C, H = x_buf.shape
+    F = w1.shape[-1]
+    return pl.pallas_call(
+        _ffn_fwd_kernel,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((1, C, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, H, F), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, F), lambda e: (e, 0)),
+            pl.BlockSpec((1, F, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, H), lambda e: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, H), lambda e: (e, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((E, C, H), jnp.float32),
+        interpret=True,
+    )(x_buf, w1, b1, w2, b2)
+
+
+def _ffn_bwd_kernel(x_ref, w1_ref, b1_ref, w2_ref, dy_ref,
+                    dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    x = x_ref[0]           # [C, H]
+    w1 = w1_ref[0]         # [H, F]
+    w2 = w2_ref[0]         # [F, H]
+    dy = dy_ref[0]         # [C, H]
+    # Recompute pre-activation (checkpointing: nothing saved from fwd).
+    z = jnp.dot(x, w1, preferred_element_type=jnp.float32) + b1_ref[0]
+    h = _gelu(z)
+    dh = jnp.dot(dy, w2.T, preferred_element_type=jnp.float32)
+    dz = dh * _gelu_grad(z)
+    dx_ref[0] = jnp.dot(dz, w1.T, preferred_element_type=jnp.float32)
+    dw1_ref[0] = jnp.dot(x.T, dz, preferred_element_type=jnp.float32)
+    db1_ref[0] = jnp.sum(dz, axis=0)
+    dw2_ref[0] = jnp.dot(h.T, dy, preferred_element_type=jnp.float32)
+    db2_ref[0] = jnp.sum(dy, axis=0)
+
+
+def expert_ffn_bwd_pallas(x_buf, w1, b1, w2, dy):
+    """Grouped FFN backward (pallas). Returns (dx, dw1, db1, dw2, db2)."""
+    E, C, H = x_buf.shape
+    F = w1.shape[-1]
+    out_shape = (
+        jax.ShapeDtypeStruct((E, C, H), jnp.float32),
+        jax.ShapeDtypeStruct((E, H, F), jnp.float32),
+        jax.ShapeDtypeStruct((E, F), jnp.float32),
+        jax.ShapeDtypeStruct((E, F, H), jnp.float32),
+        jax.ShapeDtypeStruct((E, H), jnp.float32),
+    )
+    return pl.pallas_call(
+        _ffn_bwd_kernel,
+        grid=(E,),
+        in_specs=[
+            pl.BlockSpec((1, C, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, H, F), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, F), lambda e: (e, 0)),
+            pl.BlockSpec((1, F, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, C, H), lambda e: (e, 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, C, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, H, F), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, F), lambda e: (e, 0)),
+            pl.BlockSpec((1, F, H), lambda e: (e, 0, 0)),
+            pl.BlockSpec((1, H), lambda e: (e, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=True,
+    )(x_buf, w1, b1, w2, dy)
+
+
+# ---------------------------------------------------------------------------
+# Fused (gridless) variants.
+#
+# Pallas's interpret mode emulates each grid cell over full-sized blocks,
+# so an E-cell grid costs ~E× the math on CPU — pathological for E=48.
+# The fused variants run ONE kernel instance whose body is the batched
+# einsum over all experts; on real TPU the gridded version above is the
+# right shape (per-expert VMEM tiles), on CPU-interpret the fused one is.
+# The dispatcher below picks per `E` (see _GRID_MAX_EXPERTS); numerical
+# equivalence is asserted in python/tests/test_expert_ffn.py.
+# ---------------------------------------------------------------------------
+
+_GRID_MAX_EXPERTS = 8
+
+
+def _ffn_fwd_fused_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    h = jnp.einsum("ech,ehf->ecf", x_ref[...], w1_ref[...],
+                   preferred_element_type=jnp.float32) + b1_ref[...][:, None, :]
+    h = _gelu(h)
+    o_ref[...] = jnp.einsum("ecf,efh->ech", h, w2_ref[...],
+                            preferred_element_type=jnp.float32) + b2_ref[...][:, None, :]
+
+
+def expert_ffn_pallas_fused(x_buf, w1, b1, w2, b2):
+    """Gridless grouped FFN forward (interpret-friendly)."""
+    E, C, H = x_buf.shape
+    return pl.pallas_call(
+        _ffn_fwd_fused_kernel,
+        out_shape=jax.ShapeDtypeStruct((E, C, H), jnp.float32),
+        interpret=True,
+    )(x_buf, w1, b1, w2, b2)
+
+
+def _ffn_bwd_fused_kernel(x_ref, w1_ref, b1_ref, w2_ref, dy_ref,
+                          dx_ref, dw1_ref, db1_ref, dw2_ref, db2_ref):
+    x = x_ref[...]
+    w1 = w1_ref[...]
+    w2 = w2_ref[...]
+    dy = dy_ref[...]
+    z = jnp.einsum("ech,ehf->ecf", x, w1,
+                   preferred_element_type=jnp.float32) + b1_ref[...][:, None, :]
+    h = _gelu(z)
+    dh = jnp.einsum("ech,efh->ecf", dy, w2, preferred_element_type=jnp.float32)
+    dz = dh * _gelu_grad(z)
+    dx_ref[...] = jnp.einsum("ecf,ehf->ech", dz, w1, preferred_element_type=jnp.float32)
+    dw1_ref[...] = jnp.einsum("ech,ecf->ehf", x, dz, preferred_element_type=jnp.float32)
+    db1_ref[...] = jnp.sum(dz, axis=1)
+    dw2_ref[...] = jnp.einsum("ecf,ech->efh", h, dy, preferred_element_type=jnp.float32)
+    db2_ref[...] = jnp.sum(dy, axis=1)
+
+
+def expert_ffn_bwd_pallas_fused(x_buf, w1, b1, w2, dy):
+    """Gridless grouped FFN backward."""
+    E, C, H = x_buf.shape
+    F = w1.shape[-1]
+    out_shape = (
+        jax.ShapeDtypeStruct((E, C, H), jnp.float32),
+        jax.ShapeDtypeStruct((E, H, F), jnp.float32),
+        jax.ShapeDtypeStruct((E, F), jnp.float32),
+        jax.ShapeDtypeStruct((E, F, H), jnp.float32),
+        jax.ShapeDtypeStruct((E, H), jnp.float32),
+    )
+    return pl.pallas_call(
+        _ffn_bwd_fused_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(x_buf, w1, b1, w2, dy)
+
+
+def _fwd_dispatch(x_buf, w1, b1, w2, b2):
+    if x_buf.shape[0] <= _GRID_MAX_EXPERTS:
+        return expert_ffn_pallas(x_buf, w1, b1, w2, b2)
+    return expert_ffn_pallas_fused(x_buf, w1, b1, w2, b2)
+
+
+def _bwd_dispatch(x_buf, w1, b1, w2, dy):
+    if x_buf.shape[0] <= _GRID_MAX_EXPERTS:
+        return expert_ffn_bwd_pallas(x_buf, w1, b1, w2, dy)
+    return expert_ffn_bwd_pallas_fused(x_buf, w1, b1, w2, dy)
+
+
+@jax.custom_vjp
+def expert_ffn(x_buf, w1, b1, w2, b2):
+    """Differentiable grouped expert FFN (pallas fwd + pallas bwd)."""
+    return _fwd_dispatch(x_buf, w1, b1, w2, b2)
+
+
+def _fwd(x_buf, w1, b1, w2, b2):
+    return _fwd_dispatch(x_buf, w1, b1, w2, b2), (x_buf, w1, b1, w2)
+
+
+def _bwd(res, dy):
+    x_buf, w1, b1, w2 = res
+    dx, dw1, db1, dw2, db2 = _bwd_dispatch(x_buf, w1, b1, w2, dy)
+    return dx, dw1, db1, dw2, db2
+
+
+expert_ffn.defvjp(_fwd, _bwd)

@@ -1,0 +1,94 @@
+"""Pallas top-1 (switch) gating kernel.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the CUDA version
+of switch gating uses warp-level reductions for per-token softmax/argmax;
+on TPU the VPU wants whole-row vector ops, so this kernel keeps the entire
+[T, E] router tile in VMEM (E <= 128 fits one lane group at these scales)
+and derives argmax / gate / capacity position with vector selects and a
+single cumulative sum down the token axis — no reduction trees.
+
+Differentiability: only the `gate` output carries gradient (through the
+softmax); expert/pos/keep are integer routing decisions. The custom_vjp
+backward recomputes softmax with jnp (cheap, [T,E]) and propagates
+d(gate) and d(me) into d(logits).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _gating_kernel(capacity: int, logits_ref, expert_ref, gate_ref, pos_ref,
+                   keep_ref, me_ref, ce_ref):
+    logits = logits_ref[...]
+    T, E = logits.shape
+    # Row softmax in VMEM (VPU-friendly: subtract rowmax, exp, normalize).
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    expert = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    # One-hot via broadcasted iota compare (TPU-legal 2D iota).
+    iota_e = jax.lax.broadcasted_iota(jnp.int32, (T, E), 1)
+    onehot = (expert[:, None] == iota_e).astype(jnp.float32)
+    # Arrival-order slot within each expert: cumulative count down tokens.
+    pos = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1.0
+    keep = (pos < capacity).astype(jnp.float32)
+    gate = jnp.sum(probs * onehot, axis=-1) * keep
+
+    expert_ref[...] = expert
+    gate_ref[...] = gate
+    pos_ref[...] = pos.astype(jnp.int32)
+    keep_ref[...] = keep
+    me_ref[...] = jnp.mean(probs, axis=0)
+    ce_ref[...] = jnp.mean(onehot, axis=0)
+
+
+def top1_gating_pallas(logits: jax.Array, capacity: int):
+    """Raw pallas call (fwd only). Shapes/semantics match ref.top1_gating_ref."""
+    T, E = logits.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((T,), jnp.int32),    # expert
+        jax.ShapeDtypeStruct((T,), jnp.float32),  # gate
+        jax.ShapeDtypeStruct((T,), jnp.int32),    # pos
+        jax.ShapeDtypeStruct((T,), jnp.float32),  # keep
+        jax.ShapeDtypeStruct((E,), jnp.float32),  # me
+        jax.ShapeDtypeStruct((E,), jnp.float32),  # ce
+    )
+    return pl.pallas_call(
+        functools.partial(_gating_kernel, capacity),
+        out_shape=out_shape,
+        interpret=True,  # CPU-PJRT target; Mosaic lowering is TPU-only.
+    )(logits)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def top1_gating(logits: jax.Array, capacity: int):
+    """Differentiable top-1 gating (pallas fwd, analytic bwd)."""
+    return top1_gating_pallas(logits, capacity)
+
+
+def _gating_fwd(logits, capacity):
+    out = top1_gating_pallas(logits, capacity)
+    return out, (logits, out[0], out[3])
+
+
+def _gating_bwd(capacity, res, cots):
+    logits, expert, keep = res
+    d_expert, d_gate, d_pos, d_keep, d_me, d_ce = cots
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(expert, E, dtype=jnp.float32)
+    # gate = sum(probs * onehot) * keep  ->  d probs = onehot * keep * d_gate
+    dprobs = onehot * (keep * d_gate)[:, None]
+    # me = mean(probs, axis=0)          ->  d probs += d_me / T
+    dprobs = dprobs + d_me[None, :] / T
+    # Softmax VJP: dl = probs * (dp - sum(dp * probs))
+    dlogits = probs * (dprobs - jnp.sum(dprobs * probs, axis=-1, keepdims=True))
+    return (dlogits,)
+
+
+top1_gating.defvjp(_gating_fwd, _gating_bwd)

@@ -1,0 +1,101 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the CORE correctness signal: each kernel in this package must
+match its oracle to float32 tolerance under pytest + hypothesis sweeps
+(`python/tests/test_*.py`). They are also the differentiable fallbacks
+used inside custom_vjp backward rules where the hot path does not need a
+hand-written backward kernel.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Top-1 (switch) gating — GShard capacity semantics.
+# ---------------------------------------------------------------------------
+
+def top1_gating_ref(logits: jax.Array, capacity: int):
+    """Reference top-1 gating.
+
+    Args:
+      logits: [T, E] router logits.
+      capacity: per-expert slot budget C.
+
+    Returns:
+      expert:  [T] int32, argmax expert per token.
+      gate:    [T] f32, softmax prob of the chosen expert (0 if dropped).
+      pos:     [T] int32, slot index within the chosen expert (valid iff kept).
+      keep:    [T] f32, 1.0 if the token got a slot (pos < C) else 0.0.
+      me:      [E] f32, mean router prob per expert (aux-loss term).
+      ce:      [E] f32, fraction of tokens routed per expert (aux-loss term).
+    """
+    T, E = logits.shape
+    probs = jax.nn.softmax(logits, axis=-1)
+    expert = jnp.argmax(probs, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(expert, E, dtype=jnp.float32)
+    # Position of each token within its expert's arrival order.
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=-1).astype(jnp.int32) - 1
+    keep = (pos < capacity).astype(jnp.float32)
+    gate = (probs * onehot).sum(axis=-1) * keep
+    me = probs.mean(axis=0)
+    ce = onehot.mean(axis=0)
+    return expert, gate, pos, keep, me, ce
+
+
+def aux_loss_ref(me: jax.Array, ce: jax.Array) -> jax.Array:
+    """Switch-Transformer load-balancing loss: E * sum(me * ce)."""
+    return me.shape[0] * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch / combine — GShard one-hot-matmul formulation.
+# ---------------------------------------------------------------------------
+
+def dispatch_onehot_ref(expert, pos, keep, n_experts: int, capacity: int):
+    """[T, E*C] one-hot dispatch matrix (f32)."""
+    slot = expert * capacity + jnp.minimum(pos, capacity - 1)
+    oh = jax.nn.one_hot(slot, n_experts * capacity, dtype=jnp.float32)
+    return oh * keep[:, None]
+
+
+def dispatch_ref(x, expert, pos, keep, n_experts: int, capacity: int):
+    """Scatter tokens [T, H] into per-expert buffers [E, C, H]."""
+    oh = dispatch_onehot_ref(expert, pos, keep, n_experts, capacity)
+    buf = oh.T @ x  # [E*C, H]
+    return buf.reshape(n_experts, capacity, -1)
+
+
+def combine_ref(y_buf, expert, pos, keep, gate):
+    """Gather expert outputs [E, C, H] back to tokens [T, H], gate-weighted."""
+    E, C, H = y_buf.shape
+    oh = dispatch_onehot_ref(expert, pos, keep, E, C)
+    return (oh * gate[:, None]) @ y_buf.reshape(E * C, H)
+
+
+# ---------------------------------------------------------------------------
+# Grouped expert FFN (the switching-FFN hot spot).
+# ---------------------------------------------------------------------------
+
+def expert_ffn_ref(x_buf, w1, b1, w2, b2):
+    """Per-expert FFN: gelu(x @ w1 + b1) @ w2 + b2.
+
+    Shapes: x_buf [E, C, H], w1 [E, H, F], b1 [E, F], w2 [E, F, H], b2 [E, H].
+    """
+    h = jnp.einsum("ech,ehf->ecf", x_buf, w1) + b1[:, None, :]
+    h = jax.nn.gelu(h)
+    return jnp.einsum("ecf,efh->ech", h, w2) + b2[:, None, :]
+
+
+# ---------------------------------------------------------------------------
+# Fused causal multi-head attention.
+# ---------------------------------------------------------------------------
+
+def attention_ref(q, k, v):
+    """Causal MHA core. q,k,v: [B, N, T, Dh] -> [B, N, T, Dh]."""
+    B, N, T, Dh = q.shape
+    scores = jnp.einsum("bntd,bnsd->bnts", q, k) / jnp.sqrt(Dh).astype(q.dtype)
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bnts,bnsd->bntd", probs, v)

@@ -1,0 +1,92 @@
+"""L2 building blocks: layernorm, fused-MHA block, switching-FFN MoE block.
+
+Parameters are plain lists of jnp arrays in a FIXED order (see
+`LAYER_PARAM_NAMES`); the AOT manifest records the order so the rust
+coordinator can slice fused parameter buffers back into per-tensor
+literals (the paper's "parameter management unit", §2.3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .configs import MoEConfig
+
+# Per-decoder-layer parameter order. `sparse` marks expert (selectively
+# activated) tensors — the hierarchical store places those on the SSD tier.
+LAYER_PARAM_NAMES = [
+    ("ln1_scale", False), ("ln1_bias", False),
+    ("wq", False), ("bq", False), ("wk", False), ("bk", False),
+    ("wv", False), ("bv", False), ("wo", False), ("bo", False),
+    ("ln2_scale", False), ("ln2_bias", False),
+    ("router_w", False), ("router_b", False),
+    ("w1", True), ("b1", True), ("w2", True), ("b2", True),
+]
+
+N_LAYER_PARAMS = len(LAYER_PARAM_NAMES)
+
+
+def layer_param_shapes(cfg: MoEConfig):
+    """[(name, shape, is_sparse)] for one decoder layer."""
+    h, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    shapes = {
+        "ln1_scale": (h,), "ln1_bias": (h,),
+        "wq": (h, h), "bq": (h,), "wk": (h, h), "bk": (h,),
+        "wv": (h, h), "bv": (h,), "wo": (h, h), "bo": (h,),
+        "ln2_scale": (h,), "ln2_bias": (h,),
+        "router_w": (h, e), "router_b": (e,),
+        "w1": (e, h, f), "b1": (e, f), "w2": (e, f, h), "b2": (e, h),
+    }
+    return [(n, shapes[n], s) for n, s in LAYER_PARAM_NAMES]
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def mha_block(cfg: MoEConfig, x, wq, bq, wk, bk, wv, bv, wo, bo):
+    """Multi-head attention with the fused pallas core. x: [B,T,H]."""
+    B, T, H = x.shape
+    N, Dh = cfg.n_heads, cfg.d_head
+
+    def split(y):
+        return y.reshape(B, T, N, Dh).transpose(0, 2, 1, 3)  # [B,N,T,Dh]
+
+    q = split(x @ wq + bq)
+    k = split(x @ wk + bk)
+    v = split(x @ wv + bv)
+    o = K.attention(q, k, v)                     # pallas fused MHA
+    o = o.transpose(0, 2, 1, 3).reshape(B, T, H)
+    return o @ wo + bo
+
+
+def moe_block(cfg: MoEConfig, x, router_w, router_b, w1, b1, w2, b2):
+    """Switching-FFN: top-1 gate -> dispatch -> grouped FFN -> combine.
+
+    Returns (y [B,T,H], aux_loss scalar).
+    """
+    B, T, H = x.shape
+    E, C = cfg.n_experts, cfg.expert_capacity
+    flat = x.reshape(B * T, H)
+    logits = flat @ router_w + router_b          # [BT, E]
+    expert, gate, pos, keep, me, ce = K.top1_gating(logits, C)
+    buf = K.dispatch(flat, expert, pos, keep, E, C)      # [E,C,H]
+    y_buf = K.expert_ffn(buf, w1, b1, w2, b2)            # pallas hot spot
+    y = K.combine(y_buf, expert, pos, keep, gate)        # [BT,H]
+    aux = K.ref.aux_loss_ref(me, ce)
+    return y.reshape(B, T, H), aux
+
+
+def decoder_layer(cfg: MoEConfig, x, layer_params):
+    """One pre-norm decoder block. layer_params: list in LAYER_PARAM_NAMES order.
+
+    Returns (y [B,T,H], aux_loss scalar).
+    """
+    (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_s, ln2_b, rw, rb, w1, b1, w2, b2) = layer_params
+    a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b), wq, bq, wk, bk, wv, bv, wo, bo)
+    x = x + a
+    m, aux = moe_block(cfg, layer_norm(x, ln2_s, ln2_b), rw, rb, w1, b1, w2, b2)
+    return x + m, aux

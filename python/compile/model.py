@@ -1,0 +1,187 @@
+"""L2: the MoE-GPT model — fwd/bwd/step entry points that get AOT-lowered.
+
+The model is a decoder-only LM with a switching-FFN MoE in every block
+(Switch-Transformer layout). Parameters travel as a FLAT LIST of arrays
+in a fixed order (see `param_spec`) so the HLO artifact argument order is
+deterministic and the rust coordinator can address tensors by index.
+
+Entry points (each becomes one HLO artifact; see aot.py):
+  train_step     fused fwd+bwd+AdamW over all params (resident training)
+  fwd_loss       forward + loss (eval)
+  embed_fwd/bwd  embedding lookup and its gradient (one-hot matmul)
+  layer_fwd/bwd  single decoder layer; bwd recomputes fwd (checkpointing)
+  head_fwd       final LN + logits + loss
+  head_grad      head loss + gradients (dx and head param grads)
+  head_infer     greedy next-token ids
+  adamw_flat     elementwise AdamW on a fused 1-D parameter group
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from .configs import MoEConfig
+from .layers import decoder_layer, layer_norm, layer_param_shapes, N_LAYER_PARAMS
+
+
+# ---------------------------------------------------------------------------
+# Parameter layout.
+# ---------------------------------------------------------------------------
+
+def param_spec(cfg: MoEConfig):
+    """Flat [(name, shape, is_sparse)] in artifact argument order."""
+    v, h = cfg.vocab_size, cfg.d_model
+    spec = [("embed", (v, h), False)]
+    for i in range(cfg.n_layers):
+        for n, s, sp in layer_param_shapes(cfg):
+            spec.append((f"layer{i}.{n}", s, sp))
+    spec += [("lnf_scale", (h,), False), ("lnf_bias", (h,), False),
+             ("wout", (h, v), False)]
+    return spec
+
+
+def head_spec(cfg: MoEConfig):
+    """The head parameter group (final LN + output projection)."""
+    h, v = cfg.d_model, cfg.vocab_size
+    return [("lnf_scale", (h,), False), ("lnf_bias", (h,), False),
+            ("wout", (h, v), False)]
+
+
+def init_params(cfg: MoEConfig, seed: int = 0):
+    """Initialize the flat param list (scaled-normal / zeros / ones)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape, _ in param_spec(cfg):
+        key, sub = jax.random.split(key)
+        base = name.split(".")[-1]
+        if base.endswith("_scale") or base.startswith("ln"):
+            params.append(jnp.ones(shape, jnp.float32) if "scale" in base
+                          else jnp.zeros(shape, jnp.float32))
+        elif base.startswith("b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+            std = 0.02 if base in ("embed", "wout") else fan_in ** -0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def split_params(cfg: MoEConfig, params):
+    """flat list -> (embed, [layer_param_lists], head_params)."""
+    embed = params[0]
+    layers = []
+    off = 1
+    for _ in range(cfg.n_layers):
+        layers.append(params[off:off + N_LAYER_PARAMS])
+        off += N_LAYER_PARAMS
+    head = params[off:off + 3]
+    return embed, layers, head
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss.
+# ---------------------------------------------------------------------------
+
+def embed_fwd(tokens, embed):
+    """[B,T] int32 -> [B,T,H] via take (lowered as gather)."""
+    return jnp.take(embed, tokens, axis=0)
+
+
+def embed_bwd(tokens, d_x, vocab_size: int):
+    """Embedding gradient: one-hot^T @ d_x (scatter-add as MXU matmul)."""
+    B, T, H = d_x.shape
+    oh = jax.nn.one_hot(tokens.reshape(-1), vocab_size, dtype=jnp.float32)
+    return oh.T @ d_x.reshape(B * T, H)
+
+
+def head_fwd(cfg: MoEConfig, x, lnf_s, lnf_b, wout, labels):
+    """Final LN + logits + mean CE loss. Returns scalar loss."""
+    z = layer_norm(x, lnf_s, lnf_b)
+    logits = z @ wout                                 # [B,T,V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def head_infer(cfg: MoEConfig, x, lnf_s, lnf_b, wout):
+    """Greedy next token from the last position. Returns [B] int32."""
+    z = layer_norm(x[:, -1, :], lnf_s, lnf_b)
+    logits = z @ wout
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def forward(cfg: MoEConfig, params, tokens, labels):
+    """Full forward. Returns (loss, ce_loss, aux_loss)."""
+    embed, layers, (lnf_s, lnf_b, wout) = split_params(cfg, params)
+    x = embed_fwd(tokens, embed)
+    aux_total = 0.0
+    for lp in layers:
+        x, aux = decoder_layer(cfg, x, lp)
+        aux_total = aux_total + aux
+    ce = head_fwd(cfg, x, lnf_s, lnf_b, wout, labels)
+    loss = ce + cfg.aux_loss_weight * aux_total
+    return loss, ce, aux_total
+
+
+# ---------------------------------------------------------------------------
+# AdamW.
+# ---------------------------------------------------------------------------
+
+def adamw_flat(cfg: MoEConfig, p, g, m, v, step, lr):
+    """Elementwise AdamW on a fused 1-D group (step: f32 >= 1)."""
+    b1, b2, eps, wd = cfg.beta1, cfg.beta2, cfg.eps, cfg.weight_decay
+    m = b1 * m + (1 - b1) * g
+    v = b2 * v + (1 - b2) * g * g
+    mhat = m / (1 - b1 ** step)
+    vhat = v / (1 - b2 ** step)
+    p = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p, m, v
+
+
+def train_step(cfg: MoEConfig, params, ms, vs, step, lr, tokens, labels):
+    """Fused fwd+bwd+AdamW. Returns (params', ms', vs', loss, ce, aux)."""
+    def loss_fn(ps):
+        loss, ce, aux = forward(cfg, ps, tokens, labels)
+        return loss, (ce, aux)
+
+    (loss, (ce, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, ms, vs):
+        p2, m2, v2 = adamw_flat(cfg, p.reshape(-1), g.reshape(-1),
+                                m.reshape(-1), v.reshape(-1), step, lr)
+        new_p.append(p2.reshape(p.shape))
+        new_m.append(m2.reshape(p.shape))
+        new_v.append(v2.reshape(p.shape))
+    return new_p, new_m, new_v, loss, ce, aux
+
+
+# ---------------------------------------------------------------------------
+# Per-layer entry points (offload training / ring-memory inference).
+# ---------------------------------------------------------------------------
+
+def layer_fwd(cfg: MoEConfig, x, layer_params):
+    """Single decoder layer forward. Returns (y, aux)."""
+    return decoder_layer(cfg, x, layer_params)
+
+
+def layer_bwd(cfg: MoEConfig, x, layer_params, dy, daux):
+    """Single layer backward with recompute (per-layer checkpointing).
+
+    Returns (dx, [dparams...]) — gradient w.r.t. input and each layer param.
+    """
+    def f(xx, lps):
+        return decoder_layer(cfg, xx, lps)
+
+    _, vjp = jax.vjp(f, x, list(layer_params))
+    dx, dps = vjp((dy, daux))
+    return dx, dps
+
+
+def head_grad(cfg: MoEConfig, x, lnf_s, lnf_b, wout, labels):
+    """Loss + gradients at the head. Returns (loss, dx, d_lnf_s, d_lnf_b, d_wout)."""
+    def f(xx, a, b, w):
+        return head_fwd(cfg, xx, a, b, w, labels)
+
+    loss, (dx, da, db, dw) = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(
+        x, lnf_s, lnf_b, wout)
+    return loss, dx, da, db, dw

@@ -1,0 +1,19 @@
+"""Shared pytest fixtures/helpers for kernel-vs-oracle comparisons."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def randf(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+def assert_close(a, b, rtol=1e-4, atol=1e-5, msg=""):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=rtol, atol=atol, err_msg=msg)

@@ -1,0 +1,73 @@
+"""Pallas top-1 gating kernel vs pure-jnp oracle (hypothesis sweeps)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref
+from .conftest import assert_close
+
+
+def _logits(seed, T, E):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.normal(size=(T, E)) * 2.0, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(2, 64), E=st.integers(2, 32),
+       cap=st.integers(1, 16), seed=st.integers(0, 2**16))
+def test_gating_matches_ref(T, E, cap, seed):
+    logits = _logits(seed, T, E)
+    outs_p = K.top1_gating_pallas(logits, cap)
+    outs_r = ref.top1_gating_ref(logits, cap)
+    for name, a, b in zip("expert gate pos keep me ce".split(), outs_p, outs_r):
+        assert_close(a, b, msg=name)
+
+
+@settings(max_examples=10, deadline=None)
+@given(T=st.integers(2, 32), E=st.integers(2, 8), seed=st.integers(0, 2**16))
+def test_gating_capacity_invariants(T, E, seed):
+    """No expert receives more than `cap` kept tokens; pos is a bijection."""
+    cap = max(1, (2 * T) // E)
+    logits = _logits(seed, T, E)
+    expert, gate, pos, keep, me, ce = (np.asarray(o) for o in
+                                       K.top1_gating_pallas(logits, cap))
+    for e in range(E):
+        kept = (expert == e) & (keep > 0.5)
+        assert kept.sum() <= cap
+        # Slots within an expert are unique and contiguous from 0.
+        slots = np.sort(pos[kept])
+        assert (slots == np.arange(len(slots))).all()
+    # Dropped tokens contribute zero gate.
+    assert (gate[keep < 0.5] == 0).all()
+    # me/ce are probability-mass summaries.
+    assert abs(me.sum() - 1.0) < 1e-5
+    assert abs(ce.sum() - 1.0) < 1e-5
+
+
+def test_gating_grad_matches_ref():
+    """custom_vjp backward == jax.grad through the oracle."""
+    T, E, cap = 24, 6, 8
+    logits = _logits(7, T, E)
+    _, _, pos, keep, _, _ = ref.top1_gating_ref(logits, cap)
+
+    def f_pallas(lg):
+        _, gate, _, _, me, _ = K.top1_gating(lg, cap)
+        return jnp.sum(gate ** 2) + jnp.sum(me * jnp.arange(E))
+
+    def f_ref(lg):
+        _, gate, _, _, me, _ = ref.top1_gating_ref(lg, cap)
+        return jnp.sum(gate ** 2) + jnp.sum(me * jnp.arange(E))
+
+    assert_close(jax.grad(f_pallas)(logits), jax.grad(f_ref)(logits),
+                 rtol=1e-4, atol=1e-5)
+
+
+def test_aux_loss_uniform_routing_is_one():
+    """Perfectly balanced routing gives aux loss == 1 (switch normalization)."""
+    E = 8
+    me = jnp.full((E,), 1.0 / E)
+    ce = jnp.full((E,), 1.0 / E)
+    assert abs(float(ref.aux_loss_ref(me, ce)) - 1.0) < 1e-6

@@ -1,0 +1,133 @@
+"""L2 model-level tests: shapes, training signal, per-layer == fused chain."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.configs import get_config, PRESETS
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, 0)
+    r = np.random.default_rng(0)
+    tok = jnp.asarray(r.integers(0, cfg.vocab_size, (cfg.batch_size, cfg.seq_len)), jnp.int32)
+    lab = jnp.asarray(r.integers(0, cfg.vocab_size, (cfg.batch_size, cfg.seq_len)), jnp.int32)
+    return cfg, params, tok, lab
+
+
+def test_param_spec_counts_match_formula():
+    for name, cfg in PRESETS.items():
+        spec = M.param_spec(cfg)
+        total = sum(int(np.prod(s)) if s else 1 for _, s, _ in spec)
+        assert total == cfg.param_counts()["total"], name
+
+
+def test_sparse_fraction_dominates_in_base():
+    """The paper's premise: expert (sparse) params are the bulk of the model."""
+    cfg = get_config("base")
+    c = cfg.param_counts()
+    sparse = c["per_layer_sparse"] * cfg.n_layers
+    assert sparse / c["total"] > 0.9
+    assert c["total"] > 90e6  # ~100M-class
+
+
+def test_initial_loss_near_uniform(tiny):
+    cfg, params, tok, lab = tiny
+    loss, ce, aux = M.forward(cfg, params, tok, lab)
+    assert abs(float(ce) - np.log(cfg.vocab_size)) < 0.5
+    assert 0.5 < float(aux) < 4.0  # aux ~ 1 for balanced routing
+
+
+def test_train_step_reduces_loss(tiny):
+    cfg, params, tok, lab = tiny
+    ms = [jnp.zeros_like(p) for p in params]
+    vs = [jnp.zeros_like(p) for p in params]
+    step = jax.jit(lambda p, m, v, s: M.train_step(
+        cfg, p, m, v, s, jnp.float32(1e-3), tok, lab))
+    losses = []
+    p, m, v = params, ms, vs
+    for i in range(5):
+        p, m, v, loss, ce, aux = step(p, m, v, jnp.float32(i + 1))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.1
+
+
+def test_layer_chain_equals_fused_forward(tiny):
+    """embed_fwd + layer_fwd* + head_fwd == forward (artifact-chain parity).
+
+    This is the invariant the rust offload trainer relies on: running the
+    per-layer artifacts in sequence must equal the fused fwd_loss artifact.
+    """
+    cfg, params, tok, lab = tiny
+    embed, layers, (lnf_s, lnf_b, wout) = M.split_params(cfg, params)
+    x = M.embed_fwd(tok, embed)
+    aux_total = 0.0
+    for lp in layers:
+        x, aux = M.layer_fwd(cfg, x, lp)
+        aux_total += aux
+    ce = M.head_fwd(cfg, x, lnf_s, lnf_b, wout, lab)
+    loss_chain = ce + cfg.aux_loss_weight * aux_total
+    loss_fused, _, _ = M.forward(cfg, params, tok, lab)
+    np.testing.assert_allclose(float(loss_chain), float(loss_fused), rtol=1e-5)
+
+
+def test_layer_bwd_matches_autodiff(tiny):
+    cfg, params, tok, lab = tiny
+    embed, layers, _ = M.split_params(cfg, params)
+    x = M.embed_fwd(tok, embed)
+    r = np.random.default_rng(3)
+    dy = jnp.asarray(r.normal(size=x.shape) * 0.1, jnp.float32)
+
+    dx, dps = M.layer_bwd(cfg, x, layers[0], dy, jnp.float32(0.0))
+
+    def f(xx, lps):
+        y, aux = M.layer_fwd(cfg, xx, lps)
+        return jnp.sum(y * dy)
+
+    dx_ref, dps_ref = jax.grad(f, argnums=(0, 1))(x, list(layers[0]))
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=2e-3, atol=1e-4)
+    for a, b in zip(dps, dps_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=1e-4)
+
+
+def test_embed_bwd_is_scatter_add(tiny):
+    cfg, params, tok, _ = tiny
+    r = np.random.default_rng(5)
+    dx = jnp.asarray(r.normal(size=(cfg.batch_size, cfg.seq_len, cfg.d_model)),
+                     jnp.float32)
+    d = np.asarray(M.embed_bwd(tok, dx, cfg.vocab_size))
+    want = np.zeros((cfg.vocab_size, cfg.d_model), np.float32)
+    tnp = np.asarray(tok)
+    dnp = np.asarray(dx)
+    for b in range(cfg.batch_size):
+        for t in range(cfg.seq_len):
+            want[tnp[b, t]] += dnp[b, t]
+    np.testing.assert_allclose(d, want, rtol=1e-4, atol=1e-5)
+
+
+def test_adamw_flat_step():
+    cfg = get_config("tiny")
+    p = jnp.ones((8,)) * 2.0
+    g = jnp.ones((8,))
+    m = jnp.zeros((8,))
+    v = jnp.zeros((8,))
+    p2, m2, v2 = M.adamw_flat(cfg, p, g, m, v, jnp.float32(1), jnp.float32(0.1))
+    # bias-corrected first step: mhat=g, vhat=g^2 -> update ≈ lr*(1 + wd*p)
+    want = 2.0 - 0.1 * (1.0 / (1.0 + cfg.eps) + cfg.weight_decay * 2.0)
+    np.testing.assert_allclose(np.asarray(p2), want, rtol=1e-4)
+
+
+def test_head_infer_greedy(tiny):
+    cfg, params, tok, _ = tiny
+    embed, layers, (lnf_s, lnf_b, wout) = M.split_params(cfg, params)
+    x = M.embed_fwd(tok, embed)
+    ids = M.head_infer(cfg, x, lnf_s, lnf_b, wout)
+    assert ids.shape == (cfg.batch_size,)
+    assert ids.dtype == jnp.int32
+    assert (np.asarray(ids) >= 0).all() and (np.asarray(ids) < cfg.vocab_size).all()

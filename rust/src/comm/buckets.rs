@@ -1,0 +1,187 @@
+//! Fusion communication, part 2 (§2.3 "Gradient Buckets"): gradients are
+//! grouped into pre-sized buckets; a bucket's communication fires only
+//! when *every* gradient assigned to it has been produced by backward.
+//! This enforces a deterministic aggregation order across ranks and
+//! avoids per-tensor message storms.
+
+use std::collections::HashMap;
+
+/// A bucket that fired: its fused payload + member names in order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReadyBucket {
+    pub index: usize,
+    pub names: Vec<String>,
+    pub data: Vec<f32>,
+}
+
+struct Bucket {
+    names: Vec<String>,
+    offsets: Vec<usize>,
+    len: usize,
+    data: Vec<f32>,
+    pending: usize,
+}
+
+/// Bucketed gradient accumulator. Assignment is static (registration
+/// order, greedy size cap) so every rank forms identical buckets — the
+/// property that prevents the "disordered communication between ranks"
+/// the paper calls out.
+pub struct GradientBuckets {
+    buckets: Vec<Bucket>,
+    /// name → (bucket, member slot)
+    lookup: HashMap<String, (usize, usize)>,
+    capacity_elems: usize,
+}
+
+impl GradientBuckets {
+    /// `capacity_elems` caps a bucket's fused size (N-parameter buckets).
+    pub fn new(capacity_elems: usize) -> Self {
+        GradientBuckets { buckets: Vec::new(), lookup: HashMap::new(), capacity_elems }
+    }
+
+    /// Register gradients in deterministic (backward) order.
+    pub fn register(&mut self, name: &str, len: usize) {
+        assert!(!self.lookup.contains_key(name), "grad '{}' registered twice", name);
+        let need_new = match self.buckets.last() {
+            None => true,
+            Some(b) => b.len + len > self.capacity_elems && b.len > 0,
+        };
+        if need_new {
+            self.buckets.push(Bucket {
+                names: Vec::new(),
+                offsets: Vec::new(),
+                len: 0,
+                data: Vec::new(),
+                pending: 0,
+            });
+        }
+        let bi = self.buckets.len() - 1;
+        let b = &mut self.buckets[bi];
+        self.lookup.insert(name.to_string(), (bi, b.names.len()));
+        b.names.push(name.to_string());
+        b.offsets.push(b.len);
+        b.len += len;
+        b.pending += 1;
+        b.data.resize(b.len, 0.0);
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Reset fill state for a new backward pass.
+    pub fn start_pass(&mut self) {
+        for b in &mut self.buckets {
+            b.pending = b.names.len();
+            b.data.iter_mut().for_each(|v| *v = 0.0);
+        }
+    }
+
+    /// Deposit a produced gradient. When this completes a bucket, the
+    /// fused payload is returned — that is the communication trigger.
+    pub fn deposit(&mut self, name: &str, grad: &[f32]) -> Option<ReadyBucket> {
+        let &(bi, slot) = self
+            .lookup
+            .get(name)
+            .unwrap_or_else(|| panic!("unregistered grad '{}'", name));
+        let b = &mut self.buckets[bi];
+        let off = b.offsets[slot];
+        let next_off = if slot + 1 < b.offsets.len() { b.offsets[slot + 1] } else { b.len };
+        assert_eq!(grad.len(), next_off - off, "grad '{}' length", name);
+        b.data[off..next_off].copy_from_slice(grad);
+        b.pending -= 1;
+        if b.pending == 0 {
+            Some(ReadyBucket { index: bi, names: b.names.clone(), data: b.data.clone() })
+        } else {
+            None
+        }
+    }
+
+    /// Split a post-collective fused payload back into (name, slice).
+    pub fn split<'a>(&self, bucket: usize, data: &'a [f32]) -> Vec<(String, &'a [f32])> {
+        let b = &self.buckets[bucket];
+        assert_eq!(data.len(), b.len);
+        b.names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| {
+                let off = b.offsets[i];
+                let end = if i + 1 < b.offsets.len() { b.offsets[i + 1] } else { b.len };
+                (n.clone(), &data[off..end])
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_packing_respects_capacity() {
+        let mut g = GradientBuckets::new(10);
+        g.register("a", 4);
+        g.register("b", 4);
+        g.register("c", 4); // 12 > 10 → new bucket
+        g.register("d", 20); // oversized → own bucket
+        assert_eq!(g.n_buckets(), 3);
+    }
+
+    #[test]
+    fn fires_only_when_full() {
+        let mut g = GradientBuckets::new(8);
+        g.register("a", 2);
+        g.register("b", 2);
+        g.start_pass();
+        assert!(g.deposit("b", &[3.0, 4.0]).is_none());
+        let ready = g.deposit("a", &[1.0, 2.0]).unwrap();
+        assert_eq!(ready.names, vec!["a", "b"]);
+        assert_eq!(ready.data, vec![1.0, 2.0, 3.0, 4.0]); // registration order, not arrival
+    }
+
+    #[test]
+    fn split_restores_per_tensor_views() {
+        let mut g = GradientBuckets::new(8);
+        g.register("a", 1);
+        g.register("b", 3);
+        g.start_pass();
+        g.deposit("a", &[9.0]);
+        let ready = g.deposit("b", &[1.0, 2.0, 3.0]).unwrap();
+        let parts = g.split(ready.index, &ready.data);
+        assert_eq!(parts[0], ("a".to_string(), &[9.0][..]));
+        assert_eq!(parts[1].1, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn multiple_passes_reset() {
+        let mut g = GradientBuckets::new(4);
+        g.register("a", 2);
+        g.start_pass();
+        assert!(g.deposit("a", &[1.0, 1.0]).is_some());
+        g.start_pass();
+        let r = g.deposit("a", &[2.0, 2.0]).unwrap();
+        assert_eq!(r.data, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn deterministic_across_arrival_orders() {
+        // Same registration, different arrival order → identical payloads.
+        let mk = || {
+            let mut g = GradientBuckets::new(100);
+            g.register("w1", 2);
+            g.register("w2", 2);
+            g.register("w3", 2);
+            g.start_pass();
+            g
+        };
+        let mut g1 = mk();
+        g1.deposit("w1", &[1.0; 2]);
+        g1.deposit("w2", &[2.0; 2]);
+        let r1 = g1.deposit("w3", &[3.0; 2]).unwrap();
+        let mut g2 = mk();
+        g2.deposit("w3", &[3.0; 2]);
+        g2.deposit("w1", &[1.0; 2]);
+        let r2 = g2.deposit("w2", &[2.0; 2]).unwrap();
+        assert_eq!(r1, r2);
+    }
+}

@@ -1,0 +1,124 @@
+//! Fused collective helpers: the glue between [`FusionBuffer`] /
+//! [`GradientBuckets`] and the mesh — what the paper calls "fusion
+//! communication" in the ZeRO-3 dense lane.
+
+use super::buckets::GradientBuckets;
+use super::fusion::FusionBuffer;
+use super::mesh::MeshHandle;
+
+/// ZeRO-3 dense-parameter gather (the DenseSchedule of Algorithm 1):
+/// each rank owns a shard of the fused dense buffer; all_gather
+/// reassembles the full parameters, one fused message instead of one
+/// per tensor.
+pub fn dense_allgather(h: &mut MeshHandle, shard: &[f32]) -> Vec<f32> {
+    h.all_gather(shard)
+}
+
+/// Data-parallel gradient sync through buckets: deposit grads as
+/// backward produces them; every completed bucket all-reduces (mean) and
+/// the reduced slices are handed to `apply(name, slice)`.
+pub fn sync_bucket_grads(
+    h: &mut MeshHandle,
+    buckets: &mut GradientBuckets,
+    produced: &[(String, Vec<f32>)],
+    mut apply: impl FnMut(&str, &[f32]),
+) {
+    let world = h.world() as f32;
+    for (name, grad) in produced {
+        if let Some(ready) = buckets.deposit(name, grad) {
+            let mut fused = ready.data.clone();
+            h.all_reduce_sum(&mut fused);
+            for v in fused.iter_mut() {
+                *v /= world;
+            }
+            for (n, slice) in buckets.split(ready.index, &fused) {
+                apply(&n, slice);
+            }
+        }
+    }
+}
+
+/// Shard a fused buffer for ZeRO-3: rank r keeps `[r*len/n, (r+1)*len/n)`
+/// (the buffer is padded to a multiple of the world size by the caller's
+/// layout; the tail shard may be shorter).
+pub fn zero3_shard(fused: &FusionBuffer, rank: usize, world: usize) -> Vec<f32> {
+    let len = fused.len();
+    let per = (len + world - 1) / world;
+    let start = (rank * per).min(len);
+    let end = ((rank + 1) * per).min(len);
+    let mut shard = fused.fused()[start..end].to_vec();
+    shard.resize(per, 0.0); // pad so all_gather stays rectangular
+    shard
+}
+
+/// Reassemble a zero3-sharded gather back to `len` elements.
+pub fn zero3_unshard(gathered: Vec<f32>, len: usize) -> Vec<f32> {
+    let mut out = gathered;
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::mesh::Mesh;
+
+    #[test]
+    fn zero3_roundtrip_over_mesh() {
+        let world = 3;
+        let len = 10; // not divisible by 3 → padding path
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let mut fb = FusionBuffer::with_layout([("w", 6), ("b", 4)]);
+                    fb.pack("w", &[1., 2., 3., 4., 5., 6.]);
+                    fb.pack("b", &[7., 8., 9., 10.]);
+                    let shard = zero3_shard(&fb, h.rank(), h.world());
+                    let full = zero3_unshard(h.all_gather(&shard), fb.len());
+                    full
+                })
+            })
+            .collect();
+        for j in joins {
+            assert_eq!(j.join().unwrap(), vec![1., 2., 3., 4., 5., 6., 7., 8., 9., 10.]);
+        }
+    }
+
+    #[test]
+    fn bucketed_grad_sync_averages() {
+        let world = 2;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let mut gb = GradientBuckets::new(100);
+                    gb.register("g1", 2);
+                    gb.register("g2", 2);
+                    gb.start_pass();
+                    let r = h.rank() as f32;
+                    let produced = vec![
+                        ("g2".to_string(), vec![10.0 + r; 2]),
+                        ("g1".to_string(), vec![r; 2]),
+                    ];
+                    let mut got = Vec::new();
+                    sync_bucket_grads(&mut h, &mut gb, &produced, |n, s| {
+                        got.push((n.to_string(), s.to_vec()));
+                    });
+                    got
+                })
+            })
+            .collect();
+        for j in joins {
+            let got = j.join().unwrap();
+            assert_eq!(got.len(), 2);
+            // mean of ranks 0,1: g1 -> 0.5, g2 -> 10.5
+            let g1 = got.iter().find(|(n, _)| n == "g1").unwrap();
+            assert_eq!(g1.1, vec![0.5, 0.5]);
+            let g2 = got.iter().find(|(n, _)| n == "g2").unwrap();
+            assert_eq!(g2.1, vec![10.5, 10.5]);
+        }
+    }
+}

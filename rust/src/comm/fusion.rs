@@ -1,0 +1,163 @@
+//! Fusion communication, part 1 (§2.3 "Fusion parameters"): the
+//! parameter management unit. Many small parameter slices are packed
+//! into one contiguous buffer before a collective and re-split by the
+//! recorded slice index afterwards — fewer, larger messages.
+
+use std::collections::HashMap;
+
+/// Registered slice: name → (offset, len) within the fused buffer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceIndex {
+    pub name: String,
+    pub offset: usize,
+    pub len: usize,
+}
+
+/// A fused parameter buffer with its slice registry.
+#[derive(Debug, Clone, Default)]
+pub struct FusionBuffer {
+    slices: Vec<SliceIndex>,
+    by_name: HashMap<String, usize>,
+    data: Vec<f32>,
+}
+
+impl FusionBuffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare the slice layout up front (lengths from the AOT manifest).
+    pub fn with_layout<'a>(names_lens: impl IntoIterator<Item = (&'a str, usize)>) -> Self {
+        let mut fb = FusionBuffer::new();
+        for (name, len) in names_lens {
+            fb.register(name, len);
+        }
+        fb
+    }
+
+    /// Append a slice to the layout; returns its offset.
+    pub fn register(&mut self, name: &str, len: usize) -> usize {
+        assert!(
+            !self.by_name.contains_key(name),
+            "slice '{}' registered twice",
+            name
+        );
+        let offset = self.data.len();
+        self.slices.push(SliceIndex { name: name.to_string(), offset, len });
+        self.by_name.insert(name.to_string(), self.slices.len() - 1);
+        self.data.resize(offset + len, 0.0);
+        offset
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn n_slices(&self) -> usize {
+        self.slices.len()
+    }
+
+    pub fn slice_index(&self) -> &[SliceIndex] {
+        &self.slices
+    }
+
+    /// Write one slice's values (the "fuse" step).
+    pub fn pack(&mut self, name: &str, values: &[f32]) {
+        let idx = self.by_name[name];
+        let s = &self.slices[idx];
+        assert_eq!(values.len(), s.len, "slice '{}' length", name);
+        self.data[s.offset..s.offset + s.len].copy_from_slice(values);
+    }
+
+    /// Read one slice back (the "cut into smaller ones" step).
+    pub fn unpack(&self, name: &str) -> &[f32] {
+        let idx = self.by_name[name];
+        let s = &self.slices[idx];
+        &self.data[s.offset..s.offset + s.len]
+    }
+
+    /// The whole fused buffer (what actually goes on the wire).
+    pub fn fused(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn fused_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Replace the fused contents (e.g. after an all-gather round trip).
+    pub fn load_fused(&mut self, data: Vec<f32>) {
+        assert_eq!(data.len(), self.data.len(), "fused length");
+        self.data = data;
+    }
+
+    /// Split the layout into chunks no larger than `max_len` elements,
+    /// preserving order. Used to bound single-message size — the ablation
+    /// bench sweeps this threshold.
+    pub fn chunked(&self, max_len: usize) -> Vec<(usize, usize)> {
+        let mut chunks = Vec::new();
+        let mut start = 0usize;
+        while start < self.data.len() {
+            let end = (start + max_len).min(self.data.len());
+            chunks.push((start, end - start));
+            start = end;
+        }
+        chunks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_by_recorded_index() {
+        let mut fb = FusionBuffer::with_layout([("a", 3), ("b", 2), ("c", 4)]);
+        assert_eq!(fb.len(), 9);
+        fb.pack("b", &[5.0, 6.0]);
+        fb.pack("a", &[1.0, 2.0, 3.0]);
+        fb.pack("c", &[7.0, 8.0, 9.0, 10.0]);
+        assert_eq!(fb.unpack("a"), &[1.0, 2.0, 3.0]);
+        assert_eq!(fb.unpack("b"), &[5.0, 6.0]);
+        assert_eq!(fb.fused()[..5], [1.0, 2.0, 3.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn roundtrip_through_wire_buffer() {
+        let mut fb = FusionBuffer::with_layout([("x", 2), ("y", 2)]);
+        fb.pack("x", &[1.0, 2.0]);
+        fb.pack("y", &[3.0, 4.0]);
+        // simulate collective: scale everything by 2
+        let wire: Vec<f32> = fb.fused().iter().map(|v| v * 2.0).collect();
+        fb.load_fused(wire);
+        assert_eq!(fb.unpack("y"), &[6.0, 8.0]);
+    }
+
+    #[test]
+    fn chunking_bounds_message_size() {
+        let fb = FusionBuffer::with_layout([("a", 10), ("b", 7)]);
+        let chunks = fb.chunked(6);
+        assert_eq!(chunks, vec![(0, 6), (6, 6), (12, 5)]);
+        let total: usize = chunks.iter().map(|(_, l)| l).sum();
+        assert_eq!(total, 17);
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_registration_panics() {
+        let mut fb = FusionBuffer::new();
+        fb.register("a", 1);
+        fb.register("a", 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_length_pack_panics() {
+        let mut fb = FusionBuffer::with_layout([("a", 3)]);
+        fb.pack("a", &[1.0]);
+    }
+}

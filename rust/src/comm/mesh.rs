@@ -1,0 +1,265 @@
+//! In-process device mesh: N ranks (threads) exchanging `Vec<f32>`
+//! payloads through shared slots, with byte accounting per rank.
+//!
+//! This is the NCCL substitute (DESIGN.md §Substitutions): collectives
+//! move real bytes with the same peer pattern as the paper's fabric, and
+//! the topology model prices the pattern separately. All payloads are
+//! plain data (PJRT never crosses threads).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+/// Per-rank traffic accounting.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommStats {
+    pub ops: u64,
+    pub bytes_sent: u64,
+    pub bytes_received: u64,
+}
+
+struct Shared {
+    n: usize,
+    barrier: Barrier,
+    /// One payload slot per (src rank): each collective round, rank r
+    /// deposits its contribution in `slots[r]`.
+    slots: Mutex<Vec<Option<Vec<Vec<f32>>>>>,
+    generation: AtomicU64,
+}
+
+/// Mesh factory: create once, split into per-rank handles.
+pub struct Mesh;
+
+impl Mesh {
+    pub fn new(n: usize) -> Vec<MeshHandle> {
+        let shared = Arc::new(Shared {
+            n,
+            barrier: Barrier::new(n),
+            slots: Mutex::new(vec![None; n]),
+            generation: AtomicU64::new(0),
+        });
+        (0..n)
+            .map(|rank| MeshHandle { rank, shared: shared.clone(), stats: CommStats::default() })
+            .collect()
+    }
+}
+
+/// One rank's endpoint. `Send` — hand each to its worker thread.
+pub struct MeshHandle {
+    rank: usize,
+    shared: Arc<Shared>,
+    stats: CommStats,
+}
+
+impl MeshHandle {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.shared.n
+    }
+
+    pub fn stats(&self) -> CommStats {
+        self.stats
+    }
+
+    pub fn barrier(&self) {
+        self.shared.barrier.wait();
+    }
+
+    /// Core exchange: every rank deposits `parts` (one Vec per
+    /// destination, or a single broadcast part) and receives every
+    /// rank's deposit. Returns `recv[src] = parts deposited by src`.
+    fn exchange(&mut self, parts: Vec<Vec<f32>>) -> Vec<Vec<Vec<f32>>> {
+        let sent: u64 = parts.iter().map(|p| p.len() as u64 * 4).sum();
+        {
+            let mut slots = self.shared.slots.lock().unwrap();
+            slots[self.rank] = Some(parts);
+        }
+        self.shared.barrier.wait();
+        let all: Vec<Vec<Vec<f32>>> = {
+            let slots = self.shared.slots.lock().unwrap();
+            slots.iter().map(|s| s.clone().expect("slot filled")).collect()
+        };
+        self.shared.barrier.wait();
+        if self.rank == 0 {
+            let mut slots = self.shared.slots.lock().unwrap();
+            slots.iter_mut().for_each(|s| *s = None);
+            self.shared.generation.fetch_add(1, Ordering::Relaxed);
+        }
+        self.shared.barrier.wait();
+        let recvd: u64 = all.iter().flat_map(|p| p.iter()).map(|p| p.len() as u64 * 4).sum();
+        self.stats.ops += 1;
+        self.stats.bytes_sent += sent;
+        self.stats.bytes_received += recvd;
+        all
+    }
+
+    /// AllGather: concatenation of every rank's shard, rank order.
+    pub fn all_gather(&mut self, shard: &[f32]) -> Vec<f32> {
+        let all = self.exchange(vec![shard.to_vec()]);
+        let mut out = Vec::with_capacity(shard.len() * self.world());
+        for parts in all {
+            out.extend_from_slice(&parts[0]);
+        }
+        out
+    }
+
+    /// AllReduce (sum), in place.
+    pub fn all_reduce_sum(&mut self, data: &mut [f32]) {
+        let all = self.exchange(vec![data.to_vec()]);
+        for (src, parts) in all.iter().enumerate() {
+            if src == self.rank {
+                continue;
+            }
+            for (d, s) in data.iter_mut().zip(&parts[0]) {
+                *d += s;
+            }
+        }
+    }
+
+    /// ReduceScatter (sum): each rank gets the reduced shard `rank`.
+    /// `data.len()` must divide evenly by world size.
+    pub fn reduce_scatter_sum(&mut self, data: &[f32]) -> Vec<f32> {
+        let n = self.world();
+        assert_eq!(data.len() % n, 0, "reduce_scatter shard size");
+        let shard = data.len() / n;
+        let parts: Vec<Vec<f32>> =
+            (0..n).map(|dst| data[dst * shard..(dst + 1) * shard].to_vec()).collect();
+        let all = self.exchange(parts);
+        let mut out = vec![0.0f32; shard];
+        for parts in &all {
+            for (o, s) in out.iter_mut().zip(&parts[self.rank]) {
+                *o += s;
+            }
+        }
+        out
+    }
+
+    /// AllToAll: `chunks[dst]` goes to rank dst; returns `recv[src]`.
+    pub fn all_to_all(&mut self, chunks: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+        assert_eq!(chunks.len(), self.world(), "one chunk per destination");
+        let all = self.exchange(chunks);
+        all.into_iter().map(|mut parts| std::mem::take(&mut parts[self.rank])).collect()
+    }
+
+    /// Broadcast from `root`.
+    pub fn broadcast(&mut self, data: &[f32], root: usize) -> Vec<f32> {
+        let part = if self.rank == root { data.to_vec() } else { Vec::new() };
+        let all = self.exchange(vec![part]);
+        all[root][0].clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ranks<F, T>(n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(MeshHandle) -> T + Send + Sync + Clone + 'static,
+        T: Send + 'static,
+    {
+        let handles = Mesh::new(n);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                let f = f.clone();
+                std::thread::spawn(move || f(h))
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn all_gather_orders_by_rank() {
+        let outs = run_ranks(4, |mut h| {
+            let shard = vec![h.rank() as f32; 2];
+            h.all_gather(&shard)
+        });
+        for o in outs {
+            assert_eq!(o, vec![0., 0., 1., 1., 2., 2., 3., 3.]);
+        }
+    }
+
+    #[test]
+    fn all_reduce_sums() {
+        let outs = run_ranks(3, |mut h| {
+            let mut d = vec![1.0 + h.rank() as f32, 10.0];
+            h.all_reduce_sum(&mut d);
+            d
+        });
+        for o in outs {
+            assert_eq!(o, vec![6.0, 30.0]);
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_shards() {
+        let outs = run_ranks(2, |mut h| {
+            // rank r contributes [r, r, 100+r, 100+r]
+            let r = h.rank() as f32;
+            let d = vec![r, r, 100.0 + r, 100.0 + r];
+            (h.rank(), h.reduce_scatter_sum(&d))
+        });
+        for (rank, shard) in outs {
+            if rank == 0 {
+                assert_eq!(shard, vec![1.0, 1.0]); // 0+1
+            } else {
+                assert_eq!(shard, vec![201.0, 201.0]); // 100+101
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let outs = run_ranks(3, |mut h| {
+            let r = h.rank() as f32;
+            // chunk for dst d = [10*r + d]
+            let chunks: Vec<Vec<f32>> = (0..3).map(|d| vec![10.0 * r + d as f32]).collect();
+            (h.rank(), h.all_to_all(chunks))
+        });
+        for (rank, recv) in outs {
+            for (src, c) in recv.iter().enumerate() {
+                assert_eq!(c, &vec![10.0 * src as f32 + rank as f32]);
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let outs = run_ranks(4, |mut h| h.broadcast(&[7.0, 8.0], 2));
+        for o in outs {
+            assert_eq!(o, vec![7.0, 8.0]);
+        }
+    }
+
+    #[test]
+    fn repeated_collectives_reuse_slots() {
+        let outs = run_ranks(2, |mut h| {
+            let mut acc = 0.0;
+            for i in 0..10 {
+                let g = h.all_gather(&[i as f32 + h.rank() as f32]);
+                acc += g.iter().sum::<f32>();
+            }
+            acc
+        });
+        // sum over i of (i + (i+1)) = sum(2i+1) for i in 0..10 = 100
+        for o in outs {
+            assert_eq!(o, 100.0);
+        }
+    }
+
+    #[test]
+    fn stats_count_bytes() {
+        let outs = run_ranks(2, |mut h| {
+            h.all_gather(&[0.0; 8]);
+            h.stats()
+        });
+        for s in outs {
+            assert_eq!(s.ops, 1);
+            assert_eq!(s.bytes_sent, 32);
+            assert_eq!(s.bytes_received, 64);
+        }
+    }
+}

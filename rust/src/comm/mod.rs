@@ -1,0 +1,23 @@
+//! Communication: the in-process device mesh with byte-accurate
+//! collectives, the fusion-communication machinery of §2.3 (parameter
+//! fusion + gradient buckets), the network-topology model of §4.2
+//! (Figure 7) and the resource-aware Hierarchical AlltoAll (Figure 8).
+//!
+//! The mesh executes real data movement between worker threads; the
+//! topology model prices that movement for the calibrated simulator.
+//! Keeping movement and pricing separate lets the same collective plan
+//! be *verified* (numerics, byte counts) at laptop scale and *costed*
+//! at paper scale.
+
+pub mod mesh;
+pub mod collectives;
+pub mod fusion;
+pub mod buckets;
+pub mod topology;
+pub mod hierarchical;
+
+pub use buckets::GradientBuckets;
+pub use fusion::FusionBuffer;
+pub use hierarchical::{AllToAllPlan, A2aStrategy};
+pub use mesh::{CommStats, Mesh, MeshHandle};
+pub use topology::{DeviceCoord, Topology};

@@ -1,0 +1,184 @@
+//! Network-topology model of the paper's Figure 7: clusters of nodes
+//! with rail-aligned ToR bridges, leaf switches grouped per rail, and
+//! spine switches for cross-rail traffic.
+//!
+//! The model answers two questions the Hierarchical-AlltoAll analysis
+//! needs: *which link classes does a (src → dst) message traverse* and
+//! *how long does a message take* given bytes, path and contention.
+
+use crate::config::{ClusterConfig, LinkKind};
+
+/// Physical position of one GPU.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceCoord {
+    pub cluster: usize,
+    pub node: usize,
+    /// GPU index within the node == rail index (ToR/leaf group).
+    pub gpu: usize,
+}
+
+impl DeviceCoord {
+    /// Flatten to a global rank (cluster-major, then node, then gpu).
+    pub fn rank(&self, cfg: &ClusterConfig) -> usize {
+        (self.cluster * cfg.nodes_per_cluster + self.node) * cfg.gpus_per_node + self.gpu
+    }
+
+    pub fn from_rank(rank: usize, cfg: &ClusterConfig) -> DeviceCoord {
+        let gpu = rank % cfg.gpus_per_node;
+        let node_g = rank / cfg.gpus_per_node;
+        let node = node_g % cfg.nodes_per_cluster;
+        let cluster = node_g / cfg.nodes_per_cluster;
+        DeviceCoord { cluster, node, gpu }
+    }
+}
+
+/// The fabric model.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub cfg: ClusterConfig,
+}
+
+impl Topology {
+    pub fn new(cfg: ClusterConfig) -> Topology {
+        Topology { cfg }
+    }
+
+    /// Link classes traversed by one message (Figure 7 routing):
+    ///
+    /// - same node → NVLink/NVSwitch;
+    /// - same cluster, same rail → the rail's shared ToR;
+    /// - different cluster, same rail → ToR, the rail's leaf, ToR
+    ///   (the paper's blue path);
+    /// - different rail across nodes → ToR, leaf, **spine**, leaf, ToR
+    ///   (the red path the Hierarchical AlltoAll avoids).
+    pub fn path(&self, src: DeviceCoord, dst: DeviceCoord) -> Vec<LinkKind> {
+        use LinkKind::*;
+        if src == dst {
+            return vec![];
+        }
+        if (src.cluster, src.node) == (dst.cluster, dst.node) {
+            return vec![NvLink];
+        }
+        if src.gpu == dst.gpu {
+            if src.cluster == dst.cluster {
+                // Nodes in one cluster share the rail's ToR bridge.
+                return vec![Tor, Tor];
+            }
+            return vec![Tor, Leaf, Tor];
+        }
+        // Cross-rail: must climb to the spine.
+        vec![Tor, Leaf, Spine, Leaf, Tor]
+    }
+
+    /// Whether a message crosses the spine (the congestion-prone layer).
+    pub fn crosses_spine(&self, src: DeviceCoord, dst: DeviceCoord) -> bool {
+        self.path(src, dst).contains(&LinkKind::Spine)
+    }
+
+    /// Store-and-forward-free transfer time: sum of hop latencies plus
+    /// serialization at the bottleneck link, derated by `contention`
+    /// (number of concurrent flows sharing the bottleneck).
+    pub fn transfer_time(&self, bytes: f64, path: &[LinkKind], contention: f64) -> f64 {
+        if path.is_empty() {
+            return 0.0;
+        }
+        let lat: f64 = path.iter().map(|&k| self.cfg.perf(k).latency).sum();
+        let bottleneck = path
+            .iter()
+            .map(|&k| self.cfg.perf(k).bandwidth)
+            .fold(f64::INFINITY, f64::min);
+        lat + bytes * contention.max(1.0) / bottleneck
+    }
+
+    /// Convenience: point-to-point time between two coords.
+    pub fn p2p_time(&self, src: DeviceCoord, dst: DeviceCoord, bytes: f64, contention: f64) -> f64 {
+        let p = self.path(src, dst);
+        self.transfer_time(bytes, &p, contention)
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.cfg.total_gpus()
+    }
+
+    pub fn all_coords(&self) -> Vec<DeviceCoord> {
+        (0..self.total_gpus())
+            .map(|r| DeviceCoord::from_rank(r, &self.cfg))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn topo() -> Topology {
+        Topology::new(ClusterConfig {
+            n_clusters: 2,
+            nodes_per_cluster: 2,
+            gpus_per_node: 4,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let t = topo();
+        for r in 0..t.total_gpus() {
+            let c = DeviceCoord::from_rank(r, &t.cfg);
+            assert_eq!(c.rank(&t.cfg), r);
+        }
+    }
+
+    #[test]
+    fn path_classes_match_figure7() {
+        use LinkKind::*;
+        let t = topo();
+        let a = DeviceCoord { cluster: 0, node: 0, gpu: 0 };
+        // intra-node
+        assert_eq!(t.path(a, DeviceCoord { cluster: 0, node: 0, gpu: 3 }), vec![NvLink]);
+        // same cluster, same rail
+        assert_eq!(t.path(a, DeviceCoord { cluster: 0, node: 1, gpu: 0 }), vec![Tor, Tor]);
+        // cross cluster, same rail (blue path)
+        assert_eq!(
+            t.path(a, DeviceCoord { cluster: 1, node: 0, gpu: 0 }),
+            vec![Tor, Leaf, Tor]
+        );
+        // cross rail (red path)
+        let red = t.path(a, DeviceCoord { cluster: 1, node: 1, gpu: 3 });
+        assert!(red.contains(&Spine));
+        assert!(t.crosses_spine(a, DeviceCoord { cluster: 0, node: 1, gpu: 1 }));
+    }
+
+    #[test]
+    fn same_rail_faster_than_cross_rail() {
+        let t = topo();
+        let a = DeviceCoord { cluster: 0, node: 0, gpu: 0 };
+        let same = t.p2p_time(a, DeviceCoord { cluster: 1, node: 0, gpu: 0 }, 1e8, 1.0);
+        let cross = t.p2p_time(a, DeviceCoord { cluster: 1, node: 0, gpu: 1 }, 1e8, 1.0);
+        assert!(
+            cross > 1.15 * same,
+            "cross-rail {} should be slower than rail-aligned {}",
+            cross,
+            same
+        );
+    }
+
+    #[test]
+    fn contention_scales_serialization() {
+        let t = topo();
+        let a = DeviceCoord { cluster: 0, node: 0, gpu: 0 };
+        let b = DeviceCoord { cluster: 0, node: 0, gpu: 1 };
+        let t1 = t.p2p_time(a, b, 1e9, 1.0);
+        let t4 = t.p2p_time(a, b, 1e9, 4.0);
+        assert!(t4 > 3.5 * t1 && t4 < 4.5 * t1);
+    }
+
+    #[test]
+    fn zero_length_path_for_self() {
+        let t = topo();
+        let a = DeviceCoord { cluster: 0, node: 1, gpu: 2 };
+        assert!(t.path(a, a).is_empty());
+        assert_eq!(t.p2p_time(a, a, 1e9, 1.0), 0.0);
+    }
+}

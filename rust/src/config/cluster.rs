@@ -1,0 +1,211 @@
+//! Cluster/hardware description: devices, nodes, clusters, and link
+//! characteristics — the substrate for the network-topology model (§4.2)
+//! and the cost-model simulator (Tables 1–2).
+//!
+//! Defaults are A100-pod numbers matching the paper's testbed; everything
+//! is overridable from JSON so benches can sweep hardware what-ifs.
+
+use crate::util::json::Json;
+
+/// Physical link classes in the paper's fabric (Figure 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LinkKind {
+    /// Intra-node GPU-GPU via NVLink/NVSwitch.
+    NvLink,
+    /// GPU <-> host memory via PCIe.
+    Pcie,
+    /// Host <-> NVMe SSD.
+    Nvme,
+    /// Node <-> ToR switch (NIC).
+    Tor,
+    /// ToR <-> leaf switch (same rail, cross-cluster).
+    Leaf,
+    /// Leaf <-> spine switch (cross-rail).
+    Spine,
+}
+
+/// Per-link performance: bandwidth in bytes/s, latency in seconds.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkPerf {
+    pub bandwidth: f64,
+    pub latency: f64,
+}
+
+/// Whole-cluster description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of clusters (pods) in the fabric.
+    pub n_clusters: usize,
+    /// Nodes per cluster.
+    pub nodes_per_cluster: usize,
+    /// GPUs per node (the paper's `p`; rails are indexed by GPU rank).
+    pub gpus_per_node: usize,
+    /// Device compute: dense bf16/fp16 FLOP/s (A100: 312e12).
+    pub flops: f64,
+    /// Achievable MFU for transformer workloads (calibrates the sim).
+    pub mfu: f64,
+    /// Device memory in bytes (A100-80G by default).
+    pub gpu_mem: u64,
+    /// Host memory per node in bytes.
+    pub cpu_mem: u64,
+    /// SSD capacity per node in bytes.
+    pub ssd_cap: u64,
+    pub nvlink: LinkPerf,
+    pub pcie: LinkPerf,
+    pub nvme: LinkPerf,
+    pub tor: LinkPerf,
+    pub leaf: LinkPerf,
+    pub spine: LinkPerf,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            n_clusters: 1,
+            nodes_per_cluster: 1,
+            gpus_per_node: 8,
+            flops: 312e12,
+            mfu: 0.35,
+            gpu_mem: 80 * (1 << 30),
+            cpu_mem: 1024 * (1 << 30),
+            ssd_cap: 8 * 1024 * (1 << 30),
+            // Unidirectional effective bandwidths.
+            nvlink: LinkPerf { bandwidth: 300e9, latency: 2e-6 },
+            pcie: LinkPerf { bandwidth: 25e9, latency: 5e-6 },
+            nvme: LinkPerf { bandwidth: 3.2e9, latency: 80e-6 },
+            tor: LinkPerf { bandwidth: 25e9, latency: 5e-6 },   // 200Gb IB
+            leaf: LinkPerf { bandwidth: 20e9, latency: 10e-6 },
+            spine: LinkPerf { bandwidth: 16e9, latency: 20e-6 },
+        }
+    }
+}
+
+impl ClusterConfig {
+    /// A single-node config with `g` GPUs.
+    pub fn single_node(g: usize) -> Self {
+        ClusterConfig { gpus_per_node: g, ..Default::default() }
+    }
+
+    /// `n` nodes of 8 GPUs in one cluster (the paper's multi-node rows).
+    pub fn nodes(n: usize) -> Self {
+        ClusterConfig { nodes_per_cluster: n, ..Default::default() }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.n_clusters * self.nodes_per_cluster * self.gpus_per_node
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.n_clusters * self.nodes_per_cluster
+    }
+
+    pub fn perf(&self, kind: LinkKind) -> LinkPerf {
+        match kind {
+            LinkKind::NvLink => self.nvlink,
+            LinkKind::Pcie => self.pcie,
+            LinkKind::Nvme => self.nvme,
+            LinkKind::Tor => self.tor,
+            LinkKind::Leaf => self.leaf,
+            LinkKind::Spine => self.spine,
+        }
+    }
+
+    /// Effective device compute throughput (FLOP/s) after MFU derating.
+    pub fn effective_flops(&self) -> f64 {
+        self.flops * self.mfu
+    }
+
+    pub fn from_json(j: &Json) -> ClusterConfig {
+        let d = ClusterConfig::default();
+        let u = |k: &str, def: usize| j.get(k).as_usize().unwrap_or(def);
+        let f = |k: &str, def: f64| j.get(k).as_f64().unwrap_or(def);
+        let link = |k: &str, def: LinkPerf| {
+            let o = j.get(k);
+            if o.is_null() {
+                def
+            } else {
+                LinkPerf {
+                    bandwidth: o.get("bandwidth").as_f64().unwrap_or(def.bandwidth),
+                    latency: o.get("latency").as_f64().unwrap_or(def.latency),
+                }
+            }
+        };
+        ClusterConfig {
+            n_clusters: u("n_clusters", d.n_clusters),
+            nodes_per_cluster: u("nodes_per_cluster", d.nodes_per_cluster),
+            gpus_per_node: u("gpus_per_node", d.gpus_per_node),
+            flops: f("flops", d.flops),
+            mfu: f("mfu", d.mfu),
+            gpu_mem: f("gpu_mem", d.gpu_mem as f64) as u64,
+            cpu_mem: f("cpu_mem", d.cpu_mem as f64) as u64,
+            ssd_cap: f("ssd_cap", d.ssd_cap as f64) as u64,
+            nvlink: link("nvlink", d.nvlink),
+            pcie: link("pcie", d.pcie),
+            nvme: link("nvme", d.nvme),
+            tor: link("tor", d.tor),
+            leaf: link("leaf", d.leaf),
+            spine: link("spine", d.spine),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let link = |l: LinkPerf| {
+            Json::obj(vec![
+                ("bandwidth", Json::num(l.bandwidth)),
+                ("latency", Json::num(l.latency)),
+            ])
+        };
+        Json::obj(vec![
+            ("n_clusters", Json::num(self.n_clusters as f64)),
+            ("nodes_per_cluster", Json::num(self.nodes_per_cluster as f64)),
+            ("gpus_per_node", Json::num(self.gpus_per_node as f64)),
+            ("flops", Json::num(self.flops)),
+            ("mfu", Json::num(self.mfu)),
+            ("gpu_mem", Json::num(self.gpu_mem as f64)),
+            ("cpu_mem", Json::num(self.cpu_mem as f64)),
+            ("ssd_cap", Json::num(self.ssd_cap as f64)),
+            ("nvlink", link(self.nvlink)),
+            ("pcie", link(self.pcie)),
+            ("nvme", link(self.nvme)),
+            ("tor", link(self.tor)),
+            ("leaf", link(self.leaf)),
+            ("spine", link(self.spine)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals() {
+        let c = ClusterConfig { n_clusters: 2, nodes_per_cluster: 4, gpus_per_node: 8, ..Default::default() };
+        assert_eq!(c.total_gpus(), 64);
+        assert_eq!(c.total_nodes(), 8);
+    }
+
+    #[test]
+    fn link_ordering_matches_fabric() {
+        // The paper's premise: NVLink >> PCIe > leaf > spine.
+        let c = ClusterConfig::default();
+        assert!(c.nvlink.bandwidth > c.pcie.bandwidth);
+        assert!(c.tor.bandwidth >= c.leaf.bandwidth);
+        assert!(c.leaf.bandwidth > c.spine.bandwidth);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let c = ClusterConfig::nodes(4);
+        let back = ClusterConfig::from_json(&c.to_json());
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"gpus_per_node": 4}"#).unwrap();
+        let c = ClusterConfig::from_json(&j);
+        assert_eq!(c.gpus_per_node, 4);
+        assert_eq!(c.flops, ClusterConfig::default().flops);
+    }
+}

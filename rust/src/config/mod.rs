@@ -1,0 +1,12 @@
+//! Typed configuration: model presets (mirroring `python/compile/configs.py`),
+//! cluster/hardware descriptions, and training options. All configs load
+//! from / dump to JSON via [`crate::util::json`].
+
+pub mod model;
+pub mod cluster;
+pub mod train;
+pub mod presets;
+
+pub use cluster::{ClusterConfig, LinkKind};
+pub use model::ModelConfig;
+pub use train::TrainConfig;

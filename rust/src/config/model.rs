@@ -1,0 +1,157 @@
+//! Model configuration — the rust mirror of `python/compile/configs.py`.
+//!
+//! The authoritative copy of a preset's dimensions travels in the AOT
+//! manifest (`artifacts/<preset>/manifest.json`); [`ModelConfig::from_json`]
+//! loads it so rust and python can never drift. The param-count formulas
+//! are re-implemented here (and cross-checked in tests against the
+//! manifest's layout) because the simulator needs them for paper-scale
+//! models that have no artifacts.
+
+use crate::util::json::Json;
+
+/// Switch-Transformer style decoder-only MoE LM dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub capacity_factor: f64,
+    pub aux_loss_weight: f64,
+}
+
+/// Parameter counts by group (units: parameters, not bytes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ParamCounts {
+    pub embed: usize,
+    pub per_layer: usize,
+    pub per_layer_dense: usize,
+    pub per_layer_sparse: usize,
+    pub head: usize,
+    pub total: usize,
+}
+
+impl ModelConfig {
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch_size * self.seq_len
+    }
+
+    /// GShard capacity: ceil(cf * tokens / experts).
+    pub fn expert_capacity(&self) -> usize {
+        let t = (self.capacity_factor * self.tokens_per_batch() as f64) as usize;
+        ((t + self.n_experts - 1) / self.n_experts).max(1)
+    }
+
+    /// Mirrors `MoEConfig.param_counts` in python.
+    pub fn param_counts(&self) -> ParamCounts {
+        let (h, f, e, v) = (self.d_model, self.d_ff, self.n_experts, self.vocab_size);
+        let attn = 4 * h * h + 4 * h;
+        let ln = 4 * h;
+        let router = h * e + e;
+        let experts = e * (h * f + f + f * h + h);
+        let per_layer = attn + ln + router + experts;
+        let embed = v * h;
+        let head = h * v + 2 * h;
+        ParamCounts {
+            embed,
+            per_layer,
+            per_layer_dense: attn + ln + router,
+            per_layer_sparse: experts,
+            head,
+            total: embed + self.n_layers * per_layer + head,
+        }
+    }
+
+    /// Total dense (always-activated) parameters: embed + head + per-layer
+    /// dense. The paper's `D` in the §2.1 storage formulas.
+    pub fn dense_params(&self) -> usize {
+        let c = self.param_counts();
+        c.embed + c.head + self.n_layers * c.per_layer_dense
+    }
+
+    /// Total sparse (expert) parameters. The paper's `S`.
+    pub fn sparse_params(&self) -> usize {
+        self.n_layers * self.param_counts().per_layer_sparse
+    }
+
+    /// Parse from a manifest's `"preset"` object.
+    pub fn from_json(j: &Json) -> Result<ModelConfig, String> {
+        let req = |k: &str| -> Result<usize, String> {
+            j.get(k).as_usize().ok_or_else(|| format!("preset missing '{}'", k))
+        };
+        Ok(ModelConfig {
+            name: j.get("name").as_str().unwrap_or("unnamed").to_string(),
+            vocab_size: req("vocab_size")?,
+            d_model: req("d_model")?,
+            n_heads: req("n_heads")?,
+            n_layers: req("n_layers")?,
+            d_ff: req("d_ff")?,
+            n_experts: req("n_experts")?,
+            seq_len: req("seq_len")?,
+            batch_size: req("batch_size")?,
+            capacity_factor: j.get("capacity_factor").as_f64().unwrap_or(2.0),
+            aux_loss_weight: j.get("aux_loss_weight").as_f64().unwrap_or(1e-2),
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("vocab_size", Json::num(self.vocab_size as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("batch_size", Json::num(self.batch_size as f64)),
+            ("capacity_factor", Json::num(self.capacity_factor)),
+            ("aux_loss_weight", Json::num(self.aux_loss_weight)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::local_preset;
+
+    #[test]
+    fn capacity_matches_python_formula() {
+        let cfg = local_preset("tiny");
+        // tiny: cf=2.0, tokens=128, E=4 -> ceil(256/4) = 64
+        assert_eq!(cfg.tokens_per_batch(), 128);
+        assert_eq!(cfg.expert_capacity(), 64);
+    }
+
+    #[test]
+    fn counts_sum() {
+        let cfg = local_preset("base");
+        let c = cfg.param_counts();
+        assert_eq!(
+            c.total,
+            c.embed + cfg.n_layers * c.per_layer + c.head
+        );
+        assert_eq!(cfg.dense_params() + cfg.sparse_params(), c.total);
+        assert!(c.total > 90_000_000, "base should be ~100M, got {}", c.total);
+        // the paper's premise: sparse dominates
+        assert!(cfg.sparse_params() as f64 / c.total as f64 > 0.9);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cfg = local_preset("small");
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+    }
+}

@@ -1,0 +1,111 @@
+//! Training-run options consumed by `train::Trainer` and the examples.
+
+use crate::util::json::Json;
+
+/// How parameters are held during training.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ParamResidency {
+    /// All parameter state on-device (fits-in-memory fast path).
+    Resident,
+    /// Hierarchical offload: dense on device, sparse on SSD with a CPU
+    /// cache + 2D prefetch (the paper's §2.1–2.2 mode).
+    Offload,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainConfig {
+    pub preset: String,
+    pub steps: usize,
+    pub lr: f64,
+    pub seed: u64,
+    pub residency: ParamResidency,
+    /// Number of data-parallel workers (in-process device mesh size).
+    pub dp_degree: usize,
+    /// Prefetch lookahead in layers (0 disables overlap).
+    pub prefetch_depth: usize,
+    /// CPU cache capacity as a fraction of total sparse bytes.
+    pub cpu_cache_frac: f64,
+    /// Zipf skew of the synthetic corpus (0 = uniform tokens).
+    pub corpus_skew: f64,
+    /// Log every N steps.
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            preset: "tiny".into(),
+            steps: 20,
+            lr: 1e-3,
+            seed: 0,
+            residency: ParamResidency::Resident,
+            dp_degree: 1,
+            prefetch_depth: 1,
+            cpu_cache_frac: 0.5,
+            corpus_skew: 1.05,
+            log_every: 10,
+        }
+    }
+}
+
+impl TrainConfig {
+    pub fn from_json(j: &Json) -> TrainConfig {
+        let d = TrainConfig::default();
+        TrainConfig {
+            preset: j.get("preset").as_str().unwrap_or(&d.preset).to_string(),
+            steps: j.get("steps").as_usize().unwrap_or(d.steps),
+            lr: j.get("lr").as_f64().unwrap_or(d.lr),
+            seed: j.get("seed").as_i64().unwrap_or(d.seed as i64) as u64,
+            residency: match j.get("residency").as_str() {
+                Some("offload") => ParamResidency::Offload,
+                _ => ParamResidency::Resident,
+            },
+            dp_degree: j.get("dp_degree").as_usize().unwrap_or(d.dp_degree),
+            prefetch_depth: j.get("prefetch_depth").as_usize().unwrap_or(d.prefetch_depth),
+            cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
+            corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
+            log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("preset", Json::str(self.preset.clone())),
+            ("steps", Json::num(self.steps as f64)),
+            ("lr", Json::num(self.lr)),
+            ("seed", Json::num(self.seed as f64)),
+            (
+                "residency",
+                Json::str(match self.residency {
+                    ParamResidency::Resident => "resident",
+                    ParamResidency::Offload => "offload",
+                }),
+            ),
+            ("dp_degree", Json::num(self.dp_degree as f64)),
+            ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
+            ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
+            ("corpus_skew", Json::num(self.corpus_skew)),
+            ("log_every", Json::num(self.log_every as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut c = TrainConfig::default();
+        c.residency = ParamResidency::Offload;
+        c.steps = 300;
+        let back = TrainConfig::from_json(&c.to_json());
+        assert_eq!(c, back);
+    }
+
+    #[test]
+    fn defaults_on_empty() {
+        let c = TrainConfig::from_json(&Json::parse("{}").unwrap());
+        assert_eq!(c, TrainConfig::default());
+    }
+}

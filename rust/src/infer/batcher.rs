@@ -1,0 +1,144 @@
+//! Dynamic request batching: collect generation requests into fixed-size
+//! model batches (the preset's [B, T] is static), dispatching when the
+//! batch fills or a linger timeout expires. The serving analogue of the
+//! trainer's gradient buckets: fewer, fuller executions.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One generation request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+    pub arrived: Instant,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Model batch size (slots per execution).
+    pub batch_size: usize,
+    /// Max time the head request may wait before a partial batch ships.
+    pub linger: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) }
+    }
+}
+
+/// A formed batch: the requests plus padding count.
+#[derive(Debug, Clone)]
+pub struct FormedBatch {
+    pub requests: Vec<Request>,
+    /// Unused slots (padded with empty prompts).
+    pub padding: usize,
+    /// Queueing delay of the oldest member.
+    pub head_wait: Duration,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    pub enqueued: u64,
+    pub batches: u64,
+    pub padded_slots: u64,
+}
+
+/// FIFO batcher.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Request>,
+    stats: BatcherStats,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher { cfg, queue: VecDeque::new(), stats: BatcherStats::default() }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.stats.enqueued += 1;
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats
+    }
+
+    /// Try to form a batch at time `now`. Full batch ships immediately;
+    /// a partial batch ships only once the head request has lingered.
+    pub fn poll(&mut self, now: Instant) -> Option<FormedBatch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let head_wait = now.duration_since(self.queue.front().unwrap().arrived);
+        if self.queue.len() < self.cfg.batch_size && head_wait < self.cfg.linger {
+            return None;
+        }
+        let take = self.queue.len().min(self.cfg.batch_size);
+        let requests: Vec<Request> = self.queue.drain(..take).collect();
+        let padding = self.cfg.batch_size - requests.len();
+        self.stats.batches += 1;
+        self.stats.padded_slots += padding as u64;
+        Some(FormedBatch { requests, padding, head_wait })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, at: Instant) -> Request {
+        Request { id, prompt: vec![1, 2, 3], max_tokens: 4, arrived: at }
+    }
+
+    #[test]
+    fn full_batch_ships_immediately() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 2, linger: Duration::from_secs(10) });
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        assert!(b.poll(t0).is_none());
+        b.push(req(2, t0));
+        let batch = b.poll(t0).unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.padding, 0);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn partial_batch_waits_for_linger() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(req(1, t0));
+        assert!(b.poll(t0 + Duration::from_millis(1)).is_none());
+        let batch = b.poll(t0 + Duration::from_millis(6)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert_eq!(batch.padding, 3);
+        assert!(batch.head_wait >= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn fifo_order_and_stats() {
+        let mut b = Batcher::new(BatcherConfig { batch_size: 2, linger: Duration::ZERO });
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(req(i, t0));
+        }
+        let ids: Vec<u64> = b.poll(t0).unwrap().requests.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1]);
+        let _ = b.poll(t0).unwrap();
+        let last = b.poll(t0).unwrap();
+        assert_eq!(last.requests[0].id, 4);
+        assert_eq!(last.padding, 1);
+        let s = b.stats();
+        assert_eq!(s.enqueued, 5);
+        assert_eq!(s.batches, 3);
+        assert_eq!(s.padded_slots, 1);
+    }
+}

@@ -1,0 +1,313 @@
+//! The inference engine: per-layer execution of the AOT decoder-layer
+//! artifact with either resident weights or ring-memory offload, plus
+//! greedy generation. One compiled `layer_fwd` executable serves every
+//! layer (all layers share shapes) — the property the ring design needs.
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::ring_memory::{LayerLoader, RingMemory};
+use crate::comm::FusionBuffer;
+use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
+use crate::train::optimizer::{group_of, init_tensor, Group};
+use crate::util::Rng;
+
+/// Weight residency during inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InferMode {
+    /// All layers' weights held as host tensors (the memory-hungry way).
+    Resident,
+    /// Ring-memory offload with K device slots (§3.2).
+    Ring { k: usize },
+}
+
+/// Per-pass timing: the Fig 10 bars.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PassTiming {
+    pub compute_secs: f64,
+    pub copy_secs: f64,
+    pub stall_secs: f64,
+}
+
+/// CPU-tier weight store: per-layer fused buffers + split metadata.
+pub struct CpuWeightStore {
+    /// Fused per-layer weights in layer_fwd input order.
+    layers: Vec<Vec<f32>>,
+    /// (shape) per member, shared by all layers.
+    member_shapes: Vec<Vec<usize>>,
+}
+
+impl CpuWeightStore {
+    /// Initialize from the manifest layout with the standard init.
+    pub fn init(arts: &ModelArtifacts, seed: u64) -> Result<CpuWeightStore> {
+        let mut rng = Rng::new(seed ^ 0x5EED_5EED);
+        let model = &arts.preset;
+        // Must mirror train::optimizer::init_params ordering: walk the
+        // full flat spec so the RNG stream matches training checkpoints.
+        let mut layers: Vec<FusionBuffer> = (0..model.n_layers).map(|_| FusionBuffer::new()).collect();
+        let mut member_shapes: Vec<Vec<usize>> = Vec::new();
+        for spec in arts.params() {
+            let t = init_tensor(spec, &mut rng);
+            if let Group::Layer(l) = group_of(spec) {
+                layers[l].register(&spec.name, spec.numel);
+                layers[l].pack(&spec.name, t.as_f32()?);
+                if l == 0 {
+                    member_shapes.push(spec.shape.clone());
+                }
+            }
+        }
+        Ok(CpuWeightStore {
+            layers: layers.into_iter().map(|fb| fb.fused().to_vec()).collect(),
+            member_shapes,
+        })
+    }
+
+    /// Overwrite layer weights (e.g. from a training checkpoint).
+    pub fn set_layer(&mut self, layer: usize, fused: Vec<f32>) {
+        assert_eq!(fused.len(), self.layers[layer].len());
+        self.layers[layer] = fused;
+    }
+
+    pub fn layer_bytes(&self) -> usize {
+        self.layers.first().map(|l| l.len() * 4).unwrap_or(0)
+    }
+
+    /// Unfuse one layer into artifact-input tensors.
+    pub fn tensors(&self, layer: usize) -> Vec<HostTensor> {
+        let mut out = Vec::with_capacity(self.member_shapes.len());
+        let mut off = 0;
+        for shape in &self.member_shapes {
+            let n: usize = shape.iter().product();
+            out.push(HostTensor::from_f32(shape, self.layers[layer][off..off + n].to_vec()));
+            off += n;
+        }
+        out
+    }
+
+    /// A `RingMemory` loader view over this store (cloned data moves to
+    /// the staging thread).
+    pub fn loader(&self) -> LayerLoader {
+        let layers = self.layers.clone();
+        let shapes = self.member_shapes.clone();
+        Box::new(move |l| {
+            let mut out = Vec::with_capacity(shapes.len());
+            let mut off = 0;
+            for shape in &shapes {
+                let n: usize = shape.iter().product();
+                out.push(HostTensor::from_f32(shape, layers[l][off..off + n].to_vec()));
+                off += n;
+            }
+            out
+        })
+    }
+}
+
+pub struct InferenceEngine {
+    pub arts: Rc<ModelArtifacts>,
+    embed_fwd: Rc<ArtifactExe>,
+    layer_fwd: Rc<ArtifactExe>,
+    head_infer: Rc<ArtifactExe>,
+    embed: HostTensor,
+    head: Vec<HostTensor>, // lnf_scale, lnf_bias, wout
+    mode: InferMode,
+    /// Resident weights (mode == Resident).
+    resident: Option<CpuWeightStore>,
+    ring: Option<RingMemory>,
+    pub timing: PassTiming,
+}
+
+impl InferenceEngine {
+    /// `throttle`: emulated CPU→device bandwidth for the ring's copy
+    /// stream (None = host speed).
+    pub fn new(
+        arts: Rc<ModelArtifacts>,
+        mode: InferMode,
+        seed: u64,
+        throttle: Option<f64>,
+    ) -> Result<InferenceEngine> {
+        let store = CpuWeightStore::init(&arts, seed)?;
+        // Embed/head tensors from the same RNG walk.
+        let mut rng = Rng::new(seed ^ 0x5EED_5EED);
+        let mut embed = None;
+        let mut head = Vec::new();
+        for spec in arts.params() {
+            let t = init_tensor(spec, &mut rng);
+            match group_of(spec) {
+                Group::Embed => embed = Some(t),
+                Group::Head => head.push(t),
+                Group::Layer(_) => {}
+            }
+        }
+        let (resident, ring) = match mode {
+            InferMode::Resident => (Some(store), None),
+            InferMode::Ring { k } => {
+                let n_layers = arts.preset.n_layers;
+                let loader = store.loader();
+                (None, Some(RingMemory::new(k, n_layers, loader, throttle)))
+            }
+        };
+        Ok(InferenceEngine {
+            embed_fwd: arts.load_exe("embed_fwd").context("embed_fwd")?,
+            layer_fwd: arts.load_exe("layer_fwd").context("layer_fwd")?,
+            head_infer: arts.load_exe("head_infer").context("head_infer")?,
+            arts,
+            embed: embed.context("embed param")?,
+            head,
+            mode,
+            resident,
+            ring,
+            timing: PassTiming::default(),
+        })
+    }
+
+    pub fn mode(&self) -> InferMode {
+        self.mode
+    }
+
+    /// Device-resident weight bytes (the Fig 10 memory comparison).
+    pub fn device_weight_bytes(&self) -> usize {
+        let model = &self.arts.preset;
+        let per_layer: usize = self
+            .resident
+            .as_ref()
+            .map(|s| s.layer_bytes())
+            .unwrap_or_else(|| {
+                // ring mode: K slots
+                let c = model.param_counts();
+                c.per_layer * 4
+            });
+        match self.mode {
+            InferMode::Resident => per_layer * model.n_layers,
+            InferMode::Ring { k } => per_layer * k.min(model.n_layers),
+        }
+    }
+
+    /// One full forward pass: tokens [B, T] → greedy next token ids [B].
+    pub fn forward(&mut self, tokens: &HostTensor) -> Result<Vec<i32>> {
+        let n_layers = self.arts.preset.n_layers;
+        let t0 = Instant::now();
+        let mut x = self
+            .embed_fwd
+            .run(&[tokens.clone(), self.embed.clone()])?
+            .remove(0);
+        self.timing.compute_secs += t0.elapsed().as_secs_f64();
+
+        if let Some(ring) = self.ring.as_mut() {
+            let before = ring.stats();
+            ring.begin_pass();
+            for l in 0..n_layers {
+                let weights = ring.get(l)?;
+                let mut inputs = vec![x];
+                inputs.extend(weights);
+                let t0 = Instant::now();
+                let mut out = self.layer_fwd.run(&inputs)?;
+                self.timing.compute_secs += t0.elapsed().as_secs_f64();
+                x = out.remove(0);
+                ring.release(l);
+            }
+            let after = ring.stats();
+            self.timing.copy_secs += after.copy_secs - before.copy_secs;
+            self.timing.stall_secs += after.stall_secs - before.stall_secs;
+        } else {
+            let store = self.resident.as_ref().unwrap();
+            for l in 0..n_layers {
+                let mut inputs = vec![x];
+                inputs.extend(store.tensors(l));
+                let t0 = Instant::now();
+                let mut out = self.layer_fwd.run(&inputs)?;
+                self.timing.compute_secs += t0.elapsed().as_secs_f64();
+                x = out.remove(0);
+            }
+        }
+
+        let t0 = Instant::now();
+        let ids = self
+            .head_infer
+            .run(&[x, self.head[0].clone(), self.head[1].clone(), self.head[2].clone()])?
+            .remove(0);
+        self.timing.compute_secs += t0.elapsed().as_secs_f64();
+        Ok(ids.as_i32()?.to_vec())
+    }
+
+    /// Greedy generation: slide the fixed [B, T] window, appending one
+    /// token per forward pass. Returns [B][n_new] token ids.
+    pub fn generate(&mut self, prompt: &[Vec<i32>], n_new: usize) -> Result<Vec<Vec<i32>>> {
+        let model = &self.arts.preset;
+        let (b, t) = (model.batch_size, model.seq_len);
+        assert_eq!(prompt.len(), b, "prompt batch must match preset batch");
+        let mut window: Vec<Vec<i32>> = prompt
+            .iter()
+            .map(|p| {
+                let mut w = vec![0i32; t];
+                let n = p.len().min(t);
+                w[t - n..].copy_from_slice(&p[p.len() - n..]);
+                w
+            })
+            .collect();
+        let mut out = vec![Vec::with_capacity(n_new); b];
+        for _ in 0..n_new {
+            let flat: Vec<i32> = window.iter().flatten().copied().collect();
+            let ids = self.forward(&HostTensor::from_i32(&[b, t], flat))?;
+            for (bi, &id) in ids.iter().enumerate() {
+                out[bi].push(id);
+                window[bi].rotate_left(1);
+                window[bi][t - 1] = id;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Tokens processed per second of a measured run.
+    pub fn throughput(tokens: usize, secs: f64) -> f64 {
+        tokens as f64 / secs.max(1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(mode: InferMode) -> InferenceEngine {
+        let arts = Rc::new(ModelArtifacts::load("deep").expect("deep artifacts"));
+        InferenceEngine::new(arts, mode, 7, None).unwrap()
+    }
+
+    #[test]
+    fn ring_and_resident_agree_exactly() {
+        let model = ModelArtifacts::load("deep").unwrap().preset.clone();
+        let mut rng = Rng::new(5);
+        let toks: Vec<i32> = (0..model.batch_size * model.seq_len)
+            .map(|_| rng.below(model.vocab_size) as i32)
+            .collect();
+        let t = HostTensor::from_i32(&[model.batch_size, model.seq_len], toks);
+        let mut res = engine(InferMode::Resident);
+        let mut ring = engine(InferMode::Ring { k: 3 });
+        let a = res.forward(&t).unwrap();
+        let b = ring.forward(&t).unwrap();
+        assert_eq!(a, b, "offload must not change numerics");
+    }
+
+    #[test]
+    fn ring_bounds_device_memory() {
+        let res = engine(InferMode::Resident);
+        let ring = engine(InferMode::Ring { k: 3 });
+        // deep has 12 layers; K=3 → 4x less weight memory on device.
+        assert!(ring.device_weight_bytes() * 3 < res.device_weight_bytes());
+    }
+
+    #[test]
+    fn generation_slides_window() {
+        let mut e = engine(InferMode::Resident);
+        let model = e.arts.preset.clone();
+        let prompt: Vec<Vec<i32>> = (0..model.batch_size).map(|i| vec![i as i32 + 1; 5]).collect();
+        let out = e.generate(&prompt, 3).unwrap();
+        assert_eq!(out.len(), model.batch_size);
+        assert!(out.iter().all(|row| row.len() == 3));
+        assert!(out
+            .iter()
+            .flatten()
+            .all(|&id| id >= 0 && (id as usize) < model.vocab_size));
+    }
+}

@@ -1,0 +1,514 @@
+//! The six-step inference deployment pipeline (§3.1, Figure 3):
+//! graph fusion → distillation/compression → dynamic-to-static
+//! conversion → graph segmentation → IR pass optimization → deployment.
+//!
+//! The IR is deliberately small — ops with kinds, inputs and shapes —
+//! but every pass does real work with checkable invariants: op-count
+//! reduction from fusion/DCE/CSE, expert reduction from compression,
+//! comm-op insertion from segmentation.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use crate::util::json::Json;
+
+/// Node kinds in the inference IR.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    Input,
+    MatMul,
+    Add,
+    Gelu,
+    Softmax,
+    LayerNorm,
+    /// Fused matmul+bias (the MLPerf-style fused kernel).
+    FusedLinear,
+    /// Fused QK^T → mask → softmax → PV block.
+    FusedAttention,
+    /// MoE expert FFN with `n_experts` experts.
+    ExpertFfn { n_experts: usize },
+    Gating,
+    /// Inserted by segmentation.
+    AllToAll,
+    Send { to: usize },
+    Recv { from: usize },
+    Output,
+}
+
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: usize,
+    pub name: String,
+    pub kind: OpKind,
+    pub inputs: Vec<usize>,
+    /// Which pipeline stage owns this node after segmentation.
+    pub stage: usize,
+    /// Static output shape, when known (dynamic → None).
+    pub shape: Option<Vec<usize>>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// True once dynamic→static conversion has run.
+    pub is_static: bool,
+}
+
+impl Graph {
+    pub fn add(&mut self, name: &str, kind: OpKind, inputs: Vec<usize>) -> usize {
+        let id = self.nodes.len();
+        self.nodes.push(Node { id, name: name.into(), kind, inputs, stage: 0, shape: None });
+        id
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn count(&self, pred: impl Fn(&OpKind) -> bool) -> usize {
+        self.nodes.iter().filter(|n| pred(&n.kind)).count()
+    }
+
+    /// Build the reference MoE decoder graph (per layer: LN, fused-able
+    /// attention chain, LN, gating, expert FFN; plus embed/head).
+    pub fn moe_decoder(n_layers: usize, n_experts: usize) -> Graph {
+        let mut g = Graph::default();
+        let mut x = g.add("tokens", OpKind::Input, vec![]);
+        for l in 0..n_layers {
+            let ln1 = g.add(&format!("l{}.ln1", l), OpKind::LayerNorm, vec![x]);
+            let q = g.add(&format!("l{}.q", l), OpKind::MatMul, vec![ln1]);
+            let qb = g.add(&format!("l{}.qb", l), OpKind::Add, vec![q]);
+            let k = g.add(&format!("l{}.k", l), OpKind::MatMul, vec![ln1]);
+            let kb = g.add(&format!("l{}.kb", l), OpKind::Add, vec![k]);
+            let v = g.add(&format!("l{}.v", l), OpKind::MatMul, vec![ln1]);
+            let vb = g.add(&format!("l{}.vb", l), OpKind::Add, vec![v]);
+            let scores = g.add(&format!("l{}.scores", l), OpKind::MatMul, vec![qb, kb]);
+            let probs = g.add(&format!("l{}.probs", l), OpKind::Softmax, vec![scores]);
+            let ctx = g.add(&format!("l{}.ctx", l), OpKind::MatMul, vec![probs, vb]);
+            let o = g.add(&format!("l{}.o", l), OpKind::MatMul, vec![ctx]);
+            let ob = g.add(&format!("l{}.ob", l), OpKind::Add, vec![o]);
+            let res1 = g.add(&format!("l{}.res1", l), OpKind::Add, vec![x, ob]);
+            let ln2 = g.add(&format!("l{}.ln2", l), OpKind::LayerNorm, vec![res1]);
+            let gate = g.add(&format!("l{}.gate", l), OpKind::Gating, vec![ln2]);
+            let ffn = g.add(
+                &format!("l{}.experts", l),
+                OpKind::ExpertFfn { n_experts },
+                vec![ln2, gate],
+            );
+            x = g.add(&format!("l{}.res2", l), OpKind::Add, vec![res1, ffn]);
+        }
+        let lnf = g.add("lnf", OpKind::LayerNorm, vec![x]);
+        let logits = g.add("logits", OpKind::MatMul, vec![lnf]);
+        g.add("output", OpKind::Output, vec![logits]);
+        g
+    }
+
+    fn consumers(&self) -> HashMap<usize, Vec<usize>> {
+        let mut c: HashMap<usize, Vec<usize>> = HashMap::new();
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                c.entry(i).or_default().push(n.id);
+            }
+        }
+        c
+    }
+}
+
+/// Result log of one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct PipelineLog {
+    pub steps: Vec<(String, usize)>, // (step name, op count after)
+}
+
+/// The six-step pipeline (each step is also callable on its own).
+pub struct GraphPipeline;
+
+impl GraphPipeline {
+    /// Step 1 — graph fusion: matmul+add → FusedLinear (when the add has
+    /// exactly that matmul as producer and is its sole consumer), and
+    /// the 3-op attention core (matmul→softmax→matmul) → FusedAttention.
+    pub fn fuse(g: &Graph) -> Graph {
+        let consumers = g.consumers();
+        let mut replaced: HashMap<usize, usize> = HashMap::new(); // old id -> new id
+        let mut skip: HashSet<usize> = HashSet::new();
+        // plan attention fusions: scores(mm) -> probs(softmax) -> ctx(mm)
+        for n in &g.nodes {
+            if let OpKind::Softmax = n.kind {
+                if n.inputs.len() == 1 {
+                    let prod = &g.nodes[n.inputs[0]];
+                    let cons = consumers.get(&n.id).cloned().unwrap_or_default();
+                    if matches!(prod.kind, OpKind::MatMul)
+                        && cons.len() == 1
+                        && matches!(g.nodes[cons[0]].kind, OpKind::MatMul)
+                    {
+                        skip.insert(prod.id);
+                        skip.insert(n.id);
+                        // the outer matmul becomes the fusion point
+                    }
+                }
+            }
+        }
+        // plan linear fusions: add(matmul, ...) with matmul sole-use
+        for n in &g.nodes {
+            if let OpKind::Add = n.kind {
+                if let Some(&first) = n.inputs.first() {
+                    let prod = &g.nodes[first];
+                    if matches!(prod.kind, OpKind::MatMul)
+                        && !skip.contains(&prod.id)
+                        && consumers.get(&prod.id).map(|c| c.len()) == Some(1)
+                        && n.inputs.len() == 1
+                    {
+                        skip.insert(prod.id);
+                    }
+                }
+            }
+        }
+
+        let mut out = Graph::default();
+        for n in &g.nodes {
+            if skip.contains(&n.id) {
+                continue;
+            }
+            let map = |ids: &[usize]| -> Vec<usize> {
+                ids.iter()
+                    .map(|&i| {
+                        let mut j = i;
+                        // walk through skipped producers
+                        loop {
+                            if let Some(&r) = replaced.get(&j) {
+                                return r;
+                            }
+                            if skip.contains(&j) {
+                                j = g.nodes[j].inputs[0];
+                            } else {
+                                unreachable!("unmapped input {}", j)
+                            }
+                        }
+                    })
+                    .collect()
+            };
+            let (kind, name) = match &n.kind {
+                OpKind::Add
+                    if n.inputs.len() == 1 && skip.contains(&n.inputs[0]) =>
+                {
+                    (OpKind::FusedLinear, format!("{}+fused", n.name))
+                }
+                OpKind::MatMul
+                    if n.inputs.first().map(|&i| skip.contains(&i)).unwrap_or(false)
+                        && matches!(g.nodes[n.inputs[0]].kind, OpKind::Softmax) =>
+                {
+                    (OpKind::FusedAttention, format!("{}+fattn", n.name))
+                }
+                k => (k.clone(), n.name.clone()),
+            };
+            // resolve inputs through skipped chains
+            let inputs: Vec<usize> = n
+                .inputs
+                .iter()
+                .flat_map(|&i| {
+                    let mut frontier = vec![i];
+                    let mut resolved = Vec::new();
+                    while let Some(j) = frontier.pop() {
+                        if skip.contains(&j) {
+                            frontier.extend(g.nodes[j].inputs.iter().copied());
+                        } else {
+                            resolved.push(j);
+                        }
+                    }
+                    resolved
+                })
+                .collect();
+            let inputs = map(&inputs.iter().map(|&i| i).collect::<Vec<_>>());
+            let id = out.add(&name, kind, inputs);
+            replaced.insert(n.id, id);
+        }
+        out
+    }
+
+    /// Step 2 — distillation/compression: shrink every ExpertFfn to
+    /// `keep` experts (Mixture-of-Students-style student graph).
+    pub fn compress(g: &Graph, keep: usize) -> Graph {
+        let mut out = g.clone();
+        for n in &mut out.nodes {
+            if let OpKind::ExpertFfn { n_experts } = &mut n.kind {
+                *n_experts = (*n_experts).min(keep);
+            }
+        }
+        out
+    }
+
+    /// Step 3 — dynamic→static conversion: stamp concrete shapes.
+    pub fn to_static(g: &Graph, batch: usize, seq: usize, hidden: usize) -> Graph {
+        let mut out = g.clone();
+        for n in &mut out.nodes {
+            n.shape = Some(vec![batch, seq, hidden]);
+        }
+        out.is_static = true;
+        out
+    }
+
+    /// Step 4 — segmentation: round-robin layers into `stages` pipeline
+    /// stages; insert Send/Recv pairs at every stage boundary and an
+    /// AllToAll around each ExpertFfn (expert parallelism).
+    pub fn segment(g: &Graph, stages: usize) -> Graph {
+        let mut out = g.clone();
+        // assign stages by layer prefix ("l<k>."), everything else edge
+        let layer_of = |name: &str| -> Option<usize> {
+            name.strip_prefix('l')?.split('.').next()?.parse().ok()
+        };
+        let max_layer = out
+            .nodes
+            .iter()
+            .filter_map(|n| layer_of(&n.name))
+            .max()
+            .unwrap_or(0);
+        let per = (max_layer + stages) / stages.max(1);
+        for n in &mut out.nodes {
+            n.stage = layer_of(&n.name).map(|l| l / per.max(1)).unwrap_or(0).min(stages - 1);
+        }
+        // insert comm ops at boundaries
+        let mut extra = Vec::new();
+        for n in &out.nodes {
+            for &i in &n.inputs {
+                let ps = out.nodes[i].stage;
+                if ps != n.stage {
+                    extra.push((i, n.stage, ps));
+                }
+            }
+        }
+        for (src, dst_stage, src_stage) in extra {
+            let id = out.nodes.len();
+            out.nodes.push(Node {
+                id,
+                name: format!("send_{}_{}", src, dst_stage),
+                kind: OpKind::Send { to: dst_stage },
+                inputs: vec![src],
+                stage: src_stage,
+                shape: out.nodes[src].shape.clone(),
+            });
+            let id2 = out.nodes.len();
+            out.nodes.push(Node {
+                id: id2,
+                name: format!("recv_{}_{}", src, dst_stage),
+                kind: OpKind::Recv { from: src_stage },
+                inputs: vec![id],
+                stage: dst_stage,
+                shape: out.nodes[src].shape.clone(),
+            });
+        }
+        // expert parallelism: AllToAll before each ExpertFfn
+        let ffn_ids: Vec<usize> = out
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::ExpertFfn { .. }))
+            .map(|n| n.id)
+            .collect();
+        for fid in ffn_ids {
+            let id = out.nodes.len();
+            let stage = out.nodes[fid].stage;
+            let inputs = out.nodes[fid].inputs.clone();
+            out.nodes.push(Node {
+                id,
+                name: format!("a2a_{}", fid),
+                kind: OpKind::AllToAll,
+                inputs,
+                stage,
+                shape: None,
+            });
+            out.nodes[fid].inputs = vec![id];
+        }
+        out
+    }
+
+    /// Step 5 — IR optimization: dead-code elimination + CSE on
+    /// identical (kind, inputs) pure nodes.
+    pub fn optimize(g: &Graph) -> Graph {
+        // DCE from outputs
+        let mut live: HashSet<usize> = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, OpKind::Output | OpKind::Send { .. }))
+            .map(|n| n.id)
+            .collect();
+        let mut frontier: Vec<usize> = live.iter().copied().collect();
+        while let Some(id) = frontier.pop() {
+            for &i in &g.nodes[id].inputs {
+                if live.insert(i) {
+                    frontier.push(i);
+                }
+            }
+        }
+        // Topological order (segmentation may create forward references,
+        // e.g. an ExpertFfn rewired to a later-inserted AllToAll).
+        let mut order: Vec<usize> = Vec::with_capacity(g.nodes.len());
+        let mut state = vec![0u8; g.nodes.len()]; // 0=unseen 1=visiting 2=done
+        fn visit(g: &Graph, id: usize, state: &mut [u8], order: &mut Vec<usize>) {
+            if state[id] != 0 {
+                debug_assert_ne!(state[id], 1, "cycle in graph");
+                return;
+            }
+            state[id] = 1;
+            for &i in &g.nodes[id].inputs {
+                visit(g, i, state, order);
+            }
+            state[id] = 2;
+            order.push(id);
+        }
+        for id in 0..g.nodes.len() {
+            visit(g, id, &mut state, &mut order);
+        }
+
+        // CSE + rebuild
+        let mut out = Graph { nodes: Vec::new(), is_static: g.is_static };
+        let mut remap: HashMap<usize, usize> = HashMap::new();
+        let mut seen: HashMap<String, usize> = HashMap::new();
+        for &nid in &order {
+            let n = &g.nodes[nid];
+            if !live.contains(&n.id) {
+                continue;
+            }
+            let inputs: Vec<usize> = n.inputs.iter().map(|i| remap[i]).collect();
+            let key = format!("{:?}|{:?}", n.kind, inputs);
+            let pure = !matches!(n.kind, OpKind::Input | OpKind::Output | OpKind::Send { .. } | OpKind::Recv { .. });
+            if pure {
+                if let Some(&existing) = seen.get(&key) {
+                    remap.insert(n.id, existing);
+                    continue;
+                }
+            }
+            let id = out.nodes.len();
+            out.nodes.push(Node {
+                id,
+                name: n.name.clone(),
+                kind: n.kind.clone(),
+                inputs,
+                stage: n.stage,
+                shape: n.shape.clone(),
+            });
+            if pure {
+                seen.insert(key, id);
+            }
+            remap.insert(n.id, id);
+        }
+        out
+    }
+
+    /// Step 6 — deployment descriptor: per-stage op lists as JSON.
+    pub fn deploy(g: &Graph) -> Json {
+        let mut stages: BTreeMap<usize, Vec<Json>> = BTreeMap::new();
+        for n in &g.nodes {
+            stages
+                .entry(n.stage)
+                .or_default()
+                .push(Json::str(format!("{}:{:?}", n.name, n.kind)));
+        }
+        Json::obj(vec![
+            ("n_ops", Json::num(g.n_ops() as f64)),
+            ("static", Json::Bool(g.is_static)),
+            (
+                "stages",
+                Json::arr(stages.into_iter().map(|(s, ops)| {
+                    Json::obj(vec![
+                        ("stage", Json::num(s as f64)),
+                        ("ops", Json::arr(ops)),
+                    ])
+                })),
+            ),
+        ])
+    }
+
+    /// Run all six steps; returns the deployable graph + log + descriptor.
+    pub fn run(
+        g: &Graph,
+        keep_experts: usize,
+        batch: usize,
+        seq: usize,
+        hidden: usize,
+        stages: usize,
+    ) -> (Graph, PipelineLog, Json) {
+        let mut log = PipelineLog::default();
+        let g1 = Self::fuse(g);
+        log.steps.push(("fuse".into(), g1.n_ops()));
+        let g2 = Self::compress(&g1, keep_experts);
+        log.steps.push(("compress".into(), g2.n_ops()));
+        let g3 = Self::to_static(&g2, batch, seq, hidden);
+        log.steps.push(("to_static".into(), g3.n_ops()));
+        let g4 = Self::segment(&g3, stages);
+        log.steps.push(("segment".into(), g4.n_ops()));
+        let g5 = Self::optimize(&g4);
+        log.steps.push(("optimize".into(), g5.n_ops()));
+        let desc = Self::deploy(&g5);
+        (g5, log, desc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fusion_reduces_ops_and_creates_fused_kernels() {
+        let g = Graph::moe_decoder(2, 8);
+        let f = GraphPipeline::fuse(&g);
+        assert!(f.n_ops() < g.n_ops(), "{} -> {}", g.n_ops(), f.n_ops());
+        assert!(f.count(|k| matches!(k, OpKind::FusedLinear)) >= 2);
+        assert_eq!(f.count(|k| matches!(k, OpKind::FusedAttention)), 2);
+        // raw softmax should be gone from the attention cores
+        assert_eq!(f.count(|k| matches!(k, OpKind::Softmax)), 0);
+    }
+
+    #[test]
+    fn compression_shrinks_experts() {
+        let g = Graph::moe_decoder(2, 64);
+        let c = GraphPipeline::compress(&g, 8);
+        for n in &c.nodes {
+            if let OpKind::ExpertFfn { n_experts } = n.kind {
+                assert_eq!(n_experts, 8);
+            }
+        }
+    }
+
+    #[test]
+    fn segmentation_inserts_comm_pairs() {
+        let g = GraphPipeline::to_static(&Graph::moe_decoder(4, 8), 1, 32, 64);
+        let s = GraphPipeline::segment(&g, 2);
+        let sends = s.count(|k| matches!(k, OpKind::Send { .. }));
+        let recvs = s.count(|k| matches!(k, OpKind::Recv { .. }));
+        assert_eq!(sends, recvs);
+        assert!(sends >= 1);
+        assert_eq!(s.count(|k| matches!(k, OpKind::AllToAll)), 4);
+        // stages actually used
+        assert!(s.nodes.iter().any(|n| n.stage == 1));
+    }
+
+    #[test]
+    fn optimize_removes_dead_and_duplicate_nodes() {
+        let mut g = Graph::default();
+        let x = g.add("x", OpKind::Input, vec![]);
+        let a = g.add("a", OpKind::Gelu, vec![x]);
+        let _dead = g.add("dead", OpKind::Gelu, vec![x]); // no consumer
+        let b = g.add("b", OpKind::Gelu, vec![x]); // duplicate of a
+        let c = g.add("c", OpKind::Add, vec![a, b]);
+        g.add("out", OpKind::Output, vec![c]);
+        let o = GraphPipeline::optimize(&g);
+        // dead gone, duplicate CSE'd
+        assert_eq!(o.count(|k| matches!(k, OpKind::Gelu)), 1);
+        // c now feeds from the same node twice
+        let add = o.nodes.iter().find(|n| matches!(n.kind, OpKind::Add)).unwrap();
+        assert_eq!(add.inputs[0], add.inputs[1]);
+    }
+
+    #[test]
+    fn full_pipeline_runs_and_deploys() {
+        let g = Graph::moe_decoder(4, 16);
+        let (final_g, log, desc) = GraphPipeline::run(&g, 4, 1, 32, 128, 2);
+        assert!(final_g.is_static);
+        assert_eq!(log.steps.len(), 5);
+        assert!(desc.get("stages").as_arr().unwrap().len() >= 2);
+        // fusion + DCE must strictly shrink the original op count net of
+        // the comm ops segmentation added.
+        let comm = final_g.count(|k| {
+            matches!(k, OpKind::Send { .. } | OpKind::Recv { .. } | OpKind::AllToAll)
+        });
+        assert!(final_g.n_ops() - comm < g.n_ops());
+    }
+}

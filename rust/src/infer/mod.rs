@@ -1,0 +1,14 @@
+//! Inference: the six-step deployment pipeline (§3.1), the ring-memory
+//! offload engine (§3.2, Figures 4–5), dynamic request batching and a
+//! hand-rolled HTTP serving front end ("internet services").
+
+pub mod ring_memory;
+pub mod engine;
+pub mod graph;
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, Request};
+pub use engine::{InferenceEngine, InferMode, PassTiming};
+pub use graph::{Graph, GraphPipeline};
+pub use ring_memory::{RingMemory, RingStats};

@@ -1,0 +1,376 @@
+//! Hand-rolled HTTP/1.1 serving front end (the "internet services" face
+//! of the system). std::net only — no framework in the vendored set.
+//!
+//! Endpoints:
+//!   POST /generate  {"prompt": [ids...], "max_tokens": n}
+//!                   → {"id": .., "tokens": [ids...], "latency_ms": ..}
+//!   GET  /healthz   → {"ok": true}
+//!   GET  /stats     → batcher/engine counters
+//!
+//! Architecture: acceptor threads parse HTTP and enqueue requests; ONE
+//! compute thread owns the `InferenceEngine` (PJRT is thread-confined,
+//! see runtime::engine) and drains the dynamic batcher.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+use crate::util::json::Json;
+
+/// A parsed inbound generation call + the reply channel.
+struct Job {
+    request: Request,
+    reply: Sender<Json>,
+}
+
+/// Server statistics surface.
+#[derive(Default)]
+pub struct ServerStats {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub tokens_out: AtomicU64,
+}
+
+/// Start the serving loop. `step` is the model callback: given a slice
+/// of requests (≤ batch_size), produce each request's generated tokens.
+/// Returns the bound address; `stop` flips the shutdown flag.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    compute_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    pub fn start<F>(
+        bind: &str,
+        batcher_cfg: BatcherConfig,
+        stats: Arc<ServerStats>,
+        mut step: F,
+    ) -> Result<Server>
+    where
+        F: FnMut(&[Request]) -> Vec<Vec<i32>> + Send + 'static,
+    {
+        let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (job_tx, job_rx) = channel::<Job>();
+
+        // ---- compute thread: owns batcher + model
+        let stop_c = stop.clone();
+        let stats_c = stats.clone();
+        let compute_handle = std::thread::Builder::new()
+            .name("serve-compute".into())
+            .spawn(move || {
+                let mut batcher = Batcher::new(batcher_cfg);
+                let mut waiting: Vec<(u64, Sender<Json>, Instant)> = Vec::new();
+                loop {
+                    if stop_c.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    // drain inbound
+                    while let Ok(job) = job_rx.try_recv() {
+                        waiting.push((job.request.id, job.reply, job.request.arrived));
+                        batcher.push(job.request);
+                    }
+                    if let Some(batch) = batcher.poll(Instant::now()) {
+                        let outputs = step(&batch.requests);
+                        stats_c.batches.fetch_add(1, Ordering::Relaxed);
+                        for (req, toks) in batch.requests.iter().zip(outputs) {
+                            stats_c.tokens_out.fetch_add(toks.len() as u64, Ordering::Relaxed);
+                            if let Some(pos) = waiting.iter().position(|(id, _, _)| *id == req.id) {
+                                let (_, reply, arrived) = waiting.swap_remove(pos);
+                                let lat = arrived.elapsed().as_secs_f64() * 1e3;
+                                let _ = reply.send(Json::obj(vec![
+                                    ("id", Json::num(req.id as f64)),
+                                    (
+                                        "tokens",
+                                        Json::arr(toks.iter().map(|&t| Json::num(t as f64))),
+                                    ),
+                                    ("latency_ms", Json::num(lat)),
+                                ]));
+                            }
+                        }
+                    } else {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                }
+            })?;
+
+        // ---- acceptor thread
+        let stop_a = stop.clone();
+        let stats_a = stats.clone();
+        let next_id = Arc::new(AtomicU64::new(1));
+        let job_tx = Arc::new(Mutex::new(job_tx));
+        let accept_handle = std::thread::Builder::new()
+            .name("serve-accept".into())
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_a.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    match stream {
+                        Ok(s) => {
+                            let id = next_id.fetch_add(1, Ordering::Relaxed);
+                            let tx = job_tx.lock().unwrap().clone();
+                            let stats = stats_a.clone();
+                            // small fleet: one thread per connection is fine
+                            let _ = std::thread::Builder::new()
+                                .name("serve-conn".into())
+                                .spawn(move || {
+                                    let _ = handle_conn(s, id, tx, stats);
+                                });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+
+        Ok(Server { addr, stop, accept_handle: Some(accept_handle), compute_handle: Some(compute_handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        // poke the acceptor out of nonblocking sleep by connecting
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.compute_handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    id: u64,
+    jobs: Sender<Job>,
+    stats: Arc<ServerStats>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("/").to_string();
+    // headers
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+
+    let (status, payload) = match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/stats") => (
+            "200 OK",
+            Json::obj(vec![
+                ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
+                ("batches", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
+                ("tokens_out", Json::num(stats.tokens_out.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+        ("POST", "/generate") => {
+            stats.requests.fetch_add(1, Ordering::Relaxed);
+            match Json::parse(std::str::from_utf8(&body).unwrap_or("")) {
+                Ok(j) => {
+                    let prompt: Vec<i32> = j
+                        .get("prompt")
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|v| v.as_i64())
+                        .map(|v| v as i32)
+                        .collect();
+                    let max_tokens = j.get("max_tokens").as_usize().unwrap_or(8);
+                    let (reply_tx, reply_rx) = channel();
+                    let _ = jobs.send(Job {
+                        request: Request { id, prompt, max_tokens, arrived: Instant::now() },
+                        reply: reply_tx,
+                    });
+                    match reply_rx.recv_timeout(Duration::from_secs(60)) {
+                        Ok(out) => ("200 OK", out),
+                        Err(_) => (
+                            "503 Service Unavailable",
+                            Json::obj(vec![("error", Json::str("timeout"))]),
+                        ),
+                    }
+                }
+                Err(e) => (
+                    "400 Bad Request",
+                    Json::obj(vec![("error", Json::str(format!("bad json: {}", e)))]),
+                ),
+            }
+        }
+        _ => ("404 Not Found", Json::obj(vec![("error", Json::str("not found"))])),
+    };
+
+    let body = payload.to_string();
+    let resp = format!(
+        "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        status,
+        body.len(),
+        body
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+/// Minimal HTTP client for tests/examples (same no-deps constraint).
+pub fn http_post(addr: &std::net::SocketAddr, path: &str, body: &str) -> Result<(u16, Json)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST {} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+        path,
+        body.len(),
+        body
+    );
+    s.write_all(req.as_bytes())?;
+    read_response(s)
+}
+
+pub fn http_get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, Json)> {
+    let mut s = TcpStream::connect(addr)?;
+    let req = format!("GET {} HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n", path);
+    s.write_all(req.as_bytes())?;
+    read_response(s)
+}
+
+fn read_response(stream: TcpStream) -> Result<(u16, Json)> {
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body)?;
+    let j = Json::parse(std::str::from_utf8(&body)?).map_err(|e| anyhow::anyhow!("{}", e))?;
+    Ok((code, j))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Echo-model server: "generates" prompt[0]+1, repeated.
+    fn start_echo() -> (Server, Arc<ServerStats>) {
+        let stats = Arc::new(ServerStats::default());
+        let server = Server::start(
+            "127.0.0.1:0",
+            BatcherConfig { batch_size: 2, linger: Duration::from_millis(2) },
+            stats.clone(),
+            |reqs| {
+                reqs.iter()
+                    .map(|r| {
+                        let first = r.prompt.first().copied().unwrap_or(0);
+                        vec![first + 1; r.max_tokens]
+                    })
+                    .collect()
+            },
+        )
+        .unwrap();
+        (server, stats)
+    }
+
+    #[test]
+    fn health_and_404() {
+        let (mut server, _) = start_echo();
+        let (code, j) = http_get(&server.addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        let (code, _) = http_get(&server.addr, "/nope").unwrap();
+        assert_eq!(code, 404);
+        server.stop();
+    }
+
+    #[test]
+    fn generate_roundtrip_and_stats() {
+        let (mut server, stats) = start_echo();
+        let (code, j) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [41], "max_tokens": 3}"#).unwrap();
+        assert_eq!(code, 200);
+        let toks: Vec<i64> =
+            j.get("tokens").as_arr().unwrap().iter().map(|t| t.as_i64().unwrap()).collect();
+        assert_eq!(toks, vec![42, 42, 42]);
+        assert!(j.get("latency_ms").as_f64().unwrap() >= 0.0);
+        let (_, s) = http_get(&server.addr, "/stats").unwrap();
+        assert_eq!(s.get("requests").as_usize(), Some(1));
+        assert_eq!(s.get("tokens_out").as_usize(), Some(3));
+        server.stop();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let (mut server, stats) = start_echo();
+        let addr = server.addr;
+        let handles: Vec<_> = (0..4)
+            .map(|i| {
+                std::thread::spawn(move || {
+                    http_post(
+                        &addr,
+                        "/generate",
+                        &format!(r#"{{"prompt": [{}], "max_tokens": 1}}"#, i * 10),
+                    )
+                    .unwrap()
+                })
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let (code, j) = h.join().unwrap();
+            assert_eq!(code, 200);
+            let tok = j.get("tokens").at(0).as_i64().unwrap();
+            assert_eq!(tok, (i as i64) * 10 + 1);
+        }
+        // 4 requests over batch_size 2 → at least 2 batches
+        assert!(stats.batches.load(Ordering::Relaxed) >= 2);
+        server.stop();
+    }
+
+    #[test]
+    fn bad_json_is_400() {
+        let (mut server, _) = start_echo();
+        let (code, j) = http_post(&server.addr, "/generate", "{nope").unwrap();
+        assert_eq!(code, 400);
+        assert!(j.get("error").as_str().unwrap().contains("bad json"));
+        server.stop();
+    }
+}

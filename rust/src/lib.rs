@@ -1,0 +1,60 @@
+//! # SE-MoE / MoESys — distributed Mixture-of-Experts training & inference
+//!
+//! Reproduction of *"SE-MoE: A Scalable and Efficient Mixture-of-Experts
+//! Distributed Training and Inference System"* (Baidu, 2022; journal title
+//! *MoESys*). This crate is the **Layer-3 coordinator**: it owns process
+//! topology, scheduling, storage, communication and metrics, and executes
+//! the AOT-compiled JAX/Pallas compute graphs (`artifacts/*.hlo.txt`)
+//! through the PJRT C API (`xla` crate). Python never runs at runtime.
+//!
+//! Module map (see DESIGN.md for the paper-section correspondence):
+//!
+//! - [`util`] — in-tree substrates: JSON, CLI, PRNG, stats, logging.
+//! - [`config`] — typed model/cluster/train configs + paper presets.
+//! - [`runtime`] — PJRT client, HLO artifact loading, host tensors.
+//! - [`storage`] — hierarchical GPU/CPU/SSD parameter store (§2.1) with
+//!   the Algorithm-1 LFU cache.
+//! - [`prefetch`] — 2D prefetch scheduling (§2.2).
+//! - [`comm`] — device mesh, collectives, fusion buffers & gradient
+//!   buckets (§2.3), network topology and Hierarchical AlltoAll (§4.2).
+//! - [`moe`] — routing plans, capacity, expert placement, load stats.
+//! - [`train`] — trainer over the runtime, elastic scheduling (§4.1),
+//!   embedding partition in data parallelism (§4.3).
+//! - [`infer`] — ring-memory offload engine (§3.2), the six-step graph
+//!   pipeline (§3.1), request batcher + HTTP server.
+//! - [`sim`] — calibrated cluster cost-model simulator and the
+//!   DeepSpeed-like baseline schedule used by the paper's tables.
+//! - [`metrics`] — counters, timelines, report writers.
+
+pub mod util;
+pub mod config;
+pub mod runtime;
+pub mod storage;
+pub mod prefetch;
+pub mod comm;
+pub mod moe;
+pub mod train;
+pub mod infer;
+pub mod sim;
+pub mod metrics;
+
+/// Crate version string (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Locate the artifacts directory: `$SEMOE_ARTIFACTS`, else `./artifacts`,
+/// else walk up from the current dir (so tests/examples work from any cwd).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("SEMOE_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.is_dir() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

@@ -1,0 +1,314 @@
+//! `semoe` — the SE-MoE / MoESys coordinator CLI (leader entrypoint).
+//!
+//! Subcommands:
+//!   info                         artifact + preset inventory
+//!   train                        run the trainer (resident or offload)
+//!   infer                        run batched greedy generation
+//!   serve                        HTTP serving front end (ring offload)
+//!   simulate                     paper-scale simulator (table1|table2|fig10|fig11)
+//!   graph                        run the six-step inference graph pipeline
+//!   elastic                      elastic multi-task planner (table3 loads)
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use semoe::config::presets::{
+    cluster_for_gpus, fig10_model, fig11_model, table1_model, table1_rows, table2_model,
+    table2_rows, table3_setup,
+};
+use semoe::config::train::{ParamResidency, TrainConfig};
+use semoe::infer::{GraphPipeline, InferMode, InferenceEngine};
+use semoe::runtime::ModelArtifacts;
+use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
+use semoe::train::{ElasticPlan, OffloadTrainer, ResidentTrainer, TaskLoad};
+use semoe::util::cli::{usage, Args, OptSpec};
+use semoe::util::{human_bytes, human_count};
+
+const ABOUT: &str = "SE-MoE / MoESys — distributed MoE training & inference system";
+
+fn main() {
+    let args = match Args::from_env(true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {}", e);
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_deref() {
+        Some("info") => cmd_info(&args),
+        Some("train") => cmd_train(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("graph") => cmd_graph(&args),
+        Some("elastic") => cmd_elastic(&args),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {:#}", e);
+        std::process::exit(1);
+    }
+}
+
+fn print_usage() {
+    println!(
+        "{}",
+        usage(
+            "semoe <info|train|infer|serve|simulate|graph|elastic>",
+            ABOUT,
+            &[
+                OptSpec { name: "preset", help: "model preset (tiny|small|deep|base)", default: Some("small"), is_flag: false },
+                OptSpec { name: "steps", help: "training steps", default: Some("20"), is_flag: false },
+                OptSpec { name: "lr", help: "learning rate", default: Some("1e-3"), is_flag: false },
+                OptSpec { name: "offload", help: "use hierarchical offload trainer", default: None, is_flag: true },
+                OptSpec { name: "ring", help: "ring slots K for inference offload", default: Some("0=resident"), is_flag: false },
+                OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
+                OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
+                OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
+            ]
+        )
+    );
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "small");
+    let arts = ModelArtifacts::load(&preset)?;
+    let m = &arts.preset;
+    let c = m.param_counts();
+    println!("preset {}: {} params ({} dense, {} sparse), {} layers × {} experts",
+        m.name, human_count(c.total as u64), human_count(m.dense_params() as u64),
+        human_count(m.sparse_params() as u64), m.n_layers, m.n_experts);
+    println!("capacity {} (cf {}), batch [{} x {}], vocab {}",
+        m.expert_capacity(), m.capacity_factor, m.batch_size, m.seq_len, m.vocab_size);
+    println!("artifacts:");
+    for name in arts.artifact_names() {
+        let s = arts.spec(&name)?;
+        println!("  {:<14} {:>3} in / {:>3} out   {}", name, s.inputs.len(), s.outputs.len(), s.file);
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainConfig {
+        preset: args.str("preset", "small"),
+        steps: args.usize("steps", 20),
+        lr: args.f64("lr", 1e-3),
+        seed: args.u64("seed", 0),
+        residency: if args.flag("offload") { ParamResidency::Offload } else { ParamResidency::Resident },
+        prefetch_depth: args.usize("prefetch-depth", 1),
+        log_every: args.usize("log-every", 5),
+        ..Default::default()
+    };
+    let arts = Rc::new(ModelArtifacts::load(&cfg.preset)?);
+    println!("training {} ({} params) for {} steps [{}]",
+        cfg.preset,
+        human_count(arts.preset.param_counts().total as u64),
+        cfg.steps,
+        if args.flag("offload") { "offload" } else { "resident" });
+    let t0 = std::time::Instant::now();
+    let mut total_tokens = 0usize;
+    if args.flag("offload") {
+        let mut tr = OffloadTrainer::new(arts, cfg.clone(), None)?;
+        for s in 0..cfg.steps {
+            let m = tr.step()?;
+            total_tokens += m.tokens;
+            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+                println!("step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", m.step, m.loss, m.ce, m.aux);
+            }
+        }
+        tr.flush()?;
+        let store = tr.into_store()?;
+        let cs = store.cache_stats();
+        println!("cache hit rate {:.1}%  ssd erases {}", cs.hit_rate() * 100.0, store.ssd_total_erases());
+    } else {
+        let mut tr = ResidentTrainer::new(arts, cfg.clone())?;
+        for s in 0..cfg.steps {
+            let m = tr.step()?;
+            total_tokens += m.tokens;
+            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+                println!("step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", m.step, m.loss, m.ce, m.aux);
+            }
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!("{} tokens in {:.1}s → {:.0} tokens/s", total_tokens, secs, total_tokens as f64 / secs);
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "deep");
+    let ring = args.usize("ring", 0);
+    let n_new = args.usize("tokens", 16);
+    let arts = Rc::new(ModelArtifacts::load(&preset)?);
+    let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
+    let mut engine = InferenceEngine::new(arts.clone(), mode, args.u64("seed", 7), None)?;
+    println!("inference [{}], device weights {}",
+        if ring > 0 { format!("ring K={}", ring) } else { "resident".into() },
+        human_bytes(engine.device_weight_bytes() as u64));
+    let b = arts.preset.batch_size;
+    let prompt: Vec<Vec<i32>> = (0..b).map(|i| vec![(i as i32 + 1) * 3; 4]).collect();
+    let t0 = std::time::Instant::now();
+    let out = engine.generate(&prompt, n_new)?;
+    let secs = t0.elapsed().as_secs_f64();
+    for (i, row) in out.iter().enumerate() {
+        println!("seq {}: {:?}", i, row);
+    }
+    let toks = b * n_new;
+    println!(
+        "{} new tokens in {:.2}s → {:.1} tokens/s (compute {:.2}s copy {:.2}s stall {:.2}s)",
+        toks, secs, toks as f64 / secs,
+        engine.timing.compute_secs, engine.timing.copy_secs, engine.timing.stall_secs
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let preset = args.str("preset", "deep");
+    let bind = args.str("bind", "127.0.0.1:8080");
+    let ring = args.usize("ring", 3);
+    println!("starting server on {} (preset {}, ring K={})", bind, preset, ring);
+    run_server_blocking(&preset, &bind, ring)
+}
+
+fn run_server_blocking(preset: &str, bind: &str, ring: usize) -> Result<()> {
+    use semoe::infer::server::{Server, ServerStats};
+    use semoe::infer::{BatcherConfig, Request};
+    use std::sync::mpsc::channel;
+    use std::sync::Arc;
+
+    // PJRT is thread-confined: the engine lives on a dedicated thread
+    // that the server's compute callback forwards into.
+    let (req_tx, req_rx) = channel::<(Vec<Request>, std::sync::mpsc::Sender<Vec<Vec<i32>>>)>();
+    let preset_owned = preset.to_string();
+    std::thread::spawn(move || {
+        let arts = Rc::new(ModelArtifacts::load(&preset_owned).expect("artifacts"));
+        let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
+        let mut engine = InferenceEngine::new(arts, mode, 7, None).expect("engine");
+        while let Ok((reqs, reply)) = req_rx.recv() {
+            let b = engine.arts.preset.batch_size;
+            let mut prompts: Vec<Vec<i32>> = reqs.iter().map(|r| r.prompt.clone()).collect();
+            prompts.resize(b, Vec::new());
+            let max_new = reqs.iter().map(|r| r.max_tokens).max().unwrap_or(1);
+            let gen = engine.generate(&prompts, max_new).unwrap_or_default();
+            let out = reqs
+                .iter()
+                .enumerate()
+                .map(|(i, r)| {
+                    gen.get(i)
+                        .map(|g| g[..r.max_tokens.min(g.len())].to_vec())
+                        .unwrap_or_default()
+                })
+                .collect();
+            let _ = reply.send(out);
+        }
+    });
+
+    let stats = Arc::new(ServerStats::default());
+    let server = Server::start(bind, BatcherConfig::default(), stats, move |reqs| {
+        let (tx, rx) = channel();
+        let _ = req_tx.send((reqs.to_vec(), tx));
+        rx.recv().unwrap_or_default()
+    })?;
+    println!("listening on {} — POST /generate, GET /healthz, GET /stats", server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    match args.str("target", "table1").as_str() {
+        "table1" => {
+            println!("{:>9} {:>8} {:>6} {:>14} {:>14} {:>8} {:>10} {:>10}",
+                "params", "experts", "gpus", "ds tok/s", "semoe tok/s", "speedup", "ds GB", "semoe GB");
+            for row in table1_rows() {
+                let m = table1_model(row.n_experts, row.batch_size);
+                let cl = cluster_for_gpus(row.gpus);
+                let ds = simulate_training(&m, &cl, Schedule::DeepSpeedLike);
+                let se = simulate_training(&m, &cl, Schedule::SeMoe);
+                println!("{:>8.1}B {:>8} {:>6} {:>14.0} {:>14.0} {:>7.2}x {:>10.1} {:>10.1}",
+                    row.params_b, row.n_experts, row.gpus,
+                    ds.tokens_per_s, se.tokens_per_s, se.tokens_per_s / ds.tokens_per_s,
+                    ds.gpu_mem_gb, se.gpu_mem_gb);
+            }
+        }
+        "table2" => {
+            for row in table2_rows() {
+                let m = table2_model(row.params_b, row.batch_size);
+                let cl = cluster_for_gpus(row.gpus);
+                let ds = simulate_inference(&m, &cl, false);
+                let se = simulate_inference(&m, &cl, true);
+                println!("{:>6.1}B gpus={:<3} ds {:>10.0} tok/s   semoe {:>10.0} tok/s   ({:.2}x)",
+                    row.params_b, row.gpus, ds.tokens_per_s, se.tokens_per_s,
+                    se.tokens_per_s / ds.tokens_per_s);
+            }
+        }
+        "fig10" => {
+            let m = fig10_model();
+            let mut cl = cluster_for_gpus(16);
+            cl.gpu_mem = 40 * (1 << 30);
+            for k in [1, 2, 4, 8] {
+                let r = simulate_ring_offload(&m, &cl, k);
+                println!("K={}: resident {:.1}ms  ring {:.1}ms  blocking {:.1}ms  mem {:.1}→{:.1} GB",
+                    k, r.t_resident * 1e3, r.t_ring * 1e3, r.t_blocking * 1e3,
+                    r.mem_resident / 1e9, r.mem_ring / 1e9);
+            }
+        }
+        "fig11" => {
+            use semoe::comm::{A2aStrategy, AllToAllPlan, Topology};
+            let m = fig11_model();
+            for nodes in [1usize, 2, 4] {
+                let cl = cluster_for_gpus(nodes * 8);
+                let cm = semoe::sim::CostModel::new(m.clone(), cl.clone());
+                let c = cm.step_cost();
+                let topo = Topology::new(cl);
+                let flat = AllToAllPlan::price(&topo, c.a2a_bytes_per_pair, A2aStrategy::Flat);
+                let hier = AllToAllPlan::price(&topo, c.a2a_bytes_per_pair, A2aStrategy::Hierarchical);
+                println!("{} node(s): flat {:.3}ms  hier {:.3}ms  (comm −{:.1}%)",
+                    nodes, flat.time * 1e3, hier.time * 1e3,
+                    (1.0 - hier.time / flat.time) * 100.0);
+            }
+        }
+        other => anyhow::bail!("unknown simulate target '{}'", other),
+    }
+    Ok(())
+}
+
+fn cmd_graph(args: &Args) -> Result<()> {
+    use semoe::infer::Graph;
+    let layers = args.usize("layers", 4);
+    let experts = args.usize("experts", 16);
+    let g = Graph::moe_decoder(layers, experts);
+    let (_final_g, log, desc) =
+        GraphPipeline::run(&g, args.usize("keep-experts", 4), 1, 64, 256, args.usize("stages", 2));
+    println!("original ops: {}", g.n_ops());
+    for (step, ops) in &log.steps {
+        println!("  after {:<10} {} ops", step, ops);
+    }
+    println!("deployment: {}", desc.pretty());
+    Ok(())
+}
+
+fn cmd_elastic(args: &Args) -> Result<()> {
+    let setup = table3_setup();
+    let tasks: Vec<TaskLoad> = setup
+        .task_batches
+        .iter()
+        .enumerate()
+        .map(|(i, &b)| TaskLoad { name: format!("task{}", i + 1), batch: b })
+        .collect();
+    let budget = args.usize("gpus", 8);
+    let base = ElasticPlan::one_per_task(&tasks);
+    let bal = ElasticPlan::balance(&tasks, budget);
+    println!("imbalanced: gpus/task {:?}  imbalance {:.2}", base.gpus_per_task, base.imbalance());
+    println!("balanced:   gpus/task {:?}  imbalance {:.2}", bal.gpus_per_task, bal.imbalance());
+    let unit = 1e-3;
+    let (tb, pb) = base.throughput(unit);
+    let (tt, pt) = bal.throughput(unit);
+    println!("analytic:   {:.1} → {:.1} samples/s total; {:.1} → {:.1} per card (+{:.1}%)",
+        tb, tt, pb, pt, (pt / pb - 1.0) * 100.0);
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Thread-safe counters and timers with a process-wide registry.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Monotonic counter (u64 adds; also carries a f64 sum for time totals).
+#[derive(Debug, Default)]
+pub struct Counter {
+    hits: AtomicU64,
+    /// Sum in nanoseconds-ish fixed point (1e-9 units) for f64 totals.
+    sum_nanos: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.hits.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn add_secs(&self, secs: f64) {
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add((secs * 1e9) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 * 1e-9
+    }
+}
+
+/// Named counter registry; cheap to clone (Arc).
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    inner: Arc<Mutex<BTreeMap<String, Arc<Counter>>>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut m = self.inner.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
+    }
+
+    /// Time a closure into `name` (count + total seconds).
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let c = self.counter(name);
+        let t0 = Instant::now();
+        let out = f();
+        c.add_secs(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn snapshot(&self) -> Json {
+        let m = self.inner.lock().unwrap();
+        let mut obj = Vec::new();
+        for (k, c) in m.iter() {
+            obj.push((
+                k.as_str(),
+                Json::obj(vec![
+                    ("count", Json::num(c.count() as f64)),
+                    ("total_secs", Json::num(c.total_secs())),
+                ]),
+            ));
+        }
+        Json::obj(obj)
+    }
+}
+
+/// RAII timer adding elapsed time to a counter on drop.
+pub struct Timer {
+    counter: Arc<Counter>,
+    start: Instant,
+}
+
+impl Timer {
+    pub fn new(counter: Arc<Counter>) -> Self {
+        Timer { counter, start: Instant::now() }
+    }
+}
+
+impl Drop for Timer {
+    fn drop(&mut self) {
+        self.counter.add_secs(self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.counter("x").inc();
+        r.counter("x").add(4);
+        assert_eq!(r.counter("x").count(), 5);
+    }
+
+    #[test]
+    fn timing() {
+        let r = Registry::new();
+        let out = r.time("sleepy", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(out, 42);
+        let c = r.counter("sleepy");
+        assert_eq!(c.count(), 1);
+        assert!(c.total_secs() >= 0.004, "{}", c.total_secs());
+    }
+
+    #[test]
+    fn raii_timer() {
+        let r = Registry::new();
+        {
+            let _t = Timer::new(r.counter("scope"));
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(r.counter("scope").total_secs() > 0.001);
+    }
+
+    #[test]
+    fn snapshot_json() {
+        let r = Registry::new();
+        r.counter("a").inc();
+        let j = r.snapshot();
+        assert_eq!(j.get("a").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn shared_across_clones_and_threads() {
+        let r = Registry::new();
+        let r2 = r.clone();
+        let h = std::thread::spawn(move || {
+            for _ in 0..100 {
+                r2.counter("t").inc();
+            }
+        });
+        for _ in 0..100 {
+            r.counter("t").inc();
+        }
+        h.join().unwrap();
+        assert_eq!(r.counter("t").count(), 200);
+    }
+}

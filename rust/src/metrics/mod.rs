@@ -1,0 +1,12 @@
+//! Metrics: counters, scoped timers, step timelines and report writers.
+//!
+//! Every subsystem reports through these so benches/examples can dump a
+//! single JSON/markdown artifact per run (mirroring the paper's tables).
+
+pub mod counters;
+pub mod timeline;
+pub mod report;
+
+pub use counters::{Counter, Registry, Timer};
+pub use timeline::{Phase, Timeline};
+pub use report::Report;

@@ -1,0 +1,144 @@
+//! Report writer: collects named tables (rows of labelled columns) and
+//! renders them as aligned markdown plus machine-readable JSON. Every
+//! bench emits one Report; EXPERIMENTS.md embeds the markdown.
+
+use std::fmt::Write as _;
+
+use crate::util::json::Json;
+
+/// One table: header + rows of strings (formatting is the caller's job).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+/// A named collection of tables + free-form notes.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub name: String,
+    pub tables: Vec<Table>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(name: &str) -> Self {
+        Report { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn table(&mut self, title: &str, columns: &[&str]) -> usize {
+        self.tables.push(Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        });
+        self.tables.len() - 1
+    }
+
+    pub fn row(&mut self, table: usize, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.tables[table].columns.len(), "row arity");
+        self.tables[table].rows.push(cells);
+    }
+
+    pub fn note(&mut self, text: &str) {
+        self.notes.push(text.to_string());
+    }
+
+    /// Aligned GitHub-flavoured markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "## {}", self.name);
+        for t in &self.tables {
+            let _ = writeln!(out, "\n### {}\n", t.title);
+            // column widths
+            let mut w: Vec<usize> = t.columns.iter().map(|c| c.len()).collect();
+            for r in &t.rows {
+                for (i, c) in r.iter().enumerate() {
+                    w[i] = w[i].max(c.len());
+                }
+            }
+            let line = |cells: &[String], w: &[usize]| {
+                let mut s = String::from("|");
+                for (i, c) in cells.iter().enumerate() {
+                    let _ = write!(s, " {:<width$} |", c, width = w[i]);
+                }
+                s
+            };
+            let _ = writeln!(out, "{}", line(&t.columns, &w));
+            let mut sep = String::from("|");
+            for width in &w {
+                let _ = write!(sep, "{:-<width$}|", "", width = width + 2);
+            }
+            let _ = writeln!(out, "{}", sep);
+            for r in &t.rows {
+                let _ = writeln!(out, "{}", line(r, &w));
+            }
+        }
+        if !self.notes.is_empty() {
+            let _ = writeln!(out, "\n**Notes**\n");
+            for n in &self.notes {
+                let _ = writeln!(out, "- {}", n);
+            }
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "tables",
+                Json::arr(self.tables.iter().map(|t| {
+                    Json::obj(vec![
+                        ("title", Json::str(t.title.clone())),
+                        ("columns", Json::arr(t.columns.iter().map(|c| Json::str(c.clone())))),
+                        (
+                            "rows",
+                            Json::arr(t.rows.iter().map(|r| {
+                                Json::arr(r.iter().map(|c| Json::str(c.clone())))
+                            })),
+                        ),
+                    ])
+                })),
+            ),
+            ("notes", Json::arr(self.notes.iter().map(|n| Json::str(n.clone())))),
+        ])
+    }
+
+    /// Write both renderings under `dir/<name>.{md,json}`.
+    pub fn save(&self, dir: &std::path::Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.md", self.name)), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{}.json", self.name)), self.to_json().pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_alignment_and_json() {
+        let mut r = Report::new("table1_training");
+        let t = r.table("throughput", &["params", "deepspeed", "se-moe"]);
+        r.row(t, vec!["13.9B".into(), "24165".into(), "31085".into()]);
+        r.row(t, vec!["207.2B".into(), "283706".into(), "376968".into()]);
+        r.note("shape comparison only");
+        let md = r.to_markdown();
+        assert!(md.contains("## table1_training"));
+        assert!(md.contains("| params "));
+        assert!(md.lines().filter(|l| l.starts_with('|')).count() == 4);
+        let j = r.to_json();
+        assert_eq!(j.get("tables").at(0).get("rows").at(1).at(2).as_str(), Some("376968"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut r = Report::new("x");
+        let t = r.table("t", &["a", "b"]);
+        r.row(t, vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,145 @@
+//! Per-step phase timeline: the measured analogue of the paper's Fig 11
+//! "training time breakdown" (computation / communication / other) and
+//! the Fig 10 compute-vs-copy bars.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Phase classes we break step time into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    Compute,
+    Communication,
+    HostTransfer,
+    SsdIo,
+    Scheduling,
+    Idle,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 6] = [
+        Phase::Compute,
+        Phase::Communication,
+        Phase::HostTransfer,
+        Phase::SsdIo,
+        Phase::Scheduling,
+        Phase::Idle,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Compute => "compute",
+            Phase::Communication => "communication",
+            Phase::HostTransfer => "host_transfer",
+            Phase::SsdIo => "ssd_io",
+            Phase::Scheduling => "scheduling",
+            Phase::Idle => "idle",
+        }
+    }
+}
+
+/// Accumulates wall time per phase. Not thread-safe by design — each
+/// worker owns one and they are merged at the end of a step.
+#[derive(Debug, Clone, Default)]
+pub struct Timeline {
+    totals: [f64; 6],
+    steps: usize,
+}
+
+fn idx(p: Phase) -> usize {
+    Phase::ALL.iter().position(|&q| q == p).unwrap()
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, p: Phase, secs: f64) {
+        self.totals[idx(p)] += secs;
+    }
+
+    /// Time a closure into a phase.
+    pub fn time<T>(&mut self, p: Phase, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(p, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn end_step(&mut self) {
+        self.steps += 1;
+    }
+
+    pub fn total(&self, p: Phase) -> f64 {
+        self.totals[idx(p)]
+    }
+
+    pub fn grand_total(&self) -> f64 {
+        self.totals.iter().sum()
+    }
+
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    pub fn merge(&mut self, other: &Timeline) {
+        for i in 0..self.totals.len() {
+            self.totals[i] += other.totals[i];
+        }
+        self.steps += other.steps;
+    }
+
+    /// Fractional breakdown (sums to 1 when non-empty).
+    pub fn fractions(&self) -> Vec<(Phase, f64)> {
+        let g = self.grand_total().max(1e-12);
+        Phase::ALL.iter().map(|&p| (p, self.total(p) / g)).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs: Vec<(&str, Json)> = Phase::ALL
+            .iter()
+            .map(|&p| (p.name(), Json::num(self.total(p))))
+            .collect();
+        pairs.push(("steps", Json::num(self.steps as f64)));
+        Json::obj(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulate_and_fraction() {
+        let mut t = Timeline::new();
+        t.add(Phase::Compute, 3.0);
+        t.add(Phase::Communication, 1.0);
+        t.end_step();
+        assert_eq!(t.grand_total(), 4.0);
+        let fr = t.fractions();
+        let comp = fr.iter().find(|(p, _)| *p == Phase::Compute).unwrap().1;
+        assert!((comp - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge() {
+        let mut a = Timeline::new();
+        a.add(Phase::SsdIo, 1.0);
+        a.end_step();
+        let mut b = Timeline::new();
+        b.add(Phase::SsdIo, 2.0);
+        b.end_step();
+        a.merge(&b);
+        assert_eq!(a.total(Phase::SsdIo), 3.0);
+        assert_eq!(a.steps(), 2);
+    }
+
+    #[test]
+    fn timed_closure() {
+        let mut t = Timeline::new();
+        t.time(Phase::Scheduling, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(t.total(Phase::Scheduling) > 0.001);
+    }
+}

@@ -1,0 +1,124 @@
+//! Coordinator-side top-1 gating: same semantics as the Pallas kernel
+//! (`python/compile/kernels/gating.py`), re-implemented over plain
+//! slices. Cross-checked against the kernel in
+//! `rust/tests/runtime_integration.rs` and `tests/prop.rs`.
+
+/// Routing decision for a token batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Routing {
+    pub expert: Vec<usize>,
+    pub gate: Vec<f32>,
+    pub pos: Vec<usize>,
+    pub keep: Vec<bool>,
+    /// Mean router probability per expert (aux-loss `me`).
+    pub me: Vec<f32>,
+    /// Token fraction per expert (aux-loss `ce`).
+    pub ce: Vec<f32>,
+}
+
+impl Routing {
+    pub fn n_dropped(&self) -> usize {
+        self.keep.iter().filter(|&&k| !k).count()
+    }
+
+    /// Switch-Transformer load-balancing loss: E * Σ me·ce.
+    pub fn aux_loss(&self) -> f32 {
+        let e = self.me.len() as f32;
+        e * self.me.iter().zip(&self.ce).map(|(m, c)| m * c).sum::<f32>()
+    }
+}
+
+/// GShard top-1 routing with capacity. `logits` is row-major [tokens, experts].
+pub fn top1_route(logits: &[f32], n_tokens: usize, n_experts: usize, capacity: usize) -> Routing {
+    assert_eq!(logits.len(), n_tokens * n_experts);
+    let mut expert = vec![0usize; n_tokens];
+    let mut gate = vec![0f32; n_tokens];
+    let mut pos = vec![0usize; n_tokens];
+    let mut keep = vec![false; n_tokens];
+    let mut me = vec![0f32; n_experts];
+    let mut ce = vec![0f32; n_experts];
+    let mut counts = vec![0usize; n_experts];
+
+    for t in 0..n_tokens {
+        let row = &logits[t * n_experts..(t + 1) * n_experts];
+        // softmax
+        let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+        let exps: Vec<f32> = row.iter().map(|&l| (l - mx).exp()).collect();
+        let z: f32 = exps.iter().sum();
+        let mut best = 0usize;
+        for (i, &e) in exps.iter().enumerate() {
+            me[i] += e / z / n_tokens as f32;
+            if e > exps[best] {
+                best = i;
+            }
+        }
+        expert[t] = best;
+        ce[best] += 1.0 / n_tokens as f32;
+        pos[t] = counts[best];
+        counts[best] += 1;
+        keep[t] = pos[t] < capacity;
+        gate[t] = if keep[t] { exps[best] / z } else { 0.0 };
+    }
+
+    Routing { expert, gate, pos, keep, me, ce }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn logits(n_tokens: usize, n_experts: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n_tokens * n_experts).map(|_| rng.normal() as f32).collect()
+    }
+
+    #[test]
+    fn capacity_enforced_and_positions_contiguous() {
+        let (t, e, cap) = (64, 4, 8);
+        let r = top1_route(&logits(t, e, 1), t, e, cap);
+        let mut per = vec![0usize; e];
+        for i in 0..t {
+            if r.keep[i] {
+                per[r.expert[i]] += 1;
+                assert!(r.pos[i] < cap);
+            } else {
+                assert_eq!(r.gate[i], 0.0);
+            }
+        }
+        assert!(per.iter().all(|&c| c <= cap));
+    }
+
+    #[test]
+    fn uniform_logits_give_aux_loss_near_one() {
+        // all-equal logits: every token ties, argmax picks expert 0 →
+        // worst-case ce but uniform me. Use random logits for balance:
+        let (t, e) = (4096, 8);
+        let r = top1_route(&logits(t, e, 2), t, e, t);
+        assert!((r.me.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!((r.ce.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        // random routing is near-balanced → aux ≈ 1
+        let aux = r.aux_loss();
+        assert!(aux > 0.9 && aux < 1.3, "aux {}", aux);
+    }
+
+    #[test]
+    fn skewed_logits_increase_aux_loss() {
+        let (t, e) = (256, 4);
+        let mut lg = logits(t, e, 3);
+        for t_i in 0..t {
+            lg[t_i * e] += 3.0; // bias expert 0
+        }
+        let r = top1_route(&lg, t, e, t);
+        assert!(r.aux_loss() > 1.5, "aux {}", r.aux_loss());
+        assert!(r.ce[0] > 0.5);
+    }
+
+    #[test]
+    fn dropped_tokens_counted() {
+        let (t, e, cap) = (32, 2, 4);
+        let r = top1_route(&logits(t, e, 4), t, e, cap);
+        assert_eq!(r.n_dropped(), t - r.keep.iter().filter(|&&k| k).count());
+        assert!(r.n_dropped() >= t - 2 * cap);
+    }
+}

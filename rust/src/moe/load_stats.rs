@@ -1,0 +1,108 @@
+//! Rolling load statistics per expert/device — feeds the elastic
+//! scheduler (§4.1) and the load-aware placement.
+
+use crate::util::stats::imbalance;
+
+/// Exponentially-decayed token counts per expert.
+#[derive(Debug, Clone)]
+pub struct LoadStats {
+    loads: Vec<f64>,
+    decay: f64,
+    steps: u64,
+}
+
+impl LoadStats {
+    pub fn new(n_experts: usize, decay: f64) -> LoadStats {
+        LoadStats { loads: vec![0.0; n_experts], decay, steps: 0 }
+    }
+
+    /// Record one step's per-expert token counts.
+    pub fn record(&mut self, tokens_per_expert: &[usize]) {
+        assert_eq!(tokens_per_expert.len(), self.loads.len());
+        for (l, &t) in self.loads.iter_mut().zip(tokens_per_expert) {
+            *l = *l * self.decay + t as f64 * (1.0 - self.decay);
+        }
+        self.steps += 1;
+    }
+
+    pub fn loads(&self) -> &[f64] {
+        &self.loads
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// max/mean across experts (1.0 == balanced).
+    pub fn expert_imbalance(&self) -> f64 {
+        imbalance(&self.loads)
+    }
+
+    /// Hot set: experts covering `frac` of total load, most-loaded first.
+    /// Sizes the CPU cache (`alpha` in the §2.1 formulas).
+    pub fn hot_experts(&self, frac: f64) -> Vec<usize> {
+        let total: f64 = self.loads.iter().sum();
+        if total <= 0.0 {
+            return Vec::new();
+        }
+        let mut order: Vec<usize> = (0..self.loads.len()).collect();
+        order.sort_by(|&a, &b| self.loads[b].partial_cmp(&self.loads[a]).unwrap());
+        let mut acc = 0.0;
+        let mut out = Vec::new();
+        for e in order {
+            out.push(e);
+            acc += self.loads[e];
+            if acc >= frac * total {
+                break;
+            }
+        }
+        out
+    }
+
+    /// Empirical activation probability (fraction of experts in the hot
+    /// `frac` set) — the measured `alpha`.
+    pub fn alpha(&self, frac: f64) -> f64 {
+        if self.loads.is_empty() {
+            return 0.0;
+        }
+        self.hot_experts(frac).len() as f64 / self.loads.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decay_tracks_recent_load() {
+        let mut ls = LoadStats::new(2, 0.5);
+        ls.record(&[100, 0]);
+        ls.record(&[100, 0]);
+        assert!(ls.loads()[0] > 50.0);
+        // flip the load; within a few steps expert 1 dominates
+        for _ in 0..6 {
+            ls.record(&[0, 100]);
+        }
+        assert!(ls.loads()[1] > 10.0 * ls.loads()[0]);
+    }
+
+    #[test]
+    fn hot_experts_under_zipf() {
+        let mut ls = LoadStats::new(10, 0.0);
+        let tokens: Vec<usize> = (0..10).map(|e| 1000 / (1 + e)).collect();
+        ls.record(&tokens);
+        let hot = ls.hot_experts(0.5);
+        assert!(hot.len() <= 3, "{:?}", hot);
+        assert_eq!(hot[0], 0);
+        assert!(ls.alpha(0.5) <= 0.3);
+        assert!(ls.expert_imbalance() > 2.0);
+    }
+
+    #[test]
+    fn balanced_load_alpha_near_one() {
+        let mut ls = LoadStats::new(8, 0.0);
+        ls.record(&[10; 8]);
+        assert!(ls.alpha(0.99) > 0.9);
+        assert!((ls.expert_imbalance() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,16 @@
+//! MoE routing machinery on the coordinator side: gating decisions,
+//! expert placement across devices, AlltoAll dispatch plans and load
+//! statistics. The numerics of gating run inside the L1 kernel; this
+//! module re-implements the *decision* logic so the coordinator can plan
+//! communication, balance load and drive the simulator without touching
+//! PJRT.
+
+pub mod gating;
+pub mod router;
+pub mod placement;
+pub mod load_stats;
+
+pub use gating::{top1_route, Routing};
+pub use load_stats::LoadStats;
+pub use placement::ExpertPlacement;
+pub use router::DispatchPlan;

@@ -1,0 +1,123 @@
+//! Dispatch planning: turn a routing decision + expert placement into
+//! the per-device AlltoAll chunk matrix (how many tokens each source
+//! device ships to each destination device), the quantity both the real
+//! mesh exchange and the cost simulator consume.
+
+use super::gating::Routing;
+use super::placement::ExpertPlacement;
+
+/// Token-level AlltoAll plan for one MoE layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DispatchPlan {
+    /// tokens\[src_device\]\[dst_device\] routed (kept tokens only).
+    pub tokens: Vec<Vec<usize>>,
+    pub n_devices: usize,
+    /// Hidden size used for byte conversion.
+    pub d_model: usize,
+}
+
+impl DispatchPlan {
+    /// Build from per-device routings: `routings[d]` is device d's local
+    /// batch routing; placement maps experts to devices.
+    pub fn build(
+        routings: &[Routing],
+        placement: &ExpertPlacement,
+        d_model: usize,
+    ) -> DispatchPlan {
+        let n = routings.len();
+        let mut tokens = vec![vec![0usize; placement.n_devices]; n];
+        for (src, r) in routings.iter().enumerate() {
+            for t in 0..r.expert.len() {
+                if r.keep[t] {
+                    tokens[src][placement.device_of[r.expert[t]]] += 1;
+                }
+            }
+        }
+        DispatchPlan { tokens, n_devices: placement.n_devices, d_model }
+    }
+
+    /// Bytes src ships to dst (f32 activations, fwd direction).
+    pub fn bytes(&self, src: usize, dst: usize) -> u64 {
+        (self.tokens[src][dst] * self.d_model * 4) as u64
+    }
+
+    /// Max bytes any single device must send (the AlltoAll straggler).
+    pub fn max_send_bytes(&self) -> u64 {
+        self.tokens
+            .iter()
+            .map(|row| row.iter().sum::<usize>() as u64 * self.d_model as u64 * 4)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Max bytes any device receives (== its expert compute load).
+    pub fn max_recv_bytes(&self) -> u64 {
+        (0..self.n_devices)
+            .map(|dst| {
+                self.tokens.iter().map(|row| row[dst]).sum::<usize>() as u64
+                    * self.d_model as u64
+                    * 4
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Per-destination token totals (expert-device compute loads).
+    pub fn recv_loads(&self) -> Vec<usize> {
+        (0..self.n_devices)
+            .map(|dst| self.tokens.iter().map(|row| row[dst]).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::gating::top1_route;
+    use crate::util::Rng;
+
+    fn routing(seed: u64, t: usize, e: usize) -> Routing {
+        let mut rng = Rng::new(seed);
+        let logits: Vec<f32> = (0..t * e).map(|_| rng.normal() as f32).collect();
+        top1_route(&logits, t, e, t)
+    }
+
+    #[test]
+    fn plan_conserves_tokens() {
+        let e = 8;
+        let routings: Vec<Routing> = (0..4).map(|d| routing(d, 32, e)).collect();
+        let placement = ExpertPlacement::contiguous(e, 4);
+        let plan = DispatchPlan::build(&routings, &placement, 16);
+        let shipped: usize = plan.tokens.iter().flatten().sum();
+        let kept: usize = routings
+            .iter()
+            .map(|r| r.keep.iter().filter(|&&k| k).count())
+            .sum();
+        assert_eq!(shipped, kept);
+    }
+
+    #[test]
+    fn bytes_scale_with_d_model() {
+        let routings = vec![routing(1, 16, 4)];
+        let placement = ExpertPlacement::contiguous(4, 2);
+        let p1 = DispatchPlan::build(&routings, &placement, 8);
+        let p2 = DispatchPlan::build(&routings, &placement, 16);
+        assert_eq!(2 * p1.max_send_bytes(), p2.max_send_bytes());
+    }
+
+    #[test]
+    fn skew_shows_in_recv_loads() {
+        let e = 4;
+        let t = 64;
+        let mut rng = Rng::new(9);
+        let mut logits: Vec<f32> = (0..t * e).map(|_| rng.normal() as f32).collect();
+        for ti in 0..t {
+            logits[ti * e] += 4.0;
+        }
+        let r = top1_route(&logits, t, e, t);
+        let placement = ExpertPlacement::round_robin(e, 4);
+        let plan = DispatchPlan::build(&[r], &placement, 8);
+        let loads = plan.recv_loads();
+        assert!(loads[0] > 3 * loads[1].max(1), "{:?}", loads);
+    }
+}

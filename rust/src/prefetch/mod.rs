@@ -1,0 +1,20 @@
+//! 2D prefetch scheduling (paper §2.2, Algorithm 1).
+//!
+//! Two independent prefetch lanes run concurrently with FWD/BWD compute:
+//!
+//! - the **dense lane** (horizontal dimension, NVLink): ZeRO-3 dense
+//!   parameter slices are all-gathered across the data-parallel ranks one
+//!   layer ahead of compute — implemented on the in-process device mesh
+//!   in [`crate::comm`];
+//! - the **sparse lane** (vertical dimension, PCIe): expert blocks stream
+//!   SSD → CPU cache → device through [`SparseScheduler`], a background
+//!   thread that owns the [`crate::storage::HierarchicalStore`].
+//!
+//! The trainer drives both from a [`plan::PrefetchPlan`] so the lookahead
+//! window is explicit and ablatable.
+
+pub mod plan;
+pub mod scheduler;
+
+pub use plan::PrefetchPlan;
+pub use scheduler::{SparseScheduler, SparseRequest};

@@ -1,0 +1,84 @@
+//! Prefetch plans: the ordered layer visit sequence of one training step
+//! (forward sweep then backward sweep) with an explicit lookahead window.
+
+/// What the visit needs the layer's block for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VisitKind {
+    Forward,
+    /// Backward + optimizer update (needs moments, will write back).
+    BackwardUpdate,
+    /// Inference forward (no moments, read-only).
+    Infer,
+}
+
+/// One scheduled layer visit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Visit {
+    pub layer: usize,
+    pub kind: VisitKind,
+}
+
+/// The step's visit order + lookahead depth.
+#[derive(Debug, Clone)]
+pub struct PrefetchPlan {
+    pub visits: Vec<Visit>,
+    pub lookahead: usize,
+}
+
+impl PrefetchPlan {
+    /// Standard training step: fwd 0..L, bwd L-1..0.
+    pub fn train_step(n_layers: usize, lookahead: usize) -> PrefetchPlan {
+        let mut visits = Vec::with_capacity(2 * n_layers);
+        for l in 0..n_layers {
+            visits.push(Visit { layer: l, kind: VisitKind::Forward });
+        }
+        for l in (0..n_layers).rev() {
+            visits.push(Visit { layer: l, kind: VisitKind::BackwardUpdate });
+        }
+        PrefetchPlan { visits, lookahead }
+    }
+
+    /// Inference pass: fwd only.
+    pub fn infer_pass(n_layers: usize, lookahead: usize) -> PrefetchPlan {
+        PrefetchPlan {
+            visits: (0..n_layers)
+                .map(|layer| Visit { layer, kind: VisitKind::Infer })
+                .collect(),
+            lookahead,
+        }
+    }
+
+    /// The set of visit indices to have *requested* before compute begins
+    /// on visit `i` (the lookahead window [i, i+lookahead]).
+    pub fn window_end(&self, i: usize) -> usize {
+        (i + self.lookahead + 1).min(self.visits.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn train_plan_is_fwd_then_bwd() {
+        let p = PrefetchPlan::train_step(3, 1);
+        let layers: Vec<usize> = p.visits.iter().map(|v| v.layer).collect();
+        assert_eq!(layers, vec![0, 1, 2, 2, 1, 0]);
+        assert_eq!(p.visits[0].kind, VisitKind::Forward);
+        assert_eq!(p.visits[3].kind, VisitKind::BackwardUpdate);
+    }
+
+    #[test]
+    fn window_clamps() {
+        let p = PrefetchPlan::train_step(2, 8);
+        assert_eq!(p.window_end(0), 4);
+        assert_eq!(p.window_end(3), 4);
+    }
+
+    #[test]
+    fn infer_plan() {
+        let p = PrefetchPlan::infer_pass(4, 2);
+        assert_eq!(p.visits.len(), 4);
+        assert!(p.visits.iter().all(|v| v.kind == VisitKind::Infer));
+    }
+}

@@ -1,0 +1,104 @@
+//! PJRT engine: one CPU client per process, compile-from-HLO-text.
+
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// Shared PJRT client handle. Cloneable; all executables keep it alive.
+///
+/// NOTE: the `xla` crate's `PjRtClient` is `Rc`-backed and therefore
+/// `!Send`/`!Sync`. The coordinator's threading model respects this:
+/// every worker thread owns its own `Engine` (via [`Engine::thread_local`])
+/// and PJRT values never cross threads — cross-thread traffic is always
+/// [`super::tensor::HostTensor`]s through channels.
+#[derive(Clone)]
+pub struct Engine {
+    client: Rc<xla::PjRtClient>,
+}
+
+thread_local! {
+    static TLS_ENGINE: RefCell<Option<Engine>> = const { RefCell::new(None) };
+}
+
+impl Engine {
+    /// Create a fresh CPU engine.
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client: Rc::new(client) })
+    }
+
+    /// Per-thread shared engine (creating PJRT clients is expensive; all
+    /// users on one thread share one).
+    pub fn thread_local() -> Result<Engine> {
+        TLS_ENGINE.with(|cell| {
+            let mut slot = cell.borrow_mut();
+            if slot.is_none() {
+                *slot = Some(Engine::cpu()?);
+            }
+            Ok(slot.as_ref().unwrap().clone())
+        })
+    }
+
+    /// Back-compat alias for [`Engine::thread_local`].
+    pub fn global() -> Result<Engine> {
+        Engine::thread_local()
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Compile an HLO-text artifact file into a loaded executable.
+    pub fn compile_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+
+    /// Compile HLO text from memory (tests, generated modules).
+    pub fn compile_text(&self, text: &str) -> Result<xla::PjRtLoadedExecutable> {
+        // The crate only exposes from_text_file; stage through a temp file.
+        let mut path = std::env::temp_dir();
+        path.push(format!("semoe_hlo_{}_{}.txt", std::process::id(), fxhash(text)));
+        std::fs::write(&path, text)?;
+        let out = self.compile_file(&path);
+        let _ = std::fs::remove_file(&path);
+        out
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_is_cpu() {
+        let e = Engine::global().unwrap();
+        assert_eq!(e.platform(), "cpu");
+        assert!(e.device_count() >= 1);
+    }
+}

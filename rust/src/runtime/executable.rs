@@ -1,0 +1,190 @@
+//! A compiled artifact + its signature: typed execution with shape
+//! checking, plus a device-buffer path (`run_buffers`) so long-lived
+//! state (resident parameters, ring-memory slots) avoids host round
+//! trips between steps.
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::Engine;
+use super::registry::ArtifactSpec;
+use super::tensor::HostTensor;
+
+/// Device-resident value handle.
+///
+/// Keeps the staging literal alive: `BufferFromHostLiteral` copies
+/// asynchronously, and xla_extension 0.5.1 exposes no per-buffer ready
+/// future — freeing the literal before the copy lands is a
+/// use-after-free (observed as a teardown SIGSEGV in the H2D bench).
+pub struct DeviceTensor {
+    pub buffer: xla::PjRtBuffer,
+    _staging: Option<xla::Literal>,
+}
+
+impl DeviceTensor {
+    pub fn to_host(&self) -> Result<HostTensor> {
+        let lit = self.buffer.to_literal_sync()?;
+        HostTensor::from_literal(&lit)
+    }
+}
+
+pub struct ArtifactExe {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    engine: Engine,
+}
+
+impl ArtifactExe {
+    pub fn new(spec: ArtifactSpec, exe: xla::PjRtLoadedExecutable, engine: Engine) -> Self {
+        ArtifactExe { spec, exe, engine }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    fn check_inputs(&self, inputs: &[&HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (&t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "{}: input #{} ({}) expects {:?}{:?}, got {:?}{:?}",
+                    self.spec.name, i, s.name, s.dtype, s.shape, t.dtype(), t.shape
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors in, host tensors out.
+    ///
+    /// The AOT pipeline lowers every entry with `return_tuple=True`, so
+    /// the PJRT output is a single tuple-shaped buffer; we decompose it
+    /// back into per-output tensors here.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let refs: Vec<&HostTensor> = inputs.iter().collect();
+        self.run_ref(&refs)
+    }
+
+    /// Zero-clone variant of [`ArtifactExe::run`]: the §Perf pass showed
+    /// the resident trainer spending a large share of each step cloning
+    /// its full parameter state (params+m+v) just to build the input
+    /// vector; borrowing removes that copy (the unavoidable one is the
+    /// HostTensor→Literal staging inside).
+    ///
+    /// NOTE: inputs are staged to rust-owned device buffers and executed
+    /// via `execute_b`, NOT the crate's literal-taking `execute` — that C
+    /// wrapper `release()`s every input buffer without freeing it and
+    /// leaks one device buffer per input per call (≈35 MB/step on the
+    /// `small` trainer; OOM on `base`). See EXPERIMENTS.md §Perf #5.
+    pub fn run_ref(&self, inputs: &[&HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let client = self.engine.client();
+        // Literals must outlive the (asynchronous) host→device transfer,
+        // so they are collected alongside the buffers and only dropped
+        // after execute_b returns.
+        let mut lits: Vec<xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = t.to_literal()?;
+            bufs.push(
+                client
+                    .buffer_from_host_literal(None, &lit)
+                    .context("staging input buffer")?,
+            );
+            lits.push(lit);
+        }
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        let outs = self.exe.execute_b(&refs).context("pjrt execute_b")?;
+        // collect() forces completion (device→host of the outputs), which
+        // transitively waits for the async input copies — only then may
+        // the literals be dropped.
+        let result = self.collect(outs);
+        drop(lits);
+        result
+    }
+
+    /// Execute with pre-staged device buffers (no per-call H2D of these
+    /// arguments). Mixed calls stage host tensors via `to_device` first.
+    pub fn run_buffers(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<HostTensor>> {
+        let outs = self.exe.execute_b(inputs).context("pjrt execute_b")?;
+        self.collect(outs)
+    }
+
+    /// Execute with device buffers, keep outputs on device.
+    pub fn run_buffers_to_buffers(
+        &self,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let outs = self.exe.execute_b(inputs).context("pjrt execute_b")?;
+        let mut replicas = outs;
+        if replicas.is_empty() || replicas[0].is_empty() {
+            bail!("{}: empty execution result", self.spec.name);
+        }
+        Ok(replicas.remove(0))
+    }
+
+    /// Stage a host tensor onto the device (the runtime analogue of a
+    /// pinned-memory H2D copy).
+    ///
+    /// Synchronous by construction: xla_extension 0.5.1 exposes no
+    /// per-buffer ready future, and both dropping the staging literal
+    /// and freeing the buffer while the async copy is in flight are
+    /// use-after-frees (observed as copy-thread SIGSEGVs). Forcing the
+    /// definition event via a round trip is the only safe completion
+    /// fence this API offers; `run_ref` avoids the extra hop because its
+    /// output collection is already such a fence.
+    pub fn to_device(&self, t: &HostTensor) -> Result<DeviceTensor> {
+        let lit = t.to_literal()?;
+        let buffer = self
+            .engine
+            .client()
+            .buffer_from_host_literal(None, &lit)
+            .context("buffer_from_host_literal")?;
+        let _fence = buffer.to_literal_sync().context("H2D completion fence")?;
+        Ok(DeviceTensor { buffer, _staging: None })
+    }
+
+    fn collect(&self, outs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<HostTensor>> {
+        if outs.is_empty() || outs[0].is_empty() {
+            bail!("{}: empty execution result", self.spec.name);
+        }
+        let first = &outs[0];
+        // return_tuple=True → single tuple buffer; decompose after the
+        // device→host transfer. (If PJRT untupled, handle that too.)
+        let mut tensors = Vec::with_capacity(self.spec.outputs.len());
+        if first.len() == 1 && self.spec.outputs.len() > 0 {
+            let lit = first[0].to_literal_sync()?;
+            let parts = lit.to_tuple().unwrap_or_else(|_| vec![]);
+            if parts.is_empty() {
+                // Non-tuple single output.
+                let lit2 = first[0].to_literal_sync()?;
+                tensors.push(HostTensor::from_literal(&lit2)?);
+            } else {
+                for p in &parts {
+                    tensors.push(HostTensor::from_literal(p)?);
+                }
+            }
+        } else {
+            for b in first {
+                let lit = b.to_literal_sync()?;
+                tensors.push(HostTensor::from_literal(&lit)?);
+            }
+        }
+        if tensors.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.name,
+                self.spec.outputs.len(),
+                tensors.len()
+            );
+        }
+        Ok(tensors)
+    }
+}

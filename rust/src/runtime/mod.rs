@@ -1,0 +1,18 @@
+//! Runtime: loads AOT-compiled HLO artifacts and executes them on the
+//! PJRT CPU client (`xla` crate). This is the only module that touches
+//! PJRT; everything above deals in [`tensor::HostTensor`]s and
+//! [`executable::ArtifactExe`]s.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! bundled xla_extension 0.5.1 rejects jax>=0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids.
+
+pub mod engine;
+pub mod tensor;
+pub mod executable;
+pub mod registry;
+
+pub use engine::Engine;
+pub use executable::ArtifactExe;
+pub use registry::{ArtifactSpec, IoSpec, ModelArtifacts, ParamSpec};
+pub use tensor::{DType, HostTensor};

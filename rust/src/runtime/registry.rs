@@ -1,0 +1,197 @@
+//! Artifact registry: reads `artifacts/<preset>/manifest.json` (emitted by
+//! the AOT pipeline) and hands out compiled executables plus the flat
+//! parameter layout (the "parameter management unit"'s source of truth).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::engine::Engine;
+use super::executable::ArtifactExe;
+use super::tensor::DType;
+use crate::config::ModelConfig;
+use crate::util::json::Json;
+
+/// One input/output signature entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Full signature of one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// One tensor in the flat parameter layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub sparse: bool,
+    pub numel: usize,
+}
+
+impl ParamSpec {
+    /// Which decoder layer this parameter belongs to, if any.
+    pub fn layer(&self) -> Option<usize> {
+        self.name
+            .strip_prefix("layer")?
+            .split('.')
+            .next()?
+            .parse()
+            .ok()
+    }
+}
+
+/// Loaded manifest for one preset + executable cache.
+pub struct ModelArtifacts {
+    pub preset: ModelConfig,
+    pub dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    params: Vec<ParamSpec>,
+    engine: Engine,
+    cache: RefCell<HashMap<String, Rc<ArtifactExe>>>,
+}
+
+impl ModelArtifacts {
+    /// Load `artifacts/<preset>` using the process-global engine.
+    pub fn load(preset: &str) -> Result<ModelArtifacts> {
+        Self::load_from(crate::artifacts_dir().join(preset), Engine::global()?)
+    }
+
+    pub fn load_from(dir: PathBuf, engine: Engine) -> Result<ModelArtifacts> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", mpath.display(), e))?;
+
+        let preset = ModelConfig::from_json(j.get("preset"))
+            .map_err(|e| anyhow::anyhow!("bad preset in manifest: {}", e))?;
+
+        let io = |v: &Json| -> Result<Vec<IoSpec>> {
+            v.as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|o| {
+                    Ok(IoSpec {
+                        name: o.get("name").as_str().unwrap_or("?").to_string(),
+                        dtype: DType::parse(o.get("dtype").as_str().unwrap_or("f32"))?,
+                        shape: o
+                            .get("shape")
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect(),
+                    })
+                })
+                .collect()
+        };
+
+        let mut specs = HashMap::new();
+        if let Some(arts) = j.get("artifacts").as_obj() {
+            for (name, a) in arts {
+                specs.insert(
+                    name.clone(),
+                    ArtifactSpec {
+                        name: name.clone(),
+                        file: a.get("file").as_str().unwrap_or("").to_string(),
+                        inputs: io(a.get("inputs"))?,
+                        outputs: io(a.get("outputs"))?,
+                    },
+                );
+            }
+        }
+
+        let params = j
+            .get("params")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|p| ParamSpec {
+                name: p.get("name").as_str().unwrap_or("?").to_string(),
+                shape: p
+                    .get("shape")
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|d| d.as_usize())
+                    .collect(),
+                sparse: p.get("sparse").as_bool().unwrap_or(false),
+                numel: p.get("numel").as_usize().unwrap_or(0),
+            })
+            .collect();
+
+        Ok(ModelArtifacts { preset, dir, specs, params, engine, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Flat parameter layout (artifact argument order).
+    pub fn params(&self) -> &[ParamSpec] {
+        &self.params
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .with_context(|| format!("artifact '{}' not in manifest for preset {}", name, self.preset.name))
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.specs.contains_key(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Compile (or fetch cached) an executable by entry name.
+    pub fn load_exe(&self, name: &str) -> Result<Rc<ArtifactExe>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.spec(name)?.clone();
+        if spec.file.is_empty() {
+            bail!("artifact '{}' has no file", name);
+        }
+        let path = self.dir.join(&spec.file);
+        let exe = self.engine.compile_file(&path)?;
+        let art = Rc::new(ArtifactExe::new(spec, exe, self.engine.clone()));
+        self.cache.borrow_mut().insert(name.to_string(), art.clone());
+        Ok(art)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_index_parse() {
+        let p = ParamSpec { name: "layer3.w1".into(), shape: vec![4], sparse: true, numel: 4 };
+        assert_eq!(p.layer(), Some(3));
+        let q = ParamSpec { name: "embed".into(), shape: vec![4], sparse: false, numel: 4 };
+        assert_eq!(q.layer(), None);
+    }
+}

@@ -1,0 +1,237 @@
+//! Host tensors: the typed, shape-carrying value that flows between the
+//! coordinator's subsystems and PJRT literals.
+
+use anyhow::{bail, Result};
+
+use crate::util::Rng;
+
+/// Element types used by the artifacts (the AOT pipeline emits only
+/// f32 + i32; fp16 is modelled analytically, see DESIGN.md §Substitutions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        4
+    }
+
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype '{}'", other),
+        }
+    }
+}
+
+/// Dense host tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    // ------------------------------------------------------------ creation
+
+    pub fn zeros(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::F32(vec![0.0; numel(shape)]),
+        }
+    }
+
+    pub fn zeros_i32(shape: &[usize]) -> HostTensor {
+        HostTensor {
+            shape: shape.to_vec(),
+            data: TensorData::I32(vec![0; numel(shape)]),
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> HostTensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> HostTensor {
+        assert_eq!(numel(shape), data.len(), "shape/data mismatch");
+        HostTensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    /// N(0, std) init — used for rust-side parameter initialization
+    /// (matches the python init distribution; see train::optimizer).
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Rng) -> HostTensor {
+        let data = (0..numel(shape)).map(|_| rng.normal() as f32 * std).collect();
+        HostTensor::from_f32(shape, data)
+    }
+
+    pub fn ones(shape: &[usize]) -> HostTensor {
+        HostTensor::from_f32(shape, vec![1.0; numel(shape)])
+    }
+
+    // ------------------------------------------------------------- queries
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        numel(&self.shape)
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.numel() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match &self.data {
+            TensorData::F32(v) if v.len() == 1 => Ok(v[0]),
+            TensorData::I32(v) if v.len() == 1 => Ok(v[0] as f32),
+            _ => bail!("not a scalar (shape {:?})", self.shape),
+        }
+    }
+
+    // ----------------------------------------------------- literal bridge
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        if self.shape.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(HostTensor::from_f32(&dims, lit.to_vec::<f32>()?)),
+            xla::ElementType::S32 => Ok(HostTensor::from_i32(&dims, lit.to_vec::<i32>()?)),
+            // jax argmax may emit s64 in some paths; normalize to i32.
+            xla::ElementType::S64 => {
+                let v64 = lit.to_vec::<i64>()?;
+                Ok(HostTensor::from_i32(&dims, v64.into_iter().map(|v| v as i32).collect()))
+            }
+            other => bail!("unsupported literal element type {:?}", other),
+        }
+    }
+
+    // ------------------------------------------------------------ fusion
+
+    /// Flatten into an existing f32 buffer at `offset` (the fusion unit's
+    /// pack step). Returns elements written.
+    pub fn pack_into(&self, buf: &mut [f32], offset: usize) -> Result<usize> {
+        let src = self.as_f32()?;
+        buf[offset..offset + src.len()].copy_from_slice(src);
+        Ok(src.len())
+    }
+
+    /// Slice a tensor of `shape` back out of a fused buffer (unpack step).
+    pub fn unpack_from(buf: &[f32], offset: usize, shape: &[usize]) -> HostTensor {
+        let n = numel(shape);
+        HostTensor::from_f32(shape, buf[offset..offset + n].to_vec())
+    }
+}
+
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product::<usize>().max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_bytes() {
+        let t = HostTensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert_eq!(t.byte_len(), 96);
+        let s = HostTensor::scalar_f32(7.0);
+        assert_eq!(s.numel(), 1);
+        assert_eq!(s.scalar().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let t = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut buf = vec![0.0f32; 10];
+        let n = t.pack_into(&mut buf, 3).unwrap();
+        assert_eq!(n, 4);
+        let back = HostTensor::unpack_from(&buf, 3, &[2, 2]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn randn_distribution() {
+        let mut rng = Rng::new(0);
+        let t = HostTensor::randn(&[10_000], 0.02, &mut rng);
+        let v = t.as_f32().unwrap();
+        let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
+        let std = (v.iter().map(|x| (x - mean).powi(2)).sum::<f32>() / v.len() as f32).sqrt();
+        assert!(mean.abs() < 0.001);
+        assert!((std - 0.02).abs() < 0.002);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let t = HostTensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+
+        let ti = HostTensor::from_i32(&[4], vec![1, -2, 3, -4]);
+        let lit = ti.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(ti, back);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = HostTensor::scalar_f32(3.5);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar().unwrap(), 3.5);
+    }
+}

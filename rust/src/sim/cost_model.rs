@@ -1,0 +1,151 @@
+//! First-principles per-step cost components: FLOPs, byte volumes and
+//! message counts for one data+expert-parallel MoE training/inference
+//! step. All quantities derive from the model + cluster configs.
+
+use crate::comm::{A2aStrategy, AllToAllPlan, Topology};
+use crate::config::{ClusterConfig, ModelConfig};
+
+/// Raw per-device, per-step quantities (before scheduling).
+#[derive(Debug, Clone, Copy)]
+pub struct StepCost {
+    /// Tokens processed per device per step.
+    pub tokens_per_device: f64,
+    /// Forward FLOPs per device (top-1 MoE: one expert per token).
+    pub fwd_flops: f64,
+    /// Seconds of device compute for fwd (+2x for bwd).
+    pub t_fwd_compute: f64,
+    pub t_train_compute: f64,
+    /// One AlltoAll's per-pair payload bytes (activations, fp16).
+    pub a2a_bytes_per_pair: f64,
+    /// AlltoAll count per step (4 per MoE layer in training: dispatch +
+    /// combine, fwd + bwd; 2 per layer in inference).
+    pub a2a_per_step_train: f64,
+    pub a2a_per_step_infer: f64,
+    /// Dense ZeRO-3 gather/reduce-scatter bytes per device per step.
+    pub dense_comm_bytes: f64,
+    /// Per-rank parameter bytes (fp16 weights).
+    pub weight_bytes_per_rank: f64,
+}
+
+pub struct CostModel {
+    pub model: ModelConfig,
+    pub cluster: ClusterConfig,
+    pub topo: Topology,
+}
+
+impl CostModel {
+    pub fn new(model: ModelConfig, cluster: ClusterConfig) -> CostModel {
+        let topo = Topology::new(cluster.clone());
+        CostModel { model, cluster, topo }
+    }
+
+    /// Forward FLOPs per token (top-1 activated path).
+    pub fn flops_per_token_fwd(&self) -> f64 {
+        let m = &self.model;
+        let (h, f, t, e) = (
+            m.d_model as f64,
+            m.d_ff as f64,
+            m.seq_len as f64,
+            m.n_experts as f64,
+        );
+        let attn = 8.0 * h * h + 4.0 * t * h; // qkvo + scores/ctx
+        let ffn = 4.0 * h * f; // one expert (top-1)
+        let router = 2.0 * h * e;
+        m.n_layers as f64 * (attn + ffn + router)
+    }
+
+    pub fn step_cost(&self) -> StepCost {
+        let m = &self.model;
+        let n = self.cluster.total_gpus().max(1) as f64;
+        // Table-1 convention: `batch_size` sequences per step total, one
+        // per GPU when batch == gpus.
+        let tokens_total = (m.batch_size * m.seq_len) as f64;
+        let tokens_per_device = tokens_total / n;
+        let fwd_flops = tokens_per_device * self.flops_per_token_fwd();
+        let eff = self.cluster.effective_flops();
+        let t_fwd = fwd_flops / eff;
+
+        // AlltoAll payload: each device ships its token block (padded to
+        // the GShard capacity factor — dispatch buffers travel at cf×),
+        // spread over the other devices, fp16 activations.
+        let a2a_bytes_per_pair =
+            m.capacity_factor * tokens_per_device * m.d_model as f64 * 2.0 / n;
+
+        // Dense ZeRO-3: gather dense params (fwd + bwd) + reduce-scatter
+        // grads → 3 × dense bytes × (n-1)/n per device, fp16.
+        let dense_bytes = m.dense_params() as f64 * 2.0;
+        let dense_comm_bytes = 3.0 * dense_bytes * (n - 1.0) / n;
+
+        let weight_bytes_per_rank =
+            (m.dense_params() as f64 + m.sparse_params() as f64 / n) * 2.0;
+
+        StepCost {
+            tokens_per_device,
+            fwd_flops,
+            t_fwd_compute: t_fwd,
+            t_train_compute: 3.0 * t_fwd,
+            a2a_bytes_per_pair,
+            a2a_per_step_train: 4.0 * m.n_layers as f64,
+            a2a_per_step_infer: 2.0 * m.n_layers as f64,
+            dense_comm_bytes,
+            weight_bytes_per_rank,
+        }
+    }
+
+    /// One AlltoAll's wall time under a strategy.
+    pub fn a2a_time(&self, strategy: A2aStrategy) -> f64 {
+        let c = self.step_cost();
+        AllToAllPlan::price(&self.topo, c.a2a_bytes_per_pair, strategy).time
+    }
+
+    /// Tokens/s for a given per-step wall time (whole job).
+    pub fn throughput(&self, step_time: f64) -> f64 {
+        (self.model.batch_size * self.model.seq_len) as f64 / step_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{cluster_for_gpus, table1_model, table1_rows};
+
+    #[test]
+    fn flops_independent_of_expert_count() {
+        // Top-1 gating: compute per token must NOT grow with E (the MoE
+        // premise) apart from the router matmul.
+        let a = CostModel::new(table1_model(8, 8), cluster_for_gpus(8));
+        let b = CostModel::new(table1_model(128, 8), cluster_for_gpus(8));
+        let fa = a.flops_per_token_fwd();
+        let fb = b.flops_per_token_fwd();
+        assert!((fb - fa) / fa < 0.02, "router-only growth, got {}", (fb - fa) / fa);
+    }
+
+    #[test]
+    fn per_device_load_constant_across_table1_rows() {
+        // The paper scales batch with GPUs → per-device tokens constant.
+        let mut prev: Option<f64> = None;
+        for row in table1_rows() {
+            let cm = CostModel::new(
+                table1_model(row.n_experts, row.batch_size),
+                cluster_for_gpus(row.gpus),
+            );
+            let c = cm.step_cost();
+            if let Some(p) = prev {
+                assert!((c.tokens_per_device - p).abs() < 1e-6);
+            }
+            prev = Some(c.tokens_per_device);
+        }
+    }
+
+    #[test]
+    fn hierarchical_a2a_wins_multi_node_only() {
+        let single = CostModel::new(table1_model(8, 8), cluster_for_gpus(8));
+        let multi = CostModel::new(table1_model(64, 64), cluster_for_gpus(64));
+        let s_flat = single.a2a_time(A2aStrategy::Flat);
+        let s_hier = single.a2a_time(A2aStrategy::Hierarchical);
+        assert!(s_hier <= s_flat * 1.5); // single node: no big difference
+        let m_flat = multi.a2a_time(A2aStrategy::Flat);
+        let m_hier = multi.a2a_time(A2aStrategy::Hierarchical);
+        assert!(m_hier < m_flat, "{} vs {}", m_hier, m_flat);
+    }
+}

@@ -1,0 +1,88 @@
+//! Pipeline makespan: the exact completion time of an L-stage
+//! compute/transfer pipeline with a bounded prefetch window — the
+//! analytic core shared by the 2D-prefetch simulator and the
+//! ring-memory-offload simulator (one serial I/O channel, one serial
+//! compute channel, `slots` in-flight buffers).
+
+/// Simulate `compute[i]` on the compute channel and `io[i]` on the I/O
+/// channel. I/O for item i may start once fewer than `slots` items are
+/// resident (issued but not yet finished computing). Compute for item i
+/// starts at `max(io_done[i], compute_done[i-1])`.
+///
+/// Returns `(makespan, compute_stall)`: total wall time and how much of
+/// the I/O the compute channel actually waited for (the un-hidden part).
+pub fn pipeline_makespan(compute: &[f64], io: &[f64], slots: usize) -> (f64, f64) {
+    assert_eq!(compute.len(), io.len());
+    let n = compute.len();
+    let slots = slots.max(1);
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    let mut io_done = vec![0.0f64; n];
+    let mut comp_done = vec![0.0f64; n];
+    let mut io_free = 0.0f64;
+    let mut stall = 0.0f64;
+    for i in 0..n {
+        // I/O for item i can begin once item i-slots has finished compute
+        // (its buffer frees) and the I/O channel is idle.
+        let gate = if i >= slots { comp_done[i - slots] } else { 0.0 };
+        let start = io_free.max(gate);
+        io_done[i] = start + io[i];
+        io_free = io_done[i];
+
+        let ready = if i == 0 { 0.0 } else { comp_done[i - 1] };
+        let begin = ready.max(io_done[i]);
+        stall += begin - ready;
+        comp_done[i] = begin + compute[i];
+    }
+    (comp_done[n - 1], stall)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pure_compute_when_io_is_free() {
+        let (t, stall) = pipeline_makespan(&[1.0; 4], &[0.0; 4], 2);
+        assert_eq!(t, 4.0);
+        assert_eq!(stall, 0.0);
+    }
+
+    #[test]
+    fn serial_when_one_slot() {
+        // slots=1: io(i+1) waits for compute(i) to release the buffer →
+        // fully serial.
+        let (t, stall) = pipeline_makespan(&[1.0; 3], &[1.0; 3], 1);
+        assert_eq!(t, 6.0);
+        assert_eq!(stall, 3.0);
+    }
+
+    #[test]
+    fn deep_window_hides_io() {
+        // io (0.5) < compute (1.0): with 2 slots everything after the
+        // first fetch hides.
+        let (t, stall) = pipeline_makespan(&[1.0; 8], &[0.5; 8], 2);
+        assert!((t - 8.5).abs() < 1e-9, "t={}", t);
+        assert!((stall - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn io_bound_pipeline_is_io_limited() {
+        // io (2.0) > compute (1.0): makespan ≈ total io + last compute.
+        let (t, _) = pipeline_makespan(&[1.0; 5], &[2.0; 5], 4);
+        assert!((t - 11.0).abs() < 1e-9, "t={}", t);
+    }
+
+    #[test]
+    fn more_slots_never_hurt() {
+        let compute = [0.8, 1.2, 0.5, 2.0, 1.0, 0.7];
+        let io = [1.0, 0.3, 1.5, 0.2, 0.9, 1.1];
+        let mut prev = f64::INFINITY;
+        for slots in 1..=6 {
+            let (t, _) = pipeline_makespan(&compute, &io, slots);
+            assert!(t <= prev + 1e-12, "slots {} worse: {} > {}", slots, t, prev);
+            prev = t;
+        }
+    }
+}

@@ -1,0 +1,151 @@
+//! Paper-scale inference simulation: Table 2 (throughput vs DeepSpeed)
+//! and Figure 10 (ring-memory offload overlap + memory saving).
+
+use super::baseline::{deepspeed, semoe};
+use super::cost_model::CostModel;
+use super::event::pipeline_makespan;
+use crate::comm::A2aStrategy;
+use crate::config::{ClusterConfig, ModelConfig};
+
+#[derive(Debug, Clone)]
+pub struct InferReport {
+    pub step_time: f64,
+    pub tokens_per_s: f64,
+    pub t_compute: f64,
+    pub t_a2a: f64,
+    pub t_overhead: f64,
+}
+
+/// One forward pass of `model` under either schedule (Table 2).
+pub fn simulate_inference(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    semoe_schedule: bool,
+) -> InferReport {
+    let cm = CostModel::new(model.clone(), cluster.clone());
+    let c = cm.step_cost();
+    let n_layers = model.n_layers as f64;
+    let (strategy, h2d) = if semoe_schedule {
+        (A2aStrategy::Hierarchical, semoe().h2d_overhead_per_layer)
+    } else {
+        (A2aStrategy::Flat, deepspeed().h2d_overhead_per_layer)
+    };
+    let t_compute = c.t_fwd_compute;
+    let t_a2a = if cluster.total_gpus() > 1 {
+        cm.a2a_time(strategy) * c.a2a_per_step_infer
+    } else {
+        0.0
+    };
+    let t_overhead = h2d * n_layers;
+    let step_time = t_compute + t_a2a + t_overhead;
+    InferReport {
+        step_time,
+        tokens_per_s: cm.throughput(step_time),
+        t_compute,
+        t_a2a,
+        t_overhead,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RingReport {
+    /// Per-layer device compute time.
+    pub t_layer_compute: f64,
+    /// Per-layer expert copy time over PCIe.
+    pub t_layer_copy: f64,
+    /// Full pass w/o offload (all weights resident).
+    pub t_resident: f64,
+    /// Full pass with overlapped ring offload (K slots).
+    pub t_ring: f64,
+    /// Full pass with blocking (non-overlapped) offload.
+    pub t_blocking: f64,
+    /// Device weight memory, resident vs ring (bytes).
+    pub mem_resident: f64,
+    pub mem_ring: f64,
+}
+
+/// Figure 10: ring-memory offload of `model`'s expert weights with `k`
+/// device slots on `cluster` (per-device view).
+pub fn simulate_ring_offload(model: &ModelConfig, cluster: &ClusterConfig, k: usize) -> RingReport {
+    let cm = CostModel::new(model.clone(), cluster.clone());
+    let c = cm.step_cost();
+    let n = cluster.total_gpus().max(1) as f64;
+    let n_layers = model.n_layers;
+
+    // Fig-10 convention: `batch_size` sequences *per device* (the
+    // offload experiment saturates each GPU; see EXPERIMENTS.md).
+    let t_layer_compute = c.t_fwd_compute * n / n_layers as f64;
+    // Expert weights per layer per device, fp16, over PCIe.
+    let expert_bytes = model.param_counts().per_layer_sparse as f64 * 2.0 / n;
+    let t_layer_copy = expert_bytes / cluster.pcie.bandwidth + cluster.pcie.latency;
+
+    let compute = vec![t_layer_compute; n_layers];
+    let io = vec![t_layer_copy; n_layers];
+    let (t_ring, _) = pipeline_makespan(&compute, &io, k);
+    let t_blocking = (t_layer_compute + t_layer_copy) * n_layers as f64;
+    let t_resident = t_layer_compute * n_layers as f64;
+
+    let per_layer_weight = model.param_counts().per_layer as f64 * 2.0 / n;
+    RingReport {
+        t_layer_compute,
+        t_layer_copy,
+        t_resident,
+        t_ring,
+        t_blocking,
+        mem_resident: per_layer_weight * n_layers as f64,
+        mem_ring: per_layer_weight * k.min(n_layers) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::{cluster_for_gpus, fig10_model, table2_model, table2_rows};
+
+    #[test]
+    fn semoe_inference_beats_deepspeed_in_band() {
+        for row in table2_rows() {
+            let m = table2_model(row.params_b, row.batch_size);
+            let cl = cluster_for_gpus(row.gpus);
+            let ds = simulate_inference(&m, &cl, false);
+            let se = simulate_inference(&m, &cl, true);
+            let speedup = se.tokens_per_s / ds.tokens_per_s;
+            assert!(
+                speedup > 1.02 && speedup < 1.5,
+                "{}B: speedup {:.3} out of band (paper ≈ 1.06–1.13)",
+                row.params_b,
+                speedup
+            );
+        }
+    }
+
+    #[test]
+    fn ring_offload_overlap_close_to_resident() {
+        // Fig 10's claim: overlapped offload ≈ no-offload performance.
+        let m = fig10_model();
+        let mut cl = cluster_for_gpus(16);
+        cl.gpu_mem = 40 * (1 << 30); // A100-40G testbed
+        let r = simulate_ring_offload(&m, &cl, 4);
+        assert!(r.t_ring < r.t_blocking, "overlap must help");
+        let overhead = r.t_ring / r.t_resident;
+        assert!(
+            overhead < 1.6,
+            "ring within striking distance of resident: {:.2}x",
+            overhead
+        );
+        // memory saving ≥ 30% (paper's claim) — here much more.
+        assert!(r.mem_ring < 0.7 * r.mem_resident);
+    }
+
+    #[test]
+    fn more_slots_monotone() {
+        let m = fig10_model();
+        let cl = cluster_for_gpus(16);
+        let mut prev = f64::INFINITY;
+        for k in 1..=6 {
+            let r = simulate_ring_offload(&m, &cl, k);
+            assert!(r.t_ring <= prev + 1e-12);
+            prev = r.t_ring;
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Calibrated cluster simulator: prices one training/inference step of a
+//! paper-scale MoE configuration under the SE-MoE schedule and under a
+//! DeepSpeed-like baseline schedule, on the Figure-7 fabric model.
+//!
+//! What is *exact*: byte volumes, message counts, link paths, schedule
+//! structure (what overlaps what) — these are computed from the config,
+//! not fitted. What is *calibrated*: device MFU, kernel-launch overhead,
+//! per-message software latency, fragmentation factors — single scalar
+//! constants documented in [`baseline`]. Absolute numbers are therefore
+//! indicative; *ratios and trends* are the reproduction target (see
+//! EXPERIMENTS.md).
+
+pub mod event;
+pub mod cost_model;
+pub mod baseline;
+pub mod train_sim;
+pub mod infer_sim;
+
+pub use cost_model::{CostModel, StepCost};
+pub use event::pipeline_makespan;
+pub use infer_sim::{simulate_inference, simulate_ring_offload, InferReport, RingReport};
+pub use train_sim::{simulate_training, Schedule, TrainReport};

@@ -1,0 +1,17 @@
+//! Hierarchical storage (paper §2.1): parameter states split by
+//! activation behaviour — *dense* states live on the device tier,
+//! *sparse* (expert) states live on the SSD tier with a CPU cache in
+//! between, managed by the Algorithm-1 LFU policy.
+//!
+//! All types here are plain data (Send) — PJRT never appears below the
+//! trainer, so the sparse lane can run on a background prefetch thread.
+
+pub mod tier;
+pub mod ssd_store;
+pub mod cpu_cache;
+pub mod param_store;
+
+pub use cpu_cache::{CacheConfig, CachePolicy, CpuCache};
+pub use param_store::{HierarchicalStore, SparseBlock, StoreConfig};
+pub use ssd_store::{SsdBackend, SsdStore};
+pub use tier::{MemoryFootprint, Tier, TierStats};

@@ -1,0 +1,294 @@
+//! The hierarchical parameter store (§2.1): unifies the SSD tier and the
+//! CPU cache behind per-layer *fused* sparse blocks.
+//!
+//! Each decoder layer's expert tensors (w1,b1,w2,b2) plus their optimizer
+//! moments are packed into three contiguous records:
+//! `layer{i}.sparse.p|m|v` — one fused buffer per state kind, matching
+//! the paper's "parameter management unit" (fused slices, re-split by
+//! recorded index; the split metadata comes from the AOT manifest).
+//!
+//! The store is plain data (Send) so the 2D-prefetch scheduler can own it
+//! on a background thread.
+
+use anyhow::{bail, Result};
+
+use super::cpu_cache::{CacheConfig, CpuCache};
+use super::ssd_store::SsdStore;
+use crate::runtime::ParamSpec;
+
+/// One layer's sparse state, fused.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseBlock {
+    pub layer: usize,
+    /// Fused parameter values.
+    pub p: Vec<f32>,
+    /// Fused Adam momentum (empty when fetched for forward-only).
+    pub m: Vec<f32>,
+    /// Fused Adam variance (empty when fetched for forward-only).
+    pub v: Vec<f32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    pub cache: CacheConfig,
+    /// Fetch optimizer moments alongside parameters.
+    pub with_moments: bool,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { cache: CacheConfig::default(), with_moments: true }
+    }
+}
+
+pub struct HierarchicalStore {
+    ssd: SsdStore,
+    cache: CpuCache,
+    cfg: StoreConfig,
+    n_layers: usize,
+    /// Elements per fused sparse block (one layer).
+    block_len: usize,
+    /// (name, numel) split metadata per layer, from the manifest.
+    layout: Vec<(String, usize)>,
+}
+
+fn key(layer: usize, kind: &str) -> String {
+    format!("layer{}.sparse.{}", layer, kind)
+}
+
+impl HierarchicalStore {
+    /// Build from the manifest's parameter layout. `params` is the flat
+    /// layout; sparse entries are grouped by layer.
+    pub fn new(
+        ssd: SsdStore,
+        cfg: StoreConfig,
+        params: &[ParamSpec],
+        n_layers: usize,
+    ) -> Result<HierarchicalStore> {
+        let layer0: Vec<(String, usize)> = params
+            .iter()
+            .filter(|p| p.sparse && p.layer() == Some(0))
+            .map(|p| (p.name.trim_start_matches("layer0.").to_string(), p.numel))
+            .collect();
+        if layer0.is_empty() {
+            bail!("no sparse parameters in layout");
+        }
+        let block_len = layer0.iter().map(|(_, n)| n).sum();
+        Ok(HierarchicalStore {
+            ssd,
+            cache: CpuCache::new(cfg.cache.clone()),
+            cfg,
+            n_layers,
+            block_len,
+            layout: layer0,
+        })
+    }
+
+    pub fn block_len(&self) -> usize {
+        self.block_len
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Per-layer split metadata (tensor name within the layer, numel).
+    pub fn layout(&self) -> &[(String, usize)] {
+        &self.layout
+    }
+
+    /// Seed the SSD tier with initial states for every layer.
+    pub fn initialize(
+        &mut self,
+        mut init_p: impl FnMut(usize) -> Vec<f32>,
+    ) -> Result<()> {
+        for l in 0..self.n_layers {
+            let p = init_p(l);
+            assert_eq!(p.len(), self.block_len, "init block len");
+            let zeros = vec![0.0f32; self.block_len];
+            self.ssd.write(&key(l, "p"), &p)?;
+            self.ssd.write(&key(l, "m"), &zeros)?;
+            self.ssd.write(&key(l, "v"), &zeros)?;
+        }
+        Ok(())
+    }
+
+    fn fetch_kind(&mut self, layer: usize, kind: &str) -> Result<Vec<f32>> {
+        let k = key(layer, kind);
+        if let Some(data) = self.cache.get(&k) {
+            return Ok(data.to_vec());
+        }
+        let data = self.ssd.read(&k)?;
+        for ev in self.cache.insert(&k, data.clone(), false) {
+            if ev.dirty {
+                self.ssd.write(&ev.key, &ev.data)?;
+            }
+        }
+        Ok(data)
+    }
+
+    /// Algorithm-1 `SparseSchedule`: fetch one layer's sparse block
+    /// through the CPU cache (SSD on miss, evict+writeback when full).
+    pub fn fetch(&mut self, layer: usize) -> Result<SparseBlock> {
+        let p = self.fetch_kind(layer, "p")?;
+        let (m, v) = if self.cfg.with_moments {
+            (self.fetch_kind(layer, "m")?, self.fetch_kind(layer, "v")?)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        Ok(SparseBlock { layer, p, m, v })
+    }
+
+    /// Write an updated block back (dirty in cache; SSD write deferred to
+    /// eviction or flush — this is what bounds SSD erase cycles).
+    pub fn update(&mut self, block: SparseBlock) -> Result<()> {
+        let kinds: [(&str, &Vec<f32>); 3] =
+            [("p", &block.p), ("m", &block.m), ("v", &block.v)];
+        for (kind, data) in kinds {
+            if data.is_empty() {
+                continue;
+            }
+            let k = key(block.layer, kind);
+            if !self.cache.update(&k, data.clone()) {
+                // Not cached (evicted since fetch): insert dirty.
+                for ev in self.cache.insert(&k, data.clone(), true) {
+                    if ev.dirty {
+                        self.ssd.write(&ev.key, &ev.data)?;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// End-of-step housekeeping (decay of hit counters).
+    pub fn end_step(&mut self) {
+        self.cache.end_step();
+    }
+
+    /// Flush all dirty cache state to SSD (checkpoint / shutdown).
+    pub fn flush(&mut self) -> Result<()> {
+        for ev in self.cache.drain() {
+            if ev.dirty {
+                self.ssd.write(&ev.key, &ev.data)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn cache_stats(&self) -> super::cpu_cache::CacheStats {
+        self.cache.stats()
+    }
+
+    pub fn ssd_stats(&self) -> super::tier::TierStats {
+        self.ssd.stats()
+    }
+
+    pub fn ssd_total_erases(&self) -> u64 {
+        self.ssd.total_erases()
+    }
+
+    /// Read a block directly from SSD bypassing the cache (verification).
+    pub fn read_ssd_direct(&mut self, layer: usize) -> Result<Vec<f32>> {
+        self.ssd.read(&key(layer, "p"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::cpu_cache::CachePolicy;
+    use crate::storage::ssd_store::SsdStore;
+
+    fn specs(n_layers: usize) -> Vec<ParamSpec> {
+        let mut v = Vec::new();
+        for l in 0..n_layers {
+            v.push(ParamSpec { name: format!("layer{}.wq", l), shape: vec![4, 4], sparse: false, numel: 16 });
+            v.push(ParamSpec { name: format!("layer{}.w1", l), shape: vec![2, 4, 8], sparse: true, numel: 64 });
+            v.push(ParamSpec { name: format!("layer{}.b1", l), shape: vec![2, 8], sparse: true, numel: 16 });
+        }
+        v
+    }
+
+    fn store(cache_blocks: usize, n_layers: usize) -> HierarchicalStore {
+        let cfg = StoreConfig {
+            cache: CacheConfig {
+                capacity_bytes: cache_blocks * 80 * 4,
+                policy: CachePolicy::Alg1,
+                hit_threshold: 1.0,
+                beta: 0.5,
+                decay_every: 8,
+            },
+            with_moments: true,
+        };
+        let mut s =
+            HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs(n_layers), n_layers)
+                .unwrap();
+        s.initialize(|l| vec![l as f32; 80]).unwrap();
+        s
+    }
+
+    #[test]
+    fn block_len_from_layout() {
+        let s = store(4, 3);
+        assert_eq!(s.block_len(), 80);
+        assert_eq!(s.layout().len(), 2);
+        assert_eq!(s.layout()[0], ("w1".to_string(), 64));
+    }
+
+    #[test]
+    fn fetch_roundtrip_and_cache_hit() {
+        let mut s = store(8, 3);
+        let b = s.fetch(1).unwrap();
+        assert_eq!(b.p, vec![1.0; 80]);
+        assert_eq!(b.m, vec![0.0; 80]);
+        let misses0 = s.cache_stats().misses;
+        let _ = s.fetch(1).unwrap(); // now cached
+        assert_eq!(s.cache_stats().misses, misses0);
+        assert!(s.cache_stats().hits >= 3);
+    }
+
+    #[test]
+    fn update_is_writeback_not_writethrough() {
+        let mut s = store(16, 2);
+        let mut b = s.fetch(0).unwrap();
+        b.p = vec![42.0; 80];
+        let erases_before = s.ssd_total_erases();
+        s.update(b).unwrap();
+        // No SSD write yet (dirty in cache).
+        assert_eq!(s.ssd_total_erases(), erases_before);
+        s.flush().unwrap();
+        assert!(s.ssd_total_erases() > erases_before);
+        assert_eq!(s.read_ssd_direct(0).unwrap(), vec![42.0; 80]);
+    }
+
+    #[test]
+    fn eviction_pressure_writes_back_dirty_blocks() {
+        // cache of 2 blocks, 3 layers × 3 kinds → heavy eviction traffic
+        let mut s = store(2, 3);
+        for l in 0..3 {
+            let mut b = s.fetch(l).unwrap();
+            b.p = vec![100.0 + l as f32; 80];
+            s.update(b).unwrap();
+            s.end_step();
+        }
+        s.flush().unwrap();
+        for l in 0..3 {
+            assert_eq!(s.read_ssd_direct(l).unwrap(), vec![100.0 + l as f32; 80], "layer {}", l);
+        }
+    }
+
+    #[test]
+    fn forward_only_fetch_skips_moments() {
+        let cfg = StoreConfig {
+            cache: CacheConfig::default(),
+            with_moments: false,
+        };
+        let mut s =
+            HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs(2), 2).unwrap();
+        s.initialize(|_| vec![1.0; 80]).unwrap();
+        let b = s.fetch(0).unwrap();
+        assert!(b.m.is_empty() && b.v.is_empty());
+        assert_eq!(b.p.len(), 80);
+    }
+}

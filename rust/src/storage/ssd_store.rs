@@ -1,0 +1,235 @@
+//! SSD-tier key/value store for sparse parameter states.
+//!
+//! Two backends, matching the paper's two storage media (§2.1):
+//!
+//! - [`SsdBackend::File`] — one file per record under a directory (NVMe
+//!   SSD model). Records are raw little-endian f32. Write (erase) counts
+//!   are tracked per key because "SSDs have a limited lifetime number of
+//!   writes" is one of the paper's stated motivations.
+//! - [`SsdBackend::Memory`] — byte-addressable in-memory store (the
+//!   Optane PMem AppDirect/FSDAX substitution): same API, no filesystem.
+//!
+//! Optional throttling (`bandwidth`, `latency`) lets benches reproduce
+//! NVMe-vs-PMem behaviour on this machine's substrate.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use super::tier::TierStats;
+
+#[derive(Debug, Clone)]
+pub enum SsdBackend {
+    File { dir: PathBuf },
+    Memory,
+}
+
+/// Simulated media performance; `None` = run at host speed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MediaPerf {
+    /// Bytes/second cap.
+    pub bandwidth: Option<f64>,
+    /// Fixed per-op latency.
+    pub latency: Option<Duration>,
+}
+
+pub struct SsdStore {
+    backend: SsdBackend,
+    mem: HashMap<String, Vec<f32>>,
+    perf: MediaPerf,
+    stats: TierStats,
+    erase_counts: HashMap<String, u64>,
+}
+
+impl SsdStore {
+    pub fn file_backed(dir: PathBuf) -> Result<SsdStore> {
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating ssd store dir {}", dir.display()))?;
+        Ok(SsdStore {
+            backend: SsdBackend::File { dir },
+            mem: HashMap::new(),
+            perf: MediaPerf::default(),
+            stats: TierStats::default(),
+            erase_counts: HashMap::new(),
+        })
+    }
+
+    /// Optane-PMem-style byte-addressable store.
+    pub fn memory_backed() -> SsdStore {
+        SsdStore {
+            backend: SsdBackend::Memory,
+            mem: HashMap::new(),
+            perf: MediaPerf::default(),
+            stats: TierStats::default(),
+            erase_counts: HashMap::new(),
+        }
+    }
+
+    pub fn with_perf(mut self, perf: MediaPerf) -> SsdStore {
+        self.perf = perf;
+        self
+    }
+
+    fn throttle(&self, bytes: usize) {
+        if let Some(lat) = self.perf.latency {
+            spin_sleep(lat);
+        }
+        if let Some(bw) = self.perf.bandwidth {
+            spin_sleep(Duration::from_secs_f64(bytes as f64 / bw));
+        }
+    }
+
+    fn key_path(dir: &std::path::Path, key: &str) -> PathBuf {
+        // keys contain dots but no path separators; keep them readable.
+        dir.join(format!("{}.bin", key.replace('/', "_")))
+    }
+
+    /// Write (or overwrite) a record.
+    pub fn write(&mut self, key: &str, data: &[f32]) -> Result<()> {
+        let bytes = data.len() * 4;
+        self.throttle(bytes);
+        *self.erase_counts.entry(key.to_string()).or_insert(0) += 1;
+        self.stats.record_write(bytes);
+        match &self.backend {
+            SsdBackend::Memory => {
+                self.mem.insert(key.to_string(), data.to_vec());
+            }
+            SsdBackend::File { dir } => {
+                let path = Self::key_path(dir, key);
+                let mut f = std::fs::File::create(&path)
+                    .with_context(|| format!("creating {}", path.display()))?;
+                // Safe little-endian serialization.
+                let raw: &[u8] = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, bytes)
+                };
+                f.write_all(raw)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a record fully.
+    pub fn read(&mut self, key: &str) -> Result<Vec<f32>> {
+        let out = match &self.backend {
+            SsdBackend::Memory => self
+                .mem
+                .get(key)
+                .cloned()
+                .with_context(|| format!("ssd record '{}' missing", key))?,
+            SsdBackend::File { dir } => {
+                let path = Self::key_path(dir, key);
+                let mut f = std::fs::File::open(&path)
+                    .with_context(|| format!("ssd record '{}' missing", key))?;
+                let len = f.metadata()?.len() as usize;
+                if len % 4 != 0 {
+                    bail!("corrupt record '{}': {} bytes", key, len);
+                }
+                let mut raw = vec![0u8; len];
+                f.read_exact(&mut raw)?;
+                let mut out = vec![0f32; len / 4];
+                unsafe {
+                    std::ptr::copy_nonoverlapping(
+                        raw.as_ptr(),
+                        out.as_mut_ptr() as *mut u8,
+                        len,
+                    );
+                }
+                out
+            }
+        };
+        self.throttle(out.len() * 4);
+        self.stats.record_read(out.len() * 4);
+        Ok(out)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        match &self.backend {
+            SsdBackend::Memory => self.mem.contains_key(key),
+            SsdBackend::File { dir } => Self::key_path(dir, key).exists(),
+        }
+    }
+
+    pub fn stats(&self) -> TierStats {
+        self.stats
+    }
+
+    /// Total write (erase-cycle) count per key — the SSD-wear metric the
+    /// paper's LFU writeback policy is designed to minimize.
+    pub fn erase_count(&self, key: &str) -> u64 {
+        self.erase_counts.get(key).copied().unwrap_or(0)
+    }
+
+    pub fn total_erases(&self) -> u64 {
+        self.erase_counts.values().sum()
+    }
+}
+
+/// Sleep that stays accurate for sub-millisecond simulated latencies.
+fn spin_sleep(d: Duration) {
+    if d > Duration::from_millis(2) {
+        std::thread::sleep(d);
+    } else {
+        let t0 = Instant::now();
+        while t0.elapsed() < d {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(store: &mut SsdStore) {
+        let data: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5).collect();
+        store.write("layer0.sparse.p", &data).unwrap();
+        assert!(store.contains("layer0.sparse.p"));
+        let back = store.read("layer0.sparse.p").unwrap();
+        assert_eq!(back, data);
+        assert!(!store.contains("nope"));
+        assert!(store.read("nope").is_err());
+    }
+
+    #[test]
+    fn memory_backend_roundtrip() {
+        let mut s = SsdStore::memory_backed();
+        roundtrip(&mut s);
+        assert_eq!(s.stats().reads, 1);
+        assert_eq!(s.stats().bytes_written, 4000);
+    }
+
+    #[test]
+    fn file_backend_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("semoe_ssd_test_{}", std::process::id()));
+        let mut s = SsdStore::file_backed(dir.clone()).unwrap();
+        roundtrip(&mut s);
+        drop(s);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn erase_counts_accumulate() {
+        let mut s = SsdStore::memory_backed();
+        for _ in 0..5 {
+            s.write("k", &[1.0]).unwrap();
+        }
+        s.write("other", &[2.0]).unwrap();
+        assert_eq!(s.erase_count("k"), 5);
+        assert_eq!(s.total_erases(), 6);
+    }
+
+    #[test]
+    fn throttling_slows_io() {
+        let mut s = SsdStore::memory_backed().with_perf(MediaPerf {
+            bandwidth: Some(1e6), // 1 MB/s
+            latency: None,
+        });
+        let data = vec![0f32; 25_000]; // 100 KB -> 100 ms
+        let t0 = Instant::now();
+        s.write("k", &data).unwrap();
+        assert!(t0.elapsed() >= Duration::from_millis(80));
+    }
+}

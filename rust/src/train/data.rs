@@ -1,0 +1,118 @@
+//! Synthetic corpus generator: Zipf-weighted vocabulary with a strong
+//! bigram structure so a language model has real signal to learn (the
+//! loss curve in the e2e example is meaningful, not noise).
+//!
+//! Generation rule per position: with probability `struct_prob` the next
+//! token is the deterministic successor `(a·t + c) mod V` of the current
+//! token; otherwise it is an independent Zipf draw. The corpus entropy
+//! is therefore ≈ `(1-p)·H(zipf) + H(p)`, far below `ln V`, and a model
+//! that learns the successor map shows a clearly dropping loss.
+
+use crate::util::rng::{Rng, ZipfTable};
+
+#[derive(Debug, Clone)]
+pub struct SyntheticCorpus {
+    vocab: usize,
+    struct_prob: f64,
+    zipf: ZipfTable,
+    rng: Rng,
+    a: usize,
+    c: usize,
+}
+
+impl SyntheticCorpus {
+    pub fn new(vocab: usize, skew: f64, seed: u64) -> SyntheticCorpus {
+        SyntheticCorpus {
+            vocab,
+            struct_prob: 0.8,
+            zipf: ZipfTable::new(vocab, skew),
+            rng: Rng::new(seed),
+            // odd multiplier → successor map is a permutation of [0, V)
+            a: 5,
+            c: 17,
+        }
+    }
+
+    pub fn with_struct_prob(mut self, p: f64) -> Self {
+        self.struct_prob = p;
+        self
+    }
+
+    fn succ(&self, t: usize) -> usize {
+        (self.a * t + self.c) % self.vocab
+    }
+
+    /// One [batch, seq_len+1] sequence block; returns (tokens, labels)
+    /// flattened row-major as i32, labels shifted by one.
+    pub fn next_batch(&mut self, batch: usize, seq_len: usize) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        let mut labels = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            let mut cur = self.zipf.sample(&mut self.rng);
+            for _ in 0..seq_len {
+                tokens.push(cur as i32);
+                let next = if self.rng.next_f64() < self.struct_prob {
+                    self.succ(cur)
+                } else {
+                    self.zipf.sample(&mut self.rng)
+                };
+                labels.push(next as i32);
+                cur = next;
+            }
+        }
+        (tokens, labels)
+    }
+
+    /// Theoretical per-token cross-entropy floor (nats) of the generator,
+    /// ignoring the Zipf tail's internal entropy spread: a perfect model
+    /// reaches ≈ H(p) + (1-p)·ln V_eff. Useful as a sanity bound in the
+    /// e2e example report.
+    pub fn entropy_floor(&self) -> f64 {
+        let p = self.struct_prob;
+        let hp = -(p * p.ln() + (1.0 - p) * (1.0 - p).ln());
+        // effective vocab of the zipf draw (perplexity of the marginal)
+        hp + (1.0 - p) * (self.vocab as f64).ln() * 0.6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = SyntheticCorpus::new(256, 1.05, 7);
+        let mut b = SyntheticCorpus::new(256, 1.05, 7);
+        assert_eq!(a.next_batch(2, 16), b.next_batch(2, 16));
+    }
+
+    #[test]
+    fn labels_are_shifted_tokens() {
+        let mut c = SyntheticCorpus::new(128, 1.0, 1);
+        let (tok, lab) = c.next_batch(1, 32);
+        // label[i] should equal token[i+1] within a row
+        for i in 0..31 {
+            assert_eq!(lab[i], tok[i + 1]);
+        }
+    }
+
+    #[test]
+    fn bigram_structure_dominates() {
+        let mut c = SyntheticCorpus::new(64, 1.0, 3);
+        let (tok, lab) = c.next_batch(8, 128);
+        let hits = tok
+            .iter()
+            .zip(&lab)
+            .filter(|(&t, &l)| l as usize == (5 * t as usize + 17) % 64)
+            .count();
+        let frac = hits as f64 / tok.len() as f64;
+        assert!(frac > 0.7, "structured fraction {}", frac);
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut c = SyntheticCorpus::new(100, 1.2, 9);
+        let (tok, lab) = c.next_batch(4, 64);
+        assert!(tok.iter().chain(&lab).all(|&t| t >= 0 && (t as usize) < 100));
+    }
+}

@@ -1,0 +1,16 @@
+//! Training: data generation, parameter/optimizer management, the two
+//! trainers (resident fused-step and hierarchical-offload per-layer),
+//! elastic multi-task scheduling (§4.1) and embedding partition in data
+//! parallelism (§4.3).
+
+pub mod data;
+pub mod optimizer;
+pub mod trainer;
+pub mod elastic;
+pub mod embedding_partition;
+pub mod checkpoint;
+
+pub use data::SyntheticCorpus;
+pub use elastic::{ElasticPlan, TaskLoad};
+pub use optimizer::ParamState;
+pub use trainer::{OffloadTrainer, ResidentTrainer, StepMetrics};

@@ -1,0 +1,237 @@
+//! Parameter/optimizer state management: rust-side initialization
+//! (mirroring `python/compile/model.py::init_params`' distributions) and
+//! the fused group layout (embed / layer{i} / head) that the AdamW
+//! artifacts operate on.
+
+use anyhow::Result;
+
+/// AdamW hyperparameters (mirrors `python/compile/configs.py`).
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.95;
+pub const EPS: f32 = 1e-8;
+pub const WEIGHT_DECAY: f32 = 0.01;
+
+/// CPU AdamW on a fused parameter group, in place — the coordinator-side
+/// optimizer for hierarchically-offloaded states (the DeepSpeed
+/// "CPU-Adam" design point: states that live on the CPU/SSD tiers are
+/// updated where they live instead of round-tripping through the device;
+/// §Perf measured the XLA-artifact AdamW at ~54 ms/M elements on this
+/// substrate vs ~4 ms/M for this loop). Matches `adamw_flat` in
+/// python/compile/model.py exactly; parity is asserted against the
+/// `adamw_*` artifacts in tests.
+pub fn cpu_adamw(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], step: f32, lr: f32) {
+    assert!(p.len() == g.len() && g.len() == m.len() && m.len() == v.len());
+    let bc1 = 1.0 - BETA1.powf(step);
+    let bc2 = 1.0 - BETA2.powf(step);
+    for i in 0..p.len() {
+        let gi = g[i];
+        let mi = BETA1 * m[i] + (1.0 - BETA1) * gi;
+        let vi = BETA2 * v[i] + (1.0 - BETA2) * gi * gi;
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + EPS) + WEIGHT_DECAY * p[i]);
+    }
+}
+
+use crate::comm::FusionBuffer;
+use crate::runtime::{HostTensor, ModelArtifacts, ParamSpec};
+use crate::util::Rng;
+
+/// Initialize one parameter tensor following the python init scheme.
+pub fn init_tensor(spec: &ParamSpec, rng: &mut Rng) -> HostTensor {
+    let base = spec.name.rsplit('.').next().unwrap_or(&spec.name);
+    if base.ends_with("_scale") {
+        return HostTensor::ones(&spec.shape);
+    }
+    if base.starts_with("ln") || base.starts_with('b') || base.ends_with("_bias") {
+        return HostTensor::zeros(&spec.shape);
+    }
+    let std = if base == "embed" || base == "wout" {
+        0.02
+    } else {
+        let fan_in = if spec.shape.len() >= 2 {
+            spec.shape[spec.shape.len() - 2]
+        } else {
+            spec.shape[spec.shape.len() - 1]
+        };
+        (fan_in as f32).powf(-0.5)
+    };
+    HostTensor::randn(&spec.shape, std, rng)
+}
+
+/// Initialize the full flat parameter list (manifest order).
+pub fn init_params(arts: &ModelArtifacts, seed: u64) -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed ^ 0x5EED_5EED);
+    arts.params().iter().map(|s| init_tensor(s, &mut rng)).collect()
+}
+
+/// Which fused group a parameter belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Group {
+    Embed,
+    Layer(usize),
+    Head,
+}
+
+pub fn group_of(spec: &ParamSpec) -> Group {
+    match spec.layer() {
+        Some(l) => Group::Layer(l),
+        None if spec.name == "embed" => Group::Embed,
+        None => Group::Head,
+    }
+}
+
+/// One fused p/m/v state triple for a parameter group, with the slice
+/// registry to pack/unpack per-tensor views (the parameter management
+/// unit of §2.3 applied to optimizer state).
+pub struct ParamState {
+    pub p: FusionBuffer,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// member specs, manifest order.
+    pub members: Vec<ParamSpec>,
+}
+
+impl ParamState {
+    /// Build a group's fused state from initialized tensors.
+    pub fn build(
+        specs: &[ParamSpec],
+        tensors: &[HostTensor],
+        group: Group,
+    ) -> Result<ParamState> {
+        let mut fb = FusionBuffer::new();
+        let mut members = Vec::new();
+        for (s, t) in specs.iter().zip(tensors) {
+            if group_of(s) != group {
+                continue;
+            }
+            fb.register(&s.name, s.numel);
+            fb.pack(&s.name, t.as_f32()?);
+            members.push(s.clone());
+        }
+        let len = fb.len();
+        Ok(ParamState { p: fb, m: vec![0.0; len], v: vec![0.0; len], members })
+    }
+
+    pub fn len(&self) -> usize {
+        self.p.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p.is_empty()
+    }
+
+    /// Per-tensor HostTensors in member order (artifact inputs).
+    pub fn tensors(&self) -> Vec<HostTensor> {
+        self.members
+            .iter()
+            .map(|s| HostTensor::from_f32(&s.shape, self.p.unpack(&s.name).to_vec()))
+            .collect()
+    }
+
+    /// Fuse per-tensor gradients (member order) into one vector.
+    pub fn fuse_grads(&self, grads: &[HostTensor]) -> Result<Vec<f32>> {
+        assert_eq!(grads.len(), self.members.len());
+        let mut out = vec![0.0f32; self.len()];
+        let mut fb = FusionBuffer::new();
+        for s in &self.members {
+            fb.register(&s.name, s.numel);
+        }
+        for (s, g) in self.members.iter().zip(grads) {
+            let idx = fb
+                .slice_index()
+                .iter()
+                .find(|si| si.name == s.name)
+                .unwrap()
+                .clone();
+            out[idx.offset..idx.offset + idx.len].copy_from_slice(g.as_f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Adopt post-AdamW fused outputs.
+    pub fn load(&mut self, p: Vec<f32>, m: Vec<f32>, v: Vec<f32>) {
+        assert_eq!(p.len(), self.len());
+        self.p.load_fused(p);
+        self.m = m;
+        self.v = v;
+    }
+
+    /// Split the sparse (expert) tail out of the fused vector — layer
+    /// groups store `[dense tensors..., sparse tensors...]` because the
+    /// manifest orders expert weights last within a layer.
+    pub fn sparse_offset(&self) -> usize {
+        self.members
+            .iter()
+            .take_while(|s| !s.sparse)
+            .map(|s| s.numel)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, shape: Vec<usize>, sparse: bool) -> ParamSpec {
+        let numel = shape.iter().product();
+        ParamSpec { name: name.into(), shape, sparse, numel }
+    }
+
+    #[test]
+    fn init_distributions() {
+        let mut rng = Rng::new(1);
+        let ln = init_tensor(&spec("layer0.ln1_scale", vec![64], false), &mut rng);
+        assert!(ln.as_f32().unwrap().iter().all(|&v| v == 1.0));
+        let b = init_tensor(&spec("layer0.bq", vec![64], false), &mut rng);
+        assert!(b.as_f32().unwrap().iter().all(|&v| v == 0.0));
+        let e = init_tensor(&spec("embed", vec![1000, 64], false), &mut rng);
+        let ev = e.as_f32().unwrap();
+        let std = (ev.iter().map(|v| v * v).sum::<f32>() / ev.len() as f32).sqrt();
+        assert!((std - 0.02).abs() < 0.003, "std {}", std);
+        let w = init_tensor(&spec("layer0.w1", vec![4, 64, 128], true), &mut rng);
+        let wv = w.as_f32().unwrap();
+        let std = (wv.iter().map(|v| v * v).sum::<f32>() / wv.len() as f32).sqrt();
+        assert!((std - 0.125).abs() < 0.01, "std {}", std); // 64^-0.5
+    }
+
+    #[test]
+    fn group_split_and_sparse_offset() {
+        let specs = vec![
+            spec("embed", vec![8, 4], false),
+            spec("layer0.wq", vec![4, 4], false),
+            spec("layer0.w1", vec![2, 4, 8], true),
+            spec("layer1.wq", vec![4, 4], false),
+            spec("layer1.w1", vec![2, 4, 8], true),
+            spec("lnf_scale", vec![4], false),
+            spec("wout", vec![4, 8], false),
+        ];
+        let mut rng = Rng::new(2);
+        let tensors: Vec<HostTensor> = specs.iter().map(|s| init_tensor(s, &mut rng)).collect();
+        let l0 = ParamState::build(&specs, &tensors, Group::Layer(0)).unwrap();
+        assert_eq!(l0.len(), 16 + 64);
+        assert_eq!(l0.sparse_offset(), 16);
+        let head = ParamState::build(&specs, &tensors, Group::Head).unwrap();
+        assert_eq!(head.len(), 4 + 32);
+        let embed = ParamState::build(&specs, &tensors, Group::Embed).unwrap();
+        assert_eq!(embed.len(), 32);
+    }
+
+    #[test]
+    fn fuse_grads_order() {
+        let specs = vec![
+            spec("layer0.wq", vec![2], false),
+            spec("layer0.w1", vec![3], true),
+        ];
+        let mut rng = Rng::new(3);
+        let tensors: Vec<HostTensor> = specs.iter().map(|s| init_tensor(s, &mut rng)).collect();
+        let st = ParamState::build(&specs, &tensors, Group::Layer(0)).unwrap();
+        let grads = vec![
+            HostTensor::from_f32(&[2], vec![1.0, 2.0]),
+            HostTensor::from_f32(&[3], vec![3.0, 4.0, 5.0]),
+        ];
+        assert_eq!(st.fuse_grads(&grads).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+}

@@ -1,0 +1,78 @@
+//! Human-readable formatting for bytes, counts and durations (report
+//! tables mirror the paper's units: GB memory, tokens/s, ms).
+
+/// `1536 * 1024 * 1024` → `"1.50 GB"`.
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{} B", b)
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// `1_234_567` → `"1.23M"`.
+pub fn human_count(n: u64) -> String {
+    const UNITS: [&str; 5] = ["", "K", "M", "B", "T"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{}", n)
+    } else {
+        format!("{:.2}{}", v, UNITS[u])
+    }
+}
+
+/// Seconds → adaptive unit string.
+pub fn human_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.2} h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KB");
+        assert_eq!(human_bytes(3 * 1024 * 1024 * 1024), "3.00 GB");
+    }
+
+    #[test]
+    fn counts() {
+        assert_eq!(human_count(999), "999");
+        assert_eq!(human_count(31_085), "31.09K");
+        assert_eq!(human_count(104_100_000_000), "104.10B");
+    }
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(0.000_000_5), "500.0 ns");
+        assert_eq!(human_duration(0.0123), "12.30 ms");
+        assert_eq!(human_duration(5.0), "5.00 s");
+        assert_eq!(human_duration(600.0), "10.0 min");
+    }
+}

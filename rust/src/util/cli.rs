@@ -1,0 +1,156 @@
+//! Minimal CLI argument parser (subcommand + `--key value` + `--flag`).
+//!
+//! Drives `semoe <subcommand>` as well as every example and bench binary.
+//! Deliberately boring: parse once into a map, typed getters with
+//! defaults, and an auto-generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Declared option (for usage text + validation).
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]); `expect_subcommand` shifts the
+    /// first bare word into `subcommand`.
+    pub fn parse(raw: &[String], expect_subcommand: bool) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < raw.len() {
+            let tok = &raw[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    a.values.insert(name.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else if expect_subcommand && a.subcommand.is_none() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(expect_subcommand: bool) -> Result<Args, String> {
+        let raw: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&raw, expect_subcommand)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// Require a value or return a usage error.
+    pub fn required(&self, name: &str) -> Result<String, String> {
+        self.get(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| format!("missing required option --{}", name))
+    }
+}
+
+/// Render a usage block from option specs.
+pub fn usage(program: &str, about: &str, opts: &[OptSpec]) -> String {
+    let mut s = format!("{}\n\n{}\n\nOptions:\n", program, about);
+    for o in opts {
+        let head = if o.is_flag {
+            format!("  --{}", o.name)
+        } else {
+            format!("  --{} <v>", o.name)
+        };
+        let def = o.default.map(|d| format!(" [default: {}]", d)).unwrap_or_default();
+        s.push_str(&format!("{:<28}{}{}\n", head, o.help, def));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = Args::parse(&v(&["train", "--preset", "base", "--steps=100", "--verbose"]), true).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.str("preset", "tiny"), "base");
+        assert_eq!(a.usize("steps", 1), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = Args::parse(&v(&["--x", "1.5"]), false).unwrap();
+        assert_eq!(a.f64("x", 0.0), 1.5);
+        assert_eq!(a.f64("y", 2.0), 2.0);
+        assert!(a.required("missing").is_err());
+        assert_eq!(a.required("x").unwrap(), "1.5");
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = Args::parse(&v(&["run", "fileA", "--k", "v", "fileB"]), true).unwrap();
+        assert_eq!(a.positional, v(&["fileA", "fileB"]));
+    }
+
+    #[test]
+    fn flag_at_end_and_eq_form() {
+        let a = Args::parse(&v(&["--a=b", "--last"]), false).unwrap();
+        assert_eq!(a.get("a"), Some("b"));
+        assert!(a.flag("last"));
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = usage("semoe", "MoE system", &[
+            OptSpec { name: "preset", help: "model preset", default: Some("tiny"), is_flag: false },
+            OptSpec { name: "verbose", help: "more logs", default: None, is_flag: true },
+        ]);
+        assert!(u.contains("--preset <v>"));
+        assert!(u.contains("[default: tiny]"));
+    }
+}

@@ -1,0 +1,18 @@
+//! In-tree substrates: JSON, CLI parsing, PRNG, statistics, logging,
+//! human-readable byte formatting.
+//!
+//! The offline build environment vendors only the crates required by the
+//! `xla` PJRT bindings (no serde/clap/criterion/rand), so these utilities
+//! are first-class, fully-tested subsystems of the repo rather than
+//! third-party dependencies.
+
+pub mod json;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod logging;
+pub mod bytes;
+
+pub use bytes::{human_bytes, human_count, human_duration};
+pub use json::Json;
+pub use rng::Rng;

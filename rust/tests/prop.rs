@@ -1,0 +1,253 @@
+//! Property-based tests over coordinator invariants: routing, fusion,
+//! collectives, cache and JSON. A deterministic in-tree harness (the
+//! vendored crate set has no proptest): each property runs across many
+//! seeded random cases; failures print the seed for replay.
+
+use semoe::comm::hierarchical::{flat_a2a, hierarchical_a2a};
+use semoe::comm::{FusionBuffer, GradientBuckets, Mesh};
+use semoe::moe::{top1_route, DispatchPlan, ExpertPlacement};
+use semoe::storage::{CacheConfig, CachePolicy, CpuCache};
+use semoe::util::json::Json;
+use semoe::util::Rng;
+
+const CASES: u64 = 64;
+
+fn for_cases(name: &str, f: impl Fn(&mut Rng)) {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(0xFACE ^ (seed * 7919));
+        // Panic messages carry the seed.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            panic!("property '{}' failed at seed {}: {:?}", name, seed, e);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- routing
+
+#[test]
+fn prop_routing_conservation() {
+    for_cases("routing_conservation", |rng| {
+        let t = rng.range(1, 128);
+        let e = rng.range(2, 32);
+        let cap = rng.range(1, t + 1);
+        let logits: Vec<f32> = (0..t * e).map(|_| rng.normal() as f32 * 2.0).collect();
+        let r = top1_route(&logits, t, e, cap);
+        // every token either kept with a valid slot or dropped
+        let mut per_expert = vec![0usize; e];
+        for i in 0..t {
+            assert!(r.expert[i] < e);
+            if r.keep[i] {
+                assert!(r.pos[i] < cap);
+                per_expert[r.expert[i]] += 1;
+                assert!(r.gate[i] > 0.0 && r.gate[i] <= 1.0);
+            } else {
+                assert_eq!(r.gate[i], 0.0);
+            }
+        }
+        assert!(per_expert.iter().all(|&c| c <= cap));
+        // probability-mass summaries
+        assert!((r.me.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!((r.ce.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        // aux loss is bounded below by the balanced value... up to fp
+        assert!(r.aux_loss() >= 0.99);
+    });
+}
+
+#[test]
+fn prop_dispatch_plan_conserves_tokens() {
+    for_cases("dispatch_plan", |rng| {
+        let e = rng.range(2, 24);
+        let devs = rng.range(1, e + 1);
+        let t = rng.range(1, 96);
+        let logits: Vec<f32> = (0..t * e).map(|_| rng.normal() as f32).collect();
+        let r = top1_route(&logits, t, e, t);
+        let kept = r.keep.iter().filter(|&&k| k).count();
+        let placement = if rng.next_f64() < 0.5 {
+            ExpertPlacement::contiguous(e, devs)
+        } else {
+            ExpertPlacement::round_robin(e, devs)
+        };
+        let plan = DispatchPlan::build(&[r], &placement, rng.range(4, 64));
+        assert_eq!(plan.tokens.iter().flatten().sum::<usize>(), kept);
+        assert_eq!(plan.recv_loads().iter().sum::<usize>(), kept);
+    });
+}
+
+// ----------------------------------------------------------------- fusion
+
+#[test]
+fn prop_fusion_pack_unpack_identity() {
+    for_cases("fusion_identity", |rng| {
+        let n = rng.range(1, 24);
+        let mut fb = FusionBuffer::new();
+        let mut data = Vec::new();
+        for i in 0..n {
+            let len = rng.range(1, 64);
+            fb.register(&format!("t{}", i), len);
+            data.push((0..len).map(|_| rng.normal() as f32).collect::<Vec<f32>>());
+        }
+        for (i, d) in data.iter().enumerate() {
+            fb.pack(&format!("t{}", i), d);
+        }
+        // chunk boundaries tile the buffer exactly
+        let chunk = rng.range(1, fb.len().max(2));
+        let chunks = fb.chunked(chunk);
+        assert_eq!(chunks.iter().map(|(_, l)| l).sum::<usize>(), fb.len());
+        for w in chunks.windows(2) {
+            assert_eq!(w[0].0 + w[0].1, w[1].0);
+        }
+        for (i, d) in data.iter().enumerate() {
+            assert_eq!(fb.unpack(&format!("t{}", i)), &d[..]);
+        }
+    });
+}
+
+#[test]
+fn prop_buckets_fire_exactly_once_per_pass() {
+    for_cases("buckets_once", |rng| {
+        let n = rng.range(1, 16);
+        let cap = rng.range(1, 256);
+        let mut gb = GradientBuckets::new(cap);
+        let lens: Vec<usize> = (0..n).map(|_| rng.range(1, 32)).collect();
+        for (i, &l) in lens.iter().enumerate() {
+            gb.register(&format!("g{}", i), l);
+        }
+        gb.start_pass();
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut fired = 0usize;
+        let mut total = 0usize;
+        for &i in &order {
+            if let Some(r) = gb.deposit(&format!("g{}", i), &vec![1.0; lens[i]]) {
+                fired += 1;
+                total += r.data.len();
+            }
+        }
+        assert_eq!(fired, gb.n_buckets());
+        assert_eq!(total, lens.iter().sum::<usize>());
+    });
+}
+
+// ------------------------------------------------------------ collectives
+
+#[test]
+fn prop_hierarchical_a2a_equals_flat() {
+    // randomized shapes/payloads over a small mesh
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(seed);
+        let p = rng.range(1, 4);
+        let nodes = rng.range(1, 4);
+        let world = p * nodes;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let mut r = Rng::new(1000 + h.rank() as u64);
+                    let chunks: Vec<Vec<f32>> = (0..h.world())
+                        .map(|d| (0..r.range(0, 6)).map(|k| (h.rank() * 100 + d * 10 + k) as f32).collect())
+                        .collect();
+                    let flat = flat_a2a(&mut h, chunks.clone());
+                    let (hier, _) = hierarchical_a2a(&mut h, p, chunks);
+                    assert_eq!(flat, hier);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+}
+
+// ---------------------------------------------------------------- storage
+
+#[test]
+fn prop_cache_never_exceeds_capacity_and_loses_no_dirty_data() {
+    for_cases("cache_capacity", |rng| {
+        let cap_blocks = rng.range(1, 8);
+        let block_len = rng.range(1, 32);
+        let cap_bytes = cap_blocks * block_len * 4;
+        let mut cache = CpuCache::new(CacheConfig {
+            capacity_bytes: cap_bytes,
+            policy: CachePolicy::Alg1,
+            hit_threshold: 2.0,
+            beta: 0.5,
+            decay_every: 4,
+        });
+        // shadow model: last written value per key + where it lives
+        let n_keys = rng.range(2, 20);
+        let mut truth: Vec<Option<f32>> = vec![None; n_keys]; // dirty value if cached-dirty
+        let mut ssd: Vec<f32> = (0..n_keys).map(|k| k as f32).collect();
+        for _ in 0..200 {
+            let k = rng.below(n_keys);
+            let key = format!("k{}", k);
+            match rng.below(3) {
+                0 => {
+                    // read-through
+                    if cache.get(&key).is_none() {
+                        for ev in cache.insert(&key, vec![ssd[k]; block_len], false) {
+                            let ek: usize = ev.key[1..].parse().unwrap();
+                            if ev.dirty {
+                                ssd[ek] = ev.data[0];
+                                truth[ek] = None;
+                            }
+                        }
+                    }
+                }
+                1 => {
+                    // update (write-back)
+                    let val = rng.normal() as f32;
+                    if cache.update(&key, vec![val; block_len]) {
+                        truth[k] = Some(val);
+                    }
+                }
+                _ => cache.end_step(),
+            }
+            assert!(cache.bytes() <= cap_bytes.max(block_len * 4));
+        }
+        // drain and verify every dirty value lands on "SSD"
+        for ev in cache.drain() {
+            let ek: usize = ev.key[1..].parse().unwrap();
+            if ev.dirty {
+                ssd[ek] = ev.data[0];
+                truth[ek] = None;
+            }
+        }
+        for (k, t) in truth.iter().enumerate() {
+            assert!(t.is_none(), "dirty value for key {} lost", k);
+        }
+    });
+}
+
+// ------------------------------------------------------------------- json
+
+#[test]
+fn prop_json_roundtrip_random_values() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 2 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.next_f64() < 0.5),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => {
+                let s: String = (0..rng.below(12))
+                    .map(|_| char::from_u32(rng.range(32, 0x24F) as u32).unwrap_or('x'))
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{}", i), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for_cases("json_roundtrip", |rng| {
+        let v = gen(rng, 0);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, compact);
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(v, pretty);
+    });
+}

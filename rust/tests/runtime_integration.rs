@@ -1,0 +1,170 @@
+//! Integration: load real AOT artifacts (tiny preset) and verify numerics
+//! against rust-side oracles. Requires `make artifacts`.
+
+use semoe::runtime::{HostTensor, ModelArtifacts};
+use semoe::util::Rng;
+
+fn arts() -> ModelArtifacts {
+    ModelArtifacts::load("tiny").expect("tiny artifacts (run `make artifacts`)")
+}
+
+#[test]
+fn manifest_matches_config_formulas() {
+    let a = arts();
+    let total: usize = a.params().iter().map(|p| p.numel).sum();
+    assert_eq!(total, a.preset.param_counts().total);
+    let sparse: usize = a.params().iter().filter(|p| p.sparse).map(|p| p.numel).sum();
+    assert_eq!(sparse, a.preset.sparse_params());
+}
+
+#[test]
+fn gating_uniform_logits_balances() {
+    let a = arts();
+    let exe = a.load_exe("gating").unwrap();
+    let t = a.preset.tokens_per_batch();
+    let e = a.preset.n_experts;
+    let logits = HostTensor::zeros(&[t, e]);
+    let out = exe.run(&[logits]).unwrap();
+    // outputs: expert, gate, pos, keep, me, ce
+    assert_eq!(out.len(), 6);
+    let me = out[4].as_f32().unwrap();
+    for &m in me {
+        assert!((m - 1.0 / e as f32).abs() < 1e-6, "me {}", m);
+    }
+    let ce = out[5].as_f32().unwrap();
+    assert!((ce.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    // all tokens pick the same argmax expert under ties -> ce is one-hot
+    assert!(ce.iter().cloned().fold(0.0f32, f32::max) > 0.99);
+}
+
+#[test]
+fn gating_capacity_is_enforced() {
+    let a = arts();
+    let exe = a.load_exe("gating").unwrap();
+    let t = a.preset.tokens_per_batch();
+    let e = a.preset.n_experts;
+    let cap = a.preset.expert_capacity();
+    // Strongly bias all tokens to expert 0 -> drops beyond capacity.
+    let mut data = vec![0.0f32; t * e];
+    for i in 0..t {
+        data[i * e] = 10.0;
+    }
+    let out = exe.run(&[HostTensor::from_f32(&[t, e], data)]).unwrap();
+    let keep = out[3].as_f32().unwrap();
+    let kept: f32 = keep.iter().sum();
+    assert_eq!(kept as usize, cap.min(t));
+}
+
+#[test]
+fn adamw_matches_rust_oracle() {
+    let a = arts();
+    let exe = a.load_exe("adamw_embed").unwrap();
+    let n = a.preset.param_counts().embed;
+    let mut rng = Rng::new(7);
+    let p = HostTensor::randn(&[n], 1.0, &mut rng);
+    let g = HostTensor::randn(&[n], 1.0, &mut rng);
+    let m = HostTensor::zeros(&[n]);
+    let v = HostTensor::zeros(&[n]);
+    let step = HostTensor::scalar_f32(1.0);
+    let lr = HostTensor::scalar_f32(0.01);
+    let out = exe
+        .run(&[p.clone(), g.clone(), m.clone(), v.clone(), step, lr])
+        .unwrap();
+    let (b1, b2, eps, wd) = (0.9f32, 0.95f32, 1e-8f32, 0.01f32);
+    let pv = p.as_f32().unwrap();
+    let gv = g.as_f32().unwrap();
+    let got = out[0].as_f32().unwrap();
+    for i in (0..n).step_by(997) {
+        let m1 = (1.0 - b1) * gv[i];
+        let v1 = (1.0 - b2) * gv[i] * gv[i];
+        let mhat = m1 / (1.0 - b1);
+        let vhat = v1 / (1.0 - b2);
+        let want = pv[i] - 0.01 * (mhat / (vhat.sqrt() + eps) + wd * pv[i]);
+        assert!(
+            (got[i] - want).abs() < 1e-5 * want.abs().max(1.0),
+            "i={} got={} want={}",
+            i,
+            got[i],
+            want
+        );
+    }
+}
+
+#[test]
+fn embed_fwd_is_row_lookup() {
+    let a = arts();
+    let exe = a.load_exe("embed_fwd").unwrap();
+    let (b, t) = (a.preset.batch_size, a.preset.seq_len);
+    let (vcb, h) = (a.preset.vocab_size, a.preset.d_model);
+    // embed[i][j] = i + j/1000
+    let mut em = vec![0.0f32; vcb * h];
+    for i in 0..vcb {
+        for j in 0..h {
+            em[i * h + j] = i as f32 + j as f32 / 1000.0;
+        }
+    }
+    let mut rng = Rng::new(3);
+    let toks: Vec<i32> = (0..b * t).map(|_| rng.below(vcb) as i32).collect();
+    let out = exe
+        .run(&[
+            HostTensor::from_i32(&[b, t], toks.clone()),
+            HostTensor::from_f32(&[vcb, h], em),
+        ])
+        .unwrap();
+    let x = out[0].as_f32().unwrap();
+    for k in 0..b * t {
+        assert_eq!(x[k * h], toks[k] as f32);
+        assert!((x[k * h + 5] - (toks[k] as f32 + 0.005)).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn layer_fwd_shapes_and_determinism() {
+    let a = arts();
+    let exe = a.load_exe("layer_fwd").unwrap();
+    let mut rng = Rng::new(11);
+    let inputs: Vec<HostTensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::randn(&s.shape, 0.05, &mut rng))
+        .collect();
+    let out1 = exe.run(&inputs).unwrap();
+    let out2 = exe.run(&inputs).unwrap();
+    assert_eq!(out1.len(), 2); // y, aux
+    assert_eq!(out1[0].shape, vec![a.preset.batch_size, a.preset.seq_len, a.preset.d_model]);
+    assert_eq!(out1[0], out2[0], "execution must be deterministic");
+    let aux = out1[1].scalar().unwrap();
+    assert!(aux.is_finite() && aux > 0.0);
+}
+
+#[test]
+fn expert_ffn_zero_input_gives_bias_path() {
+    let a = arts();
+    let exe = a.load_exe("expert_ffn").unwrap();
+    let spec = exe.spec.inputs.clone();
+    // zero x and zero biases -> zero output
+    let inputs: Vec<HostTensor> = spec.iter().map(|s| HostTensor::zeros(&s.shape)).collect();
+    let out = exe.run(&inputs).unwrap();
+    let y = out[0].as_f32().unwrap();
+    assert!(y.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn device_buffer_path_matches_host_path() {
+    let a = arts();
+    let exe = a.load_exe("expert_ffn").unwrap();
+    let mut rng = Rng::new(5);
+    let inputs: Vec<HostTensor> = exe
+        .spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::randn(&s.shape, 0.1, &mut rng))
+        .collect();
+    let host_out = exe.run(&inputs).unwrap();
+    let bufs: Vec<semoe::runtime::executable::DeviceTensor> =
+        inputs.iter().map(|t| exe.to_device(t).unwrap()).collect();
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| &d.buffer).collect();
+    let buf_out = exe.run_buffers(&refs).unwrap();
+    assert_eq!(host_out, buf_out);
+}
