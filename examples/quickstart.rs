@@ -10,7 +10,8 @@
 use std::rc::Rc;
 
 use semoe::config::train::TrainConfig;
-use semoe::infer::{InferMode, InferenceEngine};
+use semoe::infer::{InferMode, InferenceEngine, ServeSession, SessionConfig};
+use semoe::metrics::Registry;
 use semoe::runtime::ModelArtifacts;
 use semoe::train::ResidentTrainer;
 use semoe::util::human_count;
@@ -60,14 +61,37 @@ fn main() -> anyhow::Result<()> {
     );
     assert!(last.loss < first.loss, "training must reduce loss");
 
-    // ---- Generate with a fresh engine (same init seed → same weights
-    // family; a production flow would load the checkpoint instead).
-    let mut engine = InferenceEngine::new(arts.clone(), InferMode::Resident, cfg.seed, None)?;
-    let prompt: Vec<Vec<i32>> = (0..m.batch_size).map(|i| vec![3 * i as i32 + 1; 4]).collect();
-    let out = engine.generate(&prompt, 8)?;
-    for (i, row) in out.iter().enumerate() {
-        println!("  generated[{}]: {:?}", i, row);
+    // ---- Generate through the continuous-batching ServeSession (same
+    // init seed → same weights family; a production flow would load the
+    // checkpoint instead). More requests than slots, mixed lengths: the
+    // session admits into freed slots between decode steps.
+    let engine = InferenceEngine::new(arts.clone(), InferMode::Resident, cfg.seed, None)?;
+    let mut session = ServeSession::new(engine, SessionConfig::default(), Registry::new());
+    let n_requests = m.batch_size + 2;
+    for i in 0..n_requests {
+        let prompt = vec![3 * i as i32 + 1; 4];
+        session.submit(i as u64 + 1, prompt, 4 + (i % 3) * 2)?; // 4, 6 or 8 tokens
     }
+    let mut done = session.run_to_idle()?;
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), n_requests);
+    for c in &done {
+        println!(
+            "  completion #{}: {:?}  ({}; queue {:.1}ms prefill {:.1}ms decode {:.1}ms)",
+            c.id,
+            c.tokens,
+            c.finish.as_str(),
+            c.queue.as_secs_f64() * 1e3,
+            c.prefill.as_secs_f64() * 1e3,
+            c.decode.as_secs_f64() * 1e3
+        );
+        assert!(c.tokens.iter().all(|&t| t >= 0 && (t as usize) < m.vocab_size));
+    }
+    let s = session.stats();
+    println!(
+        "slot schedule: {} decode steps, {} live slot-steps, {} padded",
+        s.steps, s.slot_steps, s.padded_slot_steps
+    );
     println!("quickstart OK");
     Ok(())
 }

@@ -1,7 +1,9 @@
 //! Serving demo: load the 12-layer `deep` model with ring-memory offload
-//! (K slots on device, weights on the CPU tier), serve batched greedy
-//! generation over HTTP, fire concurrent client requests, and report
-//! latency percentiles + throughput + the ring's overlap accounting.
+//! (K slots on device, weights on the CPU tier), serve continuous-batching
+//! greedy generation over HTTP — per-token slot scheduling, mixed-length
+//! requests, slots refilled between decode steps — fire concurrent
+//! clients, and report latency percentiles + throughput + slot-occupancy
+//! accounting from /stats.
 //!
 //!     cargo run --release --example serve_ring_inference -- --requests 12 --ring 3
 
@@ -10,7 +12,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use semoe::infer::server::{http_get, http_post, Server, ServerStats};
-use semoe::infer::{BatcherConfig, InferMode, InferenceEngine, Request};
+use semoe::infer::{AdmissionConfig, InferMode, InferenceEngine, SessionConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::util::cli::Args;
 use semoe::util::human_bytes;
@@ -23,52 +25,28 @@ fn main() -> anyhow::Result<()> {
     let n_requests = args.usize("requests", 12);
     let max_tokens = args.usize("tokens", 4);
 
-    // ---- model thread (PJRT is thread-confined)
-    let (req_tx, req_rx) = channel::<(Vec<Request>, std::sync::mpsc::Sender<Vec<Vec<i32>>>)>();
-    let preset_owned = preset.clone();
-    let model_thread = std::thread::spawn(move || -> anyhow::Result<(usize, usize, f64, f64, f64)> {
-        let arts = Rc::new(ModelArtifacts::load(&preset_owned)?);
-        let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
-        let mut engine = InferenceEngine::new(arts.clone(), mode, 7, None)?;
-        let resident = InferenceEngine::new(arts.clone(), InferMode::Resident, 7, None)?;
-        let dev_ring = engine.device_weight_bytes();
-        let dev_res = resident.device_weight_bytes();
-        drop(resident);
-        while let Ok((reqs, reply)) = req_rx.recv() {
-            if reqs.is_empty() {
-                break; // shutdown signal
-            }
-            let b = engine.arts.preset.batch_size;
-            let mut prompts: Vec<Vec<i32>> = reqs.iter().map(|r| r.prompt.clone()).collect();
-            prompts.resize(b, Vec::new());
-            let max_new = reqs.iter().map(|r| r.max_tokens).max().unwrap_or(1);
-            let gen = engine.generate(&prompts, max_new)?;
-            let out = reqs
-                .iter()
-                .enumerate()
-                .map(|(i, r)| gen[i][..r.max_tokens.min(gen[i].len())].to_vec())
-                .collect();
-            let _ = reply.send(out);
-        }
-        Ok((
-            dev_ring,
-            dev_res,
-            engine.timing.compute_secs,
-            engine.timing.copy_secs,
-            engine.timing.stall_secs,
-        ))
-    });
-
+    // The model factory runs on the server's compute thread (PJRT is
+    // thread-confined); it reports the Fig-10 memory numbers back here.
+    let (info_tx, info_rx) = channel::<(usize, usize)>();
     let stats = Arc::new(ServerStats::default());
-    let req_tx_srv = req_tx.clone();
+    let preset_owned = preset.clone();
     let server = Server::start(
         "127.0.0.1:0",
-        BatcherConfig { batch_size: 4, linger: std::time::Duration::from_millis(10) },
+        SessionConfig {
+            admission: AdmissionConfig {
+                max_queue: 256,
+                linger: std::time::Duration::from_millis(2),
+            },
+        },
         stats.clone(),
-        move |reqs| {
-            let (tx, rx) = channel();
-            let _ = req_tx_srv.send((reqs.to_vec(), tx));
-            rx.recv().unwrap_or_default()
+        move || {
+            let arts = Rc::new(ModelArtifacts::load(&preset_owned)?);
+            let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
+            let engine = InferenceEngine::new(arts.clone(), mode, 7, None)?;
+            let resident = InferenceEngine::new(arts.clone(), InferMode::Resident, 7, None)?;
+            let _ = info_tx.send((engine.device_weight_bytes(), resident.device_weight_bytes()));
+            drop(resident);
+            Ok(engine)
         },
     )?;
     let addr = server.addr;
@@ -78,47 +56,57 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(code, 200);
     assert_eq!(h.get("ok").as_bool(), Some(true));
 
-    // ---- fire concurrent clients
+    // ---- fire concurrent clients with MIXED generation lengths: the
+    // continuous-batching engine retires short requests immediately and
+    // refills their slots while long ones keep decoding.
     let t0 = std::time::Instant::now();
     let clients: Vec<_> = (0..n_requests)
         .map(|i| {
             std::thread::spawn(move || {
+                let want = 1 + (i % 3) * max_tokens.max(1); // 1, 1+m, 1+2m …
                 let body = format!(
                     r#"{{"prompt": [{}, {}, {}], "max_tokens": {}}}"#,
-                    i, i + 1, i + 2, max_tokens
+                    i, i + 1, i + 2, want
                 );
                 let t = std::time::Instant::now();
                 let out = http_post(&addr, "/generate", &body);
-                (out, t.elapsed().as_secs_f64())
+                (out, want, t.elapsed().as_secs_f64())
             })
         })
         .collect();
     let mut lat = Percentiles::new();
+    let mut queue_ms = Percentiles::new();
     let mut tokens_out = 0usize;
     for c in clients {
-        let (out, secs) = c.join().unwrap();
+        let (out, want, secs) = c.join().unwrap();
         let (code, j) = out?;
         assert_eq!(code, 200, "{}", j);
-        tokens_out += j.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
+        let got = j.get("tokens").as_arr().map(|a| a.len()).unwrap_or(0);
+        assert_eq!(got, want, "each request gets exactly its own budget");
+        assert_eq!(j.get("finish").as_str(), Some("length"));
+        tokens_out += got;
+        queue_ms.add(j.get("queue_ms").as_f64().unwrap_or(0.0));
         lat.add(secs * 1e3);
     }
     let wall = t0.elapsed().as_secs_f64();
 
-    // ---- shutdown the model thread, collect timing
-    let (tx, _rx) = channel();
-    let _ = req_tx.send((Vec::new(), tx));
-    let (dev_ring, dev_res, compute, copy, stall) = model_thread.join().unwrap()?;
-    drop(server);
+    let (dev_ring, dev_res) = info_rx.recv()?;
+    let (_, s) = http_get(&addr, "/stats")?;
+    drop(server); // graceful: drains slots, joins threads
 
-    println!("\n=== serving report ===");
+    println!("\n=== serving report (continuous batching) ===");
     println!("requests: {}  tokens out: {}  wall: {:.2}s  → {:.1} tokens/s",
         n_requests, tokens_out, wall, tokens_out as f64 / wall);
-    println!("latency ms: p50 {:.0}  p95 {:.0}  p99 {:.0}", lat.p50(), lat.p95(), lat.p99());
+    println!("latency ms: p50 {:.0}  p95 {:.0}  p99 {:.0}   queue-wait ms: p50 {:.1}  p95 {:.1}",
+        lat.p50(), lat.p95(), lat.p99(), queue_ms.p50(), queue_ms.p95());
+    let steps = s.get("steps").as_f64().unwrap_or(0.0);
+    let slot_steps = s.get("slot_steps").as_f64().unwrap_or(0.0);
+    let padded = s.get("padded_slot_steps").as_f64().unwrap_or(0.0);
+    println!("slot schedule: {} decode steps, {} live slot-steps, {} padded ({:.0}% utilization)",
+        steps, slot_steps, padded, 100.0 * slot_steps / (slot_steps + padded).max(1.0));
     println!("device weights: ring {} vs resident {} ({:.0}% saved)",
         human_bytes(dev_ring as u64), human_bytes(dev_res as u64),
         100.0 * (1.0 - dev_ring as f64 / dev_res as f64));
-    println!("engine: compute {:.2}s  copy {:.2}s  stall {:.2}s (un-hidden {:.0}%)",
-        compute, copy, stall, 100.0 * stall / copy.max(1e-9));
     println!("serve_ring_inference OK");
     Ok(())
 }

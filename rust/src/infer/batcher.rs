@@ -1,7 +1,18 @@
-//! Dynamic request batching: collect generation requests into fixed-size
-//! model batches (the preset's [B, T] is static), dispatching when the
-//! batch fills or a linger timeout expires. The serving analogue of the
-//! trainer's gradient buckets: fewer, fuller executions.
+//! Admission queue for the slot-based serving engine.
+//!
+//! This used to be a batch *former* (collect B requests, ship a fixed
+//! `[B, T]` batch, run the whole generation lock-step). Under continuous
+//! batching (see [`super::session`]) the unit of scheduling is a *slot
+//! step*, not a batch, so the queue's job shrinks to admission policy:
+//!
+//! - **backpressure** — bound the queue; reject (typed error) when full
+//!   so callers can shed load instead of piling latency;
+//! - **linger** — when the engine is *idle*, wait briefly for companions
+//!   before burning a full layer walk on a mostly-empty slot batch;
+//!   when slots are already live the walk happens anyway, so admission
+//!   is immediate;
+//! - **cancellation** — drop a queued request by id before it ever
+//!   reaches a slot.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -16,77 +27,131 @@ pub struct Request {
 }
 
 #[derive(Debug, Clone)]
-pub struct BatcherConfig {
-    /// Model batch size (slots per execution).
-    pub batch_size: usize,
-    /// Max time the head request may wait before a partial batch ships.
+pub struct AdmissionConfig {
+    /// Queue bound: `push` beyond this is rejected (backpressure).
+    pub max_queue: usize,
+    /// Max time the head request may wait, while the engine is idle,
+    /// before a partial slot batch starts anyway.
     pub linger: Duration,
 }
 
-impl Default for BatcherConfig {
+impl Default for AdmissionConfig {
     fn default() -> Self {
-        BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) }
+        AdmissionConfig { max_queue: 256, linger: Duration::from_millis(5) }
     }
 }
 
-/// A formed batch: the requests plus padding count.
-#[derive(Debug, Clone)]
-pub struct FormedBatch {
-    pub requests: Vec<Request>,
-    /// Unused slots (padded with empty prompts).
-    pub padding: usize,
-    /// Queueing delay of the oldest member.
-    pub head_wait: Duration,
+/// Typed admission failure (the backpressure signal).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmitError {
+    /// Queue is at `max_queue`; shed load upstream.
+    QueueFull,
 }
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => write!(f, "admission queue full"),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
 
 #[derive(Debug, Clone, Copy, Default)]
-pub struct BatcherStats {
+pub struct QueueStats {
     pub enqueued: u64,
-    pub batches: u64,
-    pub padded_slots: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub cancelled: u64,
 }
 
-/// FIFO batcher.
-pub struct Batcher {
-    cfg: BatcherConfig,
+/// FIFO admission queue.
+pub struct AdmissionQueue {
+    cfg: AdmissionConfig,
     queue: VecDeque<Request>,
-    stats: BatcherStats,
+    stats: QueueStats,
 }
 
-impl Batcher {
-    pub fn new(cfg: BatcherConfig) -> Batcher {
-        Batcher { cfg, queue: VecDeque::new(), stats: BatcherStats::default() }
+impl AdmissionQueue {
+    pub fn new(cfg: AdmissionConfig) -> AdmissionQueue {
+        AdmissionQueue { cfg, queue: VecDeque::new(), stats: QueueStats::default() }
     }
 
-    pub fn push(&mut self, req: Request) {
-        self.stats.enqueued += 1;
-        self.queue.push_back(req);
+    pub fn config(&self) -> &AdmissionConfig {
+        &self.cfg
     }
 
-    pub fn pending(&self) -> usize {
+    pub fn len(&self) -> usize {
         self.queue.len()
     }
 
-    pub fn stats(&self) -> BatcherStats {
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    pub fn stats(&self) -> QueueStats {
         self.stats
     }
 
-    /// Try to form a batch at time `now`. Full batch ships immediately;
-    /// a partial batch ships only once the head request has lingered.
-    pub fn poll(&mut self, now: Instant) -> Option<FormedBatch> {
-        if self.queue.is_empty() {
-            return None;
+    /// Enqueue; rejects when the queue is at its bound.
+    pub fn push(&mut self, req: Request) -> Result<(), AdmitError> {
+        if self.queue.len() >= self.cfg.max_queue {
+            self.stats.rejected += 1;
+            return Err(AdmitError::QueueFull);
         }
-        let head_wait = now.duration_since(self.queue.front().unwrap().arrived);
-        if self.queue.len() < self.cfg.batch_size && head_wait < self.cfg.linger {
-            return None;
+        self.stats.enqueued += 1;
+        self.queue.push_back(req);
+        Ok(())
+    }
+
+    /// Remove a queued request by id. Returns false if it is not queued
+    /// (already admitted, finished, or never seen).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.queue.iter().position(|r| r.id == id) {
+            self.queue.remove(pos);
+            self.stats.cancelled += 1;
+            true
+        } else {
+            false
         }
-        let take = self.queue.len().min(self.cfg.batch_size);
-        let requests: Vec<Request> = self.queue.drain(..take).collect();
-        let padding = self.cfg.batch_size - requests.len();
-        self.stats.batches += 1;
-        self.stats.padded_slots += padding as u64;
-        Some(FormedBatch { requests, padding, head_wait })
+    }
+
+    /// Pop requests ready for admission into `free` slots at `now`,
+    /// given `live` slots already decoding.
+    ///
+    /// Policy: with live slots the layer walk runs regardless, so an
+    /// empty slot is pure padding waste — fill immediately. With an idle
+    /// engine, start only a full batch, or a partial one once the head
+    /// request has waited ≥ `linger`. The linger test is against the
+    /// request's *arrival* time, so a head that already exceeded the
+    /// linger when pushed (e.g. requeued after a failover) dispatches on
+    /// the first poll — it never waits an extra linger period.
+    pub fn pop_ready(&mut self, free: usize, live: usize, now: Instant) -> Vec<Request> {
+        if free == 0 || self.queue.is_empty() {
+            return Vec::new();
+        }
+        let take = if live > 0 {
+            free.min(self.queue.len())
+        } else if self.queue.len() >= free {
+            free
+        } else {
+            let head_wait = now.saturating_duration_since(self.queue.front().unwrap().arrived);
+            if head_wait >= self.cfg.linger {
+                self.queue.len()
+            } else {
+                0
+            }
+        };
+        let out: Vec<Request> = self.queue.drain(..take).collect();
+        self.stats.admitted += out.len() as u64;
+        out
+    }
+
+    /// Evict everything still queued (graceful shutdown: the caller
+    /// replies `shutting_down` to each).
+    pub fn drain(&mut self) -> Vec<Request> {
+        self.queue.drain(..).collect()
     }
 }
 
@@ -98,47 +163,109 @@ mod tests {
         Request { id, prompt: vec![1, 2, 3], max_tokens: 4, arrived: at }
     }
 
-    #[test]
-    fn full_batch_ships_immediately() {
-        let mut b = Batcher::new(BatcherConfig { batch_size: 2, linger: Duration::from_secs(10) });
-        let t0 = Instant::now();
-        b.push(req(1, t0));
-        assert!(b.poll(t0).is_none());
-        b.push(req(2, t0));
-        let batch = b.poll(t0).unwrap();
-        assert_eq!(batch.requests.len(), 2);
-        assert_eq!(batch.padding, 0);
-        assert_eq!(b.pending(), 0);
+    fn q(max_queue: usize, linger_ms: u64) -> AdmissionQueue {
+        AdmissionQueue::new(AdmissionConfig {
+            max_queue,
+            linger: Duration::from_millis(linger_ms),
+        })
     }
 
     #[test]
-    fn partial_batch_waits_for_linger() {
-        let mut b = Batcher::new(BatcherConfig { batch_size: 4, linger: Duration::from_millis(5) });
+    fn full_batch_ships_immediately_when_idle() {
+        let mut b = q(16, 10_000);
         let t0 = Instant::now();
-        b.push(req(1, t0));
-        assert!(b.poll(t0 + Duration::from_millis(1)).is_none());
-        let batch = b.poll(t0 + Duration::from_millis(6)).unwrap();
-        assert_eq!(batch.requests.len(), 1);
-        assert_eq!(batch.padding, 3);
-        assert!(batch.head_wait >= Duration::from_millis(6));
+        b.push(req(1, t0)).unwrap();
+        assert!(b.pop_ready(2, 0, t0).is_empty());
+        b.push(req(2, t0)).unwrap();
+        let got = b.pop_ready(2, 0, t0);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(b.is_empty());
     }
 
     #[test]
-    fn fifo_order_and_stats() {
-        let mut b = Batcher::new(BatcherConfig { batch_size: 2, linger: Duration::ZERO });
+    fn partial_lingers_when_idle_then_ships() {
+        let mut b = q(16, 5);
+        let t0 = Instant::now();
+        b.push(req(1, t0)).unwrap();
+        assert!(b.pop_ready(4, 0, t0 + Duration::from_millis(1)).is_empty());
+        let got = b.pop_ready(4, 0, t0 + Duration::from_millis(6));
+        assert_eq!(got.len(), 1);
+    }
+
+    /// Regression: a head request that already exceeded the linger at
+    /// enqueue time (stale `arrived`, e.g. a requeue) must dispatch on
+    /// the very next poll — not wait a full extra linger period.
+    #[test]
+    fn stale_head_dispatches_on_first_poll() {
+        let mut b = q(16, 5);
+        let now = Instant::now();
+        let long_ago = now - Duration::from_millis(50);
+        b.push(req(1, long_ago)).unwrap();
+        let got = b.pop_ready(4, 0, now);
+        assert_eq!(got.len(), 1, "stale head must not linger again");
+    }
+
+    #[test]
+    fn live_slots_admit_immediately() {
+        let mut b = q(16, 10_000);
+        let t0 = Instant::now();
+        b.push(req(1, t0)).unwrap();
+        // huge linger, but one slot is already decoding → no linger wait
+        let got = b.pop_ready(3, 1, t0);
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let mut b = q(2, 0);
+        let t0 = Instant::now();
+        b.push(req(1, t0)).unwrap();
+        b.push(req(2, t0)).unwrap();
+        assert_eq!(b.push(req(3, t0)), Err(AdmitError::QueueFull));
+        assert_eq!(b.len(), 2);
+        assert_eq!(b.stats().rejected, 1);
+    }
+
+    #[test]
+    fn cancellation_removes_queued() {
+        let mut b = q(8, 0);
+        let t0 = Instant::now();
+        b.push(req(1, t0)).unwrap();
+        b.push(req(2, t0)).unwrap();
+        assert!(b.cancel(1));
+        assert!(!b.cancel(1), "double-cancel is a no-op");
+        let got = b.pop_ready(4, 0, t0);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2]);
+        assert_eq!(b.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn fifo_order_and_counts() {
+        let mut b = q(16, 0);
         let t0 = Instant::now();
         for i in 0..5 {
-            b.push(req(i, t0));
+            b.push(req(i, t0)).unwrap();
         }
-        let ids: Vec<u64> = b.poll(t0).unwrap().requests.iter().map(|r| r.id).collect();
+        let ids: Vec<u64> = b.pop_ready(2, 0, t0).iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![0, 1]);
-        let _ = b.poll(t0).unwrap();
-        let last = b.poll(t0).unwrap();
-        assert_eq!(last.requests[0].id, 4);
-        assert_eq!(last.padding, 1);
+        let ids: Vec<u64> = b.pop_ready(2, 1, t0).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![2, 3]);
+        let ids: Vec<u64> = b.pop_ready(2, 1, t0).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![4]);
         let s = b.stats();
         assert_eq!(s.enqueued, 5);
-        assert_eq!(s.batches, 3);
-        assert_eq!(s.padded_slots, 1);
+        assert_eq!(s.admitted, 5);
+    }
+
+    #[test]
+    fn drain_evicts_everything() {
+        let mut b = q(16, 1000);
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(req(i, t0)).unwrap();
+        }
+        let evicted = b.drain();
+        assert_eq!(evicted.len(), 3);
+        assert!(b.is_empty());
     }
 }

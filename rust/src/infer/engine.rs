@@ -9,6 +9,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use super::ring_memory::{LayerLoader, RingMemory};
+use super::session::{self, DecodeModel, SlotState, StepReport};
 use crate::comm::FusionBuffer;
 use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
 use crate::train::optimizer::{group_of, init_tensor, Group};
@@ -259,9 +260,40 @@ impl InferenceEngine {
         Ok(out)
     }
 
+    /// Reentrant slot-batch decode for the continuous-batching serving
+    /// engine: one layer walk — one ring-memory `begin_pass`/`get`/
+    /// `release` cycle in `Ring` mode — advances every live slot by
+    /// exactly one token. Free slots ride along as padding rows. Safe to
+    /// interleave with admissions/retirements between calls; each call
+    /// is one complete pass.
+    pub fn decode_step(&mut self, slots: &mut [SlotState]) -> Result<StepReport> {
+        session::advance(self, slots)
+    }
+
     /// Tokens processed per second of a measured run.
     pub fn throughput(tokens: usize, secs: f64) -> f64 {
         tokens as f64 / secs.max(1e-12)
+    }
+}
+
+impl DecodeModel for InferenceEngine {
+    fn slots(&self) -> usize {
+        self.arts.preset.batch_size
+    }
+
+    fn window(&self) -> usize {
+        self.arts.preset.seq_len
+    }
+
+    fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        let (b, t) = (self.arts.preset.batch_size, self.arts.preset.seq_len);
+        anyhow::ensure!(windows.len() == b, "got {} windows for batch {}", windows.len(), b);
+        let mut flat = Vec::with_capacity(b * t);
+        for w in windows {
+            anyhow::ensure!(w.len() == t, "window length {} != seq_len {}", w.len(), t);
+            flat.extend_from_slice(w);
+        }
+        self.forward(&HostTensor::from_i32(&[b, t], flat))
     }
 }
 
@@ -295,6 +327,34 @@ mod tests {
         let ring = engine(InferMode::Ring { k: 3 });
         // deep has 12 layers; K=3 → 4x less weight memory on device.
         assert!(ring.device_weight_bytes() * 3 < res.device_weight_bytes());
+    }
+
+    /// The serving slot path must be numerically identical to whole-batch
+    /// `generate` when slots run in lockstep — including in ring mode,
+    /// where each `decode_step` is its own `begin_pass`/`get`/`release`
+    /// cycle (the reentrancy the continuous engine depends on).
+    #[test]
+    fn session_decode_matches_generate() {
+        use crate::infer::session::{ServeSession, SessionConfig};
+        use crate::metrics::Registry;
+
+        let mut res = engine(InferMode::Resident);
+        let model = res.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 + 1; 5]).collect();
+        let want = res.generate(&prompts, 3).unwrap();
+
+        let ring = engine(InferMode::Ring { k: 3 });
+        let mut sess = ServeSession::new(ring, SessionConfig::default(), Registry::new());
+        for (i, p) in prompts.iter().enumerate() {
+            sess.submit(i as u64 + 1, p.clone(), 3).unwrap();
+        }
+        let mut done = sess.run_to_idle().unwrap();
+        assert_eq!(done.len(), model.batch_size);
+        done.sort_by_key(|c| c.id);
+        for (c, w) in done.iter().zip(&want) {
+            assert_eq!(&c.tokens, w, "slot decode must match batch generate");
+        }
     }
 
     #[test]

@@ -1,14 +1,24 @@
 //! Inference: the six-step deployment pipeline (§3.1), the ring-memory
-//! offload engine (§3.2, Figures 4–5), dynamic request batching and a
-//! hand-rolled HTTP serving front end ("internet services").
+//! offload engine (§3.2, Figures 4–5), and the slot-based
+//! continuous-batching serving stack ("internet services"):
+//! [`batcher::AdmissionQueue`] (linger/backpressure/cancellation) feeds
+//! [`session::ServeSession`]'s B generation slots — one layer walk per
+//! token across all live slots, freed slots refilled between decode
+//! steps — fronted by the HTTP [`server`]. See `docs/serving.md` for
+//! the queued → prefill → decode → retired state machine.
 
 pub mod ring_memory;
 pub mod engine;
 pub mod graph;
 pub mod batcher;
+pub mod session;
 pub mod server;
 
-pub use batcher::{Batcher, BatcherConfig, Request};
+pub use batcher::{AdmissionConfig, AdmissionQueue, AdmitError, Request};
 pub use engine::{InferenceEngine, InferMode, PassTiming};
 pub use graph::{Graph, GraphPipeline};
 pub use ring_memory::{RingMemory, RingStats};
+pub use session::{
+    Completion, DecodeModel, FinishReason, RejectReason, ServeReply, ServeSession, SessionConfig,
+    SessionStats, SlotPhase, SlotState, StepReport,
+};

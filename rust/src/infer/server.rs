@@ -3,43 +3,90 @@
 //!
 //! Endpoints:
 //!   POST /generate  {"prompt": [ids...], "max_tokens": n}
-//!                   → {"id": .., "tokens": [ids...], "latency_ms": ..}
+//!                   → {"id", "tokens", "finish", "queue_ms",
+//!                      "prefill_ms", "decode_ms", "latency_ms"}
+//!                   429 {"error": "overloaded"}     on backpressure
+//!                   503 {"error": "shutting_down"}  while draining
 //!   GET  /healthz   → {"ok": true}
-//!   GET  /stats     → batcher/engine counters
+//!   GET  /stats     → request totals, slot occupancy, padded-step
+//!                     counters, queue-wait percentiles, serve.* registry
 //!
-//! Architecture: acceptor threads parse HTTP and enqueue requests; ONE
-//! compute thread owns the `InferenceEngine` (PJRT is thread-confined,
-//! see runtime::engine) and drains the dynamic batcher.
+//! Architecture (slot/session model — see `docs/serving.md`): acceptor
+//! threads parse HTTP and enqueue typed jobs; ONE compute thread owns
+//! the [`ServeSession`] (PJRT is thread-confined, see runtime::engine)
+//! and loops { admit → decode_step → retire }, resolving each request's
+//! [`ServeReply`] handle the moment its sequence finishes — requests
+//! join and leave the slot batch *between* decode steps, never waiting
+//! on an unrelated long generation. Shutdown is graceful: in-flight
+//! slots drain to completion; still-queued requests get a typed
+//! `shutting_down` rejection instead of a dropped channel.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{channel, Sender};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Batcher, BatcherConfig, Request};
+use super::batcher::Request;
+use super::session::{
+    Completion, DecodeModel, FinishReason, RejectReason, ServeReply, ServeSession, SessionConfig,
+};
+use crate::metrics::Registry;
 use crate::util::json::Json;
+use crate::util::stats::Percentiles;
 
-/// A parsed inbound generation call + the reply channel.
+/// Hard cap on per-request generation length at the HTTP boundary — a
+/// client may not pin a slot for an unbounded decode.
+const MAX_TOKENS_PER_REQUEST: usize = 4096;
+
+/// How long a graceful shutdown lets in-flight slots keep decoding
+/// before force-cancelling them (they retire with partial output).
+const DRAIN_GRACE: Duration = Duration::from_secs(5);
+
+/// A parsed inbound generation call + its typed reply handle.
 struct Job {
     request: Request,
-    reply: Sender<Json>,
+    reply: Sender<ServeReply>,
 }
 
-/// Server statistics surface.
-#[derive(Default)]
+/// Connection → compute-thread protocol.
+enum JobMsg {
+    Submit(Job),
+    /// The client gave up (reply timeout / dropped connection): stop
+    /// spending slot-steps on its request.
+    Cancel(u64),
+}
+
+/// Server statistics surface. Counter/gauge detail (slot occupancy,
+/// padded steps, queue depth) lives in `counters` under `serve.*`;
+/// queue-wait percentiles are fed from completions into a bounded
+/// reservoir (a long-running server must not grow without limit).
 pub struct ServerStats {
     pub requests: AtomicU64,
-    pub batches: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
     pub tokens_out: AtomicU64,
+    pub counters: Registry,
+    pub queue_wait_ms: Mutex<Percentiles>,
 }
 
-/// Start the serving loop. `step` is the model callback: given a slice
-/// of requests (≤ batch_size), produce each request's generated tokens.
-/// Returns the bound address; `stop` flips the shutdown flag.
+impl Default for ServerStats {
+    fn default() -> Self {
+        ServerStats {
+            requests: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            tokens_out: AtomicU64::new(0),
+            counters: Registry::new(),
+            queue_wait_ms: Mutex::new(Percentiles::bounded(4096)),
+        }
+    }
+}
+
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
@@ -48,61 +95,31 @@ pub struct Server {
 }
 
 impl Server {
-    pub fn start<F>(
+    /// Start serving. `make_model` runs once on the dedicated compute
+    /// thread (PJRT thread-confinement: construct the engine where it
+    /// lives) and yields the [`DecodeModel`] the session drives.
+    pub fn start<M, F>(
         bind: &str,
-        batcher_cfg: BatcherConfig,
+        cfg: SessionConfig,
         stats: Arc<ServerStats>,
-        mut step: F,
+        make_model: F,
     ) -> Result<Server>
     where
-        F: FnMut(&[Request]) -> Vec<Vec<i32>> + Send + 'static,
+        M: DecodeModel + 'static,
+        F: FnOnce() -> Result<M> + Send + 'static,
     {
         let listener = TcpListener::bind(bind)?;
         listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
-        let (job_tx, job_rx) = channel::<Job>();
+        let (job_tx, job_rx) = channel::<JobMsg>();
 
-        // ---- compute thread: owns batcher + model
+        // ---- compute thread: owns the session (admit → step → retire)
         let stop_c = stop.clone();
         let stats_c = stats.clone();
         let compute_handle = std::thread::Builder::new()
             .name("serve-compute".into())
-            .spawn(move || {
-                let mut batcher = Batcher::new(batcher_cfg);
-                let mut waiting: Vec<(u64, Sender<Json>, Instant)> = Vec::new();
-                loop {
-                    if stop_c.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    // drain inbound
-                    while let Ok(job) = job_rx.try_recv() {
-                        waiting.push((job.request.id, job.reply, job.request.arrived));
-                        batcher.push(job.request);
-                    }
-                    if let Some(batch) = batcher.poll(Instant::now()) {
-                        let outputs = step(&batch.requests);
-                        stats_c.batches.fetch_add(1, Ordering::Relaxed);
-                        for (req, toks) in batch.requests.iter().zip(outputs) {
-                            stats_c.tokens_out.fetch_add(toks.len() as u64, Ordering::Relaxed);
-                            if let Some(pos) = waiting.iter().position(|(id, _, _)| *id == req.id) {
-                                let (_, reply, arrived) = waiting.swap_remove(pos);
-                                let lat = arrived.elapsed().as_secs_f64() * 1e3;
-                                let _ = reply.send(Json::obj(vec![
-                                    ("id", Json::num(req.id as f64)),
-                                    (
-                                        "tokens",
-                                        Json::arr(toks.iter().map(|&t| Json::num(t as f64))),
-                                    ),
-                                    ("latency_ms", Json::num(lat)),
-                                ]));
-                            }
-                        }
-                    } else {
-                        std::thread::sleep(Duration::from_micros(200));
-                    }
-                }
-            })?;
+            .spawn(move || compute_loop(make_model, cfg, stats_c, stop_c, job_rx))?;
 
         // ---- acceptor thread
         let stop_a = stop.clone();
@@ -139,6 +156,8 @@ impl Server {
         Ok(Server { addr, stop, accept_handle: Some(accept_handle), compute_handle: Some(compute_handle) })
     }
 
+    /// Graceful shutdown: stop accepting, drain in-flight slots, reject
+    /// still-queued requests with `shutting_down`, then join.
     pub fn stop(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
         // poke the acceptor out of nonblocking sleep by connecting
@@ -158,10 +177,136 @@ impl Drop for Server {
     }
 }
 
+fn compute_loop<M, F>(
+    make_model: F,
+    cfg: SessionConfig,
+    stats: Arc<ServerStats>,
+    stop: Arc<AtomicBool>,
+    job_rx: Receiver<JobMsg>,
+) where
+    M: DecodeModel + 'static,
+    F: FnOnce() -> Result<M>,
+{
+    let model = match make_model() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("serve-compute: model construction failed: {:#}", e);
+            // resolve every handle so clients see a clean rejection
+            reject_remaining(&job_rx, &stats, Duration::from_secs(2));
+            return;
+        }
+    };
+    let mut session = ServeSession::new(model, cfg, stats.counters.clone());
+    let mut waiting: HashMap<u64, Sender<ServeReply>> = HashMap::new();
+    let mut drain_started: Option<Instant> = None;
+
+    loop {
+        let draining = stop.load(Ordering::Relaxed);
+        // drain inbound messages into the admission queue
+        while let Ok(msg) = job_rx.try_recv() {
+            match msg {
+                JobMsg::Submit(job) => {
+                    if draining {
+                        reject(&stats, job.reply, RejectReason::ShuttingDown);
+                        continue;
+                    }
+                    let id = job.request.id;
+                    match session.submit_request(job.request) {
+                        Ok(()) => {
+                            waiting.insert(id, job.reply);
+                        }
+                        Err(_) => reject(&stats, job.reply, RejectReason::QueueFull),
+                    }
+                }
+                JobMsg::Cancel(id) => {
+                    // nobody is reading the reply any more
+                    waiting.remove(&id);
+                    session.cancel(id);
+                }
+            }
+        }
+        if draining {
+            let started = *drain_started.get_or_insert_with(Instant::now);
+            // typed 503 for everything still queued …
+            for req in session.evict_queued() {
+                if let Some(tx) = waiting.remove(&req.id) {
+                    reject(&stats, tx, RejectReason::ShuttingDown);
+                }
+            }
+            // … and drain in-flight slots to completion
+            if session.live() == 0 {
+                break;
+            }
+            // a bounded drain: past the grace, force-cancel what's left
+            // (retires with partial output) instead of hanging stop()
+            if started.elapsed() >= DRAIN_GRACE {
+                for id in session.live_ids() {
+                    session.cancel(id);
+                }
+            }
+        }
+        match session.tick() {
+            Ok(completions) => {
+                for c in completions {
+                    deliver(&stats, &mut waiting, c);
+                }
+            }
+            Err(e) => {
+                eprintln!("serve-compute: decode step failed: {:#}", e);
+                break;
+            }
+        }
+        // No live slots means the tick was admission-only (idle, or a
+        // partial batch lingering) — sleep briefly instead of spinning
+        // through the linger window.
+        if session.live() == 0 && !draining {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    // whatever is left unresolved (decode error, shutdown races) gets a
+    // typed reply rather than a dropped channel
+    for (_, tx) in waiting.drain() {
+        reject(&stats, tx, RejectReason::ShuttingDown);
+    }
+    reject_remaining(&job_rx, &stats, Duration::from_secs(2));
+}
+
+fn deliver(stats: &ServerStats, waiting: &mut HashMap<u64, Sender<ServeReply>>, c: Completion) {
+    stats.completed.fetch_add(1, Ordering::Relaxed);
+    stats.tokens_out.fetch_add(c.tokens.len() as u64, Ordering::Relaxed);
+    stats.queue_wait_ms.lock().unwrap().add(c.queue.as_secs_f64() * 1e3);
+    if let Some(tx) = waiting.remove(&c.id) {
+        let _ = tx.send(ServeReply::Done(c));
+    }
+}
+
+fn reject(stats: &ServerStats, tx: Sender<ServeReply>, why: RejectReason) {
+    stats.rejected.fetch_add(1, Ordering::Relaxed);
+    let _ = tx.send(ServeReply::Rejected(why));
+}
+
+/// Reply `shutting_down` to jobs still in the channel until every
+/// sender is gone (or `grace` expires — checked every iteration, so a
+/// steady inbound stream cannot pin this loop past the grace).
+fn reject_remaining(job_rx: &Receiver<JobMsg>, stats: &ServerStats, grace: Duration) {
+    let deadline = Instant::now() + grace;
+    loop {
+        if Instant::now() >= deadline {
+            break;
+        }
+        match job_rx.recv_timeout(Duration::from_millis(20)) {
+            Ok(JobMsg::Submit(job)) => reject(stats, job.reply, RejectReason::ShuttingDown),
+            Ok(JobMsg::Cancel(_)) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+}
+
 fn handle_conn(
     mut stream: TcpStream,
     id: u64,
-    jobs: Sender<Job>,
+    jobs: Sender<JobMsg>,
     stats: Arc<ServerStats>,
 ) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(5)))?;
@@ -191,14 +336,7 @@ fn handle_conn(
 
     let (status, payload) = match (method.as_str(), path.as_str()) {
         ("GET", "/healthz") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
-        ("GET", "/stats") => (
-            "200 OK",
-            Json::obj(vec![
-                ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
-                ("batches", Json::num(stats.batches.load(Ordering::Relaxed) as f64)),
-                ("tokens_out", Json::num(stats.tokens_out.load(Ordering::Relaxed) as f64)),
-            ]),
-        ),
+        ("GET", "/stats") => ("200 OK", stats_json(&stats)),
         ("POST", "/generate") => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
             match Json::parse(std::str::from_utf8(&body).unwrap_or("")) {
@@ -211,18 +349,45 @@ fn handle_conn(
                         .filter_map(|v| v.as_i64())
                         .map(|v| v as i32)
                         .collect();
-                    let max_tokens = j.get("max_tokens").as_usize().unwrap_or(8);
-                    let (reply_tx, reply_rx) = channel();
-                    let _ = jobs.send(Job {
-                        request: Request { id, prompt, max_tokens, arrived: Instant::now() },
-                        reply: reply_tx,
-                    });
-                    match reply_rx.recv_timeout(Duration::from_secs(60)) {
-                        Ok(out) => ("200 OK", out),
-                        Err(_) => (
-                            "503 Service Unavailable",
-                            Json::obj(vec![("error", Json::str("timeout"))]),
-                        ),
+                    let max_tokens =
+                        j.get("max_tokens").as_usize().unwrap_or(8).min(MAX_TOKENS_PER_REQUEST);
+                    if max_tokens == 0 {
+                        // zero-token probe: reply without spending a slot
+                        let c = Completion {
+                            id,
+                            tokens: Vec::new(),
+                            finish: FinishReason::Length,
+                            queue: Duration::ZERO,
+                            prefill: Duration::ZERO,
+                            decode: Duration::ZERO,
+                        };
+                        ("200 OK", completion_json(&c))
+                    } else {
+                        let (reply_tx, reply_rx) = channel();
+                        let _ = jobs.send(JobMsg::Submit(Job {
+                            request: Request { id, prompt, max_tokens, arrived: Instant::now() },
+                            reply: reply_tx,
+                        }));
+                        match reply_rx.recv_timeout(Duration::from_secs(60)) {
+                            Ok(ServeReply::Done(c)) => ("200 OK", completion_json(&c)),
+                            Ok(ServeReply::Rejected(RejectReason::QueueFull)) => (
+                                "429 Too Many Requests",
+                                Json::obj(vec![("error", Json::str("overloaded"))]),
+                            ),
+                            Ok(ServeReply::Rejected(RejectReason::ShuttingDown)) => (
+                                "503 Service Unavailable",
+                                Json::obj(vec![("error", Json::str("shutting_down"))]),
+                            ),
+                            Err(_) => {
+                                // client-side give-up: free the slot/queue
+                                // entry instead of decoding for nobody
+                                let _ = jobs.send(JobMsg::Cancel(id));
+                                (
+                                    "503 Service Unavailable",
+                                    Json::obj(vec![("error", Json::str("timeout"))]),
+                                )
+                            }
+                        }
                     }
                 }
                 Err(e) => (
@@ -243,6 +408,38 @@ fn handle_conn(
     );
     stream.write_all(resp.as_bytes())?;
     Ok(())
+}
+
+fn completion_json(c: &Completion) -> Json {
+    Json::obj(vec![
+        ("id", Json::num(c.id as f64)),
+        ("tokens", Json::arr(c.tokens.iter().map(|&t| Json::num(t as f64)))),
+        ("finish", Json::str(c.finish.as_str())),
+        ("queue_ms", Json::num(c.queue.as_secs_f64() * 1e3)),
+        ("prefill_ms", Json::num(c.prefill.as_secs_f64() * 1e3)),
+        ("decode_ms", Json::num(c.decode.as_secs_f64() * 1e3)),
+        ("latency_ms", Json::num(c.latency().as_secs_f64() * 1e3)),
+    ])
+}
+
+fn stats_json(stats: &ServerStats) -> Json {
+    let reg = &stats.counters;
+    let mut waits = stats.queue_wait_ms.lock().unwrap().clone();
+    Json::obj(vec![
+        ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
+        ("completed", Json::num(stats.completed.load(Ordering::Relaxed) as f64)),
+        ("rejected", Json::num(stats.rejected.load(Ordering::Relaxed) as f64)),
+        ("tokens_out", Json::num(stats.tokens_out.load(Ordering::Relaxed) as f64)),
+        ("steps", Json::num(reg.counter("serve.steps").count() as f64)),
+        ("slot_steps", Json::num(reg.counter("serve.slot_steps").count() as f64)),
+        ("padded_slot_steps", Json::num(reg.counter("serve.padded_slot_steps").count() as f64)),
+        ("slots_total", Json::num(reg.gauge("serve.slots_total").get() as f64)),
+        ("slots_live", Json::num(reg.gauge("serve.slots_live").get() as f64)),
+        ("queue_depth", Json::num(reg.gauge("serve.queue_depth").get() as f64)),
+        ("queue_wait_ms_p50", Json::num(waits.p50())),
+        ("queue_wait_ms_p95", Json::num(waits.p95())),
+        ("counters", reg.snapshot()),
+    ])
 }
 
 /// Minimal HTTP client for tests/examples (same no-deps constraint).
@@ -290,22 +487,21 @@ fn read_response(stream: TcpStream) -> Result<(u16, Json)> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::infer::batcher::AdmissionConfig;
+    use crate::infer::session::testing::EchoModel;
 
-    /// Echo-model server: "generates" prompt[0]+1, repeated.
     fn start_echo() -> (Server, Arc<ServerStats>) {
         let stats = Arc::new(ServerStats::default());
         let server = Server::start(
             "127.0.0.1:0",
-            BatcherConfig { batch_size: 2, linger: Duration::from_millis(2) },
-            stats.clone(),
-            |reqs| {
-                reqs.iter()
-                    .map(|r| {
-                        let first = r.prompt.first().copied().unwrap_or(0);
-                        vec![first + 1; r.max_tokens]
-                    })
-                    .collect()
+            SessionConfig {
+                admission: AdmissionConfig {
+                    max_queue: 64,
+                    linger: Duration::from_millis(2),
+                },
             },
+            stats.clone(),
+            || Ok(EchoModel::new(2, 8)),
         )
         .unwrap();
         (server, stats)
@@ -330,25 +526,37 @@ mod tests {
         assert_eq!(code, 200);
         let toks: Vec<i64> =
             j.get("tokens").as_arr().unwrap().iter().map(|t| t.as_i64().unwrap()).collect();
-        assert_eq!(toks, vec![42, 42, 42]);
+        assert_eq!(toks, vec![42, 43, 44]);
+        assert_eq!(j.get("finish").as_str(), Some("length"));
         assert!(j.get("latency_ms").as_f64().unwrap() >= 0.0);
+        assert!(j.get("queue_ms").as_f64().unwrap() >= 0.0);
+        assert!(j.get("prefill_ms").as_f64().unwrap() >= 0.0);
         let (_, s) = http_get(&server.addr, "/stats").unwrap();
         assert_eq!(s.get("requests").as_usize(), Some(1));
+        assert_eq!(s.get("completed").as_usize(), Some(1));
         assert_eq!(s.get("tokens_out").as_usize(), Some(3));
+        assert_eq!(s.get("slots_total").as_usize(), Some(2));
+        assert!(s.get("steps").as_usize().unwrap() >= 3);
+        assert!(s.get("queue_wait_ms_p95").as_f64().is_some());
+        assert_eq!(stats.completed.load(Ordering::Relaxed), 1);
         server.stop();
     }
 
+    /// Mixed-length concurrent requests over 2 slots: every request gets
+    /// its own answer, short ones don't wait for the long one to finish
+    /// a synchronous batch, and the slot scheduler reports its steps.
     #[test]
-    fn concurrent_requests_get_batched() {
+    fn concurrent_mixed_length_requests() {
         let (mut server, stats) = start_echo();
         let addr = server.addr;
         let handles: Vec<_> = (0..4)
             .map(|i| {
                 std::thread::spawn(move || {
+                    let max_tokens = 1 + (i % 2) * 4; // 1 or 5 tokens
                     http_post(
                         &addr,
                         "/generate",
-                        &format!(r#"{{"prompt": [{}], "max_tokens": 1}}"#, i * 10),
+                        &format!(r#"{{"prompt": [{}], "max_tokens": {}}}"#, i * 10, max_tokens),
                     )
                     .unwrap()
                 })
@@ -357,11 +565,28 @@ mod tests {
         for (i, h) in handles.into_iter().enumerate() {
             let (code, j) = h.join().unwrap();
             assert_eq!(code, 200);
-            let tok = j.get("tokens").at(0).as_i64().unwrap();
-            assert_eq!(tok, (i as i64) * 10 + 1);
+            let toks = j.get("tokens").as_arr().unwrap();
+            assert_eq!(toks.len(), 1 + (i % 2) * 4);
+            // echo model: first generated token is prompt+1
+            assert_eq!(toks[0].as_i64().unwrap(), (i as i64) * 10 + 1);
         }
-        // 4 requests over batch_size 2 → at least 2 batches
-        assert!(stats.batches.load(Ordering::Relaxed) >= 2);
+        assert_eq!(stats.completed.load(Ordering::Relaxed), 4);
+        assert!(stats.counters.counter("serve.steps").count() >= 5);
+        server.stop();
+    }
+
+    /// `max_tokens: 0` is a no-op probe: it must answer immediately with
+    /// an empty token list and never occupy a slot (old step-callback
+    /// behavior, preserved at the HTTP boundary).
+    #[test]
+    fn zero_max_tokens_is_a_free_noop() {
+        let (mut server, stats) = start_echo();
+        let (code, j) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [5], "max_tokens": 0}"#).unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(j.get("tokens").as_arr().map(|a| a.len()), Some(0));
+        assert_eq!(j.get("finish").as_str(), Some("length"));
+        assert_eq!(stats.counters.counter("serve.steps").count(), 0, "no layer walk spent");
         server.stop();
     }
 
@@ -372,5 +597,19 @@ mod tests {
         assert_eq!(code, 400);
         assert!(j.get("error").as_str().unwrap().contains("bad json"));
         server.stop();
+    }
+
+    #[test]
+    fn graceful_stop_drains_cleanly() {
+        let (mut server, stats) = start_echo();
+        let addr = server.addr;
+        // a request in flight while stop() is called must still resolve
+        let h = std::thread::spawn(move || {
+            http_post(&addr, "/generate", r#"{"prompt": [1], "max_tokens": 2}"#).unwrap()
+        });
+        let (code, _) = h.join().unwrap();
+        assert_eq!(code, 200);
+        server.stop();
+        assert_eq!(stats.rejected.load(Ordering::Relaxed), 0);
     }
 }

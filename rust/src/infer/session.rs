@@ -1,0 +1,693 @@
+//! Slot-based continuous-batching serving engine.
+//!
+//! The batch-synchronous serving path (form a `[B, T]` batch, run the
+//! whole generation lock-step, reply, repeat) wastes the device two
+//! ways: a long request holds B−1 finished slots hostage, and padding
+//! slots burn a full layer walk per step. [`ServeSession`] replaces it
+//! with per-step slot scheduling: B generation slots advance together —
+//! one layer walk (one ring-memory pass, §3.2) per token across all
+//! live slots — while the admission queue refills freed slots *between*
+//! decode steps and finished sequences retire immediately.
+//!
+//! Per-request life cycle (see `docs/serving.md`):
+//!
+//! ```text
+//! queued ── admit ──▶ prefill ── first token ──▶ decode ──▶ retired
+//!   │  (AdmissionQueue: linger,      (prompt in window,       (Completion:
+//!   │   backpressure, cancel)         first layer walk)        queue/prefill/
+//!   └── cancel / shutdown ──▶ rejected                         decode timing)
+//! ```
+//!
+//! The session is single-threaded by design — the PJRT runtime is
+//! thread-confined — so the serving front end owns it on a dedicated
+//! compute thread and talks to it through typed [`ServeReply`] handles.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{AdmissionConfig, AdmissionQueue, AdmitError, QueueStats, Request};
+use crate::metrics::{Counter, Gauge, Registry};
+
+/// A model that can advance a full slot batch by one greedy token per
+/// row with a single layer walk. Implemented by
+/// [`super::engine::InferenceEngine`]; tests use synthetic models.
+pub trait DecodeModel {
+    /// Number of generation slots (the artifact's batch dimension B).
+    fn slots(&self) -> usize;
+    /// Token window length per slot (the artifact's sequence length T).
+    fn window(&self) -> usize;
+    /// One decode step over the whole `[B, T]` window set: returns the
+    /// next token for every row, dead rows included (they burn compute —
+    /// the waste the admission policy exists to minimise).
+    fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>>;
+}
+
+/// Where a slot is in the request life cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotPhase {
+    /// No request bound; the row is padding in the next step.
+    Free,
+    /// Admitted, prompt loaded, no token produced yet.
+    Prefill,
+    /// At least one token produced, still under `max_tokens`.
+    Decode,
+    /// Generation finished (or cancelled); awaiting retirement.
+    Done,
+}
+
+/// One generation slot: the fixed-length sliding token window plus the
+/// bound request's progress and timing marks.
+#[derive(Debug, Clone)]
+pub struct SlotState {
+    phase: SlotPhase,
+    id: u64,
+    window: Vec<i32>,
+    out: Vec<i32>,
+    max_tokens: usize,
+    arrived: Instant,
+    admitted: Instant,
+    first_token: Option<Instant>,
+    cancelled: bool,
+}
+
+impl SlotState {
+    /// A free slot with a zeroed window of length `window_len`.
+    pub fn free(window_len: usize) -> SlotState {
+        let now = Instant::now();
+        SlotState {
+            phase: SlotPhase::Free,
+            id: 0,
+            window: vec![0; window_len],
+            out: Vec::new(),
+            max_tokens: 0,
+            arrived: now,
+            admitted: now,
+            first_token: None,
+            cancelled: false,
+        }
+    }
+
+    pub fn phase(&self) -> SlotPhase {
+        self.phase
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Live slots take part in decode steps (prefill or decode phase).
+    pub fn is_live(&self) -> bool {
+        matches!(self.phase, SlotPhase::Prefill | SlotPhase::Decode)
+    }
+
+    pub fn window_tokens(&self) -> &[i32] {
+        &self.window
+    }
+
+    /// Bind a request: load its prompt right-aligned into the window
+    /// (keeping the last T tokens of long prompts) and enter `Prefill`.
+    /// `max_tokens` is clamped to ≥ 1 — a slot always produces at least
+    /// one token; zero-token no-ops are the caller's job (the HTTP layer
+    /// replies to `max_tokens: 0` immediately without submitting).
+    fn admit(&mut self, req: Request, now: Instant) {
+        let t = self.window.len();
+        self.window.iter_mut().for_each(|w| *w = 0);
+        let n = req.prompt.len().min(t);
+        self.window[t - n..].copy_from_slice(&req.prompt[req.prompt.len() - n..]);
+        self.phase = SlotPhase::Prefill;
+        self.id = req.id;
+        self.out.clear();
+        self.max_tokens = req.max_tokens.max(1);
+        self.arrived = req.arrived;
+        self.admitted = now;
+        self.first_token = None;
+        self.cancelled = false;
+    }
+
+    /// Append one generated token, sliding the window. Transitions
+    /// `Prefill → Decode` on the first token and `→ Done` at
+    /// `max_tokens`. Returns true when the sequence just finished.
+    fn push_token(&mut self, tok: i32, now: Instant) -> bool {
+        debug_assert!(self.is_live());
+        self.window.rotate_left(1);
+        *self.window.last_mut().unwrap() = tok;
+        self.out.push(tok);
+        if self.first_token.is_none() {
+            self.first_token = Some(now);
+        }
+        self.phase = if self.out.len() >= self.max_tokens { SlotPhase::Done } else { SlotPhase::Decode };
+        self.phase == SlotPhase::Done
+    }
+
+    /// Retire a `Done` (or cancelled live) slot into its [`Completion`],
+    /// freeing the slot. Returns `None` if there is nothing to retire.
+    pub fn retire(&mut self, now: Instant) -> Option<Completion> {
+        let retirable = self.phase == SlotPhase::Done || (self.is_live() && self.cancelled);
+        if !retirable {
+            return None;
+        }
+        let first = self.first_token.unwrap_or(now);
+        let completion = Completion {
+            id: self.id,
+            tokens: std::mem::take(&mut self.out),
+            finish: if self.cancelled { FinishReason::Cancelled } else { FinishReason::Length },
+            queue: self.admitted.saturating_duration_since(self.arrived),
+            prefill: first.saturating_duration_since(self.admitted),
+            decode: now.saturating_duration_since(first),
+        };
+        self.phase = SlotPhase::Free;
+        self.cancelled = false;
+        Some(completion)
+    }
+}
+
+/// Why a sequence stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Reached its `max_tokens` budget.
+    Length,
+    /// Cancelled while queued-for or occupying a slot.
+    Cancelled,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Length => "length",
+            FinishReason::Cancelled => "cancelled",
+        }
+    }
+}
+
+/// The per-request result, with the life-cycle timing split the
+/// batch-synchronous path could never report.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Arrival → slot admission.
+    pub queue: Duration,
+    /// Admission → first generated token.
+    pub prefill: Duration,
+    /// First → last generated token.
+    pub decode: Duration,
+}
+
+impl Completion {
+    /// End-to-end latency as the session saw it.
+    pub fn latency(&self) -> Duration {
+        self.queue + self.prefill + self.decode
+    }
+}
+
+/// Typed reply delivered through a per-request handle (the serving
+/// front end resolves each submitted request with exactly one of these).
+#[derive(Debug, Clone)]
+pub enum ServeReply {
+    Done(Completion),
+    Rejected(RejectReason),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// Admission queue at its bound — shed load.
+    QueueFull,
+    /// Server is draining; request was still queued.
+    ShuttingDown,
+}
+
+impl RejectReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RejectReason::QueueFull => "overloaded",
+            RejectReason::ShuttingDown => "shutting_down",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct SessionConfig {
+    pub admission: AdmissionConfig,
+}
+
+/// Monotonic session counters (also published to the metrics registry
+/// as `serve.*`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    /// Decode steps executed (layer walks).
+    pub steps: u64,
+    /// Slot-steps that advanced a live sequence.
+    pub slot_steps: u64,
+    /// Slot-steps burned on free rows (padding waste).
+    pub padded_slot_steps: u64,
+    pub admitted: u64,
+    pub retired: u64,
+    pub cancelled: u64,
+}
+
+/// Outcome of one raw [`advance`] call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepReport {
+    pub live: usize,
+    pub padded: usize,
+    pub finished: usize,
+}
+
+/// Advance every live slot by exactly one token with a single layer
+/// walk of `model`. Free/`Done` rows ride along as padding. This is the
+/// reentrant core both [`ServeSession::tick`] and
+/// [`super::engine::InferenceEngine::decode_step`] drive.
+pub fn advance<M: DecodeModel + ?Sized>(
+    model: &mut M,
+    slots: &mut [SlotState],
+) -> Result<StepReport> {
+    anyhow::ensure!(
+        slots.len() == model.slots(),
+        "slot count {} must match model batch {}",
+        slots.len(),
+        model.slots()
+    );
+    let windows: Vec<Vec<i32>> = slots.iter().map(|s| s.window.clone()).collect();
+    let toks = model.step_tokens(&windows)?;
+    anyhow::ensure!(
+        toks.len() == slots.len(),
+        "model returned {} tokens for {} slots",
+        toks.len(),
+        slots.len()
+    );
+    let now = Instant::now();
+    let mut rep = StepReport::default();
+    for (slot, &tok) in slots.iter_mut().zip(&toks) {
+        if slot.is_live() {
+            rep.live += 1;
+            if slot.push_token(tok, now) {
+                rep.finished += 1;
+            }
+        } else {
+            rep.padded += 1;
+        }
+    }
+    Ok(rep)
+}
+
+/// The continuous-batching engine: owns B slots, the admission queue,
+/// and the model. Single-threaded; drive it with [`tick`](Self::tick).
+pub struct ServeSession<M: DecodeModel> {
+    model: M,
+    slots: Vec<SlotState>,
+    queue: AdmissionQueue,
+    // cached registry handles (serve.* namespace) — the single source of
+    // truth for session statistics; `stats()` reads them back
+    c_steps: std::sync::Arc<Counter>,
+    c_slot_steps: std::sync::Arc<Counter>,
+    c_padded: std::sync::Arc<Counter>,
+    c_admitted: std::sync::Arc<Counter>,
+    c_retired: std::sync::Arc<Counter>,
+    c_cancelled: std::sync::Arc<Counter>,
+    g_live: std::sync::Arc<Gauge>,
+    g_queue: std::sync::Arc<Gauge>,
+    g_slots: std::sync::Arc<Gauge>,
+}
+
+impl<M: DecodeModel> ServeSession<M> {
+    pub fn new(model: M, cfg: SessionConfig, registry: Registry) -> ServeSession<M> {
+        let b = model.slots();
+        let t = model.window();
+        assert!(b >= 1 && t >= 1, "model must expose at least one slot and token");
+        let g_slots = registry.gauge("serve.slots_total");
+        g_slots.set(b as u64);
+        ServeSession {
+            slots: (0..b).map(|_| SlotState::free(t)).collect(),
+            model,
+            queue: AdmissionQueue::new(cfg.admission),
+            c_steps: registry.counter("serve.steps"),
+            c_slot_steps: registry.counter("serve.slot_steps"),
+            c_padded: registry.counter("serve.padded_slot_steps"),
+            c_admitted: registry.counter("serve.admitted"),
+            c_retired: registry.counter("serve.retired"),
+            c_cancelled: registry.counter("serve.cancelled"),
+            g_live: registry.gauge("serve.slots_live"),
+            g_queue: registry.gauge("serve.queue_depth"),
+            g_slots,
+        }
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Slots currently decoding (or holding a just-finished sequence).
+    pub fn live(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_live()).count()
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn idle(&self) -> bool {
+        self.live() == 0 && self.queue.is_empty() && !self.slots.iter().any(|s| s.phase() == SlotPhase::Done)
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        SessionStats {
+            steps: self.c_steps.count(),
+            slot_steps: self.c_slot_steps.count(),
+            padded_slot_steps: self.c_padded.count(),
+            admitted: self.c_admitted.count(),
+            retired: self.c_retired.count(),
+            cancelled: self.c_cancelled.count(),
+        }
+    }
+
+    /// Ids of the requests currently occupying slots (used by the
+    /// server's bounded shutdown drain).
+    pub fn live_ids(&self) -> Vec<u64> {
+        self.slots.iter().filter(|s| s.is_live()).map(|s| s.id()).collect()
+    }
+
+    pub fn queue_stats(&self) -> QueueStats {
+        self.queue.stats()
+    }
+
+    /// Submit a request arriving now. Backpressure surfaces as a typed
+    /// error, never a dropped reply.
+    pub fn submit(&mut self, id: u64, prompt: Vec<i32>, max_tokens: usize) -> Result<(), AdmitError> {
+        self.submit_request(Request { id, prompt, max_tokens, arrived: Instant::now() })
+    }
+
+    /// Submit with an explicit arrival stamp (tests, replay, requeue).
+    pub fn submit_request(&mut self, req: Request) -> Result<(), AdmitError> {
+        let out = self.queue.push(req);
+        self.g_queue.set(self.queue.len() as u64);
+        out
+    }
+
+    /// Cancel a request wherever it is: dequeued if still waiting
+    /// (returns true, no completion), or flagged if live — the next tick
+    /// retires it with [`FinishReason::Cancelled`].
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.queue.cancel(id) {
+            self.g_queue.set(self.queue.len() as u64);
+            return true;
+        }
+        for slot in &mut self.slots {
+            if slot.is_live() && slot.id() == id && !slot.cancelled {
+                slot.cancelled = true;
+                self.c_cancelled.inc();
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Evict everything still queued without running it (shutdown path;
+    /// caller replies `shutting_down` to each).
+    pub fn evict_queued(&mut self) -> Vec<Request> {
+        let out = self.queue.drain();
+        self.g_queue.set(0);
+        out
+    }
+
+    /// One scheduler round: retire cancelled slots, admit from the
+    /// queue into free slots, run one decode step across live slots,
+    /// retire finished sequences. Returns the completions this round
+    /// produced (possibly empty — e.g. the queue is lingering).
+    pub fn tick(&mut self) -> Result<Vec<Completion>> {
+        self.tick_inner(false)
+    }
+
+    /// Run rounds until the session is idle, force-admitting partial
+    /// batches (no linger — this is a flush). Returns all completions.
+    pub fn run_to_idle(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        while !self.idle() {
+            done.extend(self.tick_inner(true)?);
+        }
+        Ok(done)
+    }
+
+    fn tick_inner(&mut self, force_admit: bool) -> Result<Vec<Completion>> {
+        let now = Instant::now();
+        let mut done = Vec::new();
+
+        // Retire cancelled-in-flight slots before spending compute.
+        for slot in &mut self.slots {
+            if slot.is_live() && slot.cancelled {
+                if let Some(c) = slot.retire(now) {
+                    self.c_retired.inc();
+                    done.push(c);
+                }
+            }
+        }
+
+        // Admit between steps: freed slots refill before the next walk.
+        let free = self.slots.iter().filter(|s| s.phase() == SlotPhase::Free).count();
+        if free > 0 {
+            // During a flush, pretend the engine is live so partial
+            // batches skip the linger.
+            let live = if force_admit { 1 } else { self.slots.len() - free };
+            let admitted = self.queue.pop_ready(free, live, now);
+            let mut it = admitted.into_iter();
+            for slot in &mut self.slots {
+                if slot.phase() != SlotPhase::Free {
+                    continue;
+                }
+                match it.next() {
+                    Some(req) => {
+                        slot.admit(req, now);
+                        self.c_admitted.inc();
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.g_queue.set(self.queue.len() as u64);
+
+        if self.live() == 0 {
+            self.g_live.set(0);
+            return Ok(done);
+        }
+
+        // One layer walk advances every live slot by one token.
+        let rep = advance(&mut self.model, &mut self.slots)?;
+        self.c_steps.inc();
+        self.c_slot_steps.add(rep.live as u64);
+        self.c_padded.add(rep.padded as u64);
+
+        // Retire finished sequences immediately — their slots are free
+        // for admission on the very next tick.
+        let after = Instant::now();
+        for slot in &mut self.slots {
+            if slot.phase() == SlotPhase::Done {
+                if let Some(c) = slot.retire(after) {
+                    self.c_retired.inc();
+                    done.push(c);
+                }
+            }
+        }
+        self.g_live.set(self.live() as u64);
+        Ok(done)
+    }
+}
+
+/// Test-only helpers shared by the session and server test suites.
+#[cfg(test)]
+pub(crate) mod testing {
+    use super::DecodeModel;
+    use anyhow::Result;
+
+    /// Deterministic toy model: next token = last window token + 1.
+    pub struct EchoModel {
+        pub b: usize,
+        pub t: usize,
+        pub steps: u64,
+    }
+
+    impl EchoModel {
+        pub fn new(b: usize, t: usize) -> EchoModel {
+            EchoModel { b, t, steps: 0 }
+        }
+    }
+
+    impl DecodeModel for EchoModel {
+        fn slots(&self) -> usize {
+            self.b
+        }
+        fn window(&self) -> usize {
+            self.t
+        }
+        fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>> {
+            self.steps += 1;
+            Ok(windows.iter().map(|w| w.last().copied().unwrap_or(0) + 1).collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testing::EchoModel;
+    use super::*;
+    use crate::infer::batcher::AdmissionConfig;
+    use std::time::Duration;
+
+    fn session(b: usize) -> ServeSession<EchoModel> {
+        ServeSession::new(
+            EchoModel::new(b, 8),
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 16, linger: Duration::ZERO },
+            },
+            Registry::new(),
+        )
+    }
+
+    #[test]
+    fn single_request_generates_incrementing_tokens() {
+        let mut s = session(2);
+        s.submit(7, vec![41], 3).unwrap();
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        let c = &done[0];
+        assert_eq!(c.id, 7);
+        assert_eq!(c.tokens, vec![42, 43, 44]);
+        assert_eq!(c.finish, FinishReason::Length);
+        assert!(c.latency() >= c.decode);
+    }
+
+    /// The continuous-batching property: a freed slot refills from the
+    /// queue while a long request keeps decoding, so total layer walks
+    /// are fewer than any batch-synchronous schedule of the same work.
+    #[test]
+    fn freed_slots_refill_mid_generation() {
+        let mut s = session(2);
+        s.submit(1, vec![10], 2).unwrap();
+        s.submit(2, vec![20], 5).unwrap();
+        s.submit(3, vec![30], 1).unwrap(); // queued: both slots busy
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 3);
+        // finish order: r1 (2 toks), r3 (1 tok, admitted into r1's slot), r2
+        let ids: Vec<u64> = done.iter().map(|c| c.id).collect();
+        assert_eq!(ids, vec![1, 3, 2]);
+        // slot-schedule: steps 1-2 run r1+r2, step 3 runs r3+r2, steps
+        // 4-5 run r2 alone → 5 layer walks. Batch-synchronous would take
+        // max(2,5) + 1 = 6.
+        assert_eq!(s.stats().steps, 5);
+        assert_eq!(s.stats().slot_steps, 2 + 5 + 1);
+        assert_eq!(s.stats().padded_slot_steps, 2 * 5 - 8);
+        assert_eq!(s.stats().retired, 3);
+    }
+
+    #[test]
+    fn completion_timing_phases_are_ordered() {
+        let mut s = session(1);
+        s.submit(1, vec![5, 6, 7], 4).unwrap();
+        let done = s.run_to_idle().unwrap();
+        let c = &done[0];
+        assert_eq!(c.tokens.len(), 4);
+        // queue ≥ 0, prefill covers the first layer walk, decode the rest
+        assert!(c.latency() >= c.prefill + c.decode);
+    }
+
+    #[test]
+    fn cancel_queued_never_completes() {
+        let mut s = session(1);
+        s.submit(1, vec![1], 8).unwrap();
+        s.submit(2, vec![2], 8).unwrap(); // waits: one slot
+        // run one tick so r1 occupies the slot
+        let _ = s.tick().unwrap();
+        assert!(s.cancel(2), "queued request cancels");
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn cancel_live_retires_with_cancelled_reason() {
+        let mut s = session(1);
+        s.submit(1, vec![1], 100).unwrap();
+        let _ = s.tick().unwrap();
+        let _ = s.tick().unwrap();
+        assert!(s.cancel(1));
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].finish, FinishReason::Cancelled);
+        assert_eq!(done[0].tokens.len(), 2, "keeps tokens generated before cancel");
+    }
+
+    #[test]
+    fn backpressure_is_typed() {
+        let mut s = ServeSession::new(
+            EchoModel::new(1, 8),
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 1, linger: Duration::ZERO },
+            },
+            Registry::new(),
+        );
+        s.submit(1, vec![1], 4).unwrap();
+        let _ = s.tick().unwrap(); // r1 → slot, queue empty again
+        s.submit(2, vec![2], 4).unwrap(); // fills the queue bound
+        assert_eq!(s.submit(3, vec![3], 4), Err(AdmitError::QueueFull));
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 2);
+    }
+
+    #[test]
+    fn evict_queued_for_shutdown() {
+        let mut s = session(1);
+        s.submit(1, vec![1], 4).unwrap();
+        let _ = s.tick().unwrap(); // r1 → slot
+        s.submit(2, vec![2], 4).unwrap();
+        s.submit(3, vec![3], 4).unwrap();
+        let evicted = s.evict_queued();
+        assert_eq!(evicted.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 1, "in-flight slot drains to completion");
+        assert_eq!(done[0].id, 1);
+    }
+
+    #[test]
+    fn registry_counters_and_gauges_published() {
+        let reg = Registry::new();
+        let mut s = ServeSession::new(
+            EchoModel::new(2, 8),
+            SessionConfig::default(),
+            reg.clone(),
+        );
+        s.submit(1, vec![1], 2).unwrap();
+        s.submit(2, vec![2], 2).unwrap();
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(reg.counter("serve.steps").count(), s.stats().steps);
+        assert_eq!(reg.counter("serve.retired").count(), 2);
+        assert_eq!(reg.gauge("serve.slots_total").get(), 2);
+        assert_eq!(reg.gauge("serve.slots_live").get(), 0);
+    }
+
+    #[test]
+    fn raw_advance_reports_padding() {
+        let mut model = EchoModel::new(3, 4);
+        let mut slots: Vec<SlotState> = (0..3).map(|_| SlotState::free(4)).collect();
+        slots[0].admit(
+            Request { id: 1, prompt: vec![9], max_tokens: 2, arrived: Instant::now() },
+            Instant::now(),
+        );
+        let rep = advance(&mut model, &mut slots).unwrap();
+        assert_eq!((rep.live, rep.padded, rep.finished), (1, 2, 0));
+        let rep = advance(&mut model, &mut slots).unwrap();
+        assert_eq!((rep.live, rep.padded, rep.finished), (1, 2, 1));
+        let c = slots[0].retire(Instant::now()).unwrap();
+        assert_eq!(c.tokens, vec![10, 11]);
+    }
+
+    #[test]
+    fn long_prompt_keeps_window_tail() {
+        let mut s = session(1);
+        let prompt: Vec<i32> = (0..20).collect(); // window is 8
+        s.submit(1, prompt, 1).unwrap();
+        let done = s.run_to_idle().unwrap();
+        // last prompt token is 19 → echo yields 20
+        assert_eq!(done[0].tokens, vec![20]);
+    }
+}

@@ -21,7 +21,11 @@
 //! - [`train`] — trainer over the runtime, elastic scheduling (§4.1),
 //!   embedding partition in data parallelism (§4.3).
 //! - [`infer`] — ring-memory offload engine (§3.2), the six-step graph
-//!   pipeline (§3.1), request batcher + HTTP server.
+//!   pipeline (§3.1), and the continuous-batching serving stack: an
+//!   admission queue (linger, backpressure, cancellation) feeding a
+//!   slot-based `ServeSession` — per-token slot scheduling, requests
+//!   admitted/retired between decode steps — behind the HTTP front end
+//!   (queued → prefill → decode → retired; `docs/serving.md`).
 //! - [`sim`] — calibrated cluster cost-model simulator and the
 //!   DeepSpeed-like baseline schedule used by the paper's tables.
 //! - [`metrics`] — counters, timelines, report writers.

@@ -176,42 +176,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 fn run_server_blocking(preset: &str, bind: &str, ring: usize) -> Result<()> {
     use semoe::infer::server::{Server, ServerStats};
-    use semoe::infer::{BatcherConfig, Request};
-    use std::sync::mpsc::channel;
+    use semoe::infer::SessionConfig;
     use std::sync::Arc;
 
-    // PJRT is thread-confined: the engine lives on a dedicated thread
-    // that the server's compute callback forwards into.
-    let (req_tx, req_rx) = channel::<(Vec<Request>, std::sync::mpsc::Sender<Vec<Vec<i32>>>)>();
-    let preset_owned = preset.to_string();
-    std::thread::spawn(move || {
-        let arts = Rc::new(ModelArtifacts::load(&preset_owned).expect("artifacts"));
-        let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
-        let mut engine = InferenceEngine::new(arts, mode, 7, None).expect("engine");
-        while let Ok((reqs, reply)) = req_rx.recv() {
-            let b = engine.arts.preset.batch_size;
-            let mut prompts: Vec<Vec<i32>> = reqs.iter().map(|r| r.prompt.clone()).collect();
-            prompts.resize(b, Vec::new());
-            let max_new = reqs.iter().map(|r| r.max_tokens).max().unwrap_or(1);
-            let gen = engine.generate(&prompts, max_new).unwrap_or_default();
-            let out = reqs
-                .iter()
-                .enumerate()
-                .map(|(i, r)| {
-                    gen.get(i)
-                        .map(|g| g[..r.max_tokens.min(g.len())].to_vec())
-                        .unwrap_or_default()
-                })
-                .collect();
-            let _ = reply.send(out);
-        }
-    });
-
+    // PJRT is thread-confined: the model factory runs on the server's
+    // dedicated compute thread, which owns the slot session end to end.
     let stats = Arc::new(ServerStats::default());
-    let server = Server::start(bind, BatcherConfig::default(), stats, move |reqs| {
-        let (tx, rx) = channel();
-        let _ = req_tx.send((reqs.to_vec(), tx));
-        rx.recv().unwrap_or_default()
+    let preset_owned = preset.to_string();
+    let server = Server::start(bind, SessionConfig::default(), stats, move || {
+        let arts = Rc::new(ModelArtifacts::load(&preset_owned)?);
+        let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
+        InferenceEngine::new(arts, mode, 7, None)
     })?;
     println!("listening on {} — POST /generate, GET /healthz, GET /stats", server.addr);
     loop {

@@ -38,10 +38,28 @@ impl Counter {
     }
 }
 
-/// Named counter registry; cheap to clone (Arc).
+/// Last-value gauge (e.g. live serving slots, queue depth). Unlike
+/// [`Counter`] it is set, not accumulated.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Named counter/gauge registry; cheap to clone (Arc).
 #[derive(Debug, Clone, Default)]
 pub struct Registry {
     inner: Arc<Mutex<BTreeMap<String, Arc<Counter>>>>,
+    gauges: Arc<Mutex<BTreeMap<String, Arc<Gauge>>>>,
 }
 
 impl Registry {
@@ -52,6 +70,11 @@ impl Registry {
     pub fn counter(&self, name: &str) -> Arc<Counter> {
         let mut m = self.inner.lock().unwrap();
         m.entry(name.to_string()).or_insert_with(|| Arc::new(Counter::default())).clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut m = self.gauges.lock().unwrap();
+        m.entry(name.to_string()).or_insert_with(|| Arc::new(Gauge::default())).clone()
     }
 
     /// Time a closure into `name` (count + total seconds).
@@ -75,7 +98,11 @@ impl Registry {
                 ]),
             ));
         }
-        Json::obj(obj)
+        let mut out = Json::obj(obj);
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.set(k, Json::obj(vec![("value", Json::num(g.get() as f64))]));
+        }
+        out
     }
 }
 
@@ -138,6 +165,21 @@ mod tests {
         r.counter("a").inc();
         let j = r.snapshot();
         assert_eq!(j.get("a").get("count").as_usize(), Some(1));
+    }
+
+    #[test]
+    fn gauges_set_and_snapshot() {
+        let r = Registry::new();
+        r.gauge("live").set(3);
+        assert_eq!(r.gauge("live").get(), 3);
+        r.gauge("live").set(1);
+        assert_eq!(r.gauge("live").get(), 1);
+        let j = r.snapshot();
+        assert_eq!(j.get("live").get("value").as_usize(), Some(1));
+        // shared across clones like counters
+        let r2 = r.clone();
+        r2.gauge("live").set(9);
+        assert_eq!(r.gauge("live").get(), 9);
     }
 
     #[test]

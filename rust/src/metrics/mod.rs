@@ -7,6 +7,6 @@ pub mod counters;
 pub mod timeline;
 pub mod report;
 
-pub use counters::{Counter, Registry, Timer};
+pub use counters::{Counter, Gauge, Registry, Timer};
 pub use timeline::{Phase, Timeline};
 pub use report::Report;

@@ -1,5 +1,7 @@
-//! Paper-scale inference simulation: Table 2 (throughput vs DeepSpeed)
-//! and Figure 10 (ring-memory offload overlap + memory saving).
+//! Paper-scale inference simulation: Table 2 (throughput vs DeepSpeed),
+//! Figure 10 (ring-memory offload overlap + memory saving), and the
+//! serving-schedule comparison (batch-synchronous vs continuous
+//! batching) backing the `infer::session` redesign.
 
 use super::baseline::{deepspeed, semoe};
 use super::cost_model::CostModel;
@@ -97,6 +99,182 @@ pub fn simulate_ring_offload(model: &ModelConfig, cluster: &ClusterConfig, k: us
     }
 }
 
+// ---------------------------------------------------------------------
+// Serving-schedule simulation: batch-synchronous vs continuous batching.
+//
+// Unit of time is one decode step (one layer walk of the whole [B, T]
+// batch) — on this substrate every step costs the same regardless of
+// how many slots are live, which is exactly why padding and hostage
+// slots hurt. The sim is discrete and deterministic.
+
+/// One serving request for the schedule sim.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeRequest {
+    /// Step index at which the request arrives.
+    pub arrive_step: usize,
+    /// Tokens to decode (= steps of work once slotted).
+    pub decode_steps: usize,
+}
+
+/// Outcome of one schedule over a workload.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScheduleReport {
+    /// Steps during which the engine ran (idle gaps excluded).
+    pub busy_steps: usize,
+    /// Step at which the last request finished.
+    pub makespan: usize,
+    /// Slot-steps spent advancing live sequences (useful work).
+    pub live_slot_steps: usize,
+    /// Slot-steps burned on padding / finished-but-held slots.
+    pub wasted_slot_steps: usize,
+    /// Total tokens decoded (== Σ decode_steps; sanity anchor).
+    pub tokens: usize,
+    pub mean_latency_steps: f64,
+    pub p95_latency_steps: f64,
+}
+
+impl ScheduleReport {
+    /// Decoded tokens per busy step — the device-efficiency metric.
+    pub fn tokens_per_step(&self) -> f64 {
+        self.tokens as f64 / (self.busy_steps.max(1)) as f64
+    }
+
+    /// Fraction of slot-steps doing useful work.
+    pub fn utilization(&self) -> f64 {
+        let total = self.live_slot_steps + self.wasted_slot_steps;
+        self.live_slot_steps as f64 / total.max(1) as f64
+    }
+}
+
+/// Both schedules over the same workload.
+#[derive(Debug, Clone, Copy)]
+pub struct ServingComparison {
+    pub synchronous: ScheduleReport,
+    pub continuous: ScheduleReport,
+}
+
+impl ServingComparison {
+    /// Continuous-batching throughput gain (tokens per busy step).
+    pub fn speedup(&self) -> f64 {
+        self.continuous.tokens_per_step() / self.synchronous.tokens_per_step().max(1e-12)
+    }
+}
+
+fn finish_report(
+    busy_steps: usize,
+    makespan: usize,
+    live_slot_steps: usize,
+    wasted: usize,
+    latencies: &mut Vec<f64>,
+) -> ScheduleReport {
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = latencies.len();
+    let mean = latencies.iter().sum::<f64>() / n.max(1) as f64;
+    let p95 = if n == 0 { 0.0 } else { latencies[((n - 1) as f64 * 0.95).round() as usize] };
+    ScheduleReport {
+        busy_steps,
+        makespan,
+        live_slot_steps,
+        wasted_slot_steps: wasted,
+        tokens: live_slot_steps,
+        mean_latency_steps: mean,
+        p95_latency_steps: p95,
+    }
+}
+
+/// Batch-synchronous schedule: form a batch of ≤ `slots` from the FIFO
+/// queue, run it lock-step for max(decode_steps) of its members, only
+/// then reply and re-form. Finished members hold their slot until the
+/// longest member completes; missing members are padding.
+fn run_synchronous(reqs: &[ServeRequest], slots: usize) -> ScheduleReport {
+    let mut order: Vec<ServeRequest> = reqs.to_vec();
+    order.sort_by_key(|r| r.arrive_step);
+    let mut t = 0usize;
+    let mut next = 0usize;
+    let (mut busy, mut live, mut wasted) = (0usize, 0usize, 0usize);
+    let mut latencies: Vec<f64> = Vec::new();
+    while next < order.len() {
+        if order[next].arrive_step > t {
+            t = order[next].arrive_step; // idle-jump to the next arrival
+        }
+        // everyone already here joins, up to the batch width
+        let mut batch: Vec<ServeRequest> = Vec::new();
+        while next < order.len() && order[next].arrive_step <= t && batch.len() < slots {
+            batch.push(order[next]);
+            next += 1;
+        }
+        let dur = batch.iter().map(|r| r.decode_steps).max().unwrap_or(0);
+        busy += dur;
+        for r in &batch {
+            live += r.decode_steps;
+            // hostage steps: slot held after this member finished
+            wasted += dur - r.decode_steps;
+            latencies.push((t + dur - r.arrive_step) as f64);
+        }
+        // padding rows for the whole batch duration
+        wasted += (slots - batch.len()) * dur;
+        t += dur;
+    }
+    finish_report(busy, t, live, wasted, &mut latencies)
+}
+
+/// Continuous-batching schedule: per-step slot scheduling — arrivals
+/// admit into free slots between steps, finished sequences retire and
+/// free their slot immediately.
+fn run_continuous(reqs: &[ServeRequest], slots: usize) -> ScheduleReport {
+    let mut order: Vec<ServeRequest> = reqs.to_vec();
+    order.sort_by_key(|r| r.arrive_step);
+    let mut t = 0usize;
+    let mut next = 0usize;
+    let (mut busy, mut live_steps, mut wasted) = (0usize, 0usize, 0usize);
+    let mut latencies: Vec<f64> = Vec::new();
+    // (remaining, arrive_step) per live slot
+    let mut live: Vec<(usize, usize)> = Vec::new();
+    let mut done = 0usize;
+    while done < order.len() {
+        // admit arrivals into free slots
+        while next < order.len() && order[next].arrive_step <= t && live.len() < slots {
+            live.push((order[next].decode_steps, order[next].arrive_step));
+            next += 1;
+        }
+        if live.is_empty() {
+            t = order[next].arrive_step; // idle-jump
+            continue;
+        }
+        // one decode step across all slots
+        busy += 1;
+        live_steps += live.len();
+        wasted += slots - live.len();
+        t += 1;
+        live.retain_mut(|(rem, arrive)| {
+            *rem -= 1;
+            if *rem == 0 {
+                latencies.push((t - *arrive) as f64);
+                done += 1;
+                false
+            } else {
+                true
+            }
+        });
+    }
+    finish_report(busy, t, live_steps, wasted, &mut latencies)
+}
+
+/// Price both serving schedules over the same workload on `slots`
+/// generation slots (the continuous-vs-synchronous comparison behind
+/// `infer::session`).
+pub fn simulate_serving(reqs: &[ServeRequest], slots: usize) -> ServingComparison {
+    assert!(slots >= 1, "need at least one slot");
+    assert!(
+        reqs.iter().all(|r| r.decode_steps >= 1),
+        "every request must decode at least one token"
+    );
+    ServingComparison {
+        synchronous: run_synchronous(reqs, slots),
+        continuous: run_continuous(reqs, slots),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -147,5 +325,55 @@ mod tests {
             assert!(r.t_ring <= prev + 1e-12);
             prev = r.t_ring;
         }
+    }
+
+    fn mixed_workload() -> Vec<ServeRequest> {
+        // short/long interleaved, bursty arrivals — the regime where
+        // batch-synchronous decode holds finished slots hostage
+        (0..32)
+            .map(|i| ServeRequest {
+                arrive_step: (i / 8) * 4,
+                decode_steps: if i % 2 == 0 { 2 } else { 24 },
+            })
+            .collect()
+    }
+
+    #[test]
+    fn continuous_beats_synchronous_on_mixed_lengths() {
+        let cmp = simulate_serving(&mixed_workload(), 8);
+        assert!(
+            cmp.speedup() > 1.2,
+            "continuous should clearly win on mixed lengths: {:.3}x",
+            cmp.speedup()
+        );
+        assert!(
+            cmp.continuous.mean_latency_steps < cmp.synchronous.mean_latency_steps,
+            "latency: cont {:.1} vs sync {:.1}",
+            cmp.continuous.mean_latency_steps,
+            cmp.synchronous.mean_latency_steps
+        );
+        assert!(cmp.continuous.utilization() > cmp.synchronous.utilization());
+    }
+
+    #[test]
+    fn schedules_agree_on_uniform_lockstep_workload() {
+        // same length, aligned arrivals, exact multiples of the batch:
+        // continuous degenerates to batch-synchronous
+        let reqs: Vec<ServeRequest> =
+            (0..16).map(|_| ServeRequest { arrive_step: 0, decode_steps: 8 }).collect();
+        let cmp = simulate_serving(&reqs, 4);
+        assert_eq!(cmp.synchronous.busy_steps, cmp.continuous.busy_steps);
+        assert!((cmp.speedup() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serving_sim_conserves_tokens() {
+        let reqs = mixed_workload();
+        let want: usize = reqs.iter().map(|r| r.decode_steps).sum();
+        let cmp = simulate_serving(&reqs, 8);
+        assert_eq!(cmp.synchronous.tokens, want);
+        assert_eq!(cmp.continuous.tokens, want);
+        // continuous can never do worse than synchronous on busy steps
+        assert!(cmp.continuous.busy_steps <= cmp.synchronous.busy_steps);
     }
 }

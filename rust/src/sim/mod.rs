@@ -18,5 +18,8 @@ pub mod infer_sim;
 
 pub use cost_model::{CostModel, StepCost};
 pub use event::pipeline_makespan;
-pub use infer_sim::{simulate_inference, simulate_ring_offload, InferReport, RingReport};
+pub use infer_sim::{
+    simulate_inference, simulate_ring_offload, simulate_serving, InferReport, RingReport,
+    ScheduleReport, ServeRequest, ServingComparison,
+};
 pub use train_sim::{simulate_training, Schedule, TrainReport};

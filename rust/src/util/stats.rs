@@ -54,25 +54,71 @@ impl Summary {
     }
 }
 
-/// Reservoir of samples with exact percentiles (fine for bench sizes).
-#[derive(Debug, Clone, Default)]
+/// Sample set with exact percentiles. Unbounded by default (fine for
+/// bench sizes); [`bounded`](Self::bounded) switches to reservoir
+/// sampling (Algorithm R) for long-running accumulators like serving
+/// latency, capping memory while keeping percentiles representative.
+#[derive(Debug, Clone)]
 pub struct Percentiles {
     xs: Vec<f64>,
     sorted: bool,
+    /// 0 = keep every sample.
+    cap: usize,
+    seen: u64,
+    /// xorshift64 state for reservoir replacement (deterministic seed).
+    rng: u64,
+}
+
+impl Default for Percentiles {
+    fn default() -> Self {
+        Percentiles::new()
+    }
 }
 
 impl Percentiles {
     pub fn new() -> Self {
-        Percentiles { xs: Vec::new(), sorted: true }
+        Percentiles { xs: Vec::new(), sorted: true, cap: 0, seen: 0, rng: 0x9E37_79B9_7F4A_7C15 }
+    }
+
+    /// Keep at most `cap` samples via reservoir sampling.
+    pub fn bounded(cap: usize) -> Self {
+        let mut p = Percentiles::new();
+        p.cap = cap.max(1);
+        p
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x
     }
 
     pub fn add(&mut self, x: f64) {
-        self.xs.push(x);
-        self.sorted = false;
+        self.seen += 1;
+        if self.cap == 0 || self.xs.len() < self.cap {
+            self.xs.push(x);
+            self.sorted = false;
+        } else {
+            // Algorithm R: replace a random slot with prob cap/seen.
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.xs[j as usize] = x;
+                self.sorted = false;
+            }
+        }
     }
 
+    /// Samples currently held (≤ cap when bounded).
     pub fn len(&self) -> usize {
         self.xs.len()
+    }
+
+    /// Total samples ever offered.
+    pub fn seen(&self) -> u64 {
+        self.seen
     }
 
     pub fn is_empty(&self) -> bool {
@@ -156,6 +202,29 @@ mod tests {
         assert!((p.quantile(0.0) - 1.0).abs() < 1e-9);
         assert!((p.quantile(1.0) - 100.0).abs() < 1e-9);
         assert!(p.p99() > 98.0);
+    }
+
+    #[test]
+    fn bounded_reservoir_caps_memory_and_stays_representative() {
+        let mut p = Percentiles::bounded(128);
+        for x in 0..100_000 {
+            p.add(x as f64);
+        }
+        assert_eq!(p.len(), 128, "reservoir must not grow past its cap");
+        assert_eq!(p.seen(), 100_000);
+        // a uniform stream's sampled median should land near the middle
+        let med = p.p50();
+        assert!(
+            med > 20_000.0 && med < 80_000.0,
+            "reservoir median wildly off: {}",
+            med
+        );
+        // unbounded default keeps everything
+        let mut q = Percentiles::new();
+        for x in 0..1000 {
+            q.add(x as f64);
+        }
+        assert_eq!(q.len(), 1000);
     }
 
     #[test]

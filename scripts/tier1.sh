@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 gate: build + unit/integration tests + a smoke run of the
+# serving path (examples/serve_ring_inference against the ServeSession
+# engine). Run from anywhere; CI runs this on every PR.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "tier1: cargo not found on PATH — install the Rust toolchain" >&2
+    exit 1
+fi
+
+echo "== tier1: cargo build --release"
+cargo build --release
+
+echo "== tier1: cargo test -q"
+cargo test -q
+
+echo "== tier1: serving smoke (continuous-batching HTTP path)"
+cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2
+
+echo "tier1 OK"
