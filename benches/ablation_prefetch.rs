@@ -1,29 +1,48 @@
-//! Ablation — 2D-prefetch lookahead depth: step time of the sparse lane
-//! with lookahead 0/1/2/4 against a throttled "PCIe+SSD" store, measured
-//! for real with the background scheduler, plus the analytic
-//! pipeline-makespan prediction for comparison.
+//! Ablation — the two axes of 2D prefetch:
 //!
-//! `cargo bench --bench ablation_prefetch`.
+//! 1. **Layer axis**: step time of the sparse lane with lookahead
+//!    0/1/2/4 against a throttled "PCIe+SSD" store, measured for real
+//!    with the background scheduler, plus the analytic pipeline-makespan
+//!    prediction.
+//! 2. **Expert axis**: SSD byte volume of 1D (layer-granular: every
+//!    expert, every layer) vs 2D ((layer, expert)-granular: routed set +
+//!    pinned hot set) staging, under uniform and Zipf-skewed routing,
+//!    measured on the real hierarchical store against the
+//!    `CostModel::prefetch_bytes_{1d,2d}` prediction. Under skew, 2D
+//!    must move strictly fewer bytes — the paper's unbalanced-workload
+//!    win.
+//!
+//! `cargo bench --bench ablation_prefetch`; set `SEMOE_SMOKE=1` for the
+//! tier-1 smoke run (fewer steps, same assertions).
 
 use std::time::{Duration, Instant};
 
+use semoe::config::presets::{cluster_for_gpus, table1_model};
 use semoe::metrics::Report;
+use semoe::moe::LoadStats;
 use semoe::prefetch::SparseScheduler;
 use semoe::runtime::ParamSpec;
-use semoe::sim::pipeline_makespan;
-use semoe::storage::{CacheConfig, HierarchicalStore, SsdStore, StoreConfig};
+use semoe::sim::{pipeline_makespan, CostModel};
 use semoe::storage::ssd_store::MediaPerf;
+use semoe::storage::{CacheConfig, HierarchicalStore, SsdStore, StoreConfig};
+use semoe::util::rng::ZipfTable;
+use semoe::util::Rng;
 
 const LAYERS: usize = 12;
 const BLOCK: usize = 4096; // f32 elements per record
 const IO_MS: f64 = 3.0; // per-record latency (×3 records per fetch)
 const COMPUTE_MS: f64 = 10.0;
 
-fn mk_store(cache_layers: usize) -> HierarchicalStore {
+fn smoke() -> bool {
+    std::env::var("SEMOE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// One-expert-per-layer store for the layer-axis (lookahead) table.
+fn mk_lookahead_store(cache_layers: usize) -> HierarchicalStore {
     let specs: Vec<ParamSpec> = (0..LAYERS)
         .map(|l| ParamSpec {
             name: format!("layer{}.w1", l),
-            shape: vec![BLOCK],
+            shape: vec![1, BLOCK],
             sparse: true,
             numel: BLOCK,
         })
@@ -39,26 +58,26 @@ fn mk_store(cache_layers: usize) -> HierarchicalStore {
         },
         with_moments: true,
     };
-    let mut s = HierarchicalStore::new(ssd, cfg, &specs, LAYERS).unwrap();
+    let mut s = HierarchicalStore::new(ssd, cfg, &specs, LAYERS, 1).unwrap();
     s.initialize(|_| vec![0.0; BLOCK]).unwrap();
     s
 }
 
 /// One forward sweep with `lookahead`-deep prefetch; returns wall secs.
 fn sweep(lookahead: usize) -> f64 {
-    let mut sched = SparseScheduler::spawn(mk_store(2));
+    let mut sched = SparseScheduler::spawn(mk_lookahead_store(2));
     let mut seqs: Vec<Option<u64>> = vec![None; LAYERS];
-    for l in 0..=lookahead.min(LAYERS - 1) {
-        seqs[l] = Some(sched.request(l));
+    for (l, s) in seqs.iter_mut().enumerate().take(lookahead.min(LAYERS - 1) + 1) {
+        *s = Some(sched.request(l, 0));
     }
     let compute = Duration::from_secs_f64(COMPUTE_MS / 1e3);
     let t0 = Instant::now();
     for l in 0..LAYERS {
-        let seq = seqs[l].take().unwrap_or_else(|| sched.request(l));
+        let seq = seqs[l].take().unwrap_or_else(|| sched.request(l, 0));
         let _block = sched.wait(seq).unwrap();
         let nxt = l + lookahead + 1;
         if lookahead > 0 && nxt < LAYERS {
-            seqs[nxt] = Some(sched.request(nxt));
+            seqs[nxt] = Some(sched.request(nxt, 0));
         }
         let t = Instant::now();
         while t.elapsed() < compute {
@@ -68,8 +87,102 @@ fn sweep(lookahead: usize) -> f64 {
     t0.elapsed().as_secs_f64()
 }
 
+// ---------------------------------------------------------------------
+// Expert axis: 1D vs 2D byte volume under routing skew.
+// ---------------------------------------------------------------------
+
+const EXPERTS: usize = 16;
+const E_LAYERS: usize = 6;
+const E_BLOCK: usize = 1024; // f32 elements per expert per layer
+const TOKENS: usize = 32; // routing decisions per layer per step
+
+fn mk_expert_store() -> HierarchicalStore {
+    let specs: Vec<ParamSpec> = (0..E_LAYERS)
+        .map(|l| ParamSpec {
+            name: format!("layer{}.w1", l),
+            shape: vec![EXPERTS, E_BLOCK],
+            sparse: true,
+            numel: EXPERTS * E_BLOCK,
+        })
+        .collect();
+    let cfg = StoreConfig {
+        cache: CacheConfig {
+            // Half the working set, so staging pressure is real.
+            capacity_bytes: E_LAYERS * EXPERTS * E_BLOCK * 4 * 3 / 2,
+            ..Default::default()
+        },
+        with_moments: true,
+    };
+    let mut s =
+        HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs, E_LAYERS, EXPERTS)
+            .unwrap();
+    s.initialize(|_| vec![0.5; EXPERTS * E_BLOCK]).unwrap();
+    s
+}
+
+/// Run `steps` training-step I/O patterns; returns (ssd bytes read,
+/// ssd bytes written) per step. `expert_granular` = 2D; otherwise every
+/// expert of every layer is staged (1D).
+fn expert_sweep(expert_granular: bool, zipf_s: f64, steps: usize) -> (f64, f64) {
+    let mut store = mk_expert_store();
+    let zipf = ZipfTable::new(EXPERTS, zipf_s);
+    let mut rng = Rng::new(42);
+    let mut load: Vec<LoadStats> =
+        (0..E_LAYERS).map(|_| LoadStats::new(EXPERTS, 0.5)).collect();
+    for _ in 0..steps {
+        // Pin the union of every layer's hot set for the whole step —
+        // the policy the trainer ships (per-layer pin replacement would
+        // strip protection from the other layers' hot blocks).
+        if expert_granular {
+            let pins: Vec<(usize, usize)> = (0..E_LAYERS)
+                .flat_map(|l| load[l].hot_experts(0.5).into_iter().map(move |e| (l, e)))
+                .collect();
+            store.pin_hot(&pins);
+        }
+        for l in 0..E_LAYERS {
+            // This step's routing for the layer.
+            let mut counts = vec![0usize; EXPERTS];
+            for _ in 0..TOKENS {
+                counts[zipf.sample(&mut rng)] += 1;
+            }
+            let routed: Vec<usize> =
+                (0..EXPERTS).filter(|&e| counts[e] > 0).collect();
+            let fetch_set: Vec<usize> = if expert_granular {
+                // Routed set ∪ hot set for this layer.
+                let mut s = routed.clone();
+                s.extend(load[l].hot_experts(0.5));
+                s.sort_unstable();
+                s.dedup();
+                s
+            } else {
+                (0..EXPERTS).collect()
+            };
+            for &e in &fetch_set {
+                let mut b = store.fetch(l, e).unwrap();
+                // Dirty writeback for updated (routed) experts only —
+                // 1D staging writes every expert back.
+                if !expert_granular || counts[e] > 0 {
+                    b.p[0] += 1.0;
+                    store.update(b).unwrap();
+                }
+            }
+            load[l].record(&counts);
+        }
+        store.end_step();
+    }
+    store.flush().unwrap();
+    let st = store.ssd_stats();
+    (
+        st.bytes_read as f64 / steps as f64,
+        st.bytes_written as f64 / steps as f64,
+    )
+}
+
 fn main() {
+    let steps = if smoke() { 2 } else { 6 };
     let mut rep = Report::new("ablation_prefetch");
+
+    // ---- Layer axis: lookahead depth.
     let t = rep.table(
         &format!(
             "sparse-lane lookahead ({} layers, {:.0} ms compute, {:.0} ms I/O per layer)",
@@ -80,10 +193,12 @@ fn main() {
         &["lookahead", "measured ms", "predicted ms (makespan)", "vs serial"],
     );
     let serial_pred = {
-        let (m, _) = pipeline_makespan(&[COMPUTE_MS / 1e3; LAYERS], &[3.0 * IO_MS / 1e3; LAYERS], 1);
+        let (m, _) =
+            pipeline_makespan(&[COMPUTE_MS / 1e3; LAYERS], &[3.0 * IO_MS / 1e3; LAYERS], 1);
         m
     };
-    for lookahead in [0usize, 1, 2, 4] {
+    let depths: &[usize] = if smoke() { &[0, 2] } else { &[0, 1, 2, 4] };
+    for &lookahead in depths {
         let measured = sweep(lookahead);
         let (pred, _) = pipeline_makespan(
             &[COMPUTE_MS / 1e3; LAYERS],
@@ -100,8 +215,68 @@ fn main() {
             ],
         );
     }
+
+    // ---- Expert axis: 1D vs 2D bytes under uniform / Zipf routing.
+    let t2 = rep.table(
+        &format!(
+            "1D (layer) vs 2D (expert) staging bytes/step ({} layers × {} experts, {} tokens/layer)",
+            E_LAYERS, EXPERTS, TOKENS
+        ),
+        &["granularity", "routing", "SSD read MB/step", "SSD written MB/step", "vs 1D"],
+    );
+    // Analytic prediction from the cost model (same E and token count).
+    let cm = CostModel::new(table1_model(EXPERTS, 8), cluster_for_gpus(8));
+    let mb = |b: f64| format!("{:.2}", b / (1 << 20) as f64);
+    let routings = [("uniform", 0.0), ("zipf s=1.2", 1.2)];
+    // Measure each (granularity, routing) cell exactly once; 1D first so
+    // its reads are available for the 2D rows' "vs 1D" ratio.
+    let reads_1d: Vec<(f64, f64)> =
+        routings.iter().map(|&(_, s)| expert_sweep(false, s, steps)).collect();
+    let mut zipf_read = (0.0, 0.0); // (1d, 2d) for the assertion below
+    for (granularity, expert_granular) in [("1D", false), ("2D", true)] {
+        for (i, &(routing, s)) in routings.iter().enumerate() {
+            let (rd, wr) = if expert_granular {
+                expert_sweep(true, s, steps)
+            } else {
+                reads_1d[i]
+            };
+            if s > 0.0 {
+                if expert_granular {
+                    zipf_read.1 = rd;
+                } else {
+                    zipf_read.0 = rd;
+                }
+            }
+            rep.row(
+                t2,
+                vec![
+                    granularity.to_string(),
+                    routing.to_string(),
+                    mb(rd),
+                    mb(wr),
+                    format!("{:.2}x", rd / reads_1d[i].0.max(1.0)),
+                ],
+            );
+        }
+    }
+    let predicted_frac =
+        cm.expected_routed_experts(TOKENS as f64, 1.2) / EXPERTS as f64;
+    rep.note(&format!(
+        "cost model: E[distinct experts | zipf 1.2, {} tokens] = {:.1}/{} → 2D ≈ {:.0}% of 1D bytes",
+        TOKENS,
+        cm.expected_routed_experts(TOKENS as f64, 1.2),
+        EXPERTS,
+        predicted_frac * 100.0
+    ));
     rep.note("lookahead 0 = fetch-then-compute (serial); deeper windows hide the sparse I/O \
-              behind compute exactly as Algorithm 1 intends");
+              behind compute exactly as Algorithm 1 intends. Expert-granular staging makes the \
+              streamed bytes proportional to routed load instead of model size.");
+    assert!(
+        zipf_read.1 < zipf_read.0,
+        "2D must move strictly fewer bytes than 1D under skewed routing: {} vs {}",
+        zipf_read.1,
+        zipf_read.0
+    );
     println!("{}", rep.to_markdown());
     rep.save(std::path::Path::new("reports")).expect("write report");
 }

@@ -23,6 +23,13 @@ pub struct TrainConfig {
     pub dp_degree: usize,
     /// Prefetch lookahead in layers (0 disables overlap).
     pub prefetch_depth: usize,
+    /// Expert-granular (2D) prefetch: stream only the experts the batch
+    /// routes to, plus the hot set. When false the sparse lane degrades
+    /// to 1D layer-granular staging (every expert, every layer).
+    pub expert_prefetch: bool,
+    /// Fraction of per-layer routed load whose experts get pinned in the
+    /// CPU cache (`LoadStats::hot_experts` coverage).
+    pub hot_frac: f64,
     /// CPU cache capacity as a fraction of total sparse bytes.
     pub cpu_cache_frac: f64,
     /// Zipf skew of the synthetic corpus (0 = uniform tokens).
@@ -41,6 +48,8 @@ impl Default for TrainConfig {
             residency: ParamResidency::Resident,
             dp_degree: 1,
             prefetch_depth: 1,
+            expert_prefetch: true,
+            hot_frac: 0.5,
             cpu_cache_frac: 0.5,
             corpus_skew: 1.05,
             log_every: 10,
@@ -62,6 +71,8 @@ impl TrainConfig {
             },
             dp_degree: j.get("dp_degree").as_usize().unwrap_or(d.dp_degree),
             prefetch_depth: j.get("prefetch_depth").as_usize().unwrap_or(d.prefetch_depth),
+            expert_prefetch: j.get("expert_prefetch").as_bool().unwrap_or(d.expert_prefetch),
+            hot_frac: j.get("hot_frac").as_f64().unwrap_or(d.hot_frac),
             cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
             corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
             log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
@@ -83,6 +94,8 @@ impl TrainConfig {
             ),
             ("dp_degree", Json::num(self.dp_degree as f64)),
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
+            ("expert_prefetch", Json::Bool(self.expert_prefetch)),
+            ("hot_frac", Json::num(self.hot_frac)),
             ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
             ("corpus_skew", Json::num(self.corpus_skew)),
             ("log_every", Json::num(self.log_every as f64)),

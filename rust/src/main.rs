@@ -121,9 +121,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             }
         }
         tr.flush()?;
+        let ps = tr.prefetch_stats();
         let store = tr.into_store()?;
         let cs = store.cache_stats();
         println!("cache hit rate {:.1}%  ssd erases {}", cs.hit_rate() * 100.0, store.ssd_total_erases());
+        println!(
+            "2D prefetch: {} planned, {} demand, {} wasted, {} writebacks, {} catch-up steps",
+            ps.planned_fetches, ps.demand_fetches, ps.wasted_fetches, ps.writebacks, ps.catchup_steps
+        );
     } else {
         let mut tr = ResidentTrainer::new(arts, cfg.clone())?;
         for s in 0..cfg.steps {

@@ -115,6 +115,19 @@ mod tests {
     }
 
     #[test]
+    fn zero_capacity_drops_everything_with_zero_gates() {
+        let (t, e) = (32, 4);
+        let r = top1_route(&logits(t, e, 5), t, e, 0);
+        assert_eq!(r.n_dropped(), t);
+        assert!(r.keep.iter().all(|&k| !k));
+        assert!(r.gate.iter().all(|&g| g == 0.0));
+        // Routing statistics are still well-formed (aux loss finite):
+        assert!((r.me.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!((r.ce.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        assert!(r.aux_loss().is_finite());
+    }
+
+    #[test]
     fn dropped_tokens_counted() {
         let (t, e, cap) = (32, 2, 4);
         let r = top1_route(&logits(t, e, 4), t, e, cap);

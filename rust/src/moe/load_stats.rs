@@ -29,6 +29,11 @@ impl LoadStats {
         &self.loads
     }
 
+    #[cfg(test)]
+    fn loads_mut(&mut self) -> &mut [f64] {
+        &mut self.loads
+    }
+
     pub fn steps(&self) -> u64 {
         self.steps
     }
@@ -41,17 +46,22 @@ impl LoadStats {
     /// Hot set: experts covering `frac` of total load, most-loaded first.
     /// Sizes the CPU cache (`alpha` in the §2.1 formulas).
     pub fn hot_experts(&self, frac: f64) -> Vec<usize> {
-        let total: f64 = self.loads.iter().sum();
+        // NaN-tolerant: a poisoned load (e.g. a NaN decay coefficient
+        // upstream) must not panic the scheduler — the old
+        // partial_cmp().unwrap() sort did. NaN loads count as zero and
+        // rank coldest (total_cmp alone would rank +NaN hottest).
+        let finite = |l: f64| if l.is_nan() { 0.0 } else { l };
+        let total: f64 = self.loads.iter().map(|&l| finite(l)).sum();
         if total <= 0.0 {
             return Vec::new();
         }
         let mut order: Vec<usize> = (0..self.loads.len()).collect();
-        order.sort_by(|&a, &b| self.loads[b].partial_cmp(&self.loads[a]).unwrap());
+        order.sort_by(|&a, &b| finite(self.loads[b]).total_cmp(&finite(self.loads[a])));
         let mut acc = 0.0;
         let mut out = Vec::new();
         for e in order {
             out.push(e);
-            acc += self.loads[e];
+            acc += finite(self.loads[e]);
             if acc >= frac * total {
                 break;
             }
@@ -96,6 +106,30 @@ mod tests {
         assert_eq!(hot[0], 0);
         assert!(ls.alpha(0.5) <= 0.3);
         assert!(ls.expert_imbalance() > 2.0);
+    }
+
+    #[test]
+    fn nan_loads_do_not_panic_hot_experts() {
+        // A NaN decay coefficient poisons every load with NaN; the old
+        // partial_cmp().unwrap() sort panicked here. total_cmp must keep
+        // hot_experts() total and panic-free (degraded answer is fine).
+        let mut ls = LoadStats::new(4, f64::NAN);
+        ls.record(&[10, 20, 30, 40]);
+        assert!(ls.loads().iter().all(|l| l.is_nan()));
+        let hot = ls.hot_experts(0.5);
+        assert!(hot.len() <= 4);
+        let _ = ls.alpha(0.5); // likewise panic-free
+    }
+
+    #[test]
+    fn nan_ranks_below_real_loads() {
+        // Mixed finite/NaN: real loads must outrank poisoned ones.
+        let mut ls = LoadStats::new(3, 0.0);
+        ls.record(&[5, 7, 3]);
+        ls.loads_mut()[1] = f64::NAN;
+        let hot = ls.hot_experts(1.0);
+        assert_eq!(hot[0], 0, "{:?}", hot);
+        assert_ne!(hot[0], 1);
     }
 
     #[test]

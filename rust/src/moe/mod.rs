@@ -9,8 +9,10 @@ pub mod gating;
 pub mod router;
 pub mod placement;
 pub mod load_stats;
+pub mod shadow;
 
 pub use gating::{top1_route, Routing};
 pub use load_stats::LoadStats;
 pub use placement::ExpertPlacement;
 pub use router::DispatchPlan;
+pub use shadow::ShadowRouter;

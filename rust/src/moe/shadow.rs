@@ -1,0 +1,328 @@
+//! Shadow routing: coordinator-side recompute of a decoder layer's
+//! *dense prefix* (ln1 → causal MHA → residual → ln2 → router matmul) to
+//! learn which experts a batch routes to **before** the layer's compiled
+//! artifact runs — the expert axis of the paper's 2D prefetch.
+//!
+//! Two fidelities:
+//!
+//! - [`ShadowRouter::route_layer`] — the *exact* set for the layer about
+//!   to execute: the full dense prefix recomputed in f64 from the actual
+//!   layer input. A per-token logit `margin` absorbs f32-vs-f64 rounding
+//!   so the returned set is a guaranteed superset of the kernel's argmax
+//!   choices (near-ties admit both sides); fetching a never-routed
+//!   expert costs a little I/O, missing a routed one would break
+//!   resident-math equivalence.
+//! - [`ShadowRouter::predict_from_embeddings`] — the cheap pre-sweep
+//!   *prediction* used to issue prefetches layers ahead: the router
+//!   applied to ln2-normalized token embeddings, skipping attention.
+//!   This is a hint (unioned with the hot-expert set); mispredictions
+//!   are repaired by demand fetches when the exact set is known.
+//!
+//! The numerics mirror `python/compile/kernels/ref.py` (causal tril
+//! mask, scores scaled by 1/sqrt(d_head), layernorm eps 1e-5).
+
+/// Base logit slack for the exact set: experts within the effective
+/// margin of a token's max logit are all fetched, so f32/f64 rounding
+/// can't flip a near-tie out of the set. The effective margin scales
+/// with the row's logit magnitude (`select_experts`) and with √d_model
+/// (`route_layer`); at the tiny preset (O(1) logits, d_model 64) the
+/// observed cross-precision drift is ~1e-6 — 1e-3 is ~1000× headroom.
+pub const ROUTE_MARGIN: f32 = 1e-3;
+
+/// Wider slack for the embedding proxy, which is an approximation to
+/// begin with: casting a wider net costs prefetch bytes, not correctness.
+pub const PREDICT_MARGIN: f32 = 0.25;
+
+const LN_EPS: f64 = 1e-5;
+
+pub struct ShadowRouter {
+    d_model: usize,
+    n_heads: usize,
+    n_experts: usize,
+}
+
+/// Population layernorm over each `h`-sized row, into f64.
+fn layer_norm_rows(rows: &[f64], h: usize, scale: &[f32], bias: &[f32]) -> Vec<f64> {
+    let n = rows.len() / h;
+    let mut out = vec![0.0f64; rows.len()];
+    for r in 0..n {
+        let row = &rows[r * h..(r + 1) * h];
+        let mu: f64 = row.iter().sum::<f64>() / h as f64;
+        let var: f64 = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / h as f64;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for j in 0..h {
+            out[r * h + j] = (row[j] - mu) * inv * scale[j] as f64 + bias[j] as f64;
+        }
+    }
+    out
+}
+
+/// `rows [n,h] @ w [h,k] + b [k]`, all row-major.
+fn matmul_bias(rows: &[f64], h: usize, w: &[f32], b: &[f32], k: usize) -> Vec<f64> {
+    let n = rows.len() / h;
+    let mut out = vec![0.0f64; n * k];
+    for r in 0..n {
+        let row = &rows[r * h..(r + 1) * h];
+        let o = &mut out[r * k..(r + 1) * k];
+        for j in 0..k {
+            o[j] = b[j] as f64;
+        }
+        for (i, &xi) in row.iter().enumerate() {
+            if xi == 0.0 {
+                continue;
+            }
+            let wrow = &w[i * k..(i + 1) * k];
+            for j in 0..k {
+                o[j] += xi * wrow[j] as f64;
+            }
+        }
+    }
+    out
+}
+
+/// Per-token expert selection: argmax plus everything within the
+/// effective margin. `margin` is an absolute floor; the cut widens with
+/// the row's largest |logit| because f32 rounding error is *relative* —
+/// trained routers outgrow the O(1) init regime, and a fixed absolute
+/// slack would silently stop covering the drift.
+/// Returns (sorted deduped set, per-expert argmax token counts).
+fn select_experts(logits: &[f64], n_tokens: usize, n_experts: usize, margin: f32) -> (Vec<usize>, Vec<usize>) {
+    let mut in_set = vec![false; n_experts];
+    let mut counts = vec![0usize; n_experts];
+    for t in 0..n_tokens {
+        let row = &logits[t * n_experts..(t + 1) * n_experts];
+        let mut best = 0usize;
+        let mut mx = f64::NEG_INFINITY;
+        let mut amax = 0.0f64;
+        for (e, &l) in row.iter().enumerate() {
+            if l > mx {
+                mx = l;
+                best = e;
+            }
+            amax = amax.max(l.abs());
+        }
+        counts[best] += 1;
+        let cut = mx - (margin as f64) * amax.max(1.0);
+        for (e, &l) in row.iter().enumerate() {
+            if l >= cut {
+                in_set[e] = true;
+            }
+        }
+    }
+    let set: Vec<usize> = (0..n_experts).filter(|&e| in_set[e]).collect();
+    (set, counts)
+}
+
+impl ShadowRouter {
+    pub fn new(d_model: usize, n_heads: usize, n_experts: usize) -> ShadowRouter {
+        assert!(d_model % n_heads == 0, "d_model {} / n_heads {}", d_model, n_heads);
+        ShadowRouter { d_model, n_heads, n_experts }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Exact routed-expert superset for the layer whose input is `x`
+    /// (`[batch, seq, d_model]` row-major f32). `get` resolves the
+    /// layer's dense tensors by short name ("ln1_scale", "wq", …,
+    /// "router_w", "router_b"). Returns (sorted expert set, per-expert
+    /// argmax token counts for load stats).
+    pub fn route_layer<'a>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        seq: usize,
+        get: impl Fn(&str) -> &'a [f32],
+        margin: f32,
+    ) -> (Vec<usize>, Vec<usize>) {
+        let h = self.d_model;
+        let nh = self.n_heads;
+        let dh = h / nh;
+        let scale = 1.0 / (dh as f64).sqrt();
+        assert_eq!(x.len(), batch * seq * h, "shadow x shape");
+        // f32 dot-product drift grows ~√h with the reduction length;
+        // widen the margin accordingly so the superset guarantee holds
+        // for wide models too (√(h/64): calibrated at the tiny preset).
+        let margin = margin * ((h as f64 / 64.0).sqrt().max(1.0)) as f32;
+
+        let xf: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let ln1 = layer_norm_rows(&xf, h, get("ln1_scale"), get("ln1_bias"));
+        let q = matmul_bias(&ln1, h, get("wq"), get("bq"), h);
+        let k = matmul_bias(&ln1, h, get("wk"), get("bk"), h);
+        let v = matmul_bias(&ln1, h, get("wv"), get("bv"), h);
+
+        // Causal MHA per batch row, head-split on column blocks.
+        let mut ctx = vec![0.0f64; batch * seq * h];
+        let mut probs = vec![0.0f64; seq];
+        for b in 0..batch {
+            let base = b * seq * h;
+            for n in 0..nh {
+                let c0 = n * dh;
+                for t in 0..seq {
+                    let qrow = &q[base + t * h + c0..base + t * h + c0 + dh];
+                    let mut mx = f64::NEG_INFINITY;
+                    for (s, p) in probs.iter_mut().enumerate().take(t + 1) {
+                        let krow = &k[base + s * h + c0..base + s * h + c0 + dh];
+                        let mut dot = 0.0f64;
+                        for d in 0..dh {
+                            dot += qrow[d] * krow[d];
+                        }
+                        *p = dot * scale;
+                        if *p > mx {
+                            mx = *p;
+                        }
+                    }
+                    let mut z = 0.0f64;
+                    for p in probs.iter_mut().take(t + 1) {
+                        *p = (*p - mx).exp();
+                        z += *p;
+                    }
+                    let crow = &mut ctx[base + t * h + c0..base + t * h + c0 + dh];
+                    for s in 0..=t {
+                        let w = probs[s] / z;
+                        let vrow = &v[base + s * h + c0..base + s * h + c0 + dh];
+                        for d in 0..dh {
+                            crow[d] += w * vrow[d];
+                        }
+                    }
+                }
+            }
+        }
+
+        let o = matmul_bias(&ctx, h, get("wo"), get("bo"), h);
+        // Residual, then ln2, then router.
+        let x2: Vec<f64> = xf.iter().zip(&o).map(|(a, b)| a + b).collect();
+        let ln2 = layer_norm_rows(&x2, h, get("ln2_scale"), get("ln2_bias"));
+        let logits = matmul_bias(&ln2, h, get("router_w"), get("router_b"), self.n_experts);
+        select_experts(&logits, batch * seq, self.n_experts, margin)
+    }
+
+    /// Pre-sweep prefetch hint: for every layer, run the router over the
+    /// ln2-normalized raw token embeddings (attention skipped).
+    /// `get_layer(l, name)` resolves layer `l`'s dense tensors.
+    pub fn predict_from_embeddings<'a>(
+        &self,
+        tokens: &[i32],
+        embed: &[f32],
+        n_layers: usize,
+        get_layer: impl Fn(usize, &str) -> &'a [f32],
+        margin: f32,
+    ) -> Vec<Vec<usize>> {
+        let h = self.d_model;
+        let vocab = embed.len() / h;
+        let proxy: Vec<f64> = tokens
+            .iter()
+            .flat_map(|&t| {
+                let t = (t as usize).min(vocab.saturating_sub(1));
+                embed[t * h..(t + 1) * h].iter().map(|&v| v as f64)
+            })
+            .collect();
+        (0..n_layers)
+            .map(|l| {
+                let ln2 = layer_norm_rows(
+                    &proxy,
+                    h,
+                    get_layer(l, "ln2_scale"),
+                    get_layer(l, "ln2_bias"),
+                );
+                let logits = matmul_bias(
+                    &ln2,
+                    h,
+                    get_layer(l, "router_w"),
+                    get_layer(l, "router_b"),
+                    self.n_experts,
+                );
+                select_experts(&logits, tokens.len(), self.n_experts, margin).0
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::HashMap;
+
+    /// Random dense layer tensors for (h, nh, e).
+    fn params(h: usize, e: usize, seed: u64) -> HashMap<String, Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        let mut m = HashMap::new();
+        let mut mat = |name: &str, rows: usize, cols: usize, std: f32| {
+            let v: Vec<f32> = (0..rows * cols).map(|_| rng.normal() as f32 * std).collect();
+            m.insert(name.to_string(), v);
+        };
+        for n in ["wq", "wk", "wv", "wo"] {
+            mat(n, h, h, 0.1);
+        }
+        mat("router_w", h, e, 0.3);
+        for n in ["bq", "bk", "bv", "bo", "ln1_bias", "ln2_bias", "router_b"] {
+            m.insert(n.to_string(), vec![0.0; if n == "router_b" { e } else { h }]);
+        }
+        m.insert("ln1_scale".to_string(), vec![1.0; h]);
+        m.insert("ln2_scale".to_string(), vec![1.0; h]);
+        m
+    }
+
+    #[test]
+    fn biased_router_selects_single_expert() {
+        let (h, e) = (8, 4);
+        let mut ps = params(h, e, 1);
+        ps.insert("router_w".to_string(), vec![0.0; h * e]);
+        ps.insert("router_b".to_string(), vec![0.0, 0.0, 5.0, 0.0]);
+        let sh = ShadowRouter::new(h, 2, e);
+        let mut rng = Rng::new(2);
+        let x: Vec<f32> = (0..2 * 4 * h).map(|_| rng.normal() as f32).collect();
+        let (set, counts) = sh.route_layer(&x, 2, 4, |n| ps[n].as_slice(), 1e-3);
+        assert_eq!(set, vec![2]);
+        assert_eq!(counts[2], 8);
+    }
+
+    #[test]
+    fn margin_widens_the_set_monotonically() {
+        let (h, e) = (16, 8);
+        let ps = params(h, e, 3);
+        let sh = ShadowRouter::new(h, 4, e);
+        let mut rng = Rng::new(4);
+        let x: Vec<f32> = (0..8 * h).map(|_| rng.normal() as f32).collect();
+        let (tight, counts) = sh.route_layer(&x, 1, 8, |n| ps[n].as_slice(), 1e-6);
+        let (wide, _) = sh.route_layer(&x, 1, 8, |n| ps[n].as_slice(), 1e9);
+        assert_eq!(wide.len(), e, "infinite margin selects everyone");
+        for ex in &tight {
+            assert!(wide.contains(ex));
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 8, "every token counted once");
+    }
+
+    #[test]
+    fn route_is_deterministic() {
+        let (h, e) = (16, 4);
+        let ps = params(h, e, 5);
+        let sh = ShadowRouter::new(h, 4, e);
+        let mut rng = Rng::new(6);
+        let x: Vec<f32> = (0..2 * 8 * h).map(|_| rng.normal() as f32).collect();
+        let a = sh.route_layer(&x, 2, 8, |n| ps[n].as_slice(), 1e-3);
+        let b = sh.route_layer(&x, 2, 8, |n| ps[n].as_slice(), 1e-3);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn embedding_proxy_produces_per_layer_sets() {
+        let (h, e, vocab) = (8, 4, 16);
+        let ps0 = params(h, e, 7);
+        let ps1 = params(h, e, 8);
+        let mut rng = Rng::new(9);
+        let embed: Vec<f32> = (0..vocab * h).map(|_| rng.normal() as f32 * 0.02).collect();
+        let tokens: Vec<i32> = (0..12).map(|i| (i % vocab) as i32).collect();
+        let sh = ShadowRouter::new(h, 2, e);
+        let sets = sh.predict_from_embeddings(&tokens, &embed, 2, |l, n| {
+            if l == 0 { ps0[n].as_slice() } else { ps1[n].as_slice() }
+        }, 0.25);
+        assert_eq!(sets.len(), 2);
+        for s in &sets {
+            assert!(!s.is_empty() && s.len() <= e);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted: {:?}", s);
+        }
+    }
+}

@@ -10,11 +10,16 @@
 //!   SSD → CPU cache → device through [`SparseScheduler`], a background
 //!   thread that owns the [`crate::storage::HierarchicalStore`].
 //!
-//! The trainer drives both from a [`plan::PrefetchPlan`] so the lookahead
+//! The sparse lane is **(layer, expert)-granular**: a [`plan::RoutePlan`]
+//! (routing-ahead prediction ∪ hot-expert pins) decides which expert
+//! blocks to stream for each layer, the exact per-layer set computed by
+//! [`crate::moe::ShadowRouter`] repairs mispredictions with demand
+//! fetches, and untouched experts never leave the SSD tier. The trainer
+//! drives the layer axis from a [`plan::PrefetchPlan`] so the lookahead
 //! window is explicit and ablatable.
 
 pub mod plan;
 pub mod scheduler;
 
-pub use plan::PrefetchPlan;
+pub use plan::{PrefetchPlan, RoutePlan};
 pub use scheduler::{SparseScheduler, SparseRequest};

@@ -1,5 +1,7 @@
 //! Prefetch plans: the ordered layer visit sequence of one training step
-//! (forward sweep then backward sweep) with an explicit lookahead window.
+//! (forward sweep then backward sweep) with an explicit lookahead window
+//! — the *layer axis* of the paper's 2D prefetch — plus the per-layer
+//! routed-expert sets ([`RoutePlan`]) that form the *expert axis*.
 
 /// What the visit needs the layer's block for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,6 +57,59 @@ impl PrefetchPlan {
     }
 }
 
+/// The expert axis of one step's 2D prefetch: for every layer, the set
+/// of experts to stream ahead of compute. Built before the forward sweep
+/// from the cheap routing-ahead prediction
+/// ([`crate::moe::ShadowRouter::predict_from_embeddings`]) unioned with
+/// the hot-expert pin set ([`crate::moe::LoadStats::hot_experts`]);
+/// repaired during the sweep by demand fetches once each layer's exact
+/// set is known.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutePlan {
+    /// Sorted, deduplicated expert set per layer.
+    per_layer: Vec<Vec<usize>>,
+}
+
+impl RoutePlan {
+    /// Union the predicted sets with the hot pin sets, layer by layer.
+    /// `hot` may be shorter than `predicted` (e.g. empty on step 1).
+    pub fn new(predicted: Vec<Vec<usize>>, hot: &[Vec<usize>]) -> RoutePlan {
+        let per_layer = predicted
+            .into_iter()
+            .enumerate()
+            .map(|(l, mut set)| {
+                if let Some(h) = hot.get(l) {
+                    set.extend_from_slice(h);
+                }
+                set.sort_unstable();
+                set.dedup();
+                set
+            })
+            .collect();
+        RoutePlan { per_layer }
+    }
+
+    /// Every expert of every layer — the 1D (layer-granular) degenerate
+    /// plan, used when routing-ahead is disabled.
+    pub fn full(n_layers: usize, n_experts: usize) -> RoutePlan {
+        RoutePlan { per_layer: vec![(0..n_experts).collect(); n_layers] }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.per_layer.len()
+    }
+
+    /// The planned expert set for `layer` (sorted).
+    pub fn experts(&self, layer: usize) -> &[usize] {
+        &self.per_layer[layer]
+    }
+
+    /// Total planned (layer, expert) fetches.
+    pub fn total_planned(&self) -> usize {
+        self.per_layer.iter().map(|s| s.len()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -73,6 +128,30 @@ mod tests {
         let p = PrefetchPlan::train_step(2, 8);
         assert_eq!(p.window_end(0), 4);
         assert_eq!(p.window_end(3), 4);
+    }
+
+    #[test]
+    fn route_plan_unions_hot_sets() {
+        let predicted = vec![vec![2, 0], vec![1]];
+        let hot = vec![vec![0, 3], vec![1]];
+        let p = RoutePlan::new(predicted, &hot);
+        assert_eq!(p.experts(0), &[0, 2, 3]);
+        assert_eq!(p.experts(1), &[1]);
+        assert_eq!(p.total_planned(), 4);
+    }
+
+    #[test]
+    fn route_plan_tolerates_missing_hot_layers() {
+        let p = RoutePlan::new(vec![vec![1], vec![0, 2]], &[]);
+        assert_eq!(p.experts(1), &[0, 2]);
+    }
+
+    #[test]
+    fn full_plan_covers_everything() {
+        let p = RoutePlan::full(3, 4);
+        assert_eq!(p.n_layers(), 3);
+        assert_eq!(p.experts(2), &[0, 1, 2, 3]);
+        assert_eq!(p.total_planned(), 12);
     }
 
     #[test]

@@ -2,13 +2,19 @@
 //! store, streaming expert blocks ahead of compute (Algorithm 1's
 //! `SparseSchedule`, run `Do in parallel` with compute).
 //!
-//! Protocol: the compute thread sends [`SparseRequest`]s (prefetch /
-//! update / flush); fetched blocks come back on a channel tagged by
-//! (visit sequence number) so out-of-order completion is impossible to
-//! misattribute. All traffic is plain data; PJRT stays on the compute
-//! thread (see `runtime::engine` for the threading rule).
+//! Protocol: the compute thread sends [`SparseRequest`]s (fetch / update
+//! / pin / flush), every one tagged with a sequence number from a single
+//! counter; replies come back tagged with the same number so
+//! out-of-order completion — and, critically, *failure* — is impossible
+//! to misattribute. Replies that arrive while the consumer is waiting on
+//! a different tag are buffered, never dropped: a `FlushDone` drained by
+//! `poll()` still completes a later `wait_flush()`, and an error raised
+//! by an async `update()` is reported against that update (at the
+//! `flush()` sync point), not against the next unrelated `wait()`.
+//! All traffic is plain data; PJRT stays on the compute thread (see
+//! `runtime::engine` for the threading rule).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::thread::JoinHandle;
 
@@ -16,23 +22,37 @@ use anyhow::{bail, Context, Result};
 
 use crate::storage::{HierarchicalStore, SparseBlock};
 
-/// Requests into the prefetch thread.
+/// Requests into the prefetch thread. Every request that can fail or
+/// complete carries `seq` so its reply is attributable.
 pub enum SparseRequest {
-    /// Fetch layer block; reply tagged with `seq`.
-    Prefetch { seq: u64, layer: usize },
-    /// Write an updated block back (dirty-in-cache).
-    Update(SparseBlock),
+    /// Fetch one (layer, expert) block; reply tagged with `seq`.
+    Fetch { seq: u64, layer: usize, expert: usize },
+    /// Write an updated expert block back (dirty-in-cache).
+    Update { seq: u64, block: SparseBlock },
+    /// Replace the pinned hot-expert set in the CPU cache.
+    Pin { experts: Vec<(usize, usize)> },
     /// End-of-step housekeeping (hit decay).
     EndStep,
-    /// Flush dirty state to SSD and reply on the ack channel.
-    Flush,
+    /// Flush dirty state to SSD and ack with `FlushDone { seq }`.
+    Flush { seq: u64 },
     Shutdown,
+}
+
+/// Which request kind produced an error reply. Fetch/Flush errors have a
+/// waiter blocked on their seq and must stay buffered for it; only
+/// Update errors are fire-and-forget and may be drained wholesale at the
+/// flush sync point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ErrorOrigin {
+    Fetch,
+    Update,
+    Flush,
 }
 
 enum Reply {
     Block { seq: u64, block: Box<SparseBlock> },
-    FlushDone,
-    Error(String),
+    FlushDone { seq: u64 },
+    Error { seq: u64, origin: ErrorOrigin, msg: String },
 }
 
 pub struct SparseScheduler {
@@ -41,6 +61,10 @@ pub struct SparseScheduler {
     handle: Option<JoinHandle<HierarchicalStore>>,
     /// Blocks that arrived ahead of the consumer.
     ready: HashMap<u64, SparseBlock>,
+    /// Errors that arrived ahead of (or without) a waiter, by seq.
+    errors: HashMap<u64, (ErrorOrigin, String)>,
+    /// Flush acks drained while waiting on something else.
+    flush_done: HashSet<u64>,
     next_seq: u64,
 }
 
@@ -54,108 +78,195 @@ impl SparseScheduler {
             .spawn(move || {
                 while let Ok(req) = rx_req.recv() {
                     match req {
-                        SparseRequest::Prefetch { seq, layer } => {
-                            match store.fetch(layer) {
+                        SparseRequest::Fetch { seq, layer, expert } => {
+                            match store.fetch(layer, expert) {
                                 Ok(block) => {
-                                    let _ = tx_rep.send(Reply::Block { seq, block: Box::new(block) });
+                                    let _ = tx_rep
+                                        .send(Reply::Block { seq, block: Box::new(block) });
                                 }
                                 Err(e) => {
-                                    let _ = tx_rep.send(Reply::Error(format!(
-                                        "prefetch layer {}: {}",
-                                        layer, e
-                                    )));
+                                    let _ = tx_rep.send(Reply::Error {
+                                        seq,
+                                        origin: ErrorOrigin::Fetch,
+                                        msg: format!(
+                                            "fetch layer {} expert {}: {}",
+                                            layer, expert, e
+                                        ),
+                                    });
                                 }
                             }
                         }
-                        SparseRequest::Update(block) => {
-                            if let Err(e) = store.update(block) {
-                                let _ = tx_rep.send(Reply::Error(format!("update: {}", e)));
+                        SparseRequest::Update { seq, block } => {
+                            let (l, e) = (block.layer, block.expert);
+                            if let Err(err) = store.update(block) {
+                                let _ = tx_rep.send(Reply::Error {
+                                    seq,
+                                    origin: ErrorOrigin::Update,
+                                    msg: format!("update layer {} expert {}: {}", l, e, err),
+                                });
                             }
                         }
+                        SparseRequest::Pin { experts } => store.pin_hot(&experts),
                         SparseRequest::EndStep => store.end_step(),
-                        SparseRequest::Flush => {
-                            match store.flush() {
-                                Ok(()) => {
-                                    let _ = tx_rep.send(Reply::FlushDone);
-                                }
-                                Err(e) => {
-                                    let _ = tx_rep.send(Reply::Error(format!("flush: {}", e)));
-                                }
+                        SparseRequest::Flush { seq } => match store.flush() {
+                            Ok(()) => {
+                                let _ = tx_rep.send(Reply::FlushDone { seq });
                             }
-                        }
+                            Err(e) => {
+                                let _ = tx_rep.send(Reply::Error {
+                                    seq,
+                                    origin: ErrorOrigin::Flush,
+                                    msg: format!("flush: {}", e),
+                                });
+                            }
+                        },
                         SparseRequest::Shutdown => break,
                     }
                 }
                 store
             })
             .expect("spawn prefetch thread");
-        SparseScheduler { tx, rx, handle: Some(handle), ready: HashMap::new(), next_seq: 0 }
+        SparseScheduler {
+            tx,
+            rx,
+            handle: Some(handle),
+            ready: HashMap::new(),
+            errors: HashMap::new(),
+            flush_done: HashSet::new(),
+            next_seq: 0,
+        }
     }
 
-    /// Queue a prefetch; returns the sequence tag to wait on.
-    pub fn request(&mut self, layer: usize) -> u64 {
+    fn fresh_seq(&mut self) -> u64 {
         let seq = self.next_seq;
         self.next_seq += 1;
-        let _ = self.tx.send(SparseRequest::Prefetch { seq, layer });
         seq
     }
 
-    /// Block until the tagged fetch arrives (out-of-order safe).
-    pub fn wait(&mut self, seq: u64) -> Result<SparseBlock> {
-        if let Some(b) = self.ready.remove(&seq) {
-            return Ok(b);
-        }
-        loop {
-            match self.rx.recv().context("prefetch thread hung up")? {
-                Reply::Block { seq: s, block } => {
-                    if s == seq {
-                        return Ok(*block);
-                    }
-                    self.ready.insert(s, *block);
-                }
-                Reply::Error(e) => bail!("sparse lane: {}", e),
-                Reply::FlushDone => {}
+    /// Buffer one reply that doesn't match what the caller is waiting
+    /// for. Nothing is dropped — see the module docs.
+    fn stash(&mut self, rep: Reply) {
+        match rep {
+            Reply::Block { seq, block } => {
+                self.ready.insert(seq, *block);
+            }
+            Reply::Error { seq, origin, msg } => {
+                self.errors.insert(seq, (origin, msg));
+            }
+            Reply::FlushDone { seq } => {
+                self.flush_done.insert(seq);
             }
         }
     }
 
-    /// Try to consume a completed fetch without blocking.
+    /// Queue a (layer, expert) fetch; returns the sequence tag to wait on.
+    pub fn request(&mut self, layer: usize, expert: usize) -> u64 {
+        let seq = self.fresh_seq();
+        let _ = self.tx.send(SparseRequest::Fetch { seq, layer, expert });
+        seq
+    }
+
+    /// Block until the tagged fetch arrives (out-of-order safe). Fails
+    /// only on an error tagged with the same `seq`.
+    pub fn wait(&mut self, seq: u64) -> Result<SparseBlock> {
+        loop {
+            if let Some(b) = self.ready.remove(&seq) {
+                return Ok(b);
+            }
+            if let Some((_, e)) = self.errors.remove(&seq) {
+                bail!("sparse lane [seq {}]: {}", seq, e);
+            }
+            let rep = self.rx.recv().context("prefetch thread hung up")?;
+            self.stash(rep);
+        }
+    }
+
+    /// Try to consume a completed fetch without blocking. Errors and
+    /// flush acks drained here are buffered for their waiters, never
+    /// dropped (regression: a swallowed `FlushDone` made a subsequent
+    /// `flush()` hang forever).
     pub fn poll(&mut self, seq: u64) -> Option<SparseBlock> {
         if let Some(b) = self.ready.remove(&seq) {
             return Some(b);
         }
         while let Ok(rep) = self.rx.try_recv() {
-            if let Reply::Block { seq: s, block } = rep {
-                if s == seq {
-                    return Some(*block);
-                }
-                self.ready.insert(s, *block);
+            self.stash(rep);
+            if let Some(b) = self.ready.remove(&seq) {
+                return Some(b);
             }
         }
         None
     }
 
-    /// Async writeback of an updated block.
-    pub fn update(&self, block: SparseBlock) {
-        let _ = self.tx.send(SparseRequest::Update(block));
+    /// Async writeback of an updated expert block; returns the tag its
+    /// (potential) error will carry.
+    pub fn update(&mut self, block: SparseBlock) -> u64 {
+        let seq = self.fresh_seq();
+        let _ = self.tx.send(SparseRequest::Update { seq, block });
+        seq
+    }
+
+    /// Replace the pinned hot-expert set ((layer, expert) pairs).
+    pub fn pin_hot(&self, experts: Vec<(usize, usize)>) {
+        let _ = self.tx.send(SparseRequest::Pin { experts });
     }
 
     pub fn end_step(&self) {
         let _ = self.tx.send(SparseRequest::EndStep);
     }
 
-    /// Synchronous flush (waits for SSD writeback to finish).
-    pub fn flush(&mut self) -> Result<()> {
-        self.tx.send(SparseRequest::Flush).context("send flush")?;
+    /// Queue a flush; returns the tag `wait_flush` completes on.
+    pub fn request_flush(&mut self) -> u64 {
+        let seq = self.fresh_seq();
+        let _ = self.tx.send(SparseRequest::Flush { seq });
+        seq
+    }
+
+    /// Block until the tagged flush ack arrives (buffered acks count).
+    pub fn wait_flush(&mut self, seq: u64) -> Result<()> {
         loop {
-            match self.rx.recv().context("prefetch thread hung up")? {
-                Reply::FlushDone => return Ok(()),
-                Reply::Error(e) => bail!("flush: {}", e),
-                Reply::Block { seq, block } => {
-                    self.ready.insert(seq, *block);
-                }
+            if self.flush_done.remove(&seq) {
+                return Ok(());
             }
+            if let Some((_, e)) = self.errors.remove(&seq) {
+                bail!("sparse lane [seq {}]: {}", seq, e);
+            }
+            let rep = self.rx.recv().context("prefetch thread hung up")?;
+            self.stash(rep);
         }
+    }
+
+    /// Take the buffered errors of fire-and-forget requests (`update()`)
+    /// — only those; a buffered fetch/flush error belongs to a waiter
+    /// still entitled to `wait(seq)` on it, and draining it here would
+    /// leave that waiter blocked on a reply that never comes.
+    pub fn take_errors(&mut self) -> Vec<(u64, String)> {
+        let mut out: Vec<(u64, String)> = Vec::new();
+        self.errors.retain(|&seq, (origin, msg)| {
+            if *origin == ErrorOrigin::Update {
+                out.push((seq, std::mem::take(msg)));
+                false
+            } else {
+                true
+            }
+        });
+        out.sort_by_key(|(seq, _)| *seq);
+        out
+    }
+
+    /// Synchronous flush: waits for SSD writeback to finish, then
+    /// surfaces any buffered async-update errors (flush is the sync
+    /// point where fire-and-forget failures must come home).
+    pub fn flush(&mut self) -> Result<()> {
+        let seq = self.request_flush();
+        self.wait_flush(seq)?;
+        let errs = self.take_errors();
+        if !errs.is_empty() {
+            let joined: Vec<String> =
+                errs.into_iter().map(|(s, m)| format!("[seq {}] {}", s, m)).collect();
+            bail!("sparse lane deferred errors: {}", joined.join("; "));
+        }
+        Ok(())
     }
 
     /// Stop the thread and recover the store (for stats inspection).
@@ -183,33 +294,52 @@ mod tests {
     use crate::runtime::ParamSpec;
     use crate::storage::{CacheConfig, SsdStore, StoreConfig};
 
-    fn mk_store(n_layers: usize) -> HierarchicalStore {
+    /// n_layers layers × n_experts experts, 32 elements per expert block.
+    fn mk_store(n_layers: usize, n_experts: usize) -> HierarchicalStore {
+        let per_layer = 32 * n_experts;
         let specs: Vec<ParamSpec> = (0..n_layers)
             .map(|l| ParamSpec {
                 name: format!("layer{}.w1", l),
-                shape: vec![32],
+                shape: vec![n_experts, 32],
                 sparse: true,
-                numel: 32,
+                numel: per_layer,
             })
             .collect();
         let cfg = StoreConfig {
-            cache: CacheConfig { capacity_bytes: 2 * 32 * 4 * 3, ..Default::default() },
+            cache: CacheConfig { capacity_bytes: 4 * 32 * 4 * 3, ..Default::default() },
             with_moments: true,
         };
-        let mut s = HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs, n_layers).unwrap();
-        s.initialize(|l| vec![l as f32; 32]).unwrap();
+        let mut s = HierarchicalStore::new(
+            SsdStore::memory_backed(),
+            cfg,
+            &specs,
+            n_layers,
+            n_experts,
+        )
+        .unwrap();
+        s.initialize(|l| {
+            (0..per_layer)
+                .map(|i| (l * 100 + i / 32) as f32) // value encodes (layer, expert)
+                .collect()
+        })
+        .unwrap();
         s
     }
 
     #[test]
-    fn overlapped_prefetch_returns_correct_layers() {
-        let mut sched = SparseScheduler::spawn(mk_store(6));
-        // Queue all six ahead (deep lookahead), then consume in order.
-        let seqs: Vec<u64> = (0..6).map(|l| sched.request(l)).collect();
-        for (l, &seq) in seqs.iter().enumerate() {
+    fn overlapped_prefetch_returns_correct_blocks() {
+        let mut sched = SparseScheduler::spawn(mk_store(3, 2));
+        // Queue the full 2D sweep ahead (deep lookahead), consume in order.
+        let mut seqs = Vec::new();
+        for l in 0..3 {
+            for e in 0..2 {
+                seqs.push((l, e, sched.request(l, e)));
+            }
+        }
+        for (l, e, seq) in seqs {
             let b = sched.wait(seq).unwrap();
-            assert_eq!(b.layer, l);
-            assert_eq!(b.p, vec![l as f32; 32]);
+            assert_eq!((b.layer, b.expert), (l, e));
+            assert_eq!(b.p, vec![(l * 100 + e) as f32; 32]);
         }
         let store = sched.shutdown().unwrap();
         assert!(store.cache_stats().misses > 0);
@@ -217,42 +347,139 @@ mod tests {
 
     #[test]
     fn out_of_order_wait() {
-        let mut sched = SparseScheduler::spawn(mk_store(3));
-        let s0 = sched.request(0);
-        let s1 = sched.request(1);
-        let s2 = sched.request(2);
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let s0 = sched.request(0, 0);
+        let s1 = sched.request(0, 1);
+        let s2 = sched.request(1, 0);
         // Wait in reverse order; buffering must sort it out.
-        assert_eq!(sched.wait(s2).unwrap().layer, 2);
-        assert_eq!(sched.wait(s0).unwrap().layer, 0);
-        assert_eq!(sched.wait(s1).unwrap().layer, 1);
+        assert_eq!(sched.wait(s2).unwrap().layer, 1);
+        assert_eq!(sched.wait(s0).unwrap().expert, 0);
+        assert_eq!(sched.wait(s1).unwrap().expert, 1);
     }
 
     #[test]
     fn update_then_refetch_sees_new_values() {
-        let mut sched = SparseScheduler::spawn(mk_store(2));
-        let s = sched.request(0);
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let s = sched.request(0, 1);
         let mut b = sched.wait(s).unwrap();
         b.p = vec![99.0; 32];
         sched.update(b);
         sched.end_step();
         sched.flush().unwrap();
-        let s = sched.request(0);
+        let s = sched.request(0, 1);
         assert_eq!(sched.wait(s).unwrap().p, vec![99.0; 32]);
-        // And it survives on SSD:
+        // And it survives on SSD, without touching the sibling expert:
         let mut store = sched.shutdown().unwrap();
         store.flush().unwrap();
-        assert_eq!(store.read_ssd_direct(0).unwrap(), vec![99.0; 32]);
+        assert_eq!(store.read_ssd_direct(0, 1).unwrap(), vec![99.0; 32]);
+        assert_eq!(store.read_ssd_direct(0, 0).unwrap(), vec![0.0; 32]);
+    }
+
+    #[test]
+    fn fetch_error_is_tagged_to_its_request() {
+        // Regression: an error must fail the wait() for ITS seq, not
+        // whichever wait() happens to run next.
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let bad = sched.request(7, 0); // out-of-range layer → SSD miss
+        let good = sched.request(1, 1);
+        // The good fetch must succeed even though the error reply may
+        // already be sitting in the channel ahead of it.
+        let b = sched.wait(good).unwrap();
+        assert_eq!((b.layer, b.expert), (1, 1));
+        let err = sched.wait(bad).unwrap_err().to_string();
+        assert!(err.contains("layer 7"), "error names its request: {}", err);
+    }
+
+    #[test]
+    fn poll_buffers_errors_instead_of_dropping() {
+        // Regression: poll() used to discard Reply::Error while draining.
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let bad = sched.request(9, 0);
+        // Give the thread time to reply, then poll — which must buffer,
+        // not drop, the error.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(sched.poll(bad).is_none());
+        let err = sched.wait(bad).unwrap_err().to_string();
+        assert!(err.contains("layer 9"), "{}", err);
+    }
+
+    #[test]
+    fn poll_buffers_flush_done_so_flush_cannot_hang() {
+        // Regression: a FlushDone drained by poll() was dropped, making
+        // wait_flush() hang forever.
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let fseq = sched.request_flush();
+        let s = sched.request(0, 0);
+        // Poll until the fetch lands; the FlushDone ack (which precedes
+        // it in the reply channel) is drained — and must be buffered.
+        let block = loop {
+            if let Some(b) = sched.poll(s) {
+                break b;
+            }
+            std::thread::yield_now();
+        };
+        assert_eq!(block.layer, 0);
+        // Must complete from the buffered ack, not hang.
+        sched.wait_flush(fseq).unwrap();
+    }
+
+    #[test]
+    fn flush_does_not_steal_a_pending_fetch_error() {
+        // Regression: flush() must drain only fire-and-forget (update)
+        // errors. A buffered fetch error still has a waiter entitled to
+        // it — consuming it at flush would leave wait(seq) blocked on a
+        // reply that never comes.
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let bad = sched.request(9, 0);
+        // Let the error land, then pull it into the buffer via poll.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert!(sched.poll(bad).is_none());
+        // Flush succeeds (the store itself is healthy) and must leave
+        // the fetch error in place…
+        sched.flush().unwrap();
+        // …so its waiter still gets it instead of hanging.
+        let err = sched.wait(bad).unwrap_err().to_string();
+        assert!(err.contains("layer 9"), "{}", err);
+    }
+
+    #[test]
+    fn update_error_attributed_to_update_not_next_wait() {
+        // Regression: a failed Update enqueued an untagged error that the
+        // next unrelated wait() picked up.
+        let mut sched = SparseScheduler::spawn(mk_store(2, 2));
+        let bad = SparseBlock {
+            layer: 0,
+            expert: 0,
+            p: vec![1.0; 5], // wrong length → store.update rejects
+            m: vec![],
+            v: vec![],
+        };
+        let useq = sched.update(bad);
+        let s = sched.request(1, 0);
+        // The unrelated fetch must succeed.
+        assert_eq!(sched.wait(s).unwrap().layer, 1);
+        // The failure surfaces at the flush sync point, tagged to the
+        // update's own seq.
+        let err = sched.flush().unwrap_err().to_string();
+        assert!(err.contains(&format!("seq {}", useq)), "{}", err);
+        assert!(err.contains("update layer 0 expert 0"), "{}", err);
     }
 
     #[test]
     fn prefetch_overlaps_with_simulated_compute() {
         use std::time::{Duration, Instant};
-        // Throttled store: each block costs ~6ms of "PCIe+SSD" time.
-        let specs = vec![ParamSpec { name: "layer0.w1".into(), shape: vec![1024], sparse: true, numel: 1024 }];
-        let specs: Vec<ParamSpec> = (0..8)
-            .map(|l| ParamSpec { name: format!("layer{}.w1", l), ..specs[0].clone() })
-            .collect();
+        // Throttled store: each expert block costs ~6ms of "PCIe+SSD"
+        // time (3 records × 2ms). One expert per layer so a layer visit
+        // is one fetch.
         let mk = || {
+            let specs: Vec<ParamSpec> = (0..8)
+                .map(|l| ParamSpec {
+                    name: format!("layer{}.w1", l),
+                    shape: vec![1, 1024],
+                    sparse: true,
+                    numel: 1024,
+                })
+                .collect();
             let ssd = SsdStore::memory_backed().with_perf(crate::storage::ssd_store::MediaPerf {
                 bandwidth: None,
                 latency: Some(Duration::from_millis(2)),
@@ -261,7 +488,7 @@ mod tests {
                 cache: CacheConfig { capacity_bytes: 1024 * 4 * 3, ..Default::default() },
                 with_moments: true, // 3 reads per fetch × 2ms = 6ms
             };
-            let mut s = HierarchicalStore::new(ssd, cfg, &specs, 8).unwrap();
+            let mut s = HierarchicalStore::new(ssd, cfg, &specs, 8, 1).unwrap();
             s.initialize(|_| vec![0.0; 1024]).unwrap();
             s
         };
@@ -271,7 +498,7 @@ mod tests {
         let mut store = mk();
         let t0 = Instant::now();
         for l in 0..8 {
-            let _ = store.fetch(l).unwrap();
+            let _ = store.fetch(l, 0).unwrap();
             std::thread::sleep(compute);
         }
         let serial = t0.elapsed();
@@ -279,13 +506,12 @@ mod tests {
         // Overlapped: lookahead 2.
         let mut sched = SparseScheduler::spawn(mk());
         let t0 = Instant::now();
-        let seqs: Vec<u64> = (0..2).map(|l| sched.request(l)).collect();
-        let mut seqs = seqs;
+        let mut seqs: Vec<u64> = (0..2).map(|l| sched.request(l, 0)).collect();
         for l in 0..8 {
             let b = sched.wait(seqs[l]).unwrap();
             assert_eq!(b.layer, l);
             if l + 2 < 8 {
-                seqs.push(sched.request(l + 2));
+                seqs.push(sched.request(l + 2, 0));
             }
             std::thread::sleep(compute);
         }

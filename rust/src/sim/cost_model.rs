@@ -98,6 +98,42 @@ impl CostModel {
         AllToAllPlan::price(&self.topo, c.a2a_bytes_per_pair, strategy).time
     }
 
+    // ------------------------------------------------------- sparse lane
+
+    /// Bytes of one layer's full sparse state (param + both Adam moments,
+    /// fp32 — the p/m/v records the offload trainer streams).
+    pub fn sparse_layer_state_bytes(&self) -> f64 {
+        self.model.param_counts().per_layer_sparse as f64 * 12.0
+    }
+
+    /// Per-step SSD↔CPU traffic of **1D layer-granular** prefetch: every
+    /// layer's whole expert tail crosses down (fetch) and back up (dirty
+    /// writeback) once per step, regardless of routing.
+    pub fn prefetch_bytes_1d(&self) -> f64 {
+        2.0 * self.model.n_layers as f64 * self.sparse_layer_state_bytes()
+    }
+
+    /// Expected number of *distinct* experts a layer routes `tokens`
+    /// top-1 decisions to when expert popularity is Zipf(s)-distributed
+    /// (`s = 0` ⇒ uniform): `Σ_e 1 − (1 − p_e)^T`.
+    pub fn expected_routed_experts(&self, tokens: f64, zipf_s: f64) -> f64 {
+        let e = self.model.n_experts;
+        let weights: Vec<f64> =
+            (0..e).map(|i| 1.0 / ((i + 1) as f64).powf(zipf_s)).collect();
+        let z: f64 = weights.iter().sum();
+        weights.iter().map(|w| 1.0 - (1.0 - w / z).powf(tokens)).sum()
+    }
+
+    /// Per-step SSD↔CPU traffic of **2D (layer, expert)-granular**
+    /// prefetch: only the expected routed subset of each layer's experts
+    /// crosses, fetch + writeback. `tokens` is the per-rank batch's
+    /// routing decisions per layer.
+    pub fn prefetch_bytes_2d(&self, tokens: f64, zipf_s: f64) -> f64 {
+        let frac = self.expected_routed_experts(tokens, zipf_s)
+            / self.model.n_experts.max(1) as f64;
+        self.prefetch_bytes_1d() * frac
+    }
+
     /// Tokens/s for a given per-step wall time (whole job).
     pub fn throughput(&self, step_time: f64) -> f64 {
         (self.model.batch_size * self.model.seq_len) as f64 / step_time
@@ -135,6 +171,37 @@ mod tests {
             }
             prev = Some(c.tokens_per_device);
         }
+    }
+
+    #[test]
+    fn expected_routed_experts_bounds() {
+        let cm = CostModel::new(table1_model(64, 64), cluster_for_gpus(64));
+        // Uniform routing with a flood of tokens touches everyone…
+        assert!(cm.expected_routed_experts(1e6, 0.0) > 63.9);
+        // …one token touches exactly one expert…
+        assert!((cm.expected_routed_experts(1.0, 0.0) - 1.0).abs() < 1e-9);
+        // …and skew shrinks the distinct set monotonically.
+        let t = 1024.0;
+        let uni = cm.expected_routed_experts(t, 0.0);
+        let z12 = cm.expected_routed_experts(t, 1.2);
+        let z20 = cm.expected_routed_experts(t, 2.0);
+        assert!(uni > z12 && z12 > z20, "{} > {} > {}", uni, z12, z20);
+        assert!(z20 >= 1.0 && uni <= 64.0);
+    }
+
+    #[test]
+    fn prefetch_2d_prices_below_1d_under_skew() {
+        // The tentpole claim priced analytically: expert-granular
+        // staging moves strictly fewer bytes once routing is skewed and
+        // the per-layer token count can't cover the expert population.
+        let cm = CostModel::new(table1_model(64, 64), cluster_for_gpus(64));
+        let tokens = 256.0;
+        let d1 = cm.prefetch_bytes_1d();
+        let d2_uniform = cm.prefetch_bytes_2d(tokens, 0.0);
+        let d2_skew = cm.prefetch_bytes_2d(tokens, 1.2);
+        assert!(d2_uniform <= d1);
+        assert!(d2_skew < d2_uniform, "{} < {}", d2_skew, d2_uniform);
+        assert!(d2_skew < 0.9 * d1, "skewed 2D should save ≥10%: {} vs {}", d2_skew, d1);
     }
 
     #[test]

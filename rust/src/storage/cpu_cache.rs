@@ -20,7 +20,7 @@
 //! [`CachePolicy`] also provides plain LFU / LRU / FIFO variants for the
 //! ablation bench (`benches/ablation_cache.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CachePolicy {
@@ -95,6 +95,10 @@ impl CacheStats {
 pub struct CpuCache {
     cfg: CacheConfig,
     entries: HashMap<String, Entry>,
+    /// Keys protected from eviction while capacity allows (the hot-expert
+    /// set from `LoadStats::hot_experts`). Pinning is advisory: when only
+    /// pinned entries remain, capacity still wins and they evict.
+    pinned: HashSet<String>,
     bytes: usize,
     clock: u64,
     steps: usize,
@@ -103,7 +107,24 @@ pub struct CpuCache {
 
 impl CpuCache {
     pub fn new(cfg: CacheConfig) -> CpuCache {
-        CpuCache { cfg, entries: HashMap::new(), bytes: 0, clock: 0, steps: 0, stats: CacheStats::default() }
+        CpuCache {
+            cfg,
+            entries: HashMap::new(),
+            pinned: HashSet::new(),
+            bytes: 0,
+            clock: 0,
+            steps: 0,
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Replace the pinned (eviction-protected) key set.
+    pub fn set_pinned(&mut self, keys: HashSet<String>) {
+        self.pinned = keys;
+    }
+
+    pub fn pinned_len(&self) -> usize {
+        self.pinned.len()
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -205,11 +226,16 @@ impl CpuCache {
     }
 
     fn min_by(&self, f: impl Fn(&Entry) -> (f64, u64)) -> Option<String> {
+        // Pinned (hot-expert) entries are skipped while any unpinned
+        // victim exists; capacity is still a hard bound, so an all-pinned
+        // cache falls back to evicting among the pinned set.
+        let has_unpinned = self.entries.keys().any(|k| !self.pinned.contains(k));
         self.entries
             .iter()
+            .filter(|(k, _)| !(has_unpinned && self.pinned.contains(k.as_str())))
             .min_by(|a, b| {
                 let (fa, fb) = (f(a.1), f(b.1));
-                fa.0.partial_cmp(&fb.0).unwrap().then(fa.1.cmp(&fb.1))
+                fa.0.total_cmp(&fb.0).then(fa.1.cmp(&fb.1))
             })
             .map(|(k, _)| k.clone())
     }
@@ -370,6 +396,34 @@ mod tests {
         assert_eq!(all[0].key, "a");
         assert!(c.is_empty());
         assert_eq!(c.bytes(), 0);
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction_pressure() {
+        let mut c = CpuCache::new(cfg(2));
+        c.insert("hot", blk(1.0), false);
+        c.insert("cold", blk(2.0), false);
+        // "cold" gets more hits, so LFU alone would evict "hot" — pinning
+        // must override popularity.
+        for _ in 0..5 {
+            c.get("cold");
+        }
+        c.set_pinned(["hot".to_string()].into_iter().collect());
+        let ev = c.insert("new", blk(3.0), false);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].key, "cold");
+        assert!(c.contains("hot"));
+    }
+
+    #[test]
+    fn all_pinned_cache_still_bounds_capacity() {
+        let mut c = CpuCache::new(cfg(2));
+        c.insert("a", blk(1.0), false);
+        c.insert("b", blk(2.0), false);
+        c.set_pinned(["a".to_string(), "b".to_string()].into_iter().collect());
+        let ev = c.insert("c", blk(3.0), false);
+        assert_eq!(ev.len(), 1, "capacity must win over pinning");
+        assert!(c.bytes() <= cfg(2).capacity_bytes);
     }
 
     #[test]

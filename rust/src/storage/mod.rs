@@ -1,7 +1,10 @@
 //! Hierarchical storage (paper §2.1): parameter states split by
 //! activation behaviour — *dense* states live on the device tier,
 //! *sparse* (expert) states live on the SSD tier with a CPU cache in
-//! between, managed by the Algorithm-1 LFU policy.
+//! between, managed by the Algorithm-1 LFU policy. Records are
+//! **(layer, expert)-granular** so the 2D prefetch scheduler can stream
+//! exactly the routed expert subset; the hot-expert set is pinned in the
+//! CPU cache.
 //!
 //! All types here are plain data (Send) — PJRT never appears below the
 //! trainer, so the sparse lane can run on a background prefetch thread.
@@ -12,6 +15,6 @@ pub mod cpu_cache;
 pub mod param_store;
 
 pub use cpu_cache::{CacheConfig, CachePolicy, CpuCache};
-pub use param_store::{HierarchicalStore, SparseBlock, StoreConfig};
+pub use param_store::{HierarchicalStore, SparseBlock, SparseLayout, StoreConfig};
 pub use ssd_store::{SsdBackend, SsdStore};
 pub use tier::{MemoryFootprint, Tier, TierStats};

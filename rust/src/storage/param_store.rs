@@ -1,11 +1,16 @@
 //! The hierarchical parameter store (§2.1): unifies the SSD tier and the
-//! CPU cache behind per-layer *fused* sparse blocks.
+//! CPU cache behind per-**(layer, expert)** fused sparse blocks.
 //!
 //! Each decoder layer's expert tensors (w1,b1,w2,b2) plus their optimizer
-//! moments are packed into three contiguous records:
-//! `layer{i}.sparse.p|m|v` — one fused buffer per state kind, matching
-//! the paper's "parameter management unit" (fused slices, re-split by
-//! recorded index; the split metadata comes from the AOT manifest).
+//! moments are packed into per-expert records —
+//! `layer{i}.expert{e}.p|m|v` — one fused buffer per (expert, state kind).
+//! This is the storage granularity the paper's 2D prefetch needs: the
+//! layer axis is the visit order, the expert axis is the routed subset,
+//! and only experts a batch actually routes to (plus the pinned hot set)
+//! cross the SSD→CPU→device path. The split metadata comes from the AOT
+//! manifest: every sparse tensor's leading dimension is the expert count,
+//! so expert `e`'s slice of member tensor `t` is `t[e·(numel/E) ..
+//! (e+1)·(numel/E)]` within the layer's fused tail.
 //!
 //! The store is plain data (Send) so the 2D-prefetch scheduler can own it
 //! on a background thread.
@@ -16,16 +21,133 @@ use super::cpu_cache::{CacheConfig, CpuCache};
 use super::ssd_store::SsdStore;
 use crate::runtime::ParamSpec;
 
-/// One layer's sparse state, fused.
+/// One expert's sparse state for one layer, fused across member tensors.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SparseBlock {
     pub layer: usize,
-    /// Fused parameter values.
+    pub expert: usize,
+    /// Fused parameter values (member order, per-expert slices).
     pub p: Vec<f32>,
     /// Fused Adam momentum (empty when fetched for forward-only).
     pub m: Vec<f32>,
     /// Fused Adam variance (empty when fetched for forward-only).
     pub v: Vec<f32>,
+}
+
+impl SparseBlock {
+    /// Payload bytes held by this block (p + m + v).
+    pub fn bytes(&self) -> usize {
+        (self.p.len() + self.m.len() + self.v.len()) * 4
+    }
+}
+
+/// One sparse member tensor's slot within a layer's fused tail.
+#[derive(Debug, Clone, PartialEq)]
+struct MemberLayout {
+    /// Tensor name within the layer (e.g. "w1").
+    name: String,
+    /// Offset of the member within the layer's fused sparse tail.
+    offset: usize,
+    /// Elements per expert (member numel / n_experts).
+    per_expert: usize,
+}
+
+/// Per-layer expert-axis split metadata, shared by the store (record
+/// packing) and the trainer (splice into / gather out of the resident
+/// fused scratch). Cloneable plain data so the trainer can keep a copy
+/// after the store moves onto the prefetch thread.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseLayout {
+    members: Vec<MemberLayout>,
+    n_experts: usize,
+    /// Elements in one layer's whole fused sparse tail.
+    tail_len: usize,
+    /// Elements in one expert's fused block (tail_len / n_experts).
+    expert_len: usize,
+}
+
+impl SparseLayout {
+    /// Build from the manifest's sparse layer-0 entries.
+    pub fn from_specs(params: &[ParamSpec], n_experts: usize) -> Result<SparseLayout> {
+        if n_experts == 0 {
+            bail!("sparse layout needs n_experts >= 1");
+        }
+        let mut members = Vec::new();
+        let mut offset = 0usize;
+        for p in params.iter().filter(|p| p.sparse && p.layer() == Some(0)) {
+            if p.numel % n_experts != 0 {
+                bail!(
+                    "sparse tensor {} numel {} not divisible by {} experts",
+                    p.name, p.numel, n_experts
+                );
+            }
+            members.push(MemberLayout {
+                name: p.name.trim_start_matches("layer0.").to_string(),
+                offset,
+                per_expert: p.numel / n_experts,
+            });
+            offset += p.numel;
+        }
+        if members.is_empty() {
+            bail!("no sparse parameters in layout");
+        }
+        Ok(SparseLayout {
+            members,
+            n_experts,
+            tail_len: offset,
+            expert_len: offset / n_experts,
+        })
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    /// Elements in one layer's whole fused sparse tail.
+    pub fn tail_len(&self) -> usize {
+        self.tail_len
+    }
+
+    /// Elements in one expert's fused block.
+    pub fn expert_len(&self) -> usize {
+        self.expert_len
+    }
+
+    /// Per-member (name, per-expert numel) split metadata.
+    pub fn member_names(&self) -> Vec<(String, usize)> {
+        self.members.iter().map(|m| (m.name.clone(), m.per_expert)).collect()
+    }
+
+    /// Tail-relative `(offset, len)` ranges covering expert `e`'s slice
+    /// of every member tensor (non-contiguous within the tail).
+    pub fn expert_ranges(&self, expert: usize) -> Vec<(usize, usize)> {
+        assert!(expert < self.n_experts, "expert {} of {}", expert, self.n_experts);
+        self.members
+            .iter()
+            .map(|m| (m.offset + expert * m.per_expert, m.per_expert))
+            .collect()
+    }
+
+    /// Gather expert `e`'s fused block out of a layer's fused tail.
+    pub fn gather(&self, expert: usize, tail: &[f32]) -> Vec<f32> {
+        assert_eq!(tail.len(), self.tail_len, "tail len");
+        let mut out = Vec::with_capacity(self.expert_len);
+        for (off, len) in self.expert_ranges(expert) {
+            out.extend_from_slice(&tail[off..off + len]);
+        }
+        out
+    }
+
+    /// Scatter expert `e`'s fused block back into a layer's fused tail.
+    pub fn scatter(&self, expert: usize, block: &[f32], tail: &mut [f32]) {
+        assert_eq!(tail.len(), self.tail_len, "tail len");
+        assert_eq!(block.len(), self.expert_len, "block len");
+        let mut src = 0usize;
+        for (off, len) in self.expert_ranges(expert) {
+            tail[off..off + len].copy_from_slice(&block[src..src + len]);
+            src += len;
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -46,75 +168,64 @@ pub struct HierarchicalStore {
     cache: CpuCache,
     cfg: StoreConfig,
     n_layers: usize,
-    /// Elements per fused sparse block (one layer).
-    block_len: usize,
-    /// (name, numel) split metadata per layer, from the manifest.
-    layout: Vec<(String, usize)>,
+    layout: SparseLayout,
 }
 
-fn key(layer: usize, kind: &str) -> String {
-    format!("layer{}.sparse.{}", layer, kind)
+fn key(layer: usize, expert: usize, kind: &str) -> String {
+    format!("layer{}.expert{}.{}", layer, expert, kind)
 }
 
 impl HierarchicalStore {
     /// Build from the manifest's parameter layout. `params` is the flat
-    /// layout; sparse entries are grouped by layer.
+    /// layout; sparse entries are grouped by layer and split by expert.
     pub fn new(
         ssd: SsdStore,
         cfg: StoreConfig,
         params: &[ParamSpec],
         n_layers: usize,
+        n_experts: usize,
     ) -> Result<HierarchicalStore> {
-        let layer0: Vec<(String, usize)> = params
-            .iter()
-            .filter(|p| p.sparse && p.layer() == Some(0))
-            .map(|p| (p.name.trim_start_matches("layer0.").to_string(), p.numel))
-            .collect();
-        if layer0.is_empty() {
-            bail!("no sparse parameters in layout");
-        }
-        let block_len = layer0.iter().map(|(_, n)| n).sum();
+        let layout = SparseLayout::from_specs(params, n_experts)?;
         Ok(HierarchicalStore {
             ssd,
             cache: CpuCache::new(cfg.cache.clone()),
             cfg,
             n_layers,
-            block_len,
-            layout: layer0,
+            layout,
         })
-    }
-
-    pub fn block_len(&self) -> usize {
-        self.block_len
     }
 
     pub fn n_layers(&self) -> usize {
         self.n_layers
     }
 
-    /// Per-layer split metadata (tensor name within the layer, numel).
-    pub fn layout(&self) -> &[(String, usize)] {
+    /// Expert-axis split metadata (shared with the trainer's splicing).
+    pub fn layout(&self) -> &SparseLayout {
         &self.layout
     }
 
-    /// Seed the SSD tier with initial states for every layer.
+    /// Seed the SSD tier with initial states. `init_tail(l)` yields layer
+    /// `l`'s whole fused sparse tail; it is split into per-expert records.
     pub fn initialize(
         &mut self,
-        mut init_p: impl FnMut(usize) -> Vec<f32>,
+        mut init_tail: impl FnMut(usize) -> Vec<f32>,
     ) -> Result<()> {
         for l in 0..self.n_layers {
-            let p = init_p(l);
-            assert_eq!(p.len(), self.block_len, "init block len");
-            let zeros = vec![0.0f32; self.block_len];
-            self.ssd.write(&key(l, "p"), &p)?;
-            self.ssd.write(&key(l, "m"), &zeros)?;
-            self.ssd.write(&key(l, "v"), &zeros)?;
+            let tail = init_tail(l);
+            assert_eq!(tail.len(), self.layout.tail_len, "init tail len");
+            let zeros = vec![0.0f32; self.layout.expert_len];
+            for e in 0..self.layout.n_experts {
+                let block = self.layout.gather(e, &tail);
+                self.ssd.write(&key(l, e, "p"), &block)?;
+                self.ssd.write(&key(l, e, "m"), &zeros)?;
+                self.ssd.write(&key(l, e, "v"), &zeros)?;
+            }
         }
         Ok(())
     }
 
-    fn fetch_kind(&mut self, layer: usize, kind: &str) -> Result<Vec<f32>> {
-        let k = key(layer, kind);
+    fn fetch_kind(&mut self, layer: usize, expert: usize, kind: &str) -> Result<Vec<f32>> {
+        let k = key(layer, expert, kind);
         if let Some(data) = self.cache.get(&k) {
             return Ok(data.to_vec());
         }
@@ -127,20 +238,25 @@ impl HierarchicalStore {
         Ok(data)
     }
 
-    /// Algorithm-1 `SparseSchedule`: fetch one layer's sparse block
-    /// through the CPU cache (SSD on miss, evict+writeback when full).
-    pub fn fetch(&mut self, layer: usize) -> Result<SparseBlock> {
-        let p = self.fetch_kind(layer, "p")?;
+    /// Algorithm-1 `SparseSchedule`, expert-granular: fetch one expert's
+    /// sparse block through the CPU cache (SSD on miss, evict+writeback
+    /// when full).
+    pub fn fetch(&mut self, layer: usize, expert: usize) -> Result<SparseBlock> {
+        let p = self.fetch_kind(layer, expert, "p")?;
         let (m, v) = if self.cfg.with_moments {
-            (self.fetch_kind(layer, "m")?, self.fetch_kind(layer, "v")?)
+            (
+                self.fetch_kind(layer, expert, "m")?,
+                self.fetch_kind(layer, expert, "v")?,
+            )
         } else {
             (Vec::new(), Vec::new())
         };
-        Ok(SparseBlock { layer, p, m, v })
+        Ok(SparseBlock { layer, expert, p, m, v })
     }
 
-    /// Write an updated block back (dirty in cache; SSD write deferred to
-    /// eviction or flush — this is what bounds SSD erase cycles).
+    /// Write an updated expert block back (dirty in cache; SSD write
+    /// deferred to eviction or flush — this is what bounds SSD erase
+    /// cycles).
     pub fn update(&mut self, block: SparseBlock) -> Result<()> {
         let kinds: [(&str, &Vec<f32>); 3] =
             [("p", &block.p), ("m", &block.m), ("v", &block.v)];
@@ -148,7 +264,13 @@ impl HierarchicalStore {
             if data.is_empty() {
                 continue;
             }
-            let k = key(block.layer, kind);
+            if data.len() != self.layout.expert_len {
+                bail!(
+                    "update layer {} expert {}: {} block has {} elements, expected {}",
+                    block.layer, block.expert, kind, data.len(), self.layout.expert_len
+                );
+            }
+            let k = key(block.layer, block.expert, kind);
             if !self.cache.update(&k, data.clone()) {
                 // Not cached (evicted since fetch): insert dirty.
                 for ev in self.cache.insert(&k, data.clone(), true) {
@@ -159,6 +281,19 @@ impl HierarchicalStore {
             }
         }
         Ok(())
+    }
+
+    /// Pin the hot-expert set in the CPU cache (`LoadStats::hot_experts`
+    /// feeds this — the `alpha` working set of §2.1). Replaces the
+    /// previous pin set.
+    pub fn pin_hot(&mut self, experts: &[(usize, usize)]) {
+        let mut keys = std::collections::HashSet::new();
+        for &(l, e) in experts {
+            for kind in ["p", "m", "v"] {
+                keys.insert(key(l, e, kind));
+            }
+        }
+        self.cache.set_pinned(keys);
     }
 
     /// End-of-step housekeeping (decay of hit counters).
@@ -188,9 +323,10 @@ impl HierarchicalStore {
         self.ssd.total_erases()
     }
 
-    /// Read a block directly from SSD bypassing the cache (verification).
-    pub fn read_ssd_direct(&mut self, layer: usize) -> Result<Vec<f32>> {
-        self.ssd.read(&key(layer, "p"))
+    /// Read an expert's parameter block directly from SSD bypassing the
+    /// cache (verification).
+    pub fn read_ssd_direct(&mut self, layer: usize, expert: usize) -> Result<Vec<f32>> {
+        self.ssd.read(&key(layer, expert, "p"))
     }
 }
 
@@ -200,6 +336,8 @@ mod tests {
     use crate::storage::cpu_cache::CachePolicy;
     use crate::storage::ssd_store::SsdStore;
 
+    // 2 experts: w1 [2,4,8] = 64 (32/expert), b1 [2,8] = 16 (8/expert);
+    // tail 80, expert block 40.
     fn specs(n_layers: usize) -> Vec<ParamSpec> {
         let mut v = Vec::new();
         for l in 0..n_layers {
@@ -210,10 +348,10 @@ mod tests {
         v
     }
 
-    fn store(cache_blocks: usize, n_layers: usize) -> HierarchicalStore {
+    fn store(cache_expert_blocks: usize, n_layers: usize) -> HierarchicalStore {
         let cfg = StoreConfig {
             cache: CacheConfig {
-                capacity_bytes: cache_blocks * 80 * 4,
+                capacity_bytes: cache_expert_blocks * 40 * 4,
                 policy: CachePolicy::Alg1,
                 hit_threshold: 1.0,
                 beta: 0.5,
@@ -221,74 +359,145 @@ mod tests {
             },
             with_moments: true,
         };
-        let mut s =
-            HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs(n_layers), n_layers)
-                .unwrap();
+        let mut s = HierarchicalStore::new(
+            SsdStore::memory_backed(),
+            cfg,
+            &specs(n_layers),
+            n_layers,
+            2,
+        )
+        .unwrap();
         s.initialize(|l| vec![l as f32; 80]).unwrap();
         s
     }
 
     #[test]
-    fn block_len_from_layout() {
+    fn layout_splits_tail_by_expert() {
         let s = store(4, 3);
-        assert_eq!(s.block_len(), 80);
-        assert_eq!(s.layout().len(), 2);
-        assert_eq!(s.layout()[0], ("w1".to_string(), 64));
+        let lo = s.layout();
+        assert_eq!(lo.tail_len(), 80);
+        assert_eq!(lo.expert_len(), 40);
+        assert_eq!(lo.n_experts(), 2);
+        assert_eq!(lo.member_names(), vec![("w1".to_string(), 32), ("b1".to_string(), 8)]);
+        // expert 1's slices: w1[32..64], b1[64+8..80]
+        assert_eq!(lo.expert_ranges(1), vec![(32, 32), (72, 8)]);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let s = store(4, 1);
+        let lo = s.layout();
+        let tail: Vec<f32> = (0..80).map(|i| i as f32).collect();
+        let b0 = lo.gather(0, &tail);
+        let b1 = lo.gather(1, &tail);
+        assert_eq!(b0.len(), 40);
+        assert_eq!(b0[0], 0.0);
+        assert_eq!(b1[0], 32.0); // expert 1's w1 slice starts at 32
+        assert_eq!(b0[32], 64.0); // expert 0's b1 slice starts at 64
+        let mut back = vec![0.0f32; 80];
+        lo.scatter(0, &b0, &mut back);
+        lo.scatter(1, &b1, &mut back);
+        assert_eq!(back, tail);
     }
 
     #[test]
     fn fetch_roundtrip_and_cache_hit() {
         let mut s = store(8, 3);
-        let b = s.fetch(1).unwrap();
-        assert_eq!(b.p, vec![1.0; 80]);
-        assert_eq!(b.m, vec![0.0; 80]);
+        let b = s.fetch(1, 0).unwrap();
+        assert_eq!(b.p, vec![1.0; 40]);
+        assert_eq!(b.m, vec![0.0; 40]);
         let misses0 = s.cache_stats().misses;
-        let _ = s.fetch(1).unwrap(); // now cached
+        let _ = s.fetch(1, 0).unwrap(); // now cached
         assert_eq!(s.cache_stats().misses, misses0);
         assert!(s.cache_stats().hits >= 3);
     }
 
     #[test]
+    fn untouched_experts_never_leave_ssd() {
+        let mut s = store(8, 2);
+        let reads0 = s.ssd_stats().reads;
+        let _ = s.fetch(0, 1).unwrap();
+        // Only expert 1's three records were read; expert 0 stayed cold.
+        assert_eq!(s.ssd_stats().reads, reads0 + 3);
+    }
+
+    #[test]
     fn update_is_writeback_not_writethrough() {
         let mut s = store(16, 2);
-        let mut b = s.fetch(0).unwrap();
-        b.p = vec![42.0; 80];
+        let mut b = s.fetch(0, 1).unwrap();
+        b.p = vec![42.0; 40];
         let erases_before = s.ssd_total_erases();
         s.update(b).unwrap();
         // No SSD write yet (dirty in cache).
         assert_eq!(s.ssd_total_erases(), erases_before);
         s.flush().unwrap();
         assert!(s.ssd_total_erases() > erases_before);
-        assert_eq!(s.read_ssd_direct(0).unwrap(), vec![42.0; 80]);
+        assert_eq!(s.read_ssd_direct(0, 1).unwrap(), vec![42.0; 40]);
+        // The sibling expert was never dirtied: still the initial values.
+        assert_eq!(s.read_ssd_direct(0, 0).unwrap(), vec![0.0; 40]);
+    }
+
+    #[test]
+    fn update_validates_block_length() {
+        let mut s = store(8, 1);
+        let bad = SparseBlock { layer: 0, expert: 0, p: vec![1.0; 7], m: vec![], v: vec![] };
+        let err = s.update(bad).unwrap_err().to_string();
+        assert!(err.contains("expected 40"), "{}", err);
     }
 
     #[test]
     fn eviction_pressure_writes_back_dirty_blocks() {
-        // cache of 2 blocks, 3 layers × 3 kinds → heavy eviction traffic
-        let mut s = store(2, 3);
-        for l in 0..3 {
-            let mut b = s.fetch(l).unwrap();
-            b.p = vec![100.0 + l as f32; 80];
-            s.update(b).unwrap();
+        // cache of 2 expert blocks, 2 layers × 2 experts × 3 kinds →
+        // heavy eviction traffic.
+        let mut s = store(2, 2);
+        for l in 0..2 {
+            for e in 0..2 {
+                let mut b = s.fetch(l, e).unwrap();
+                b.p = vec![100.0 + (2 * l + e) as f32; 40];
+                s.update(b).unwrap();
+            }
             s.end_step();
         }
         s.flush().unwrap();
-        for l in 0..3 {
-            assert_eq!(s.read_ssd_direct(l).unwrap(), vec![100.0 + l as f32; 80], "layer {}", l);
+        for l in 0..2 {
+            for e in 0..2 {
+                assert_eq!(
+                    s.read_ssd_direct(l, e).unwrap(),
+                    vec![100.0 + (2 * l + e) as f32; 40],
+                    "layer {} expert {}", l, e
+                );
+            }
         }
     }
 
     #[test]
     fn forward_only_fetch_skips_moments() {
-        let cfg = StoreConfig {
-            cache: CacheConfig::default(),
-            with_moments: false,
-        };
+        let cfg = StoreConfig { cache: CacheConfig::default(), with_moments: false };
         let mut s =
-            HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs(2), 2).unwrap();
+            HierarchicalStore::new(SsdStore::memory_backed(), cfg, &specs(2), 2, 2).unwrap();
         s.initialize(|_| vec![1.0; 80]).unwrap();
-        let b = s.fetch(0).unwrap();
+        let b = s.fetch(0, 0).unwrap();
         assert!(b.m.is_empty() && b.v.is_empty());
-        assert_eq!(b.p.len(), 80);
+        assert_eq!(b.p.len(), 40);
+    }
+
+    #[test]
+    fn pinned_hot_experts_resist_eviction() {
+        // Cache of 4 expert-kind records; (0,0)'s three records are
+        // pinned, so the second fetch's records evict each other while
+        // the pins stay resident.
+        let mut s = store(4, 2);
+        s.pin_hot(&[(0, 0)]);
+        let _ = s.fetch(0, 0).unwrap(); // p,m,v of (0,0) enter the cache
+        let _ = s.fetch(1, 1).unwrap(); // must evict — but not the pins
+        let misses = s.cache_stats().misses;
+        let _ = s.fetch(0, 0).unwrap(); // still resident
+        assert_eq!(s.cache_stats().misses, misses, "pinned expert stayed cached");
+    }
+
+    #[test]
+    fn indivisible_expert_dim_rejected() {
+        let bad = vec![ParamSpec { name: "layer0.w1".into(), shape: vec![7], sparse: true, numel: 7 }];
+        assert!(SparseLayout::from_specs(&bad, 2).is_err());
     }
 }

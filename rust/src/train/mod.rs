@@ -13,4 +13,4 @@ pub mod checkpoint;
 pub use data::SyntheticCorpus;
 pub use elastic::{ElasticPlan, TaskLoad};
 pub use optimizer::ParamState;
-pub use trainer::{OffloadTrainer, ResidentTrainer, StepMetrics};
+pub use trainer::{OffloadTrainer, PrefetchStats, ResidentTrainer, StepMetrics};

@@ -35,6 +35,30 @@ pub fn cpu_adamw(p: &mut [f32], g: &[f32], m: &mut [f32], v: &mut [f32], step: f
     }
 }
 
+/// AdamW with an all-zero gradient, elementwise-identical to
+/// [`cpu_adamw`] called with `g = 0` (moment decay + weight decay only).
+/// This is the *lazy catch-up* primitive of expert-granular offload:
+/// an expert no batch routes to still changes every step in the resident
+/// math (m·β₁, v·β₂, p shrinks by weight decay), so its skipped steps are
+/// replayed in order when the expert is next fetched — I/O stays
+/// proportional to routed load while the numbers stay bit-equal.
+pub fn cpu_adamw_zero_grad(p: &mut [f32], m: &mut [f32], v: &mut [f32], step: f32, lr: f32) {
+    assert!(p.len() == m.len() && m.len() == v.len());
+    let bc1 = 1.0 - BETA1.powf(step);
+    let bc2 = 1.0 - BETA2.powf(step);
+    for i in 0..p.len() {
+        // Same expression tree as cpu_adamw with gi = 0 so f32 rounding
+        // is identical: x + (1-β)·0 == x and β·v + 0·0 == β·v exactly.
+        let mi = BETA1 * m[i];
+        let vi = BETA2 * v[i];
+        m[i] = mi;
+        v[i] = vi;
+        let mhat = mi / bc1;
+        let vhat = vi / bc2;
+        p[i] -= lr * (mhat / (vhat.sqrt() + EPS) + WEIGHT_DECAY * p[i]);
+    }
+}
+
 use crate::comm::FusionBuffer;
 use crate::runtime::{HostTensor, ModelArtifacts, ParamSpec};
 use crate::util::Rng;
@@ -195,6 +219,24 @@ mod tests {
         let wv = w.as_f32().unwrap();
         let std = (wv.iter().map(|v| v * v).sum::<f32>() / wv.len() as f32).sqrt();
         assert!((std - 0.125).abs() < 0.01, "std {}", std); // 64^-0.5
+    }
+
+    #[test]
+    fn zero_grad_adamw_matches_general_adamw_bitwise() {
+        let mut rng = Rng::new(7);
+        let n = 257;
+        let mut p1: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+        let mut m1: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.1).collect();
+        let mut v1: Vec<f32> = (0..n).map(|_| (rng.normal() as f32 * 0.1).abs()).collect();
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        let zeros = vec![0.0f32; n];
+        for step in 1..=5 {
+            cpu_adamw(&mut p1, &zeros, &mut m1, &mut v1, step as f32, 1e-3);
+            cpu_adamw_zero_grad(&mut p2, &mut m2, &mut v2, step as f32, 1e-3);
+        }
+        assert_eq!(p1, p2, "lazy catch-up must be bit-identical");
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

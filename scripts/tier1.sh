@@ -16,7 +16,13 @@ cargo build --release
 echo "== tier1: cargo test -q"
 cargo test -q
 
+echo "== tier1: clippy (deny warnings)"
+cargo clippy -q --all-targets -- -D warnings
+
 echo "== tier1: serving smoke (continuous-batching HTTP path)"
 cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2
+
+echo "== tier1: 2D-prefetch ablation smoke (asserts 2D < 1D bytes under skew)"
+SEMOE_SMOKE=1 cargo bench --bench ablation_prefetch
 
 echo "tier1 OK"
