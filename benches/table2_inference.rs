@@ -8,12 +8,16 @@
 
 use std::rc::Rc;
 
-use semoe::config::presets::{cluster_for_gpus, table2_model, table2_rows};
+use semoe::config::presets::{cluster_for_gpus, fig10_model, table2_model, table2_rows};
 use semoe::infer::{InferMode, InferenceEngine, ServeSession, SessionConfig};
 use semoe::metrics::{Registry, Report};
 use semoe::runtime::{HostTensor, ModelArtifacts};
-use semoe::sim::{simulate_inference, simulate_serving, ServeRequest};
+use semoe::sim::{simulate_inference, simulate_routed_ring, simulate_serving, ServeRequest};
 use semoe::util::Rng;
+
+fn smoke() -> bool {
+    std::env::var("SEMOE_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
 
 fn main() {
     let mut rep = Report::new("table2_inference");
@@ -78,6 +82,44 @@ fn main() {
         "continuous batching must not lose to batch-synchronous"
     );
 
+    // ---- routed-vs-dense ring pricing under the serving regime: the
+    // bytes a ring pass copies when it stages only the live batch's
+    // expected expert working set (uniform vs Zipf-skewed routing, the
+    // UFO-style unbalanced workload), at paper scale.
+    let routed_model = fig10_model(); // 32 experts — the offload testbed
+    let routed_cl = cluster_for_gpus(16);
+    let rt = rep.table(
+        "routed ring pricing (58.2B, 32 experts, K=4): live decode batches",
+        &["live tokens", "routing", "E[distinct experts]", "copy GB/pass", "vs dense"],
+    );
+    let mut zipf_vs_dense = (0.0f64, 0.0f64); // (routed zipf bytes, dense bytes)
+    for tokens in [8.0f64, 64.0] {
+        for (routing, s) in [("uniform", 0.0), ("zipf s=1.2", 1.2)] {
+            let r = simulate_routed_ring(&routed_model, &routed_cl, 4, tokens, s);
+            if tokens > 32.0 && s > 0.0 {
+                zipf_vs_dense = (r.bytes_routed, r.bytes_dense);
+            }
+            rep.row(
+                rt,
+                vec![
+                    format!("{:.0}", tokens),
+                    routing.to_string(),
+                    format!("{:.1}/{}", r.expected_experts, routed_model.n_experts),
+                    format!("{:.2}", r.bytes_routed / 1e9),
+                    // bytes_dense is token/skew-independent: any row's
+                    // report carries the same dense reference
+                    format!("{:.2}x", r.bytes_routed / r.bytes_dense),
+                ],
+            );
+        }
+    }
+    assert!(
+        zipf_vs_dense.0 < zipf_vs_dense.1,
+        "routed ring pass must price strictly below dense under Zipf skew: {} vs {}",
+        zipf_vs_dense.0,
+        zipf_vs_dense.1
+    );
+
     // ---- measured rows: real engine, real artifacts.
     let arts = Rc::new(ModelArtifacts::load("deep").expect("deep artifacts"));
     let model = arts.preset.clone();
@@ -88,7 +130,7 @@ fn main() {
         .collect();
     let batch = HostTensor::from_i32(&[model.batch_size, model.seq_len], toks);
     let _ = engine.forward(&batch).expect("warmup");
-    let reps = 5;
+    let reps = if smoke() { 2 } else { 5 };
     let t0 = std::time::Instant::now();
     for _ in 0..reps {
         let _ = engine.forward(&batch).expect("forward");

@@ -12,7 +12,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use semoe::infer::server::{http_get, http_post, Server, ServerStats};
-use semoe::infer::{AdmissionConfig, InferMode, InferenceEngine, SessionConfig};
+use semoe::infer::{AdmissionConfig, InferMode, InferenceEngine, RoutedRingConfig, SessionConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::util::cli::Args;
 use semoe::util::human_bytes;
@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false).map_err(|e| anyhow::anyhow!(e))?;
     let preset = args.str("preset", "deep");
     let ring = args.usize("ring", 3);
+    let routed = args.flag("routed");
     let n_requests = args.usize("requests", 12);
     let max_tokens = args.usize("tokens", 4);
 
@@ -42,7 +43,10 @@ fn main() -> anyhow::Result<()> {
         move || {
             let arts = Rc::new(ModelArtifacts::load(&preset_owned)?);
             let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
-            let engine = InferenceEngine::new(arts.clone(), mode, 7, None)?;
+            let mut engine = InferenceEngine::new(arts.clone(), mode, 7, None)?;
+            if routed && ring > 0 {
+                engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+            }
             let resident = InferenceEngine::new(arts.clone(), InferMode::Resident, 7, None)?;
             let _ = info_tx.send((engine.device_weight_bytes(), resident.device_weight_bytes()));
             drop(resident);
@@ -50,7 +54,13 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     let addr = server.addr;
-    println!("serving '{}' with ring K={} on {}", preset, ring, addr);
+    println!(
+        "serving '{}' with ring K={}{} on {}",
+        preset,
+        ring,
+        if routed { " (routed passes)" } else { "" },
+        addr
+    );
 
     let (code, h) = http_get(&addr, "/healthz")?;
     assert_eq!(code, 200);

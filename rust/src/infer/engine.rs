@@ -2,15 +2,28 @@
 //! artifact with either resident weights or ring-memory offload, plus
 //! greedy generation. One compiled `layer_fwd` executable serves every
 //! layer (all layers share shapes) — the property the ring design needs.
+//!
+//! Ring passes are optionally **routed-expert-granular** (see
+//! [`RoutedRingConfig`] and `docs/serving.md` §Routed ring passes): each
+//! pass plans an expert subset per ring slot from the live batch — the
+//! embedding-proxy prediction unioned with the pinned hot set, the same
+//! machinery as the trainer's 2D prefetch — and the copy lane moves only
+//! that subset. Immediately before a layer executes, the shadow router's
+//! exact routed superset repairs the plan by demand-splicing any missed
+//! expert, so decode outputs stay bit-identical to the dense path.
 
 use std::rc::Rc;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::ring_memory::{LayerLoader, RingMemory};
+use super::ring_memory::{LayerLoader, RingMemory, RingStats};
 use super::session::{self, DecodeModel, SlotState, StepReport};
 use crate::comm::FusionBuffer;
+use crate::moe::shadow::{PREDICT_MARGIN, ROUTE_MARGIN};
+use crate::moe::{LoadStats, ShadowRouter};
+use crate::prefetch::RoutePlan;
 use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
 use crate::train::optimizer::{group_of, init_tensor, Group};
 use crate::util::Rng;
@@ -24,20 +37,76 @@ pub enum InferMode {
     Ring { k: usize },
 }
 
+/// Routed-ring knobs. Off by default; only meaningful in `Ring` mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoutedRingConfig {
+    /// Plan + repair per-pass expert subsets instead of copying every
+    /// expert of every section.
+    pub enabled: bool,
+    /// Routed-load coverage of the pinned hot set unioned into each
+    /// plan ([`LoadStats::hot_experts`]'s `frac`).
+    pub hot_frac: f64,
+}
+
+impl Default for RoutedRingConfig {
+    fn default() -> Self {
+        RoutedRingConfig { enabled: false, hot_frac: 0.5 }
+    }
+}
+
+/// Routed-pass plan/repair accounting (inference twin of the trainer's
+/// `PrefetchStats`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouteRepairStats {
+    /// Σ |planned set| over all layers of all routed passes.
+    pub planned_experts: u64,
+    /// Σ |exact routed superset| (what compute actually needed).
+    pub exact_experts: u64,
+    /// Experts the plan missed, demand-spliced on the compute thread.
+    pub repaired_experts: u64,
+    /// Bytes those demand splices moved (visible, un-overlapped copy).
+    pub repair_bytes: u64,
+}
+
 /// Per-pass timing: the Fig 10 bars.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PassTiming {
     pub compute_secs: f64,
     pub copy_secs: f64,
     pub stall_secs: f64,
+    /// Coordinator-side shadow-router time (plan + exact-set repair) of
+    /// routed ring passes.
+    pub shadow_secs: f64,
+}
+
+/// One member tensor's slot within a layer's fused weight buffer.
+#[derive(Debug, Clone)]
+struct Member {
+    /// Short name within the layer ("wq", "w1", …) — the shadow router's
+    /// lookup key.
+    name: String,
+    shape: Vec<usize>,
+    /// Expert-leading-dim tensor (the routed-copy unit).
+    sparse: bool,
+    /// f32 offset within the fused layer buffer.
+    offset: usize,
+}
+
+impl Member {
+    fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
 }
 
 /// CPU-tier weight store: per-layer fused buffers + split metadata.
 pub struct CpuWeightStore {
-    /// Fused per-layer weights in layer_fwd input order.
-    layers: Vec<Vec<f32>>,
-    /// (shape) per member, shared by all layers.
-    member_shapes: Vec<Vec<usize>>,
+    /// Fused per-layer weights in layer_fwd input order. Shared with the
+    /// ring staging thread via `Arc` so ring mode holds ONE host copy of
+    /// the model, not two; `set_layer` copy-on-writes.
+    layers: Arc<Vec<Vec<f32>>>,
+    /// Per-member metadata, shared by all layers.
+    members: Vec<Member>,
+    n_experts: usize,
 }
 
 impl CpuWeightStore {
@@ -48,59 +117,134 @@ impl CpuWeightStore {
         // Must mirror train::optimizer::init_params ordering: walk the
         // full flat spec so the RNG stream matches training checkpoints.
         let mut layers: Vec<FusionBuffer> = (0..model.n_layers).map(|_| FusionBuffer::new()).collect();
-        let mut member_shapes: Vec<Vec<usize>> = Vec::new();
+        let mut members: Vec<Member> = Vec::new();
+        let mut offset = 0usize;
         for spec in arts.params() {
             let t = init_tensor(spec, &mut rng);
             if let Group::Layer(l) = group_of(spec) {
                 layers[l].register(&spec.name, spec.numel);
                 layers[l].pack(&spec.name, t.as_f32()?);
                 if l == 0 {
-                    member_shapes.push(spec.shape.clone());
+                    let short = spec.name.splitn(2, '.').nth(1).unwrap_or(&spec.name);
+                    members.push(Member {
+                        name: short.to_string(),
+                        shape: spec.shape.clone(),
+                        sparse: spec.sparse,
+                        offset,
+                    });
+                    offset += spec.numel;
                 }
             }
         }
         Ok(CpuWeightStore {
-            layers: layers.into_iter().map(|fb| fb.fused().to_vec()).collect(),
-            member_shapes,
+            layers: Arc::new(layers.into_iter().map(|fb| fb.fused().to_vec()).collect()),
+            members,
+            n_experts: model.n_experts,
         })
     }
 
     /// Overwrite layer weights (e.g. from a training checkpoint).
+    /// Copy-on-write: a live ring loader keeps serving its snapshot,
+    /// matching the pre-`Arc` clone semantics. Do NOT call this while a
+    /// ring built from [`Self::loader`] is in use — the ring would keep
+    /// staging the old snapshot while routed plan/repair reads the new
+    /// weights, mixing model versions within a layer; rebuild the
+    /// engine (or its ring) after a weight swap instead.
     pub fn set_layer(&mut self, layer: usize, fused: Vec<f32>) {
-        assert_eq!(fused.len(), self.layers[layer].len());
-        self.layers[layer] = fused;
+        let layers = Arc::make_mut(&mut self.layers);
+        assert_eq!(fused.len(), layers[layer].len());
+        layers[layer] = fused;
     }
 
     pub fn layer_bytes(&self) -> usize {
         self.layers.first().map(|l| l.len() * 4).unwrap_or(0)
     }
 
-    /// Unfuse one layer into artifact-input tensors.
-    pub fn tensors(&self, layer: usize) -> Vec<HostTensor> {
-        let mut out = Vec::with_capacity(self.member_shapes.len());
-        let mut off = 0;
-        for shape in &self.member_shapes {
-            let n: usize = shape.iter().product();
-            out.push(HostTensor::from_f32(shape, self.layers[layer][off..off + n].to_vec()));
-            off += n;
-        }
-        out
+    /// One member tensor's data within `layer`'s fused buffer, by short
+    /// name — the shadow router's parameter resolver.
+    pub fn member(&self, layer: usize, name: &str) -> &[f32] {
+        let m = self
+            .members
+            .iter()
+            .find(|m| m.name == name)
+            .unwrap_or_else(|| panic!("no layer member '{}'", name));
+        &self.layers[layer][m.offset..m.offset + m.numel()]
     }
 
-    /// A `RingMemory` loader view over this store (cloned data moves to
-    /// the staging thread).
-    pub fn loader(&self) -> LayerLoader {
-        let layers = self.layers.clone();
-        let shapes = self.member_shapes.clone();
-        Box::new(move |l| {
-            let mut out = Vec::with_capacity(shapes.len());
-            let mut off = 0;
-            for shape in &shapes {
-                let n: usize = shape.iter().product();
-                out.push(HostTensor::from_f32(shape, layers[l][off..off + n].to_vec()));
-                off += n;
+    /// Unfuse one layer into artifact-input tensors.
+    pub fn tensors(&self, layer: usize) -> Vec<HostTensor> {
+        let fused = &self.layers[layer];
+        self.members
+            .iter()
+            .map(|m| HostTensor::from_f32(&m.shape, fused[m.offset..m.offset + m.numel()].to_vec()))
+            .collect()
+    }
+
+    /// Demand-repair: splice expert `e`'s slices of `layer` into the
+    /// staged tensors of a routed pass. Returns the bytes copied.
+    pub fn copy_expert_into(
+        &self,
+        layer: usize,
+        expert: usize,
+        tensors: &mut [HostTensor],
+    ) -> Result<usize> {
+        anyhow::ensure!(
+            tensors.len() == self.members.len(),
+            "staged {} tensors for {} members",
+            tensors.len(),
+            self.members.len()
+        );
+        let fused = &self.layers[layer];
+        let mut bytes = 0usize;
+        for (m, t) in self.members.iter().zip(tensors.iter_mut()) {
+            if !m.sparse {
+                continue;
             }
-            out
+            let per_expert = m.numel() / self.n_experts;
+            let src = &fused[m.offset + expert * per_expert..m.offset + (expert + 1) * per_expert];
+            t.as_f32_mut()?[expert * per_expert..(expert + 1) * per_expert].copy_from_slice(src);
+            bytes += per_expert * 4;
+        }
+        Ok(bytes)
+    }
+
+    /// A `RingMemory` loader view over this store (the staging thread
+    /// shares the `Arc`'d layer buffers — no second host copy of the
+    /// model). Given an expert subset, only those experts' slices of
+    /// sparse members are copied — the rest stay zero, which the
+    /// kernel's one-hot combine never observes (no token selects an
+    /// unrouted expert, so its contribution is an exact 0.0).
+    pub fn loader(&self) -> LayerLoader {
+        let layers = Arc::clone(&self.layers);
+        let members = self.members.clone();
+        let n_experts = self.n_experts;
+        Box::new(move |l, experts: Option<&[usize]>| {
+            let fused = &layers[l];
+            let mut out = Vec::with_capacity(members.len());
+            let mut copied = 0usize;
+            for m in &members {
+                let numel = m.numel();
+                let src = &fused[m.offset..m.offset + numel];
+                match experts {
+                    Some(set) if m.sparse => {
+                        let per_expert = numel / n_experts;
+                        let mut data = vec![0f32; numel];
+                        for &e in set {
+                            if e < n_experts {
+                                data[e * per_expert..(e + 1) * per_expert]
+                                    .copy_from_slice(&src[e * per_expert..(e + 1) * per_expert]);
+                                copied += per_expert * 4;
+                            }
+                        }
+                        out.push(HostTensor::from_f32(&m.shape, data));
+                    }
+                    _ => {
+                        copied += numel * 4;
+                        out.push(HostTensor::from_f32(&m.shape, src.to_vec()));
+                    }
+                }
+            }
+            (out, copied)
         })
     }
 }
@@ -113,9 +257,23 @@ pub struct InferenceEngine {
     embed: HostTensor,
     head: Vec<HostTensor>, // lnf_scale, lnf_bias, wout
     mode: InferMode,
-    /// Resident weights (mode == Resident).
-    resident: Option<CpuWeightStore>,
+    /// The CPU weight tier: resident-mode compute source, ring-mode
+    /// repair/plan source (the ring loader shares the same `Arc`'d
+    /// buffers — one host copy of the model).
+    store: CpuWeightStore,
     ring: Option<RingMemory>,
+    /// Coordinator-side dense-prefix router (plans + exact repairs).
+    shadow: ShadowRouter,
+    /// Per-layer rolling expert load → hot-set pinning for routed plans.
+    load: Vec<LoadStats>,
+    hot: Vec<Vec<usize>>,
+    routed: RoutedRingConfig,
+    route_stats: RouteRepairStats,
+    /// Reusable flat token scratch for `decode_step`: removes the
+    /// per-slot window clones from the serving hot path (one staging
+    /// copy into the input `HostTensor` remains — the tensor API owns
+    /// its data).
+    flat: Vec<i32>,
     pub timing: PassTiming,
 }
 
@@ -141,13 +299,13 @@ impl InferenceEngine {
                 Group::Layer(_) => {}
             }
         }
-        let (resident, ring) = match mode {
-            InferMode::Resident => (Some(store), None),
-            InferMode::Ring { k } => {
-                let n_layers = arts.preset.n_layers;
-                let loader = store.loader();
-                (None, Some(RingMemory::new(k, n_layers, loader, throttle)))
-            }
+        let (n_layers, d_model, n_heads, n_experts) = {
+            let m = &arts.preset;
+            (m.n_layers, m.d_model, m.n_heads, m.n_experts)
+        };
+        let ring = match mode {
+            InferMode::Resident => None,
+            InferMode::Ring { k } => Some(RingMemory::new(k, n_layers, store.loader(), throttle)),
         };
         Ok(InferenceEngine {
             embed_fwd: arts.load_exe("embed_fwd").context("embed_fwd")?,
@@ -157,8 +315,14 @@ impl InferenceEngine {
             embed: embed.context("embed param")?,
             head,
             mode,
-            resident,
+            store,
             ring,
+            shadow: ShadowRouter::new(d_model, n_heads, n_experts),
+            load: (0..n_layers).map(|_| LoadStats::new(n_experts, 0.5)).collect(),
+            hot: vec![Vec::new(); n_layers],
+            routed: RoutedRingConfig::default(),
+            route_stats: RouteRepairStats::default(),
+            flat: Vec::new(),
             timing: PassTiming::default(),
         })
     }
@@ -167,27 +331,40 @@ impl InferenceEngine {
         self.mode
     }
 
+    /// Configure routed ring passes (plan/repair expert subsets per
+    /// pass). A no-op for copy volume in `Resident` mode.
+    pub fn set_routed(&mut self, cfg: RoutedRingConfig) {
+        self.routed = cfg;
+    }
+
+    pub fn routed(&self) -> RoutedRingConfig {
+        self.routed
+    }
+
+    /// Copy-lane accounting of the ring (None in resident mode).
+    pub fn ring_stats(&self) -> Option<RingStats> {
+        self.ring.as_ref().map(|r| r.stats())
+    }
+
+    /// Plan/repair accounting of routed ring passes.
+    pub fn route_stats(&self) -> RouteRepairStats {
+        self.route_stats
+    }
+
     /// Device-resident weight bytes (the Fig 10 memory comparison).
     pub fn device_weight_bytes(&self) -> usize {
-        let model = &self.arts.preset;
-        let per_layer: usize = self
-            .resident
-            .as_ref()
-            .map(|s| s.layer_bytes())
-            .unwrap_or_else(|| {
-                // ring mode: K slots
-                let c = model.param_counts();
-                c.per_layer * 4
-            });
+        let per_layer = self.store.layer_bytes();
+        let n_layers = self.arts.preset.n_layers;
         match self.mode {
-            InferMode::Resident => per_layer * model.n_layers,
-            InferMode::Ring { k } => per_layer * k.min(model.n_layers),
+            InferMode::Resident => per_layer * n_layers,
+            InferMode::Ring { k } => per_layer * k.min(n_layers),
         }
     }
 
     /// One full forward pass: tokens [B, T] → greedy next token ids [B].
     pub fn forward(&mut self, tokens: &HostTensor) -> Result<Vec<i32>> {
-        let n_layers = self.arts.preset.n_layers;
+        let model = &self.arts.preset;
+        let (n_layers, b, t) = (model.n_layers, model.batch_size, model.seq_len);
         let t0 = Instant::now();
         let mut x = self
             .embed_fwd
@@ -195,27 +372,84 @@ impl InferenceEngine {
             .remove(0);
         self.timing.compute_secs += t0.elapsed().as_secs_f64();
 
-        if let Some(ring) = self.ring.as_mut() {
+        if self.ring.is_some() {
+            // Disjoint field borrows for the ring walk (the shadow/repair
+            // closures read the store while the ring is held mutably).
+            let InferenceEngine {
+                ring, store, shadow, load, hot, routed, route_stats, timing, layer_fwd, embed, ..
+            } = self;
+            let ring = ring.as_mut().unwrap();
+            let store: &CpuWeightStore = store;
+
+            // Plan the expert axis for this pass one ring slot ahead:
+            // embedding-proxy prediction ∪ pinned hot experts, exactly
+            // like the trainer's routing-ahead. Exactness is repaired
+            // per layer below.
+            let plan: Option<RoutePlan> = if routed.enabled {
+                let ts = Instant::now();
+                let predicted = shadow.predict_from_embeddings(
+                    tokens.as_i32()?,
+                    embed.as_f32()?,
+                    n_layers,
+                    |l, name| store.member(l, name),
+                    PREDICT_MARGIN,
+                );
+                let p = RoutePlan::new(predicted, hot);
+                timing.shadow_secs += ts.elapsed().as_secs_f64();
+                route_stats.planned_experts += p.total_planned() as u64;
+                Some(p)
+            } else {
+                None
+            };
+
             let before = ring.stats();
-            ring.begin_pass();
+            ring.begin_pass(plan.as_ref());
             for l in 0..n_layers {
-                let weights = ring.get(l)?;
+                let mut weights = ring.get(l)?;
+                if routed.enabled {
+                    // The exact routed superset for this layer, from the
+                    // actual layer input (the previous layer's gating has
+                    // run by construction). Experts the plan missed are
+                    // demand-spliced from the CPU tier — the visible
+                    // repair cost, counted separately from the overlapped
+                    // copy lane.
+                    let ts = Instant::now();
+                    let (exact, counts) = shadow.route_layer(
+                        x.as_f32()?,
+                        b,
+                        t,
+                        |name| store.member(l, name),
+                        ROUTE_MARGIN,
+                    );
+                    timing.shadow_secs += ts.elapsed().as_secs_f64();
+                    load[l].record(&counts);
+                    hot[l] = load[l].hot_experts(routed.hot_frac);
+                    route_stats.exact_experts += exact.len() as u64;
+                    if let Some(planned) = ring.planned(l) {
+                        for &e in &exact {
+                            if planned.binary_search(&e).is_err() {
+                                route_stats.repaired_experts += 1;
+                                route_stats.repair_bytes +=
+                                    store.copy_expert_into(l, e, &mut weights)? as u64;
+                            }
+                        }
+                    }
+                }
                 let mut inputs = vec![x];
                 inputs.extend(weights);
-                let t0 = Instant::now();
-                let mut out = self.layer_fwd.run(&inputs)?;
-                self.timing.compute_secs += t0.elapsed().as_secs_f64();
+                let tc = Instant::now();
+                let mut out = layer_fwd.run(&inputs)?;
+                timing.compute_secs += tc.elapsed().as_secs_f64();
                 x = out.remove(0);
                 ring.release(l);
             }
             let after = ring.stats();
-            self.timing.copy_secs += after.copy_secs - before.copy_secs;
-            self.timing.stall_secs += after.stall_secs - before.stall_secs;
+            timing.copy_secs += after.copy_secs - before.copy_secs;
+            timing.stall_secs += after.stall_secs - before.stall_secs;
         } else {
-            let store = self.resident.as_ref().unwrap();
             for l in 0..n_layers {
                 let mut inputs = vec![x];
-                inputs.extend(store.tensors(l));
+                inputs.extend(self.store.tensors(l));
                 let t0 = Instant::now();
                 let mut out = self.layer_fwd.run(&inputs)?;
                 self.timing.compute_secs += t0.elapsed().as_secs_f64();
@@ -267,7 +501,10 @@ impl InferenceEngine {
     /// interleave with admissions/retirements between calls; each call
     /// is one complete pass.
     pub fn decode_step(&mut self, slots: &mut [SlotState]) -> Result<StepReport> {
-        session::advance(self, slots)
+        let mut flat = std::mem::take(&mut self.flat);
+        let out = session::advance(self, slots, &mut flat);
+        self.flat = flat;
+        out
     }
 
     /// Tokens processed per second of a measured run.
@@ -285,15 +522,10 @@ impl DecodeModel for InferenceEngine {
         self.arts.preset.seq_len
     }
 
-    fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>> {
+    fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>> {
         let (b, t) = (self.arts.preset.batch_size, self.arts.preset.seq_len);
-        anyhow::ensure!(windows.len() == b, "got {} windows for batch {}", windows.len(), b);
-        let mut flat = Vec::with_capacity(b * t);
-        for w in windows {
-            anyhow::ensure!(w.len() == t, "window length {} != seq_len {}", w.len(), t);
-            flat.extend_from_slice(w);
-        }
-        self.forward(&HostTensor::from_i32(&[b, t], flat))
+        anyhow::ensure!(flat.len() == b * t, "got {} tokens for [{} x {}]", flat.len(), b, t);
+        self.forward(&HostTensor::from_i32(&[b, t], flat.to_vec()))
     }
 }
 
@@ -319,6 +551,62 @@ mod tests {
         let a = res.forward(&t).unwrap();
         let b = ring.forward(&t).unwrap();
         assert_eq!(a, b, "offload must not change numerics");
+    }
+
+    /// The tentpole equivalence: routed passes (planned subsets +
+    /// exact-set repair, everything else zero-filled) must decode
+    /// bit-identically to dense passes on the same seeded workload while
+    /// never copying more bytes.
+    #[test]
+    fn routed_ring_decode_matches_dense_bitwise() {
+        let mut dense = engine(InferMode::Ring { k: 3 });
+        let mut routed = engine(InferMode::Ring { k: 3 });
+        routed.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+        let model = dense.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 7 + 1; 6]).collect();
+        let a = dense.generate(&prompts, 3).unwrap();
+        let b = routed.generate(&prompts, 3).unwrap();
+        assert_eq!(a, b, "routed subset copying must not change decode numerics");
+        let db = dense.ring_stats().unwrap().copy_bytes;
+        let rb = routed.ring_stats().unwrap().copy_bytes;
+        let repair = routed.route_stats().repair_bytes;
+        assert!(
+            rb + repair <= db,
+            "routed pass may not move more than dense: {} + {} repair vs {}",
+            rb,
+            repair,
+            db
+        );
+        let rs = routed.route_stats();
+        assert!(rs.exact_experts > 0, "exact sets must have been computed");
+        assert!(rs.planned_experts > 0, "plans must have been produced");
+    }
+
+    /// Routed mode through the serving slot path: same numerics as
+    /// whole-batch resident generation.
+    #[test]
+    fn routed_session_decode_matches_generate() {
+        use crate::infer::session::{ServeSession, SessionConfig};
+        use crate::metrics::Registry;
+
+        let mut res = engine(InferMode::Resident);
+        let model = res.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 + 2; 4]).collect();
+        let want = res.generate(&prompts, 3).unwrap();
+
+        let mut ring = engine(InferMode::Ring { k: 2 });
+        ring.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+        let mut sess = ServeSession::new(ring, SessionConfig::default(), Registry::new());
+        for (i, p) in prompts.iter().enumerate() {
+            sess.submit(i as u64 + 1, p.clone(), 3).unwrap();
+        }
+        let mut done = sess.run_to_idle().unwrap();
+        done.sort_by_key(|c| c.id);
+        for (c, w) in done.iter().zip(&want) {
+            assert_eq!(&c.tokens, w, "routed slot decode must match batch generate");
+        }
     }
 
     #[test]

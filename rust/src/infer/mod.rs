@@ -1,5 +1,7 @@
 //! Inference: the six-step deployment pipeline (§3.1), the ring-memory
-//! offload engine (§3.2, Figures 4–5), and the slot-based
+//! offload engine (§3.2, Figures 4–5) with optional routed-expert
+//! passes (copy only each section's planned expert subset — see
+//! `docs/serving.md` §Routed ring passes), and the slot-based
 //! continuous-batching serving stack ("internet services"):
 //! [`batcher::AdmissionQueue`] (linger/backpressure/cancellation) feeds
 //! [`session::ServeSession`]'s B generation slots — one layer walk per
@@ -15,9 +17,11 @@ pub mod session;
 pub mod server;
 
 pub use batcher::{AdmissionConfig, AdmissionQueue, AdmitError, Request};
-pub use engine::{InferenceEngine, InferMode, PassTiming};
+pub use engine::{
+    CpuWeightStore, InferMode, InferenceEngine, PassTiming, RouteRepairStats, RoutedRingConfig,
+};
 pub use graph::{Graph, GraphPipeline};
-pub use ring_memory::{RingMemory, RingStats};
+pub use ring_memory::{LayerLoader, RingMemory, RingStats};
 pub use session::{
     Completion, DecodeModel, FinishReason, RejectReason, ServeReply, ServeSession, SessionConfig,
     SessionStats, SlotPhase, SlotState, StepReport,

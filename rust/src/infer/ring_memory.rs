@@ -7,6 +7,16 @@
 //! also bounds device memory (the paper's ≥30% saving) and avoids
 //! fragmentation.
 //!
+//! Passes are optionally **routed-expert-granular**: `begin_pass` takes
+//! a per-ring-slot [`RoutePlan`] and the copy stream then moves only the
+//! planned expert subset of each layer's sparse members (dense members
+//! always cross; unplanned expert slices are zero-filled, which is
+//! mathematically inert under the kernel's one-hot combine). Under
+//! skewed routing — the paper's unbalanced-workload regime — this makes
+//! the copy lane's bytes proportional to routed load instead of model
+//! size, exactly like the trainer's 2D prefetch (`docs/training.md`).
+//! With no plan the pass is dense (every expert crosses).
+//!
 //! On our substrate the copy stream performs the CPU-tier fetch +
 //! unfuse + (optional throttled "PCIe") staging of host tensors; the
 //! compute thread turns staged tensors into device literals as part of
@@ -19,11 +29,16 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::prefetch::RoutePlan;
 use crate::runtime::HostTensor;
 
 /// Loader: produce layer `l`'s weight tensors (artifact input order,
-/// minus the activation input). Runs on the staging thread.
-pub type LayerLoader = Box<dyn FnMut(usize) -> Vec<HostTensor> + Send>;
+/// minus the activation input), restricted to the `experts` subset when
+/// one is given (sparse members outside the set zero-filled). Returns
+/// the tensors plus the bytes actually copied from the CPU tier — the
+/// quantity the throttle and [`RingStats::copy_bytes`] account. Runs on
+/// the staging thread.
+pub type LayerLoader = Box<dyn FnMut(usize, Option<&[usize]>) -> (Vec<HostTensor>, usize) + Send>;
 
 /// Cumulative overlap accounting.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -33,10 +48,12 @@ pub struct RingStats {
     pub copy_secs: f64,
     /// Seconds `get()` blocked waiting for a slot (un-hidden copy time).
     pub stall_secs: f64,
+    /// Bytes the copy lane actually moved (routed passes move fewer).
+    pub copy_bytes: u64,
 }
 
 enum Msg {
-    Load { layer: usize },
+    Load { layer: usize, experts: Option<Vec<usize>> },
     Shutdown,
 }
 
@@ -44,10 +61,11 @@ struct Loaded {
     layer: usize,
     tensors: Vec<HostTensor>,
     copy_secs: f64,
+    copy_bytes: usize,
 }
 
 /// The K-slot ring. Drive it per forward pass:
-/// `begin_pass()` → for each layer: `get(l)` … compute … `release(l)`.
+/// `begin_pass(plan)` → for each layer: `get(l)` … compute … `release(l)`.
 pub struct RingMemory {
     k: usize,
     n_layers: usize,
@@ -55,12 +73,16 @@ pub struct RingMemory {
     rx: Receiver<Loaded>,
     ready: HashMap<usize, Loaded>,
     in_flight: usize,
+    /// The current pass's expert plan (None = dense pass).
+    plan: Option<RoutePlan>,
     stats: RingStats,
     handle: Option<JoinHandle<()>>,
 }
 
 impl RingMemory {
-    /// `throttle`: optional bytes/s cap emulating the CPU→GPU link.
+    /// `throttle`: optional bytes/s cap emulating the CPU→GPU link
+    /// (applied to the bytes the loader reports, so routed passes spend
+    /// proportionally less link time).
     pub fn new(
         k: usize,
         n_layers: usize,
@@ -73,19 +95,18 @@ impl RingMemory {
         let handle = std::thread::Builder::new()
             .name("ring-staging".into())
             .spawn(move || {
-                while let Ok(Msg::Load { layer }) = rx_req.recv() {
+                while let Ok(Msg::Load { layer, experts }) = rx_req.recv() {
                     let t0 = Instant::now();
-                    let tensors = loader(layer);
+                    let (tensors, copy_bytes) = loader(layer, experts.as_deref());
                     if let Some(bw) = throttle {
-                        let bytes: usize = tensors.iter().map(|t| t.byte_len()).sum();
-                        let want = Duration::from_secs_f64(bytes as f64 / bw);
+                        let want = Duration::from_secs_f64(copy_bytes as f64 / bw);
                         let spent = t0.elapsed();
                         if want > spent {
                             std::thread::sleep(want - spent);
                         }
                     }
                     let copy_secs = t0.elapsed().as_secs_f64();
-                    if tx_rep.send(Loaded { layer, tensors, copy_secs }).is_err() {
+                    if tx_rep.send(Loaded { layer, tensors, copy_secs, copy_bytes }).is_err() {
                         break;
                     }
                 }
@@ -98,6 +119,7 @@ impl RingMemory {
             rx,
             ready: HashMap::new(),
             in_flight: 0,
+            plan: None,
             stats: RingStats::default(),
             handle: Some(handle),
         }
@@ -116,13 +138,25 @@ impl RingMemory {
         self.k as f64 / self.n_layers as f64
     }
 
-    /// Prime the ring with the first K layers (step ② of Figure 5a).
+    /// The planned expert set for `layer` in the current pass, if this
+    /// pass is routed (the engine diffs the exact routed set against
+    /// this to decide what to demand-repair).
+    pub fn planned(&self, layer: usize) -> Option<&[usize]> {
+        self.plan
+            .as_ref()
+            .filter(|p| layer < p.n_layers())
+            .map(|p| p.experts(layer))
+    }
+
+    /// Prime the ring with the first K layers (step ② of Figure 5a),
+    /// copying only `plan`'s expert subsets when one is given (dense
+    /// fallback otherwise).
     ///
     /// Also resets per-pass state: an aborted or abandoned previous pass
     /// (the continuous-batching engine may drop a pass on error) can
     /// leave layers staged or copies in flight — those are drained and
     /// discarded so this pass starts from a clean slot accounting.
-    pub fn begin_pass(&mut self) {
+    pub fn begin_pass(&mut self, plan: Option<&RoutePlan>) {
         while self.in_flight > 0 {
             match self.rx.recv() {
                 Ok(msg) => {
@@ -133,10 +167,16 @@ impl RingMemory {
             }
         }
         self.ready.clear();
+        self.plan = plan.cloned();
         for l in 0..self.k.min(self.n_layers) {
-            let _ = self.tx.send(Msg::Load { layer: l });
-            self.in_flight += 1;
+            self.send_load(l);
         }
+    }
+
+    fn send_load(&mut self, layer: usize) {
+        let experts = self.planned(layer).map(|e| e.to_vec());
+        let _ = self.tx.send(Msg::Load { layer, experts });
+        self.in_flight += 1;
     }
 
     /// Obtain layer l's staged weights (blocks if the copy stream is
@@ -148,6 +188,7 @@ impl RingMemory {
                 self.stats.stall_secs += t0.elapsed().as_secs_f64();
                 self.stats.loads += 1;
                 self.stats.copy_secs += loaded.copy_secs;
+                self.stats.copy_bytes += loaded.copy_bytes as u64;
                 return Ok(loaded.tensors);
             }
             let msg = self.rx.recv().context("ring staging thread hung up")?;
@@ -157,13 +198,20 @@ impl RingMemory {
     }
 
     /// Release layer l's slot and trigger the asynchronous load of layer
-    /// l+K (step ④: replace P_i with S_{K+i}).
+    /// l+K (step ④: replace P_i with S_{K+i}), with the current pass's
+    /// planned expert subset.
     pub fn release(&mut self, layer: usize) {
         let next = layer + self.k;
         if next < self.n_layers {
-            let _ = self.tx.send(Msg::Load { layer: next });
-            self.in_flight += 1;
+            self.send_load(next);
         }
+    }
+
+    /// Loads staged or in flight but not yet consumed by `get` (tests:
+    /// acquire/release balance).
+    #[cfg(test)]
+    fn outstanding(&self) -> usize {
+        self.in_flight + self.ready.len()
     }
 }
 
@@ -179,28 +227,35 @@ impl Drop for RingMemory {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     fn loader(layer_bytes: usize) -> LayerLoader {
-        Box::new(move |l| vec![HostTensor::from_f32(&[layer_bytes / 4], vec![l as f32; layer_bytes / 4])])
+        Box::new(move |l, _| {
+            (
+                vec![HostTensor::from_f32(&[layer_bytes / 4], vec![l as f32; layer_bytes / 4])],
+                layer_bytes,
+            )
+        })
     }
 
     #[test]
     fn pass_delivers_all_layers_in_order() {
         let mut ring = RingMemory::new(2, 6, loader(64), None);
-        ring.begin_pass();
+        ring.begin_pass(None);
         for l in 0..6 {
             let w = ring.get(l).unwrap();
             assert_eq!(w[0].as_f32().unwrap()[0], l as f32);
             ring.release(l);
         }
         assert_eq!(ring.stats().loads, 6);
+        assert_eq!(ring.stats().copy_bytes, 6 * 64);
     }
 
     #[test]
     fn multiple_passes() {
         let mut ring = RingMemory::new(3, 4, loader(16), None);
         for _pass in 0..3 {
-            ring.begin_pass();
+            ring.begin_pass(None);
             for l in 0..4 {
                 let _ = ring.get(l).unwrap();
                 ring.release(l);
@@ -221,7 +276,7 @@ mod tests {
         // the copies hide; stall time should be far below total copy time.
         let layer_bytes = 40_000; // 40KB at 10MB/s = 4ms
         let mut ring = RingMemory::new(2, 8, loader(layer_bytes), Some(10e6));
-        ring.begin_pass();
+        ring.begin_pass(None);
         let mut computed = 0;
         for l in 0..8 {
             let _w = ring.get(l).unwrap();
@@ -248,12 +303,12 @@ mod tests {
     /// total copy time — even with a loader slower than compute.
     #[test]
     fn stall_never_exceeds_copy_under_slow_loader() {
-        let slow: LayerLoader = Box::new(move |l| {
+        let slow: LayerLoader = Box::new(move |l, _| {
             std::thread::sleep(Duration::from_millis(2));
-            vec![HostTensor::from_f32(&[4], vec![l as f32; 4])]
+            (vec![HostTensor::from_f32(&[4], vec![l as f32; 4])], 16)
         });
         let mut ring = RingMemory::new(2, 8, slow, None);
-        ring.begin_pass();
+        ring.begin_pass(None);
         for l in 0..8 {
             let _w = ring.get(l).unwrap(); // no compute: worst case for stalls
             ring.release(l);
@@ -275,13 +330,13 @@ mod tests {
     #[test]
     fn begin_pass_resets_after_aborted_pass() {
         let mut ring = RingMemory::new(2, 6, loader(64), None);
-        ring.begin_pass();
+        ring.begin_pass(None);
         let w = ring.get(0).unwrap();
         assert_eq!(w[0].as_f32().unwrap()[0], 0.0);
         ring.release(0); // layer 2 now in flight; layers 1.. staged or staging
         // abort the pass here — then start over
         for _pass in 0..2 {
-            ring.begin_pass();
+            ring.begin_pass(None);
             for l in 0..6 {
                 let w = ring.get(l).unwrap();
                 assert_eq!(
@@ -300,7 +355,7 @@ mod tests {
         // paper's "without ring memory" regime. Expect stalls ≈ copies.
         let layer_bytes = 40_000;
         let mut ring = RingMemory::new(1, 6, loader(layer_bytes), Some(10e6));
-        ring.begin_pass();
+        ring.begin_pass(None);
         for l in 0..6 {
             let _w = ring.get(l).unwrap();
             ring.release(l);
@@ -312,5 +367,116 @@ mod tests {
             s.stall_secs,
             s.copy_secs
         );
+    }
+
+    // ---------------------------------------------------- routed passes
+
+    const EXPERTS: usize = 8;
+    const PER: usize = 16;
+
+    /// Loader over an `[EXPERTS, PER]` sparse member: expert `e` of
+    /// layer `l` holds `l*100 + e + 1` everywhere, unplanned experts
+    /// stay zero (the inert-filler contract).
+    fn expert_loader(slow_every: usize) -> LayerLoader {
+        Box::new(move |l, experts: Option<&[usize]>| {
+            if slow_every > 0 && l % slow_every == 0 {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            let mut data = vec![0f32; EXPERTS * PER];
+            let mut copied = 0usize;
+            let all: Vec<usize> = (0..EXPERTS).collect();
+            for &e in experts.unwrap_or(&all) {
+                data[e * PER..(e + 1) * PER].fill((l * 100 + e) as f32 + 1.0);
+                copied += PER * 4;
+            }
+            (vec![HostTensor::from_f32(&[EXPERTS, PER], data)], copied)
+        })
+    }
+
+    fn subset_plan(n_layers: usize, rng: &mut Rng) -> RoutePlan {
+        let per_layer: Vec<Vec<usize>> = (0..n_layers)
+            .map(|_| {
+                let mut s: Vec<usize> = (0..4).map(|_| rng.below(EXPERTS)).collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            })
+            .collect();
+        RoutePlan::new(per_layer, &[])
+    }
+
+    #[test]
+    fn routed_pass_copies_only_the_planned_subset() {
+        let mut ring = RingMemory::new(2, 4, expert_loader(0), None);
+        let plan = RoutePlan::new(vec![vec![1, 3], vec![0], vec![2, 5, 7], vec![4]], &[]);
+        ring.begin_pass(Some(&plan));
+        for l in 0..4 {
+            assert_eq!(ring.planned(l), Some(plan.experts(l)));
+            let w = ring.get(l).unwrap();
+            let data = w[0].as_f32().unwrap();
+            for e in 0..EXPERTS {
+                let want = if plan.contains(l, e) { (l * 100 + e) as f32 + 1.0 } else { 0.0 };
+                assert_eq!(data[e * PER], want, "layer {} expert {}", l, e);
+            }
+            ring.release(l);
+        }
+        // 2 + 1 + 3 + 1 experts crossed, PER f32s each.
+        assert_eq!(ring.stats().copy_bytes, 7 * PER as u64 * 4);
+        // A dense pass over the same ring moves the full expert set.
+        ring.begin_pass(None);
+        for l in 0..4 {
+            assert!(ring.planned(l).is_none());
+            let _ = ring.get(l).unwrap();
+            ring.release(l);
+        }
+        let dense_bytes = ring.stats().copy_bytes - 7 * PER as u64 * 4;
+        assert_eq!(dense_bytes, (4 * EXPERTS * PER * 4) as u64);
+    }
+
+    /// Stress: interleave aborted passes, a slow loader, routed-subset
+    /// and dense passes. Slot accounting must stay balanced, every pass
+    /// must start from clean state, routed deliveries must carry exactly
+    /// their planned experts, and stall stays bounded by copy time.
+    #[test]
+    fn stress_aborted_routed_and_slow_passes() {
+        const LAYERS: usize = 6;
+        let mut ring = RingMemory::new(2, LAYERS, expert_loader(3), None);
+        let mut rng = Rng::new(77);
+        let mut gets = 0u64;
+        for pass in 0..30 {
+            let plan = if pass % 2 == 0 { Some(subset_plan(LAYERS, &mut rng)) } else { None };
+            ring.begin_pass(plan.as_ref());
+            // Every 5th pass aborts at a random layer (the engine's
+            // drop-pass-on-error path).
+            let stop_at = if pass % 5 == 4 { rng.below(LAYERS) } else { LAYERS };
+            for l in 0..stop_at {
+                let w = ring.get(l).unwrap();
+                gets += 1;
+                let data = w[0].as_f32().unwrap();
+                for e in 0..EXPERTS {
+                    let planned = plan.as_ref().map(|p| p.contains(l, e)).unwrap_or(true);
+                    let want = if planned { (l * 100 + e) as f32 + 1.0 } else { 0.0 };
+                    assert_eq!(data[e * PER], want, "pass {} layer {} expert {}", pass, l, e);
+                }
+                ring.release(l);
+            }
+        }
+        let s = ring.stats();
+        assert_eq!(s.loads, gets, "every get consumed exactly one staged load");
+        assert!(
+            s.stall_secs <= s.copy_secs + 1e-3,
+            "stall {} must stay bounded by copy {} under sparse plans",
+            s.stall_secs,
+            s.copy_secs
+        );
+        // A final clean dense pass after the abuse: reset still holds and
+        // the ring drains to zero outstanding loads.
+        ring.begin_pass(None);
+        for l in 0..LAYERS {
+            let w = ring.get(l).unwrap();
+            assert_eq!(w[0].as_f32().unwrap()[0], (l * 100) as f32 + 1.0);
+            ring.release(l);
+        }
+        assert_eq!(ring.outstanding(), 0, "acquire/release out of balance");
     }
 }

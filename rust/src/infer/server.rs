@@ -70,6 +70,11 @@ pub struct ServerStats {
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
     pub tokens_out: AtomicU64,
+    /// False once the compute loop has died for any reason other than a
+    /// requested graceful stop (model-construction failure, decode-step
+    /// error, panic). `/healthz` reports it and `/generate` fails fast
+    /// instead of queueing into a dead channel.
+    pub healthy: AtomicBool,
     pub counters: Registry,
     pub queue_wait_ms: Mutex<Percentiles>,
 }
@@ -81,6 +86,7 @@ impl Default for ServerStats {
             completed: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             tokens_out: AtomicU64::new(0),
+            healthy: AtomicBool::new(true),
             counters: Registry::new(),
             queue_wait_ms: Mutex::new(Percentiles::bounded(4096)),
         }
@@ -114,12 +120,21 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let (job_tx, job_rx) = channel::<JobMsg>();
 
-        // ---- compute thread: owns the session (admit → step → retire)
+        // ---- compute thread: owns the session (admit → step → retire).
+        // Any exit that was not a requested graceful stop — including a
+        // panic unwinding out of the decode loop — flips `/healthz`.
         let stop_c = stop.clone();
         let stats_c = stats.clone();
         let compute_handle = std::thread::Builder::new()
             .name("serve-compute".into())
-            .spawn(move || compute_loop(make_model, cfg, stats_c, stop_c, job_rx))?;
+            .spawn(move || {
+                let clean = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    compute_loop(make_model, cfg, stats_c.clone(), stop_c.clone(), job_rx)
+                }));
+                if clean.is_err() || !stop_c.load(Ordering::Relaxed) {
+                    stats_c.healthy.store(false, Ordering::Relaxed);
+                }
+            })?;
 
         // ---- acceptor thread
         let stop_a = stop.clone();
@@ -191,6 +206,7 @@ fn compute_loop<M, F>(
         Ok(m) => m,
         Err(e) => {
             eprintln!("serve-compute: model construction failed: {:#}", e);
+            stats.healthy.store(false, Ordering::Relaxed);
             // resolve every handle so clients see a clean rejection
             reject_remaining(&job_rx, &stats, Duration::from_secs(2));
             return;
@@ -252,7 +268,12 @@ fn compute_loop<M, F>(
                 }
             }
             Err(e) => {
+                // A dead decode loop is a dead server: flip health
+                // immediately (the spawn wrapper covers panics) so
+                // `/healthz` and new admissions fail fast, then resolve
+                // everything still waiting below.
                 eprintln!("serve-compute: decode step failed: {:#}", e);
+                stats.healthy.store(false, Ordering::Relaxed);
                 break;
             }
         }
@@ -335,7 +356,19 @@ fn handle_conn(
     }
 
     let (status, payload) = match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
+        ("GET", "/healthz") => {
+            if stats.healthy.load(Ordering::Relaxed) {
+                ("200 OK", Json::obj(vec![("ok", Json::Bool(true))]))
+            } else {
+                (
+                    "503 Service Unavailable",
+                    Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("error", Json::str("compute_loop_dead")),
+                    ]),
+                )
+            }
+        }
         ("GET", "/stats") => ("200 OK", stats_json(&stats)),
         ("POST", "/generate") => {
             stats.requests.fetch_add(1, Ordering::Relaxed);
@@ -362,12 +395,34 @@ fn handle_conn(
                             decode: Duration::ZERO,
                         };
                         ("200 OK", completion_json(&c))
+                    } else if !stats.healthy.load(Ordering::Relaxed) {
+                        // Dead compute loop: fail the admission fast with
+                        // a typed error instead of queueing into a channel
+                        // nobody drains (and hanging the client's reply
+                        // window).
+                        stats.rejected.fetch_add(1, Ordering::Relaxed);
+                        (
+                            "503 Service Unavailable",
+                            Json::obj(vec![("error", Json::str("compute_loop_dead"))]),
+                        )
                     } else {
                         let (reply_tx, reply_rx) = channel();
-                        let _ = jobs.send(JobMsg::Submit(Job {
-                            request: Request { id, prompt, max_tokens, arrived: Instant::now() },
-                            reply: reply_tx,
-                        }));
+                        if jobs
+                            .send(JobMsg::Submit(Job {
+                                request: Request { id, prompt, max_tokens, arrived: Instant::now() },
+                                reply: reply_tx,
+                            }))
+                            .is_err()
+                        {
+                            // compute thread gone between the health check
+                            // and the send — same typed failure
+                            stats.rejected.fetch_add(1, Ordering::Relaxed);
+                            return respond(
+                                &mut stream,
+                                "503 Service Unavailable",
+                                &Json::obj(vec![("error", Json::str("compute_loop_dead"))]),
+                            );
+                        }
                         match reply_rx.recv_timeout(Duration::from_secs(60)) {
                             Ok(ServeReply::Done(c)) => ("200 OK", completion_json(&c)),
                             Ok(ServeReply::Rejected(RejectReason::QueueFull)) => (
@@ -399,6 +454,10 @@ fn handle_conn(
         _ => ("404 Not Found", Json::obj(vec![("error", Json::str("not found"))])),
     };
 
+    respond(&mut stream, status, &payload)
+}
+
+fn respond(stream: &mut TcpStream, status: &str, payload: &Json) -> Result<()> {
     let body = payload.to_string();
     let resp = format!(
         "HTTP/1.1 {}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
@@ -426,6 +485,7 @@ fn stats_json(stats: &ServerStats) -> Json {
     let reg = &stats.counters;
     let mut waits = stats.queue_wait_ms.lock().unwrap().clone();
     Json::obj(vec![
+        ("healthy", Json::Bool(stats.healthy.load(Ordering::Relaxed))),
         ("requests", Json::num(stats.requests.load(Ordering::Relaxed) as f64)),
         ("completed", Json::num(stats.completed.load(Ordering::Relaxed) as f64)),
         ("rejected", Json::num(stats.rejected.load(Ordering::Relaxed) as f64)),
@@ -596,6 +656,124 @@ mod tests {
         let (code, j) = http_post(&server.addr, "/generate", "{nope").unwrap();
         assert_eq!(code, 400);
         assert!(j.get("error").as_str().unwrap().contains("bad json"));
+        server.stop();
+    }
+
+    /// A model whose decode loop dies (Err) after `fuse` successful
+    /// steps — the poisoned-weights regression harness.
+    struct DyingModel {
+        b: usize,
+        t: usize,
+        fuse: u32,
+        fired: u32,
+    }
+
+    impl DecodeModel for DyingModel {
+        fn slots(&self) -> usize {
+            self.b
+        }
+        fn window(&self) -> usize {
+            self.t
+        }
+        fn step_tokens(&mut self, flat: &[i32]) -> anyhow::Result<Vec<i32>> {
+            if self.fired >= self.fuse {
+                anyhow::bail!("poisoned model");
+            }
+            self.fired += 1;
+            Ok((0..self.b).map(|r| flat[r * self.t + self.t - 1] + 1).collect())
+        }
+    }
+
+    /// Regression (serving hardening): an erroring decode loop must flip
+    /// `/healthz` to unhealthy, resolve the in-flight request with a
+    /// typed 503 (no hang), and fail subsequent admissions fast.
+    #[test]
+    fn decode_error_flips_health_and_fails_admissions() {
+        let stats = Arc::new(ServerStats::default());
+        let mut server = Server::start(
+            "127.0.0.1:0",
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 8, linger: Duration::ZERO },
+            },
+            stats.clone(),
+            || Ok(DyingModel { b: 1, t: 8, fuse: 0, fired: 0 }),
+        )
+        .unwrap();
+        // healthy at boot
+        let (code, j) = http_get(&server.addr, "/healthz").unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        // the first request trips the poisoned decode → typed 503, never
+        // a 60s reply-window hang
+        let t0 = Instant::now();
+        let (code, _) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [1], "max_tokens": 2}"#).unwrap();
+        assert_eq!(code, 503, "dead decode must resolve the request with a typed error");
+        assert!(t0.elapsed() < Duration::from_secs(30), "must not hang the reply window");
+        // /healthz reports the dead compute loop
+        let mut flipped = false;
+        for _ in 0..150 {
+            let (code, j) = http_get(&server.addr, "/healthz").unwrap();
+            if code == 503 && j.get("ok").as_bool() == Some(false) {
+                flipped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(flipped, "/healthz must report the dead compute loop");
+        // queued admissions now fail fast with a typed error
+        let (code, j) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [2], "max_tokens": 2}"#).unwrap();
+        assert_eq!(code, 503);
+        let err = j.get("error").as_str().unwrap().to_string();
+        assert!(
+            err == "compute_loop_dead" || err == "shutting_down",
+            "typed failure, got {}",
+            err
+        );
+        server.stop();
+        assert!(!stats.healthy.load(Ordering::Relaxed));
+    }
+
+    /// Same contract for a *panicking* decode loop: the spawn wrapper
+    /// catches the unwind and flips health.
+    #[test]
+    fn decode_panic_flips_health() {
+        struct PanickingModel;
+        impl DecodeModel for PanickingModel {
+            fn slots(&self) -> usize {
+                1
+            }
+            fn window(&self) -> usize {
+                4
+            }
+            fn step_tokens(&mut self, _flat: &[i32]) -> anyhow::Result<Vec<i32>> {
+                panic!("decode blew up");
+            }
+        }
+        let stats = Arc::new(ServerStats::default());
+        let mut server = Server::start(
+            "127.0.0.1:0",
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 8, linger: Duration::ZERO },
+            },
+            stats.clone(),
+            || Ok(PanickingModel),
+        )
+        .unwrap();
+        let (code, _) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [1], "max_tokens": 1}"#).unwrap();
+        assert_eq!(code, 503, "panicked decode must still resolve the request");
+        let mut flipped = false;
+        for _ in 0..150 {
+            let (code, j) = http_get(&server.addr, "/healthz").unwrap();
+            if code == 503 && j.get("ok").as_bool() == Some(false) {
+                flipped = true;
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        assert!(flipped, "/healthz must report the panicked compute loop");
         server.stop();
     }
 

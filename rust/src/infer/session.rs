@@ -37,10 +37,13 @@ pub trait DecodeModel {
     fn slots(&self) -> usize;
     /// Token window length per slot (the artifact's sequence length T).
     fn window(&self) -> usize;
-    /// One decode step over the whole `[B, T]` window set: returns the
-    /// next token for every row, dead rows included (they burn compute —
-    /// the waste the admission policy exists to minimise).
-    fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>>;
+    /// One decode step over the whole `[B, T]` window set, row-major
+    /// (`flat.len() == slots() * window()`): returns the next token for
+    /// every row, dead rows included (they burn compute — the waste the
+    /// admission policy exists to minimise). The flat slice is a
+    /// caller-owned scratch reused across steps, so steady-state decode
+    /// performs no per-step window allocations.
+    fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>>;
 }
 
 /// Where a slot is in the request life cycle.
@@ -259,9 +262,15 @@ pub struct StepReport {
 /// walk of `model`. Free/`Done` rows ride along as padding. This is the
 /// reentrant core both [`ServeSession::tick`] and
 /// [`super::engine::InferenceEngine::decode_step`] drive.
+///
+/// `flat` is the caller's reusable window scratch: slot windows are
+/// packed into it row-major instead of cloning a `Vec` per slot per
+/// step (it reaches capacity `slots × window` on the first step and is
+/// never reallocated after).
 pub fn advance<M: DecodeModel + ?Sized>(
     model: &mut M,
     slots: &mut [SlotState],
+    flat: &mut Vec<i32>,
 ) -> Result<StepReport> {
     anyhow::ensure!(
         slots.len() == model.slots(),
@@ -269,8 +278,12 @@ pub fn advance<M: DecodeModel + ?Sized>(
         slots.len(),
         model.slots()
     );
-    let windows: Vec<Vec<i32>> = slots.iter().map(|s| s.window.clone()).collect();
-    let toks = model.step_tokens(&windows)?;
+    flat.clear();
+    flat.reserve(slots.len() * model.window());
+    for s in slots.iter() {
+        flat.extend_from_slice(&s.window);
+    }
+    let toks = model.step_tokens(flat.as_slice())?;
     anyhow::ensure!(
         toks.len() == slots.len(),
         "model returned {} tokens for {} slots",
@@ -298,6 +311,9 @@ pub struct ServeSession<M: DecodeModel> {
     model: M,
     slots: Vec<SlotState>,
     queue: AdmissionQueue,
+    /// Reusable flat window scratch for [`advance`] (allocated once at
+    /// `B × T`, never grown after — the zero-per-step-allocation path).
+    flat: Vec<i32>,
     // cached registry handles (serve.* namespace) — the single source of
     // truth for session statistics; `stats()` reads them back
     c_steps: std::sync::Arc<Counter>,
@@ -322,6 +338,7 @@ impl<M: DecodeModel> ServeSession<M> {
             slots: (0..b).map(|_| SlotState::free(t)).collect(),
             model,
             queue: AdmissionQueue::new(cfg.admission),
+            flat: Vec::with_capacity(b * t),
             c_steps: registry.counter("serve.steps"),
             c_slot_steps: registry.counter("serve.slot_steps"),
             c_padded: registry.counter("serve.padded_slot_steps"),
@@ -370,6 +387,13 @@ impl<M: DecodeModel> ServeSession<M> {
 
     pub fn queue_stats(&self) -> QueueStats {
         self.queue.stats()
+    }
+
+    /// Capacity of the reusable window scratch (tests assert it never
+    /// grows past the one-time `B × T` allocation).
+    #[cfg(test)]
+    pub(crate) fn flat_capacity(&self) -> usize {
+        self.flat.capacity()
     }
 
     /// Submit a request arriving now. Backpressure surfaces as a typed
@@ -472,7 +496,7 @@ impl<M: DecodeModel> ServeSession<M> {
         }
 
         // One layer walk advances every live slot by one token.
-        let rep = advance(&mut self.model, &mut self.slots)?;
+        let rep = advance(&mut self.model, &mut self.slots, &mut self.flat)?;
         self.c_steps.inc();
         self.c_slot_steps.add(rep.live as u64);
         self.c_padded.add(rep.padded as u64);
@@ -519,9 +543,9 @@ pub(crate) mod testing {
         fn window(&self) -> usize {
             self.t
         }
-        fn step_tokens(&mut self, windows: &[Vec<i32>]) -> Result<Vec<i32>> {
+        fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>> {
             self.steps += 1;
-            Ok(windows.iter().map(|w| w.last().copied().unwrap_or(0) + 1).collect())
+            Ok((0..self.b).map(|r| flat[r * self.t + self.t - 1] + 1).collect())
         }
     }
 }
@@ -673,12 +697,103 @@ mod tests {
             Request { id: 1, prompt: vec![9], max_tokens: 2, arrived: Instant::now() },
             Instant::now(),
         );
-        let rep = advance(&mut model, &mut slots).unwrap();
+        let mut flat = Vec::new();
+        let rep = advance(&mut model, &mut slots, &mut flat).unwrap();
         assert_eq!((rep.live, rep.padded, rep.finished), (1, 2, 0));
-        let rep = advance(&mut model, &mut slots).unwrap();
+        let rep = advance(&mut model, &mut slots, &mut flat).unwrap();
         assert_eq!((rep.live, rep.padded, rep.finished), (1, 2, 1));
         let c = slots[0].retire(Instant::now()).unwrap();
         assert_eq!(c.tokens, vec![10, 11]);
+    }
+
+    /// Regression (serving hardening): the flat-scratch decode path must
+    /// be bit-identical to the old per-slot window-cloning path — same
+    /// per-step model input, same window evolution.
+    #[test]
+    fn flat_decode_is_bit_identical_to_window_cloning() {
+        let t = 6;
+        let mut model_a = EchoModel::new(3, t);
+        let mut model_b = EchoModel::new(3, t);
+        let mk = || {
+            let now = Instant::now();
+            let mut slots: Vec<SlotState> = (0..3).map(|_| SlotState::free(t)).collect();
+            slots[0].admit(Request { id: 1, prompt: vec![3, 4], max_tokens: 9, arrived: now }, now);
+            slots[2].admit(Request { id: 2, prompt: vec![9], max_tokens: 9, arrived: now }, now);
+            slots
+        };
+        let (mut a, mut b) = (mk(), mk());
+        let mut flat = Vec::new();
+        for _ in 0..7 {
+            let _ = advance(&mut model_a, &mut a, &mut flat).unwrap();
+            // Legacy path: clone every slot window, then flatten.
+            let windows: Vec<Vec<i32>> = b.iter().map(|s| s.window_tokens().to_vec()).collect();
+            let legacy: Vec<i32> = windows.iter().flatten().copied().collect();
+            let toks = model_b.step_tokens(&legacy).unwrap();
+            let now = Instant::now();
+            for (slot, &tok) in b.iter_mut().zip(&toks) {
+                if slot.is_live() {
+                    slot.push_token(tok, now);
+                }
+            }
+            for (sa, sb) in a.iter().zip(&b) {
+                assert_eq!(sa.window_tokens(), sb.window_tokens(), "paths diverged");
+                assert_eq!(sa.out, sb.out);
+            }
+        }
+    }
+
+    /// Regression (serving hardening): steady-state decode reuses ONE
+    /// flat window buffer — same pointer and length every step, and the
+    /// session-held scratch never grows past its B×T allocation.
+    #[test]
+    fn steady_state_decode_reuses_one_flat_buffer() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        struct ProbeModel {
+            b: usize,
+            t: usize,
+            seen: Rc<RefCell<Vec<(usize, usize)>>>,
+        }
+        impl DecodeModel for ProbeModel {
+            fn slots(&self) -> usize {
+                self.b
+            }
+            fn window(&self) -> usize {
+                self.t
+            }
+            fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>> {
+                self.seen.borrow_mut().push((flat.as_ptr() as usize, flat.len()));
+                Ok(vec![1; self.b])
+            }
+        }
+
+        let (b, t) = (4, 8);
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let mut s = ServeSession::new(
+            ProbeModel { b, t, seen: seen.clone() },
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 32, linger: Duration::ZERO },
+            },
+            Registry::new(),
+        );
+        for i in 0..10u64 {
+            s.submit(i + 1, vec![i as i32], 1 + (i as usize % 3)).unwrap();
+        }
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 10);
+        let seen = seen.borrow();
+        assert!(seen.len() >= 3, "expected several decode steps");
+        let (ptr0, len0) = seen[0];
+        assert_eq!(len0, b * t);
+        for &(ptr, len) in seen.iter() {
+            assert_eq!(ptr, ptr0, "window buffer was reallocated mid-serve");
+            assert_eq!(len, b * t);
+        }
+        // Vec::with_capacity may legally over-allocate; the pointer
+        // check above already proves no realloc happened, so only the
+        // lower bound is asserted here.
+        assert!(s.flat_capacity() >= b * t, "scratch below its one-time allocation");
     }
 
     #[test]

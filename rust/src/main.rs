@@ -18,7 +18,7 @@ use semoe::config::presets::{
     table2_rows, table3_setup,
 };
 use semoe::config::train::{ParamResidency, TrainConfig};
-use semoe::infer::{GraphPipeline, InferMode, InferenceEngine};
+use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, RoutedRingConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
 use semoe::train::{ElasticPlan, OffloadTrainer, ResidentTrainer, TaskLoad};
@@ -66,6 +66,7 @@ fn print_usage() {
                 OptSpec { name: "lr", help: "learning rate", default: Some("1e-3"), is_flag: false },
                 OptSpec { name: "offload", help: "use hierarchical offload trainer", default: None, is_flag: true },
                 OptSpec { name: "ring", help: "ring slots K for inference offload", default: Some("0=resident"), is_flag: false },
+                OptSpec { name: "routed", help: "routed-expert ring passes (copy only planned expert subsets)", default: None, is_flag: true },
                 OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
                 OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
                 OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
@@ -147,12 +148,17 @@ fn cmd_train(args: &Args) -> Result<()> {
 fn cmd_infer(args: &Args) -> Result<()> {
     let preset = args.str("preset", "deep");
     let ring = args.usize("ring", 0);
+    let routed = args.flag("routed");
     let n_new = args.usize("tokens", 16);
     let arts = Rc::new(ModelArtifacts::load(&preset)?);
     let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
     let mut engine = InferenceEngine::new(arts.clone(), mode, args.u64("seed", 7), None)?;
-    println!("inference [{}], device weights {}",
+    if routed && ring > 0 {
+        engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+    }
+    println!("inference [{}{}], device weights {}",
         if ring > 0 { format!("ring K={}", ring) } else { "resident".into() },
+        if routed && ring > 0 { ", routed" } else { "" },
         human_bytes(engine.device_weight_bytes() as u64));
     let b = arts.preset.batch_size;
     let prompt: Vec<Vec<i32>> = (0..b).map(|i| vec![(i as i32 + 1) * 3; 4]).collect();
@@ -164,10 +170,18 @@ fn cmd_infer(args: &Args) -> Result<()> {
     }
     let toks = b * n_new;
     println!(
-        "{} new tokens in {:.2}s → {:.1} tokens/s (compute {:.2}s copy {:.2}s stall {:.2}s)",
+        "{} new tokens in {:.2}s → {:.1} tokens/s (compute {:.2}s copy {:.2}s stall {:.2}s shadow {:.2}s)",
         toks, secs, toks as f64 / secs,
-        engine.timing.compute_secs, engine.timing.copy_secs, engine.timing.stall_secs
+        engine.timing.compute_secs, engine.timing.copy_secs, engine.timing.stall_secs,
+        engine.timing.shadow_secs
     );
+    if let Some(rs) = engine.ring_stats() {
+        let rp = engine.route_stats();
+        println!(
+            "ring copy lane: {:.1} MB moved; routed plan/exact/repaired experts {}/{}/{}",
+            rs.copy_bytes as f64 / 1e6, rp.planned_experts, rp.exact_experts, rp.repaired_experts
+        );
+    }
     Ok(())
 }
 
@@ -175,11 +189,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let preset = args.str("preset", "deep");
     let bind = args.str("bind", "127.0.0.1:8080");
     let ring = args.usize("ring", 3);
-    println!("starting server on {} (preset {}, ring K={})", bind, preset, ring);
-    run_server_blocking(&preset, &bind, ring)
+    let routed = args.flag("routed");
+    println!(
+        "starting server on {} (preset {}, ring K={}{})",
+        bind, preset, ring, if routed { ", routed passes" } else { "" }
+    );
+    run_server_blocking(&preset, &bind, ring, routed)
 }
 
-fn run_server_blocking(preset: &str, bind: &str, ring: usize) -> Result<()> {
+fn run_server_blocking(preset: &str, bind: &str, ring: usize, routed: bool) -> Result<()> {
     use semoe::infer::server::{Server, ServerStats};
     use semoe::infer::SessionConfig;
     use std::sync::Arc;
@@ -191,7 +209,11 @@ fn run_server_blocking(preset: &str, bind: &str, ring: usize) -> Result<()> {
     let server = Server::start(bind, SessionConfig::default(), stats, move || {
         let arts = Rc::new(ModelArtifacts::load(&preset_owned)?);
         let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
-        InferenceEngine::new(arts, mode, 7, None)
+        let mut engine = InferenceEngine::new(arts, mode, 7, None)?;
+        if routed && ring > 0 {
+            engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+        }
+        Ok(engine)
     })?;
     println!("listening on {} — POST /generate, GET /healthz, GET /stats", server.addr);
     loop {

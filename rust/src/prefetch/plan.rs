@@ -104,6 +104,16 @@ impl RoutePlan {
         &self.per_layer[layer]
     }
 
+    /// Whether `expert` is planned for `layer` (false for layers beyond
+    /// the plan — a short plan means "dense" for the missing tail, which
+    /// callers handle before asking).
+    pub fn contains(&self, layer: usize, expert: usize) -> bool {
+        self.per_layer
+            .get(layer)
+            .map(|s| s.binary_search(&expert).is_ok())
+            .unwrap_or(false)
+    }
+
     /// Total planned (layer, expert) fetches.
     pub fn total_planned(&self) -> usize {
         self.per_layer.iter().map(|s| s.len()).sum()
@@ -138,6 +148,9 @@ mod tests {
         assert_eq!(p.experts(0), &[0, 2, 3]);
         assert_eq!(p.experts(1), &[1]);
         assert_eq!(p.total_planned(), 4);
+        assert!(p.contains(0, 3) && p.contains(1, 1));
+        assert!(!p.contains(0, 1), "unplanned expert");
+        assert!(!p.contains(2, 0), "layer beyond the plan");
     }
 
     #[test]

@@ -134,6 +134,30 @@ impl CostModel {
         self.prefetch_bytes_1d() * frac
     }
 
+    // ------------------------------------------------------- ring lane
+
+    /// Per-pass CPU→device bytes of a **dense** ring pass: every layer's
+    /// full weight set (dense prefix + all experts, fp16) crosses once,
+    /// whatever the batch routes. Whole-model view; divide by the device
+    /// count for a per-device figure.
+    pub fn ring_bytes_dense(&self) -> f64 {
+        self.model.n_layers as f64 * self.model.param_counts().per_layer as f64 * 2.0
+    }
+
+    /// Per-pass bytes of a **routed** ring pass: dense members always
+    /// cross, expert members only for the expected distinct routed set
+    /// of the live batch (`tokens` routing decisions per layer, Zipf(s)
+    /// popularity; `s = 0` ⇒ uniform) — the inference twin of
+    /// [`Self::prefetch_bytes_2d`].
+    pub fn ring_bytes_routed(&self, tokens: f64, zipf_s: f64) -> f64 {
+        let c = self.model.param_counts();
+        let frac = self.expected_routed_experts(tokens, zipf_s)
+            / self.model.n_experts.max(1) as f64;
+        self.model.n_layers as f64
+            * (c.per_layer_dense as f64 + c.per_layer_sparse as f64 * frac)
+            * 2.0
+    }
+
     /// Tokens/s for a given per-step wall time (whole job).
     pub fn throughput(&self, step_time: f64) -> f64 {
         (self.model.batch_size * self.model.seq_len) as f64 / step_time
@@ -202,6 +226,31 @@ mod tests {
         assert!(d2_uniform <= d1);
         assert!(d2_skew < d2_uniform, "{} < {}", d2_skew, d2_uniform);
         assert!(d2_skew < 0.9 * d1, "skewed 2D should save ≥10%: {} vs {}", d2_skew, d1);
+    }
+
+    #[test]
+    fn routed_ring_prices_below_dense_under_skew() {
+        // The inference-side twin of the 2D-prefetch pricing: routed
+        // ring passes move strictly fewer bytes once routing is skewed
+        // and the live batch can't cover the expert population.
+        let cm = CostModel::new(table1_model(64, 64), cluster_for_gpus(64));
+        let tokens = 128.0;
+        let dense = cm.ring_bytes_dense();
+        let uniform = cm.ring_bytes_routed(tokens, 0.0);
+        let skew = cm.ring_bytes_routed(tokens, 1.2);
+        assert!(uniform <= dense);
+        assert!(skew < uniform, "{} < {}", skew, uniform);
+        assert!(skew < 0.9 * dense, "skewed routed pass should save ≥10%: {} vs {}", skew, dense);
+        // A flood of uniform tokens touches every expert — routed
+        // converges to dense (the dense-fallback regime).
+        let flood = cm.ring_bytes_routed(1e7, 0.0);
+        assert!((flood - dense).abs() / dense < 1e-3, "{} vs {}", flood, dense);
+        // Routed can never price above dense.
+        for s in [0.0, 0.7, 1.2, 2.0] {
+            for t in [1.0, 32.0, 1024.0] {
+                assert!(cm.ring_bytes_routed(t, s) <= dense + 1e-6);
+            }
+        }
     }
 
     #[test]

@@ -99,6 +99,66 @@ pub fn simulate_ring_offload(model: &ModelConfig, cluster: &ClusterConfig, k: us
     }
 }
 
+/// Routed-vs-dense ring pricing (the inference twin of the 1D/2D
+/// prefetch ablation): what a pass costs when the copy lane moves only
+/// the expected routed expert subset instead of every expert.
+#[derive(Debug, Clone, Copy)]
+pub struct RoutedRingReport {
+    /// Expected distinct experts a layer routes the live batch to.
+    pub expected_experts: f64,
+    /// Per-device per-pass ring copy bytes, dense vs routed.
+    pub bytes_dense: f64,
+    pub bytes_routed: f64,
+    /// Pass makespans with the K-slot ring under each copy volume.
+    pub t_ring_dense: f64,
+    pub t_ring_routed: f64,
+}
+
+impl RoutedRingReport {
+    /// Copy-byte fraction the routed pass retains (1.0 = no saving).
+    pub fn byte_fraction(&self) -> f64 {
+        self.bytes_routed / self.bytes_dense.max(1e-12)
+    }
+}
+
+/// Price a routed-expert ring pass against the dense pass: `tokens`
+/// routing decisions per layer from the live batch, Zipf(s)-skewed
+/// expert popularity (`s = 0` ⇒ uniform). Unlike
+/// [`simulate_ring_offload`] (which prices only the expert weights),
+/// both sides here move the full layer — dense prefix always, expert
+/// tail dense vs routed — matching what `infer::RingMemory` copies.
+pub fn simulate_routed_ring(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    k: usize,
+    tokens: f64,
+    zipf_s: f64,
+) -> RoutedRingReport {
+    let cm = CostModel::new(model.clone(), cluster.clone());
+    let c = cm.step_cost();
+    let n = cluster.total_gpus().max(1) as f64;
+    let n_layers = model.n_layers;
+
+    let t_layer_compute = c.t_fwd_compute * n / n_layers as f64;
+    let bytes_dense = cm.ring_bytes_dense() / n;
+    let bytes_routed = cm.ring_bytes_routed(tokens, zipf_s) / n;
+    let t_copy = |bytes: f64| {
+        bytes / n_layers as f64 / cluster.pcie.bandwidth + cluster.pcie.latency
+    };
+    let compute = vec![t_layer_compute; n_layers];
+    let io_dense = vec![t_copy(bytes_dense); n_layers];
+    let io_routed = vec![t_copy(bytes_routed); n_layers];
+    let (t_ring_dense, _) = pipeline_makespan(&compute, &io_dense, k);
+    let (t_ring_routed, _) = pipeline_makespan(&compute, &io_routed, k);
+    RoutedRingReport {
+        expected_experts: cm.expected_routed_experts(tokens, zipf_s),
+        bytes_dense,
+        bytes_routed,
+        t_ring_dense,
+        t_ring_routed,
+    }
+}
+
 // ---------------------------------------------------------------------
 // Serving-schedule simulation: batch-synchronous vs continuous batching.
 //
@@ -313,6 +373,23 @@ mod tests {
         );
         // memory saving ≥ 30% (paper's claim) — here much more.
         assert!(r.mem_ring < 0.7 * r.mem_resident);
+    }
+
+    #[test]
+    fn routed_ring_beats_dense_under_skew() {
+        let m = fig10_model(); // 32 experts
+        let cl = cluster_for_gpus(16);
+        let tokens = 64.0; // a live decode batch, not a prefill flood
+        let uni = simulate_routed_ring(&m, &cl, 4, tokens, 0.0);
+        let skew = simulate_routed_ring(&m, &cl, 4, tokens, 1.2);
+        assert!(skew.bytes_routed < uni.bytes_routed, "skew shrinks the routed set");
+        assert!(uni.bytes_routed <= uni.bytes_dense);
+        assert!(skew.byte_fraction() < 0.9, "skewed routed pass saves ≥10% bytes");
+        assert!(skew.t_ring_routed <= skew.t_ring_dense + 1e-12, "fewer bytes never slower");
+        assert!(skew.expected_experts < uni.expected_experts);
+        // a uniform flood converges to the dense pass (dense fallback)
+        let flood = simulate_routed_ring(&m, &cl, 4, 1e7, 0.0);
+        assert!((flood.byte_fraction() - 1.0).abs() < 1e-3);
     }
 
     #[test]

@@ -19,7 +19,7 @@ pub mod infer_sim;
 pub use cost_model::{CostModel, StepCost};
 pub use event::pipeline_makespan;
 pub use infer_sim::{
-    simulate_inference, simulate_ring_offload, simulate_serving, InferReport, RingReport,
-    ScheduleReport, ServeRequest, ServingComparison,
+    simulate_inference, simulate_ring_offload, simulate_routed_ring, simulate_serving,
+    InferReport, RingReport, RoutedRingReport, ScheduleReport, ServeRequest, ServingComparison,
 };
 pub use train_sim::{simulate_training, Schedule, TrainReport};

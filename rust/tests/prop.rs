@@ -5,6 +5,7 @@
 
 use semoe::comm::hierarchical::{flat_a2a, hierarchical_a2a};
 use semoe::comm::{FusionBuffer, GradientBuckets, Mesh};
+use semoe::infer::{AdmissionConfig, AdmissionQueue, AdmitError, Request};
 use semoe::moe::{top1_route, DispatchPlan, ExpertPlacement};
 use semoe::storage::{CacheConfig, CachePolicy, CpuCache};
 use semoe::util::json::Json;
@@ -126,6 +127,90 @@ fn prop_buckets_fire_exactly_once_per_pass() {
         }
         assert_eq!(fired, gb.n_buckets());
         assert_eq!(total, lens.iter().sum::<usize>());
+    });
+}
+
+// -------------------------------------------------------------- admission
+
+/// Randomized admit/cancel/poll/time-advance sequences against a shadow
+/// model of the queue. Invariants: FIFO dispatch order, no request
+/// dispatched twice, cancelled requests never dispatch, the queue bound
+/// is respected (typed rejection beyond it), live engines always drain
+/// waiting work, and the enqueue/dispatch/cancel counters conserve.
+#[test]
+fn prop_admission_queue_invariants() {
+    use std::collections::HashSet;
+    use std::time::{Duration, Instant};
+
+    let smoke = std::env::var("SEMOE_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let ops = if smoke { 80 } else { 250 };
+    for_cases("admission_queue", |rng| {
+        let max_queue = rng.range(1, 12);
+        let linger = Duration::from_millis(rng.below(8) as u64);
+        let mut q = AdmissionQueue::new(AdmissionConfig { max_queue, linger });
+        let mut now = Instant::now();
+        let mut next_id = 1u64;
+        // shadow model
+        let mut queued: Vec<u64> = Vec::new();
+        let mut dispatched: Vec<u64> = Vec::new();
+        let mut cancelled: HashSet<u64> = HashSet::new();
+        for _ in 0..ops {
+            match rng.below(5) {
+                0 | 1 => {
+                    // push, sometimes with a stale arrival stamp (requeue)
+                    let id = next_id;
+                    next_id += 1;
+                    let arrived = now - Duration::from_millis(rng.below(20) as u64);
+                    let res = q.push(Request { id, prompt: vec![1], max_tokens: 1, arrived });
+                    if queued.len() >= max_queue {
+                        assert_eq!(res, Err(AdmitError::QueueFull), "bound must reject");
+                    } else {
+                        assert!(res.is_ok());
+                        queued.push(id);
+                    }
+                }
+                2 => {
+                    // cancel a random id from the whole history
+                    if next_id > 1 {
+                        let id = rng.range(1, next_id as usize) as u64;
+                        let was_queued = queued.contains(&id);
+                        assert_eq!(q.cancel(id), was_queued, "cancel must hit iff queued");
+                        if was_queued {
+                            queued.retain(|&x| x != id);
+                            cancelled.insert(id);
+                        }
+                    }
+                }
+                3 => {
+                    // poll for admission
+                    let free = rng.below(5);
+                    let live = rng.below(3);
+                    let got = q.pop_ready(free, live, now);
+                    assert!(got.len() <= free, "never over-admit");
+                    if live > 0 && free > 0 && !queued.is_empty() {
+                        assert!(!got.is_empty(), "live engine must drain waiting work");
+                    }
+                    for r in &got {
+                        assert_eq!(r.id, queued.remove(0), "FIFO order violated");
+                        assert!(!cancelled.contains(&r.id), "cancelled request dispatched");
+                        assert!(!dispatched.contains(&r.id), "double dispatch");
+                        dispatched.push(r.id);
+                    }
+                }
+                _ => now += Duration::from_millis(rng.below(6) as u64),
+            }
+            assert_eq!(q.len(), queued.len(), "queue length drifted from the model");
+            assert!(q.len() <= max_queue, "queue bound breached");
+        }
+        // conservation: everything enqueued is dispatched, cancelled, or
+        // still waiting — nothing leaks, nothing is double-counted.
+        let s = q.stats();
+        assert_eq!(s.enqueued as usize, dispatched.len() + cancelled.len() + q.len());
+        assert_eq!(s.admitted as usize, dispatched.len());
+        assert_eq!(s.cancelled as usize, cancelled.len());
+        // and a final flush drains exactly the shadow queue, in order
+        let drained: Vec<u64> = q.drain().iter().map(|r| r.id).collect();
+        assert_eq!(drained, queued);
     });
 }
 

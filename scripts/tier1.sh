@@ -19,10 +19,18 @@ cargo test -q
 echo "== tier1: clippy (deny warnings)"
 cargo clippy -q --all-targets -- -D warnings
 
-echo "== tier1: serving smoke (continuous-batching HTTP path)"
-cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2
+echo "== tier1: serving smoke (continuous-batching HTTP path, routed ring passes)"
+cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2 --routed
+
+echo "== tier1: admission-queue property + ring stress regression tests (smoke)"
+SEMOE_SMOKE=1 cargo test -q prop_admission_queue_invariants
+SEMOE_SMOKE=1 cargo test -q stress_aborted_routed_and_slow_passes
 
 echo "== tier1: 2D-prefetch ablation smoke (asserts 2D < 1D bytes under skew)"
 SEMOE_SMOKE=1 cargo bench --bench ablation_prefetch
+
+echo "== tier1: routed-vs-dense ring ablation smoke (asserts routed < dense bytes under skew)"
+SEMOE_SMOKE=1 cargo bench --bench fig10_ring_offload
+SEMOE_SMOKE=1 cargo bench --bench table2_inference
 
 echo "tier1 OK"
