@@ -50,7 +50,7 @@ fn measured(rep: &mut Report) {
 
     let t = rep.table(
         "measured (deep preset, 12 layers, throttled copy stream)",
-        &["mode", "pass ms", "compute ms", "copy ms", "stall ms", "shadow ms", "device weights MB"],
+        &["mode", "pass ms", "compute ms", "copy ms", "stall ms", "plan ms", "device weights MB"],
     );
     let reps = if smoke() { 1 } else { 4 };
     for (name, mode, routed) in [
@@ -81,7 +81,9 @@ fn measured(rep: &mut Report) {
                 format!("{:.1}", tm.compute_secs / reps as f64 * 1e3),
                 format!("{:.1}", tm.copy_secs / reps as f64 * 1e3),
                 format!("{:.1}", tm.stall_secs / reps as f64 * 1e3),
-                format!("{:.1}", tm.shadow_secs / reps as f64 * 1e3),
+                // contract v2: plan/parse time replaces the old shadow-
+                // recompute column (shadow_secs is asserted 0 below)
+                format!("{:.1}", tm.plan_secs / reps as f64 * 1e3),
                 format!("{:.1}", engine.device_weight_bytes() as f64 / 1e6),
             ],
         );
@@ -115,6 +117,19 @@ fn routed_engine(rep: &mut Report) {
         rb,
         rs.repair_bytes,
         db
+    );
+    // Contract-v2 acceptance: routed planning/repair never invokes the
+    // f64 shadow recompute — the exact sets come out of the kernel, and
+    // consecutive passes plan from the previous pass's emitted sets.
+    assert_eq!(
+        routed.timing.shadow_secs, 0.0,
+        "no shadow MHA may run on the routed hot path"
+    );
+    assert!(
+        rs.carried_plans >= n_new as u64 - 1,
+        "passes after the first must carry kernel-emitted plans: {} of {}",
+        rs.carried_plans,
+        n_new
     );
     let t = rep.table(
         "routed vs dense ring (deep preset, identical outputs asserted)",

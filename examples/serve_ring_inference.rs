@@ -117,6 +117,15 @@ fn main() -> anyhow::Result<()> {
     println!("device weights: ring {} vs resident {} ({:.0}% saved)",
         human_bytes(dev_ring as u64), human_bytes(dev_res as u64),
         100.0 * (1.0 - dev_ring as f64 / dev_res as f64));
+    // Routed-pass accounting straight from /stats (published by the
+    // engine after every decode step — docs/serving.md §Observability).
+    let g = |k: &str| s.get(k).as_f64().unwrap_or(0.0);
+    println!(
+        "route plan: {:.0} planned / {:.0} exact / {:.0} repaired experts, {:.0} layer reruns, \
+         {:.0} carried plans; ring copy lane {:.1} MB",
+        g("route_planned_experts"), g("route_exact_experts"), g("route_repaired_experts"),
+        g("route_rerun_layers"), g("route_carried_plans"), g("ring_copy_bytes") / 1e6
+    );
     println!("serve_ring_inference OK");
     Ok(())
 }

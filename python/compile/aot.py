@@ -126,10 +126,15 @@ def entry_layer_fwd(cfg):
     ins = [("x", _spec((B, T, H)))] + _layer_specs(cfg)
 
     def fn(x, *lps):
-        y, aux = M.layer_fwd(cfg, x, list(lps))
-        return y, aux
+        y, aux, route_expert, route_gate = M.layer_fwd(cfg, x, list(lps))
+        return y, aux, route_expert, route_gate
 
-    outs = [("y", _spec((B, T, H))), ("aux", _spec(()))]
+    # Contract v2: the per-token top-k routing decisions (k = 1, switch
+    # layout) are first-class named outputs — the rust coordinator
+    # addresses them by name, never by position.
+    outs = [("y", _spec((B, T, H))), ("aux", _spec(())),
+            ("route_expert", _spec((B, T), jnp.int32)),
+            ("route_gate", _spec((B, T)))]
     return fn, ins, outs
 
 
@@ -269,7 +274,15 @@ PRESET_ENTRIES = {
 }
 
 
-AOT_CODE_VERSION = 2  # bump to force re-lowering after kernel changes
+AOT_CODE_VERSION = 3  # bump to force re-lowering after kernel changes
+
+# The artifact *contract* version: what the rust coordinator may assume
+# about entry-point signatures. v2 = `layer_fwd` emits the per-token
+# routing decisions (`route_expert`, `route_gate`) as named outputs and
+# every manifest carries this field. The rust side
+# (`runtime/registry.rs::CONTRACT_VERSION`) refuses mismatched manifests
+# with a "rebuild artifacts" error instead of shape-panicking mid-run.
+CONTRACT_VERSION = 2
 
 
 def _fingerprint(cfg: MoEConfig, entry: str) -> str:
@@ -289,6 +302,13 @@ def lower_preset(preset: str, out_dir: str, only=None, force=False, verbose=True
                 manifest = json.load(f)
         except Exception:
             pass
+    # A manifest written under another contract version drops all its
+    # artifact entries before the stamp below, so a manifest can never
+    # claim v2 while still listing v1 artifacts — even if this run is
+    # interrupted mid-lowering.
+    if manifest.get("contract_version") != CONTRACT_VERSION:
+        manifest["artifacts"] = {}
+    manifest["contract_version"] = CONTRACT_VERSION
     manifest["preset"] = cfg.to_dict()
     manifest["params"] = [
         {"name": n, "shape": list(s), "sparse": sp,

@@ -65,7 +65,14 @@ def mha_block(cfg: MoEConfig, x, wq, bq, wk, bk, wv, bv, wo, bo):
 def moe_block(cfg: MoEConfig, x, router_w, router_b, w1, b1, w2, b2):
     """Switching-FFN: top-1 gate -> dispatch -> grouped FFN -> combine.
 
-    Returns (y [B,T,H], aux_loss scalar).
+    Returns (y [B,T,H], aux_loss scalar, expert [B,T] i32, gate [B,T] f32).
+
+    `expert`/`gate` are the per-token routing decisions (contract-v2
+    "kernel-emitted routed set"): `expert[t]` is the argmax expert of
+    token t — valid whatever the expert weights hold, since the router
+    logits depend only on the dense prefix — and `gate[t]` is the
+    softmax probability of that expert, zeroed for capacity-dropped
+    tokens (the gating kernel's `gate * keep`).
     """
     B, T, H = x.shape
     E, C = cfg.n_experts, cfg.expert_capacity
@@ -76,17 +83,31 @@ def moe_block(cfg: MoEConfig, x, router_w, router_b, w1, b1, w2, b2):
     y_buf = K.expert_ffn(buf, w1, b1, w2, b2)            # pallas hot spot
     y = K.combine(y_buf, expert, pos, keep, gate)        # [BT,H]
     aux = K.ref.aux_loss_ref(me, ce)
-    return y.reshape(B, T, H), aux
+    return (y.reshape(B, T, H), aux,
+            expert.reshape(B, T), gate.reshape(B, T))
 
 
-def decoder_layer(cfg: MoEConfig, x, layer_params):
-    """One pre-norm decoder block. layer_params: list in LAYER_PARAM_NAMES order.
+def decoder_layer_routed(cfg: MoEConfig, x, layer_params):
+    """One pre-norm decoder block, routing decisions included.
 
-    Returns (y [B,T,H], aux_loss scalar).
+    Returns (y [B,T,H], aux_loss scalar, expert [B,T] i32, gate [B,T] f32)
+    — the contract-v2 `layer_fwd` output set.
     """
     (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
      ln2_s, ln2_b, rw, rb, w1, b1, w2, b2) = layer_params
     a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b), wq, bq, wk, bk, wv, bv, wo, bo)
     x = x + a
-    m, aux = moe_block(cfg, layer_norm(x, ln2_s, ln2_b), rw, rb, w1, b1, w2, b2)
-    return x + m, aux
+    m, aux, expert, gate = moe_block(
+        cfg, layer_norm(x, ln2_s, ln2_b), rw, rb, w1, b1, w2, b2)
+    return x + m, aux, expert, gate
+
+
+def decoder_layer(cfg: MoEConfig, x, layer_params):
+    """One pre-norm decoder block. layer_params: list in LAYER_PARAM_NAMES order.
+
+    Returns (y [B,T,H], aux_loss scalar). The routing outputs are dropped
+    (XLA prunes the dead int32 path); fused entries (`train_step`,
+    `fwd_loss`, `layer_bwd`'s vjp) differentiate through this form.
+    """
+    y, aux, _, _ = decoder_layer_routed(cfg, x, layer_params)
+    return y, aux

@@ -9,7 +9,9 @@ Entry points (each becomes one HLO artifact; see aot.py):
   train_step     fused fwd+bwd+AdamW over all params (resident training)
   fwd_loss       forward + loss (eval)
   embed_fwd/bwd  embedding lookup and its gradient (one-hot matmul)
-  layer_fwd/bwd  single decoder layer; bwd recomputes fwd (checkpointing)
+  layer_fwd/bwd  single decoder layer; fwd also emits the per-token
+                 routing decisions (contract v2); bwd recomputes fwd
+                 (checkpointing)
   head_fwd       final LN + logits + loss
   head_grad      head loss + gradients (dx and head param grads)
   head_infer     greedy next-token ids
@@ -21,7 +23,8 @@ import jax.numpy as jnp
 
 from . import kernels as K
 from .configs import MoEConfig
-from .layers import decoder_layer, layer_norm, layer_param_shapes, N_LAYER_PARAMS
+from .layers import (decoder_layer, decoder_layer_routed, layer_norm,
+                     layer_param_shapes, N_LAYER_PARAMS)
 
 
 # ---------------------------------------------------------------------------
@@ -160,8 +163,18 @@ def train_step(cfg: MoEConfig, params, ms, vs, step, lr, tokens, labels):
 # ---------------------------------------------------------------------------
 
 def layer_fwd(cfg: MoEConfig, x, layer_params):
-    """Single decoder layer forward. Returns (y, aux)."""
-    return decoder_layer(cfg, x, layer_params)
+    """Single decoder layer forward — contract v2.
+
+    Returns (y [B,T,H], aux scalar, route_expert [B,T] i32,
+    route_gate [B,T] f32): the per-token top-k routing decisions (k = 1
+    in the switch layout) ride out of the kernel as first-class outputs,
+    so the coordinator learns the exact routed set as a byproduct of the
+    forward instead of re-deriving it with an f64 shadow recompute.
+    `route_expert` depends only on the dense prefix (ln1 → MHA →
+    residual → ln2 → router), so it is valid even when stale expert
+    weights were staged — the repair path relies on exactly this.
+    """
+    return decoder_layer_routed(cfg, x, layer_params)
 
 
 def layer_bwd(cfg: MoEConfig, x, layer_params, dy, daux):

@@ -6,7 +6,7 @@ import os
 import pytest
 
 from compile.configs import get_config
-from compile.aot import PRESET_ENTRIES
+from compile.aot import CONTRACT_VERSION, PRESET_ENTRIES
 
 ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
 
@@ -52,6 +52,27 @@ def test_train_step_io_arity():
     tok = [i for i in art["inputs"] if i["name"] == "tokens"][0]
     assert tok["dtype"] == "i32"
     assert tok["shape"] == [cfg.batch_size, cfg.seq_len]
+
+
+@pytest.mark.parametrize("preset", list(PRESET_ENTRIES))
+def test_manifest_declares_current_contract(preset):
+    """Every built manifest must be stamped with the contract version the
+    rust coordinator checks (stale manifests are rejected with a
+    "rebuild artifacts" error, never a shape panic)."""
+    man = _manifest(preset)
+    assert man.get("contract_version") == CONTRACT_VERSION
+
+
+def test_layer_fwd_manifest_outputs_are_contract_v2():
+    """Built layer_fwd artifacts must list the routed outputs by name."""
+    man = _manifest("deep")
+    cfg = get_config("deep")
+    outs = {o["name"]: o for o in man["artifacts"]["layer_fwd"]["outputs"]}
+    assert set(outs) == {"y", "aux", "route_expert", "route_gate"}
+    assert outs["route_expert"]["dtype"] == "i32"
+    assert outs["route_expert"]["shape"] == [cfg.batch_size, cfg.seq_len]
+    assert outs["route_gate"]["dtype"] == "f32"
+    assert outs["route_gate"]["shape"] == [cfg.batch_size, cfg.seq_len]
 
 
 def test_layer_artifacts_share_shapes_across_layers():

@@ -1,0 +1,100 @@
+"""Artifact-contract v2: `layer_fwd` emits the routing decisions.
+
+This is the Python half of the contract the rust coordinator depends on
+(`runtime/registry.rs::CONTRACT_VERSION`): output names, dtypes and
+shapes of the v2 `layer_fwd` entry, plus the two semantic invariants the
+route-repair path is built on —
+
+  1. the emitted top-1 set equals a dense-prefix recompute (the shadow
+     oracle's argmax), and
+  2. the routing outputs do NOT depend on the expert weights, so they
+     are valid even when stale expert tensors were staged (the engine
+     repairs by splicing the missed experts and re-running the layer).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.aot import CONTRACT_VERSION, entry_layer_fwd
+from compile.configs import get_config
+from compile.layers import LAYER_PARAM_NAMES, layer_norm, mha_block
+
+
+def _tiny():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, 0)
+    _, layers, _ = M.split_params(cfg, params)
+    r = np.random.default_rng(7)
+    x = jnp.asarray(
+        r.normal(size=(cfg.batch_size, cfg.seq_len, cfg.d_model)) * 0.5,
+        jnp.float32)
+    return cfg, layers[0], x
+
+
+def test_contract_version_is_two():
+    assert CONTRACT_VERSION == 2
+
+
+def test_layer_fwd_entry_matches_documented_contract():
+    """Names, order, dtypes and shapes of the v2 `layer_fwd` outputs."""
+    cfg = get_config("tiny")
+    _, ins, outs = entry_layer_fwd(cfg)
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+    assert ins[0][0] == "x" and tuple(ins[0][1].shape) == (B, T, H)
+    assert [n for n, _ in ins[1:]] == [n for n, _ in LAYER_PARAM_NAMES]
+    got = [(n, tuple(s.shape), s.dtype) for n, s in outs]
+    assert got == [
+        ("y", (B, T, H), jnp.float32),
+        ("aux", (), jnp.float32),
+        ("route_expert", (B, T), jnp.int32),
+        ("route_gate", (B, T), jnp.float32),
+    ]
+
+
+def test_layer_fwd_returns_routing_in_range():
+    cfg, lp, x = _tiny()
+    y, aux, expert, gate = M.layer_fwd(cfg, x, lp)
+    assert y.shape == x.shape
+    e = np.asarray(expert)
+    g = np.asarray(gate)
+    assert e.shape == (cfg.batch_size, cfg.seq_len)
+    assert e.dtype == np.int32
+    assert (e >= 0).all() and (e < cfg.n_experts).all()
+    # gate = softmax prob of the chosen expert × keep ∈ [0, 1]; a top-1
+    # softmax winner over E logits is always at least 1/E when kept.
+    assert (g >= 0.0).all() and (g <= 1.0).all()
+    kept = g > 0.0
+    assert (g[kept] >= 1.0 / cfg.n_experts - 1e-6).all()
+
+
+def test_emitted_routing_matches_dense_prefix_recompute():
+    """Kernel-emitted set == the shadow oracle's argmax (parity)."""
+    cfg, lp, x = _tiny()
+    _, _, expert, _ = M.layer_fwd(cfg, x, lp)
+    (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_s, ln2_b, rw, rb, *_rest) = lp
+    a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b),
+                  wq, bq, wk, bk, wv, bv, wo, bo)
+    logits = layer_norm(x + a, ln2_s, ln2_b) @ rw + rb
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    np.testing.assert_array_equal(np.asarray(expert),
+                                  np.asarray(want))
+
+
+def test_routing_outputs_ignore_expert_weights():
+    """The repair-path invariant: staging stale (here: zeroed) expert
+    weights changes `y` but NOT `route_expert`/`route_gate`."""
+    cfg, lp, x = _tiny()
+    y, _, expert, gate = M.layer_fwd(cfg, x, lp)
+    stale = list(lp)
+    names = [n for n, _ in LAYER_PARAM_NAMES]
+    for n in ("w1", "b1", "w2", "b2"):
+        i = names.index(n)
+        stale[i] = jnp.zeros_like(stale[i])
+    y2, _, expert2, gate2 = M.layer_fwd(cfg, x, stale)
+    np.testing.assert_array_equal(np.asarray(expert), np.asarray(expert2))
+    np.testing.assert_array_equal(np.asarray(gate), np.asarray(gate2))
+    assert not np.allclose(np.asarray(y), np.asarray(y2)), \
+        "expert weights must matter for y (sanity)"

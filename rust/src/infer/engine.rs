@@ -5,12 +5,21 @@
 //!
 //! Ring passes are optionally **routed-expert-granular** (see
 //! [`RoutedRingConfig`] and `docs/serving.md` §Routed ring passes): each
-//! pass plans an expert subset per ring slot from the live batch — the
-//! embedding-proxy prediction unioned with the pinned hot set, the same
-//! machinery as the trainer's 2D prefetch — and the copy lane moves only
-//! that subset. Immediately before a layer executes, the shadow router's
-//! exact routed superset repairs the plan by demand-splicing any missed
-//! expert, so decode outputs stay bit-identical to the dense path.
+//! pass plans an expert subset per ring slot from a
+//! [`RouteSource`](crate::moe::RouteSource) — the previous pass's
+//! **kernel-emitted** exact sets when one has been observed (decode
+//! windows shift by one token, so they are the best predictor), the
+//! embedding proxy otherwise — unioned with the pinned hot set, and the
+//! copy lane moves only that subset. Exactness comes from the kernel
+//! itself (routing contract v2): `layer_fwd` emits every token's top-1
+//! expert as the named `route_expert` output, which is valid even when
+//! stale expert weights were staged (routing depends only on the dense
+//! prefix). A layer whose plan missed an expert is repaired by
+//! demand-splicing the missed slices and re-running that layer, so
+//! decode outputs stay bit-identical to the dense path — and the old
+//! coordinator-side f64 shadow recompute is gone from the hot path
+//! (`PassTiming::shadow_secs` stays 0; the shadow router survives only
+//! as the parity test oracle).
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -21,8 +30,12 @@ use anyhow::{Context, Result};
 use super::ring_memory::{LayerLoader, RingMemory, RingStats};
 use super::session::{self, DecodeModel, SlotState, StepReport};
 use crate::comm::FusionBuffer;
-use crate::moe::shadow::{PREDICT_MARGIN, ROUTE_MARGIN};
-use crate::moe::{LoadStats, ShadowRouter};
+use crate::metrics::Registry;
+use crate::moe::routing::{
+    routed_set_from_ids, CarriedKernelSource, LayerParamResolver, RouteQuery, RouteSource,
+    RouteSourceKind,
+};
+use crate::moe::LoadStats;
 use crate::prefetch::RoutePlan;
 use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
 use crate::train::optimizer::{group_of, init_tensor, Group};
@@ -60,12 +73,19 @@ impl Default for RoutedRingConfig {
 pub struct RouteRepairStats {
     /// Σ |planned set| over all layers of all routed passes.
     pub planned_experts: u64,
-    /// Σ |exact routed superset| (what compute actually needed).
+    /// Σ |kernel-emitted exact routed set| (what compute actually used).
     pub exact_experts: u64,
     /// Experts the plan missed, demand-spliced on the compute thread.
     pub repaired_experts: u64,
     /// Bytes those demand splices moved (visible, un-overlapped copy).
     pub repair_bytes: u64,
+    /// Layers re-executed because their plan missed a routed expert
+    /// (the contract-v2 repair: splice, then run the layer again — its
+    /// routing outputs were already exact).
+    pub rerun_layers: u64,
+    /// Passes planned from the previous pass's kernel-emitted sets
+    /// instead of the embedding proxy (the decode-step carry-over).
+    pub carried_plans: u64,
 }
 
 /// Per-pass timing: the Fig 10 bars.
@@ -74,9 +94,14 @@ pub struct PassTiming {
     pub compute_secs: f64,
     pub copy_secs: f64,
     pub stall_secs: f64,
-    /// Coordinator-side shadow-router time (plan + exact-set repair) of
-    /// routed ring passes.
+    /// Coordinator-side f64 shadow-recompute time. Contract v2 removed
+    /// the shadow MHA from the hot path, so this stays 0 on routed ring
+    /// passes (asserted in the fig10 ablation); the field survives for
+    /// report compatibility and for any parity-oracle run that opts in.
     pub shadow_secs: f64,
+    /// Coordinator-side route planning time (RouteSource plan + kernel
+    /// route_expert parsing) — the cheap replacement for `shadow_secs`.
+    pub plan_secs: f64,
 }
 
 /// One member tensor's slot within a layer's fused weight buffer.
@@ -208,6 +233,12 @@ impl CpuWeightStore {
         Ok(bytes)
     }
 
+    /// The route-planning parameter surface: the store IS the resolver
+    /// (`RouteQuery::params`).
+    pub fn as_resolver(&self) -> &dyn LayerParamResolver {
+        self
+    }
+
     /// A `RingMemory` loader view over this store (the staging thread
     /// shares the `Arc`'d layer buffers — no second host copy of the
     /// model). Given an expert subset, only those experts' slices of
@@ -249,6 +280,12 @@ impl CpuWeightStore {
     }
 }
 
+impl LayerParamResolver for CpuWeightStore {
+    fn layer_param(&self, layer: usize, name: &str) -> &[f32] {
+        self.member(layer, name)
+    }
+}
+
 pub struct InferenceEngine {
     pub arts: Rc<ModelArtifacts>,
     embed_fwd: Rc<ArtifactExe>,
@@ -262,8 +299,13 @@ pub struct InferenceEngine {
     /// buffers — one host copy of the model).
     store: CpuWeightStore,
     ring: Option<RingMemory>,
-    /// Coordinator-side dense-prefix router (plans + exact repairs).
-    shadow: ShadowRouter,
+    /// The unified route planner (contract v2): carries the previous
+    /// pass's kernel-emitted exact sets, embedding proxy as fallback.
+    route: Box<dyn RouteSource>,
+    /// `layer_fwd` output positions, resolved **by name** from the
+    /// manifest (stale artifacts fail here with a rebuild error).
+    y_out: usize,
+    route_out: usize,
     /// Per-layer rolling expert load → hot-set pinning for routed plans.
     load: Vec<LoadStats>,
     hot: Vec<Vec<usize>>,
@@ -307,9 +349,15 @@ impl InferenceEngine {
             InferMode::Resident => None,
             InferMode::Ring { k } => Some(RingMemory::new(k, n_layers, store.loader(), throttle)),
         };
+        let layer_fwd = arts.load_exe("layer_fwd").context("layer_fwd")?;
+        // Contract v2: address the layer outputs by name. Artifacts
+        // built under v1 fail right here with the rebuild hint instead
+        // of mis-slicing tensors mid-decode.
+        let y_out = layer_fwd.output_index("y")?;
+        let route_out = layer_fwd.output_index("route_expert")?;
         Ok(InferenceEngine {
             embed_fwd: arts.load_exe("embed_fwd").context("embed_fwd")?,
-            layer_fwd: arts.load_exe("layer_fwd").context("layer_fwd")?,
+            layer_fwd,
             head_infer: arts.load_exe("head_infer").context("head_infer")?,
             arts,
             embed: embed.context("embed param")?,
@@ -317,7 +365,11 @@ impl InferenceEngine {
             mode,
             store,
             ring,
-            shadow: ShadowRouter::new(d_model, n_heads, n_experts),
+            route: Box::new(CarriedKernelSource::with_proxy(
+                n_layers, d_model, n_heads, n_experts,
+            )),
+            y_out,
+            route_out,
             load: (0..n_layers).map(|_| LoadStats::new(n_experts, 0.5)).collect(),
             hot: vec![Vec::new(); n_layers],
             routed: RoutedRingConfig::default(),
@@ -332,13 +384,27 @@ impl InferenceEngine {
     }
 
     /// Configure routed ring passes (plan/repair expert subsets per
-    /// pass). A no-op for copy volume in `Resident` mode.
+    /// pass). A no-op for copy volume in `Resident` mode. Carried
+    /// routing state is dropped — the next pass plans from scratch.
     pub fn set_routed(&mut self, cfg: RoutedRingConfig) {
         self.routed = cfg;
+        self.route.reset();
     }
 
     pub fn routed(&self) -> RoutedRingConfig {
         self.routed
+    }
+
+    /// Swap the route planner (the `RouteSource` API): tests inject the
+    /// shadow oracle here; production keeps the default carry-over stack
+    /// ([`CarriedKernelSource`] over the embedding proxy).
+    pub fn set_route_source(&mut self, src: Box<dyn RouteSource>) {
+        self.route = src;
+    }
+
+    /// Which acquisition path the current route planner represents.
+    pub fn route_source_kind(&self) -> RouteSourceKind {
+        self.route.kind()
     }
 
     /// Copy-lane accounting of the ring (None in resident mode).
@@ -364,7 +430,7 @@ impl InferenceEngine {
     /// One full forward pass: tokens [B, T] → greedy next token ids [B].
     pub fn forward(&mut self, tokens: &HostTensor) -> Result<Vec<i32>> {
         let model = &self.arts.preset;
-        let (n_layers, b, t) = (model.n_layers, model.batch_size, model.seq_len);
+        let (n_layers, n_experts) = (model.n_layers, model.n_experts);
         let t0 = Instant::now();
         let mut x = self
             .embed_fwd
@@ -373,29 +439,47 @@ impl InferenceEngine {
         self.timing.compute_secs += t0.elapsed().as_secs_f64();
 
         if self.ring.is_some() {
-            // Disjoint field borrows for the ring walk (the shadow/repair
+            // Disjoint field borrows for the ring walk (the plan/repair
             // closures read the store while the ring is held mutably).
             let InferenceEngine {
-                ring, store, shadow, load, hot, routed, route_stats, timing, layer_fwd, embed, ..
+                ring,
+                store,
+                route,
+                load,
+                hot,
+                routed,
+                route_stats,
+                timing,
+                layer_fwd,
+                embed,
+                y_out,
+                route_out,
+                ..
             } = self;
             let ring = ring.as_mut().unwrap();
             let store: &CpuWeightStore = store;
+            let (y_out, route_out) = (*y_out, *route_out);
 
-            // Plan the expert axis for this pass one ring slot ahead:
-            // embedding-proxy prediction ∪ pinned hot experts, exactly
-            // like the trainer's routing-ahead. Exactness is repaired
-            // per layer below.
+            // Plan the expert axis for this pass one ring slot ahead via
+            // the RouteSource: the previous pass's kernel-emitted exact
+            // sets when observed (decode windows shift one token — the
+            // carry-over), the embedding proxy otherwise; hot pins are
+            // unioned in either way. Exactness is repaired per layer
+            // below from the kernel's own route_expert output.
             let plan: Option<RoutePlan> = if routed.enabled {
                 let ts = Instant::now();
-                let predicted = shadow.predict_from_embeddings(
-                    tokens.as_i32()?,
-                    embed.as_f32()?,
+                let q = RouteQuery {
+                    tokens: tokens.as_i32()?,
+                    embed: embed.as_f32()?,
                     n_layers,
-                    |l, name| store.member(l, name),
-                    PREDICT_MARGIN,
-                );
-                let p = RoutePlan::new(predicted, hot);
-                timing.shadow_secs += ts.elapsed().as_secs_f64();
+                    n_experts,
+                    params: store.as_resolver(),
+                };
+                let (p, provenance) = RoutePlan::from_source(route.as_mut(), &q, hot);
+                if provenance == RouteSourceKind::KernelEmitted {
+                    route_stats.carried_plans += 1;
+                }
+                timing.plan_secs += ts.elapsed().as_secs_f64();
                 route_stats.planned_experts += p.total_planned() as u64;
                 Some(p)
             } else {
@@ -406,41 +490,53 @@ impl InferenceEngine {
             ring.begin_pass(plan.as_ref());
             for l in 0..n_layers {
                 let mut weights = ring.get(l)?;
+                let run = |weights: &[HostTensor], x: &HostTensor| -> Result<Vec<HostTensor>> {
+                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + weights.len());
+                    inputs.push(x);
+                    inputs.extend(weights.iter());
+                    layer_fwd.run_ref(&inputs)
+                };
+                let tc = Instant::now();
+                let mut out = run(&weights, &x)?;
+                timing.compute_secs += tc.elapsed().as_secs_f64();
                 if routed.enabled {
-                    // The exact routed superset for this layer, from the
-                    // actual layer input (the previous layer's gating has
-                    // run by construction). Experts the plan missed are
-                    // demand-spliced from the CPU tier — the visible
-                    // repair cost, counted separately from the overlapped
-                    // copy lane.
+                    // The exact routed set, emitted by the kernel itself
+                    // (contract v2). It is valid even though unplanned
+                    // experts' staged slices are zero-filled: routing
+                    // depends only on the dense prefix. Misses are
+                    // repaired by splicing the missing experts from the
+                    // CPU tier and re-running this layer — the visible
+                    // repair cost, counted separately from the
+                    // overlapped copy lane.
                     let ts = Instant::now();
-                    let (exact, counts) = shadow.route_layer(
-                        x.as_f32()?,
-                        b,
-                        t,
-                        |name| store.member(l, name),
-                        ROUTE_MARGIN,
-                    );
-                    timing.shadow_secs += ts.elapsed().as_secs_f64();
+                    let (exact, counts) =
+                        routed_set_from_ids(out[route_out].as_i32()?, n_experts);
+                    route.observe(l, &counts);
                     load[l].record(&counts);
                     hot[l] = load[l].hot_experts(routed.hot_frac);
                     route_stats.exact_experts += exact.len() as u64;
-                    if let Some(planned) = ring.planned(l) {
-                        for &e in &exact {
-                            if planned.binary_search(&e).is_err() {
-                                route_stats.repaired_experts += 1;
-                                route_stats.repair_bytes +=
-                                    store.copy_expert_into(l, e, &mut weights)? as u64;
-                            }
+                    let missed: Vec<usize> = match ring.planned(l) {
+                        Some(planned) => exact
+                            .iter()
+                            .copied()
+                            .filter(|e| planned.binary_search(e).is_err())
+                            .collect(),
+                        None => Vec::new(),
+                    };
+                    timing.plan_secs += ts.elapsed().as_secs_f64();
+                    if !missed.is_empty() {
+                        for &e in &missed {
+                            route_stats.repaired_experts += 1;
+                            route_stats.repair_bytes +=
+                                store.copy_expert_into(l, e, &mut weights)? as u64;
                         }
+                        route_stats.rerun_layers += 1;
+                        let tr = Instant::now();
+                        out = run(&weights, &x)?;
+                        timing.compute_secs += tr.elapsed().as_secs_f64();
                     }
                 }
-                let mut inputs = vec![x];
-                inputs.extend(weights);
-                let tc = Instant::now();
-                let mut out = layer_fwd.run(&inputs)?;
-                timing.compute_secs += tc.elapsed().as_secs_f64();
-                x = out.remove(0);
+                x = out.swap_remove(y_out);
                 ring.release(l);
             }
             let after = ring.stats();
@@ -448,12 +544,14 @@ impl InferenceEngine {
             timing.stall_secs += after.stall_secs - before.stall_secs;
         } else {
             for l in 0..n_layers {
-                let mut inputs = vec![x];
-                inputs.extend(self.store.tensors(l));
+                let weights = self.store.tensors(l);
+                let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + weights.len());
+                inputs.push(&x);
+                inputs.extend(weights.iter());
                 let t0 = Instant::now();
-                let mut out = self.layer_fwd.run(&inputs)?;
+                let mut out = self.layer_fwd.run_ref(&inputs)?;
                 self.timing.compute_secs += t0.elapsed().as_secs_f64();
-                x = out.remove(0);
+                x = out.swap_remove(self.y_out);
             }
         }
 
@@ -526,6 +624,23 @@ impl DecodeModel for InferenceEngine {
         let (b, t) = (self.arts.preset.batch_size, self.arts.preset.seq_len);
         anyhow::ensure!(flat.len() == b * t, "got {} tokens for [{} x {}]", flat.len(), b, t);
         self.forward(&HostTensor::from_i32(&[b, t], flat.to_vec()))
+    }
+
+    /// Publish the routed-pass and copy-lane accounting into the serving
+    /// metrics registry (`/stats` surfaces these — `docs/serving.md`
+    /// §Observability).
+    fn publish_stats(&self, reg: &Registry) {
+        let rs = self.route_stats;
+        reg.gauge("route.planned_experts").set(rs.planned_experts);
+        reg.gauge("route.exact_experts").set(rs.exact_experts);
+        reg.gauge("route.repaired_experts").set(rs.repaired_experts);
+        reg.gauge("route.repair_bytes").set(rs.repair_bytes);
+        reg.gauge("route.rerun_layers").set(rs.rerun_layers);
+        reg.gauge("route.carried_plans").set(rs.carried_plans);
+        if let Some(r) = self.ring_stats() {
+            reg.gauge("ring.copy_bytes").set(r.copy_bytes);
+            reg.gauge("ring.loads").set(r.loads);
+        }
     }
 }
 
@@ -607,6 +722,73 @@ mod tests {
         for (c, w) in done.iter().zip(&want) {
             assert_eq!(&c.tokens, w, "routed slot decode must match batch generate");
         }
+    }
+
+    /// The contract-v2 acceptance: the kernel-emitted routed set must be
+    /// bit-identical to the f64 shadow oracle's exact argmax set (and
+    /// sit inside the oracle's margin-widened superset), layer by layer.
+    #[test]
+    fn kernel_routed_sets_match_shadow_oracle() {
+        use crate::moe::routing::{routed_set_from_ids, ShadowOracleSource};
+
+        let e = engine(InferMode::Resident);
+        let m = e.arts.preset.clone();
+        let mut rng = Rng::new(21);
+        let toks: Vec<i32> = (0..m.batch_size * m.seq_len)
+            .map(|_| rng.below(m.vocab_size) as i32)
+            .collect();
+        let t = HostTensor::from_i32(&[m.batch_size, m.seq_len], toks);
+        let mut x = e.embed_fwd.run(&[t, e.embed.clone()]).unwrap().remove(0);
+        let oracle = ShadowOracleSource::new(m.d_model, m.n_heads, m.n_experts);
+        for l in 0..m.n_layers {
+            let mut inputs = vec![x.clone()];
+            inputs.extend(e.store.tensors(l));
+            let mut out = e.layer_fwd.run(&inputs).unwrap();
+            let (kernel_set, kernel_counts) =
+                routed_set_from_ids(out[e.route_out].as_i32().unwrap(), m.n_experts);
+            let (superset, counts) = oracle.exact_for_layer(
+                x.as_f32().unwrap(),
+                m.batch_size,
+                m.seq_len,
+                |name| e.store.member(l, name),
+            );
+            let oracle_set: Vec<usize> =
+                (0..m.n_experts).filter(|&i| counts[i] > 0).collect();
+            assert_eq!(kernel_set, oracle_set, "layer {}: exact-set parity", l);
+            assert_eq!(kernel_counts, counts, "layer {}: per-expert count parity", l);
+            for ex in &kernel_set {
+                assert!(superset.contains(ex), "layer {}: {} outside superset", l, ex);
+            }
+            assert!(!kernel_set.is_empty(), "layer {}: someone must be routed", l);
+            x = out.swap_remove(e.y_out);
+        }
+    }
+
+    /// Decode-step carry-over + the no-shadow acceptance: after the
+    /// first routed pass, plans come from the previous pass's
+    /// kernel-emitted sets, and the f64 shadow recompute never runs on
+    /// the hot path.
+    #[test]
+    fn carried_plans_seed_consecutive_passes_without_shadow() {
+        let mut e = engine(InferMode::Ring { k: 3 });
+        e.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+        let model = e.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 3 + 2; 5]).collect();
+        let n_new = 4;
+        let _ = e.generate(&prompts, n_new).unwrap();
+        let rs = e.route_stats();
+        assert_eq!(
+            rs.carried_plans,
+            n_new as u64 - 1,
+            "every pass after the first must plan from kernel-emitted sets"
+        );
+        assert_eq!(
+            e.timing.shadow_secs, 0.0,
+            "contract v2: no shadow MHA on the routed hot path"
+        );
+        assert!(e.timing.plan_secs > 0.0, "planning time is accounted");
+        assert!(rs.exact_experts > 0 && rs.planned_experts > 0);
     }
 
     #[test]

@@ -498,6 +498,16 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("queue_depth", Json::num(reg.gauge("serve.queue_depth").get() as f64)),
         ("queue_wait_ms_p50", Json::num(waits.p50())),
         ("queue_wait_ms_p95", Json::num(waits.p95())),
+        // Routed-pass plan/repair accounting + ring copy lane, published
+        // by the model via `DecodeModel::publish_stats` after each step
+        // (zeros for models that publish nothing).
+        ("route_planned_experts", Json::num(reg.gauge("route.planned_experts").get() as f64)),
+        ("route_exact_experts", Json::num(reg.gauge("route.exact_experts").get() as f64)),
+        ("route_repaired_experts", Json::num(reg.gauge("route.repaired_experts").get() as f64)),
+        ("route_repair_bytes", Json::num(reg.gauge("route.repair_bytes").get() as f64)),
+        ("route_rerun_layers", Json::num(reg.gauge("route.rerun_layers").get() as f64)),
+        ("route_carried_plans", Json::num(reg.gauge("route.carried_plans").get() as f64)),
+        ("ring_copy_bytes", Json::num(reg.gauge("ring.copy_bytes").get() as f64)),
         ("counters", reg.snapshot()),
     ])
 }
@@ -647,6 +657,85 @@ mod tests {
         assert_eq!(j.get("tokens").as_arr().map(|a| a.len()), Some(0));
         assert_eq!(j.get("finish").as_str(), Some("length"));
         assert_eq!(stats.counters.counter("serve.steps").count(), 0, "no layer walk spent");
+        server.stop();
+    }
+
+    /// `/stats` must surface the model-published routed-pass repair
+    /// accounting and ring copy-lane bytes (ROADMAP item). The model
+    /// stands in for a routed ring `InferenceEngine`, publishing through
+    /// the same `DecodeModel::publish_stats` hook.
+    #[test]
+    fn stats_surface_route_repair_and_ring_bytes() {
+        struct RoutedStatsModel {
+            b: usize,
+            t: usize,
+            steps: u64,
+        }
+        impl DecodeModel for RoutedStatsModel {
+            fn slots(&self) -> usize {
+                self.b
+            }
+            fn window(&self) -> usize {
+                self.t
+            }
+            fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>> {
+                self.steps += 1;
+                Ok((0..self.b).map(|r| flat[r * self.t + self.t - 1] + 1).collect())
+            }
+            fn publish_stats(&self, reg: &Registry) {
+                reg.gauge("route.planned_experts").set(6 * self.steps);
+                reg.gauge("route.exact_experts").set(5 * self.steps);
+                reg.gauge("route.repaired_experts").set(self.steps);
+                reg.gauge("route.repair_bytes").set(4096 * self.steps);
+                reg.gauge("route.rerun_layers").set(self.steps);
+                reg.gauge("route.carried_plans").set(self.steps.saturating_sub(1));
+                reg.gauge("ring.copy_bytes").set(1 << 20);
+            }
+        }
+
+        let stats = Arc::new(ServerStats::default());
+        let mut server = Server::start(
+            "127.0.0.1:0",
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 8, linger: Duration::ZERO },
+            },
+            stats.clone(),
+            || Ok(RoutedStatsModel { b: 2, t: 8, steps: 0 }),
+        )
+        .unwrap();
+        let (code, _) =
+            http_post(&server.addr, "/generate", r#"{"prompt": [3], "max_tokens": 3}"#).unwrap();
+        assert_eq!(code, 200);
+        let (code, s) = http_get(&server.addr, "/stats").unwrap();
+        assert_eq!(code, 200);
+        let n = |k: &str| s.get(k).as_f64().unwrap_or(-1.0);
+        assert!(n("route_planned_experts") >= 6.0, "planned: {}", n("route_planned_experts"));
+        assert!(n("route_exact_experts") >= 5.0);
+        assert!(n("route_repaired_experts") >= 1.0);
+        assert!(n("route_repair_bytes") >= 4096.0);
+        assert!(n("route_rerun_layers") >= 1.0);
+        assert!(n("route_carried_plans") >= 0.0);
+        assert_eq!(n("ring_copy_bytes"), (1u64 << 20) as f64);
+        server.stop();
+    }
+
+    /// Models that publish nothing still render the fields (as zeros) —
+    /// the `/stats` schema is stable across engine configurations.
+    #[test]
+    fn stats_route_fields_default_to_zero() {
+        let (mut server, _) = start_echo();
+        let (_, s) = http_get(&server.addr, "/stats").unwrap();
+        for k in [
+            "route_planned_experts",
+            "route_exact_experts",
+            "route_repaired_experts",
+            "route_repair_bytes",
+            "route_rerun_layers",
+            "route_carried_plans",
+            "ring_copy_bytes",
+        ] {
+            assert_eq!(s.get(k).as_f64(), Some(0.0), "{} must default to 0", k);
+        }
         server.stop();
     }
 

@@ -44,6 +44,11 @@ pub trait DecodeModel {
     /// caller-owned scratch reused across steps, so steady-state decode
     /// performs no per-step window allocations.
     fn step_tokens(&mut self, flat: &[i32]) -> Result<Vec<i32>>;
+    /// Publish model-side accounting (routed-plan repair counters, ring
+    /// copy-lane bytes) into the serving metrics registry. Called by the
+    /// session after each decode step; `/stats` renders the result.
+    /// Default: nothing to publish.
+    fn publish_stats(&self, _reg: &Registry) {}
 }
 
 /// Where a slot is in the request life cycle.
@@ -278,6 +283,18 @@ pub fn advance<M: DecodeModel + ?Sized>(
         slots.len(),
         model.slots()
     );
+    if !slots.iter().any(|s| s.is_live()) {
+        // Padding-only step: every row is free (or retirable), so the
+        // layer walk would advance nothing — skip it entirely.
+        // Bit-identical to the unskipped path by construction: the model
+        // never mutates slot state, and `push_token` only ever runs on
+        // live slots (asserted by `skipping_padding_only_steps_is_bit_identical`).
+        // `ServeSession::tick` short-circuits before calling advance for
+        // its own stats accounting; this guard covers the other driver —
+        // `InferenceEngine::decode_step`, which benches/examples call
+        // directly with whatever slot mix they hold.
+        return Ok(StepReport { live: 0, padded: slots.len(), finished: 0 });
+    }
     flat.clear();
     flat.reserve(slots.len() * model.window());
     for s in slots.iter() {
@@ -314,6 +331,9 @@ pub struct ServeSession<M: DecodeModel> {
     /// Reusable flat window scratch for [`advance`] (allocated once at
     /// `B × T`, never grown after — the zero-per-step-allocation path).
     flat: Vec<i32>,
+    /// The serving metrics registry; the model publishes its own
+    /// counters here after each step ([`DecodeModel::publish_stats`]).
+    registry: Registry,
     // cached registry handles (serve.* namespace) — the single source of
     // truth for session statistics; `stats()` reads them back
     c_steps: std::sync::Arc<Counter>,
@@ -348,6 +368,7 @@ impl<M: DecodeModel> ServeSession<M> {
             g_live: registry.gauge("serve.slots_live"),
             g_queue: registry.gauge("serve.queue_depth"),
             g_slots,
+            registry,
         }
     }
 
@@ -500,6 +521,9 @@ impl<M: DecodeModel> ServeSession<M> {
         self.c_steps.inc();
         self.c_slot_steps.add(rep.live as u64);
         self.c_padded.add(rep.padded as u64);
+        // Let the model surface its own accounting (route repair, ring
+        // copy bytes) while the numbers are fresh — `/stats` reads them.
+        self.model.publish_stats(&self.registry);
 
         // Retire finished sequences immediately — their slots are free
         // for admission on the very next tick.
@@ -794,6 +818,83 @@ mod tests {
         // check above already proves no realloc happened, so only the
         // lower bound is asserted here.
         assert!(s.flat_capacity() >= b * t, "scratch below its one-time allocation");
+    }
+
+    /// Padding-only steps skip the layer walk entirely (ROADMAP item).
+    /// Bit-identity against the unskipped path: drive the same slot
+    /// schedule through `advance` (which skips) and through a manual
+    /// no-skip step; windows, outputs and reports must agree — the only
+    /// difference is the model-invocation count.
+    #[test]
+    fn skipping_padding_only_steps_is_bit_identical() {
+        let t = 4;
+        let mk = |with_live: bool| {
+            let now = Instant::now();
+            let mut slots: Vec<SlotState> = (0..3).map(|_| SlotState::free(t)).collect();
+            if with_live {
+                slots[1].admit(
+                    Request { id: 1, prompt: vec![7], max_tokens: 2, arrived: now },
+                    now,
+                );
+            }
+            slots
+        };
+
+        // All-padding: advance must not touch the model at all.
+        let mut model = EchoModel::new(3, t);
+        let mut slots = mk(false);
+        let mut flat = Vec::new();
+        for _ in 0..3 {
+            let rep = advance(&mut model, &mut slots, &mut flat).unwrap();
+            assert_eq!((rep.live, rep.padded, rep.finished), (0, 3, 0));
+        }
+        assert_eq!(model.steps, 0, "padding-only steps must skip the layer walk");
+
+        // The unskipped path on identical all-padding slots: run the
+        // model by hand (the legacy behavior) and push nothing — slot
+        // state must equal the skipped path's bit for bit.
+        let mut legacy_model = EchoModel::new(3, t);
+        let mut legacy = mk(false);
+        for _ in 0..3 {
+            let windows: Vec<i32> =
+                legacy.iter().flat_map(|s| s.window_tokens().to_vec()).collect();
+            let toks = legacy_model.step_tokens(&windows).unwrap();
+            let now = Instant::now();
+            for (slot, &tok) in legacy.iter_mut().zip(&toks) {
+                if slot.is_live() {
+                    slot.push_token(tok, now);
+                }
+            }
+        }
+        assert_eq!(legacy_model.steps, 3, "legacy path burns the walks");
+        for (a, b) in slots.iter().zip(&legacy) {
+            assert_eq!(a.window_tokens(), b.window_tokens(), "windows diverged");
+            assert_eq!(a.phase(), b.phase());
+            assert_eq!(a.out, b.out);
+        }
+
+        // Mixed schedule: steps with a live slot still run the model.
+        let mut model = EchoModel::new(3, t);
+        let mut slots = mk(true);
+        let rep = advance(&mut model, &mut slots, &mut flat).unwrap();
+        assert_eq!((rep.live, rep.padded), (1, 2));
+        assert_eq!(model.steps, 1);
+    }
+
+    /// A session that drains to idle stops burning layer walks once the
+    /// last live slot retires, even if ticked again.
+    #[test]
+    fn idle_session_ticks_spend_no_steps() {
+        let mut s = session(2);
+        s.submit(1, vec![5], 2).unwrap();
+        let done = s.run_to_idle().unwrap();
+        assert_eq!(done.len(), 1);
+        let steps = s.stats().steps;
+        for _ in 0..4 {
+            let out = s.tick().unwrap();
+            assert!(out.is_empty());
+        }
+        assert_eq!(s.stats().steps, steps, "idle ticks must not walk layers");
     }
 
     #[test]

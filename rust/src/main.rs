@@ -170,16 +170,18 @@ fn cmd_infer(args: &Args) -> Result<()> {
     }
     let toks = b * n_new;
     println!(
-        "{} new tokens in {:.2}s → {:.1} tokens/s (compute {:.2}s copy {:.2}s stall {:.2}s shadow {:.2}s)",
+        "{} new tokens in {:.2}s → {:.1} tokens/s (compute {:.2}s copy {:.2}s stall {:.2}s plan {:.2}s)",
         toks, secs, toks as f64 / secs,
         engine.timing.compute_secs, engine.timing.copy_secs, engine.timing.stall_secs,
-        engine.timing.shadow_secs
+        engine.timing.plan_secs
     );
     if let Some(rs) = engine.ring_stats() {
         let rp = engine.route_stats();
         println!(
-            "ring copy lane: {:.1} MB moved; routed plan/exact/repaired experts {}/{}/{}",
-            rs.copy_bytes as f64 / 1e6, rp.planned_experts, rp.exact_experts, rp.repaired_experts
+            "ring copy lane: {:.1} MB moved; routed plan/exact/repaired experts {}/{}/{} \
+             (carried plans {}, layer reruns {})",
+            rs.copy_bytes as f64 / 1e6, rp.planned_experts, rp.exact_experts,
+            rp.repaired_experts, rp.carried_plans, rp.rerun_layers
         );
     }
     Ok(())

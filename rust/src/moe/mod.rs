@@ -4,15 +4,25 @@
 //! module re-implements the *decision* logic so the coordinator can plan
 //! communication, balance load and drive the simulator without touching
 //! PJRT.
+//!
+//! [`routing`] is the routing-contract-v2 surface: the [`RouteSource`]
+//! trait unifies the three ways a routed-expert set is obtained
+//! (embedding-proxy prediction, kernel-emitted exact sets carried from
+//! the previous pass, f64 shadow recompute as the parity-only oracle).
 
 pub mod gating;
 pub mod router;
 pub mod placement;
 pub mod load_stats;
+pub mod routing;
 pub mod shadow;
 
 pub use gating::{top1_route, Routing};
 pub use load_stats::LoadStats;
 pub use placement::ExpertPlacement;
 pub use router::DispatchPlan;
+pub use routing::{
+    routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource, LayerParamResolver,
+    PlannedRoute, RouteQuery, RouteSource, RouteSourceKind, ShadowOracleSource,
+};
 pub use shadow::ShadowRouter;

@@ -1,0 +1,405 @@
+//! `RouteSource` — the unified route-planning API (routing contract v2).
+//!
+//! A routed pass/step needs, per layer, the set of experts the batch
+//! will route to. There are exactly three ways such a set is obtained,
+//! and this trait makes them interchangeable behind one surface:
+//!
+//! - [`EmbeddingProxySource`] — the cheap *prediction*: the router
+//!   applied to ln2-normalized raw token embeddings (attention skipped).
+//!   O(T·H·E) per layer on the coordinator; used when nothing better is
+//!   known (first pass, fresh batch).
+//! - [`CarriedKernelSource`] — the *kernel-emitted* sets: contract v2's
+//!   `layer_fwd` emits every token's top-1 expert as a named output
+//!   (`route_expert`), so the previous pass/layer's **exact** routed
+//!   sets are free. Consecutive decode steps shift each slot window by
+//!   one token, making the previous pass's exact sets a far better
+//!   predictor than the embedding proxy — this source carries them
+//!   across passes and falls back to its inner source until a full pass
+//!   has been observed.
+//! - [`ShadowOracleSource`] — the f64 dense-prefix recompute
+//!   ([`ShadowRouter::route_layer`]). **Parity-only**: it is the test
+//!   oracle the kernel-emitted sets are checked against, and the
+//!   fallback of last resort; it must never run on a hot path (the
+//!   serialized coordinator-side MHA it performs is exactly the cost the
+//!   v2 contract deletes — priced in `sim::CostModel::plan_secs_shadow`).
+//!
+//! Exactness is *not* required of `plan()`: the consumer repairs
+//! mispredictions once the kernel's own `route_expert` output names the
+//! exact set (demand-fetch the missed experts, then re-run the layer —
+//! valid because the routing outputs depend only on the dense prefix,
+//! never on the staged expert weights).
+
+use super::shadow::{ShadowRouter, PREDICT_MARGIN, ROUTE_MARGIN};
+
+/// Which of the three acquisition paths produced a plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteSourceKind {
+    /// Router over raw token embeddings (cheap prediction).
+    EmbeddingProxy,
+    /// Exact sets emitted by the kernel on a previous pass/layer.
+    KernelEmitted,
+    /// f64 dense-prefix recompute (parity/test oracle only).
+    ShadowOracle,
+}
+
+/// A planned pass: per-layer expert sets (sorted, deduped) plus the
+/// provenance that produced them (consumers count carried vs predicted
+/// plans in their stats).
+#[derive(Debug, Clone)]
+pub struct PlannedRoute {
+    pub per_layer: Vec<Vec<usize>>,
+    pub provenance: RouteSourceKind,
+}
+
+/// Resolves one layer's dense tensors by short name ("ln2_scale",
+/// "router_w", …) — the parameter surface a planning source may read.
+/// Object-safe on purpose: `RouteQuery` carries it as a trait object so
+/// `RouteSource` itself stays `dyn`-usable.
+pub trait LayerParamResolver {
+    fn layer_param(&self, layer: usize, name: &str) -> &[f32];
+}
+
+/// Everything a source may consult when planning a pass.
+pub struct RouteQuery<'a> {
+    /// The pass's flat token ids (row-major `[batch, seq]`).
+    pub tokens: &'a [i32],
+    /// Embedding table, `[vocab, d_model]` row-major.
+    pub embed: &'a [f32],
+    pub n_layers: usize,
+    pub n_experts: usize,
+    pub params: &'a dyn LayerParamResolver,
+}
+
+/// One way of obtaining routed-expert sets. See the module docs for the
+/// three implementations and their roles.
+pub trait RouteSource {
+    fn kind(&self) -> RouteSourceKind;
+
+    /// Per-layer expert sets for the upcoming pass. Sets must be sorted
+    /// and deduplicated; they need not be exact (the consumer repairs
+    /// against the kernel-emitted `route_expert` output).
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute;
+
+    /// Kernel feedback: after `layer` ran, its emitted per-expert top-1
+    /// token counts (length `n_experts`). Sources that don't learn from
+    /// feedback ignore this.
+    fn observe(&mut self, layer: usize, counts: &[usize]) {
+        let _ = (layer, counts);
+    }
+
+    /// Drop any carried state (batch discontinuity: weight swap, slot
+    /// churn the caller knows invalidates history).
+    fn reset(&mut self) {}
+}
+
+/// Parse a `route_expert` kernel output (per-token top-1 expert ids)
+/// into the exact routed set + per-expert token counts — the contract-v2
+/// replacement for the shadow recompute. Out-of-range ids (impossible
+/// under the kernel's argmax, tolerated defensively) are ignored.
+pub fn routed_set_from_ids(ids: &[i32], n_experts: usize) -> (Vec<usize>, Vec<usize>) {
+    let mut counts = vec![0usize; n_experts];
+    for &id in ids {
+        if (0..n_experts as i32).contains(&id) {
+            counts[id as usize] += 1;
+        }
+    }
+    let set = (0..n_experts).filter(|&e| counts[e] > 0).collect();
+    (set, counts)
+}
+
+// ---------------------------------------------------------------------
+// Embedding proxy
+// ---------------------------------------------------------------------
+
+/// The pre-sweep prediction: router over ln2-normalized embeddings.
+pub struct EmbeddingProxySource {
+    shadow: ShadowRouter,
+    margin: f32,
+}
+
+impl EmbeddingProxySource {
+    pub fn new(d_model: usize, n_heads: usize, n_experts: usize) -> EmbeddingProxySource {
+        EmbeddingProxySource {
+            shadow: ShadowRouter::new(d_model, n_heads, n_experts),
+            margin: PREDICT_MARGIN,
+        }
+    }
+}
+
+impl RouteSource for EmbeddingProxySource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::EmbeddingProxy
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        let per_layer = self.shadow.predict_from_embeddings(
+            q.tokens,
+            q.embed,
+            q.n_layers,
+            |l, name| q.params.layer_param(l, name),
+            self.margin,
+        );
+        PlannedRoute { per_layer, provenance: RouteSourceKind::EmbeddingProxy }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Kernel-emitted carry-over
+// ---------------------------------------------------------------------
+
+/// Carries the kernel-emitted exact sets of the previous pass into the
+/// next pass's plan; falls back to an inner source until every layer
+/// has been observed at least once (or after [`RouteSource::reset`]).
+pub struct CarriedKernelSource {
+    fallback: Box<dyn RouteSource>,
+    last: Vec<Option<Vec<usize>>>,
+}
+
+impl CarriedKernelSource {
+    pub fn new(n_layers: usize, fallback: Box<dyn RouteSource>) -> CarriedKernelSource {
+        CarriedKernelSource { fallback, last: vec![None; n_layers] }
+    }
+
+    /// The standard stack: carry kernel sets, predict from embeddings
+    /// until the first pass has been observed.
+    pub fn with_proxy(
+        n_layers: usize,
+        d_model: usize,
+        n_heads: usize,
+        n_experts: usize,
+    ) -> CarriedKernelSource {
+        CarriedKernelSource::new(
+            n_layers,
+            Box::new(EmbeddingProxySource::new(d_model, n_heads, n_experts)),
+        )
+    }
+}
+
+impl RouteSource for CarriedKernelSource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::KernelEmitted
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        if self.last.len() != q.n_layers {
+            self.last = vec![None; q.n_layers];
+        }
+        if self.last.iter().all(|s| s.is_some()) {
+            PlannedRoute {
+                per_layer: self.last.iter().map(|s| s.clone().unwrap()).collect(),
+                provenance: RouteSourceKind::KernelEmitted,
+            }
+        } else {
+            self.fallback.plan(q)
+        }
+    }
+
+    fn observe(&mut self, layer: usize, counts: &[usize]) {
+        if layer < self.last.len() {
+            self.last[layer] = Some((0..counts.len()).filter(|&e| counts[e] > 0).collect());
+        }
+        self.fallback.observe(layer, counts);
+    }
+
+    fn reset(&mut self) {
+        self.last.iter_mut().for_each(|s| *s = None);
+        self.fallback.reset();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shadow oracle (parity-only)
+// ---------------------------------------------------------------------
+
+/// The f64 dense-prefix recompute as a [`RouteSource`]. Its `plan` is
+/// deliberately the conservative full plan — exact per-layer sets need
+/// each layer's *input*, which does not exist before the pass runs; use
+/// [`Self::exact_for_layer`] from tests to check kernel parity.
+pub struct ShadowOracleSource {
+    shadow: ShadowRouter,
+    margin: f32,
+}
+
+impl ShadowOracleSource {
+    pub fn new(d_model: usize, n_heads: usize, n_experts: usize) -> ShadowOracleSource {
+        ShadowOracleSource {
+            shadow: ShadowRouter::new(d_model, n_heads, n_experts),
+            margin: ROUTE_MARGIN,
+        }
+    }
+
+    /// Exact routed superset for one layer given its input `x`
+    /// (`[batch, seq, d_model]`): (margin-widened set, per-expert argmax
+    /// counts). The kernel's emitted set must equal
+    /// `{e : counts[e] > 0}` and be contained in the returned superset.
+    pub fn exact_for_layer<'a>(
+        &self,
+        x: &[f32],
+        batch: usize,
+        seq: usize,
+        get: impl Fn(&str) -> &'a [f32],
+    ) -> (Vec<usize>, Vec<usize>) {
+        self.shadow.route_layer(x, batch, seq, get, self.margin)
+    }
+}
+
+impl RouteSource for ShadowOracleSource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::ShadowOracle
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        PlannedRoute {
+            per_layer: vec![(0..q.n_experts).collect(); q.n_layers],
+            provenance: RouteSourceKind::ShadowOracle,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routed_set_parses_ids() {
+        let (set, counts) = routed_set_from_ids(&[2, 0, 2, 2, 5, -1, 99], 6);
+        assert_eq!(set, vec![0, 2, 5]);
+        assert_eq!(counts, vec![1, 0, 3, 0, 0, 1]);
+    }
+
+    #[test]
+    fn routed_set_empty_ids() {
+        let (set, counts) = routed_set_from_ids(&[], 3);
+        assert!(set.is_empty());
+        assert_eq!(counts, vec![0, 0, 0]);
+    }
+
+    /// A stub fallback that returns a fixed plan.
+    struct FixedSource {
+        set: Vec<usize>,
+    }
+
+    impl RouteSource for FixedSource {
+        fn kind(&self) -> RouteSourceKind {
+            RouteSourceKind::EmbeddingProxy
+        }
+        fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+            PlannedRoute {
+                per_layer: vec![self.set.clone(); q.n_layers],
+                provenance: RouteSourceKind::EmbeddingProxy,
+            }
+        }
+    }
+
+    /// A resolver with no parameters (stub sources never look).
+    struct NoParams;
+    impl LayerParamResolver for NoParams {
+        fn layer_param(&self, _layer: usize, _name: &str) -> &[f32] {
+            &[]
+        }
+    }
+
+    fn with_query<R>(n_layers: usize, n_experts: usize, f: impl FnOnce(&RouteQuery) -> R) -> R {
+        let tokens: Vec<i32> = (0..4).collect();
+        let embed = vec![0.0f32; 8 * 4];
+        let q = RouteQuery {
+            tokens: &tokens,
+            embed: &embed,
+            n_layers,
+            n_experts,
+            params: &NoParams,
+        };
+        f(&q)
+    }
+
+    #[test]
+    fn carry_over_falls_back_until_a_full_pass_is_observed() {
+        let mut src = CarriedKernelSource::new(
+            2,
+            Box::new(FixedSource { set: vec![1, 3] }),
+        );
+        // Nothing observed: fallback plan.
+        let p = with_query(2, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::EmbeddingProxy);
+        assert_eq!(p.per_layer, vec![vec![1, 3], vec![1, 3]]);
+        // One of two layers observed: still the fallback.
+        src.observe(0, &[2, 0, 0, 1]);
+        let p = with_query(2, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::EmbeddingProxy);
+        // Full pass observed: the kernel sets carry.
+        src.observe(1, &[0, 0, 5, 0]);
+        let p = with_query(2, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::KernelEmitted);
+        assert_eq!(p.per_layer, vec![vec![0, 3], vec![2]]);
+        // Reset drops the carried state.
+        src.reset();
+        let p = with_query(2, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::EmbeddingProxy);
+    }
+
+    #[test]
+    fn carry_over_tracks_the_latest_observation() {
+        let mut src =
+            CarriedKernelSource::new(1, Box::new(FixedSource { set: vec![0] }));
+        src.observe(0, &[1, 0, 0, 0]);
+        assert_eq!(with_query(1, 4, |q| src.plan(q)).per_layer, vec![vec![0]]);
+        src.observe(0, &[0, 0, 2, 2]);
+        assert_eq!(with_query(1, 4, |q| src.plan(q)).per_layer, vec![vec![2, 3]]);
+    }
+
+    #[test]
+    fn shadow_oracle_plans_dense() {
+        let mut src = ShadowOracleSource::new(8, 2, 4);
+        let p = with_query(3, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::ShadowOracle);
+        assert_eq!(p.per_layer, vec![vec![0, 1, 2, 3]; 3]);
+    }
+
+    /// Map-backed resolver for the proxy-vs-shadow equivalence test.
+    struct MapParams(Vec<std::collections::HashMap<String, Vec<f32>>>);
+    impl LayerParamResolver for MapParams {
+        fn layer_param(&self, layer: usize, name: &str) -> &[f32] {
+            self.0[layer][name].as_slice()
+        }
+    }
+
+    #[test]
+    fn proxy_source_matches_shadow_prediction() {
+        use crate::util::Rng;
+        let (h, e, vocab, n_layers) = (8, 4, 16, 2);
+        let mut rng = Rng::new(11);
+        let embed: Vec<f32> = (0..vocab * h).map(|_| rng.normal() as f32 * 0.02).collect();
+        let tokens: Vec<i32> = (0..12).map(|i| (i % vocab) as i32).collect();
+        let mut params: Vec<std::collections::HashMap<String, Vec<f32>>> = Vec::new();
+        for _ in 0..n_layers {
+            let mut m = std::collections::HashMap::new();
+            m.insert("ln2_scale".to_string(), vec![1.0f32; h]);
+            m.insert("ln2_bias".to_string(), vec![0.0f32; h]);
+            m.insert(
+                "router_w".to_string(),
+                (0..h * e).map(|_| rng.normal() as f32 * 0.3).collect(),
+            );
+            m.insert("router_b".to_string(), vec![0.0f32; e]);
+            params.push(m);
+        }
+        let params = MapParams(params);
+        let q = RouteQuery {
+            tokens: &tokens,
+            embed: &embed,
+            n_layers,
+            n_experts: e,
+            params: &params,
+        };
+        let mut src = EmbeddingProxySource::new(h, 2, e);
+        let p = src.plan(&q);
+        let want = ShadowRouter::new(h, 2, e).predict_from_embeddings(
+            &tokens,
+            &embed,
+            n_layers,
+            |l, n| params.0[l][n].as_slice(),
+            PREDICT_MARGIN,
+        );
+        assert_eq!(p.per_layer, want);
+        assert_eq!(p.provenance, RouteSourceKind::EmbeddingProxy);
+    }
+}

@@ -3,6 +3,14 @@
 //! learn which experts a batch routes to **before** the layer's compiled
 //! artifact runs — the expert axis of the paper's 2D prefetch.
 //!
+//! Routing contract v2 moved the exact set out of the kernel itself
+//! (`layer_fwd`'s `route_expert` output), so [`ShadowRouter::route_layer`]
+//! no longer runs on any hot path: it is the **parity oracle** behind
+//! [`crate::moe::ShadowOracleSource`] (tests assert the kernel-emitted
+//! sets are bit-identical to its argmax sets). The cheap
+//! [`ShadowRouter::predict_from_embeddings`] proxy remains the planning
+//! fallback ([`crate::moe::EmbeddingProxySource`]).
+//!
 //! Two fidelities:
 //!
 //! - [`ShadowRouter::route_layer`] — the *exact* set for the layer about

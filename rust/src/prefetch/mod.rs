@@ -11,12 +11,14 @@
 //!   thread that owns the [`crate::storage::HierarchicalStore`].
 //!
 //! The sparse lane is **(layer, expert)-granular**: a [`plan::RoutePlan`]
-//! (routing-ahead prediction ∪ hot-expert pins) decides which expert
-//! blocks to stream for each layer, the exact per-layer set computed by
-//! [`crate::moe::ShadowRouter`] repairs mispredictions with demand
-//! fetches, and untouched experts never leave the SSD tier. The trainer
-//! drives the layer axis from a [`plan::PrefetchPlan`] so the lookahead
-//! window is explicit and ablatable.
+//! (a [`crate::moe::RouteSource`] plan ∪ hot-expert pins) decides which
+//! expert blocks to stream for each layer; the exact per-layer set now
+//! arrives **from the kernel itself** (contract v2: `layer_fwd` emits
+//! `route_expert`) and repairs mispredictions with demand fetches, so
+//! untouched experts never leave the SSD tier and no coordinator-side
+//! dense recompute sits on the hot path. The trainer drives the layer
+//! axis from a [`plan::PrefetchPlan`] so the lookahead window is
+//! explicit and ablatable.
 
 pub mod plan;
 pub mod scheduler;

@@ -58,12 +58,13 @@ impl PrefetchPlan {
 }
 
 /// The expert axis of one step's 2D prefetch: for every layer, the set
-/// of experts to stream ahead of compute. Built before the forward sweep
-/// from the cheap routing-ahead prediction
-/// ([`crate::moe::ShadowRouter::predict_from_embeddings`]) unioned with
-/// the hot-expert pin set ([`crate::moe::LoadStats::hot_experts`]);
-/// repaired during the sweep by demand fetches once each layer's exact
-/// set is known.
+/// of experts to stream ahead of compute. Built before the sweep from a
+/// [`crate::moe::RouteSource`] (routing contract v2: the previous
+/// pass's kernel-emitted exact sets when available, the embedding-proxy
+/// prediction otherwise) unioned with the hot-expert pin set
+/// ([`crate::moe::LoadStats::hot_experts`]); repaired during the sweep
+/// once each layer's own `route_expert` kernel output names the exact
+/// set.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RoutePlan {
     /// Sorted, deduplicated expert set per layer.
@@ -71,6 +72,19 @@ pub struct RoutePlan {
 }
 
 impl RoutePlan {
+    /// The standard construction path: ask a [`crate::moe::RouteSource`]
+    /// for its per-layer sets and union in the hot pins. Also returns
+    /// the plan's provenance so callers can account carried vs predicted
+    /// plans without re-implementing the construction.
+    pub fn from_source(
+        src: &mut dyn crate::moe::RouteSource,
+        q: &crate::moe::RouteQuery,
+        hot: &[Vec<usize>],
+    ) -> (RoutePlan, crate::moe::RouteSourceKind) {
+        let planned = src.plan(q);
+        (RoutePlan::new(planned.per_layer, hot), planned.provenance)
+    }
+
     /// Union the predicted sets with the hot pin sets, layer by layer.
     /// `hot` may be shorter than `predicted` (e.g. empty on step 1).
     pub fn new(predicted: Vec<Vec<usize>>, hot: &[Vec<usize>]) -> RoutePlan {

@@ -42,6 +42,13 @@ impl ArtifactExe {
         &self.spec.name
     }
 
+    /// Position of the named output in this executable's result vector
+    /// (contract v2: consumers address outputs by name, never by
+    /// hard-coded position). Errors carry the "rebuild artifacts" hint.
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.spec.output_index(name)
+    }
+
     fn check_inputs(&self, inputs: &[&HostTensor]) -> Result<()> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(

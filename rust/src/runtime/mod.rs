@@ -14,5 +14,7 @@ pub mod registry;
 
 pub use engine::Engine;
 pub use executable::ArtifactExe;
-pub use registry::{ArtifactSpec, IoSpec, ModelArtifacts, ParamSpec};
+pub use registry::{
+    validate_contract, ArtifactSpec, IoSpec, ModelArtifacts, ParamSpec, CONTRACT_VERSION,
+};
 pub use tensor::{DType, HostTensor};

@@ -1,6 +1,17 @@
 //! Artifact registry: reads `artifacts/<preset>/manifest.json` (emitted by
 //! the AOT pipeline) and hands out compiled executables plus the flat
 //! parameter layout (the "parameter management unit"'s source of truth).
+//!
+//! The manifest carries a **contract version** (v2: `layer_fwd` emits
+//! the per-token routing decisions as named outputs). Loading a manifest
+//! written under another contract fails up front with an actionable
+//! "rebuild artifacts" error instead of shape-panicking mid-run, and
+//! `layer_fwd` consumers address its outputs **by name**
+//! ([`ArtifactSpec::output_index`]) so a signature change is a load-time
+//! error, never a silently transposed tensor. (Entries whose signatures
+//! are unchanged since v1 — `head_grad`, `layer_bwd`, the adamw group —
+//! are still unpacked positionally; migrate them through
+//! `output_index` whenever their signatures next move.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -14,6 +25,33 @@ use super::executable::ArtifactExe;
 use super::tensor::DType;
 use crate::config::ModelConfig;
 use crate::util::json::Json;
+
+/// The artifact contract this coordinator build understands. Mirrors
+/// `python/compile/aot.py::CONTRACT_VERSION`; bump both sides together.
+pub const CONTRACT_VERSION: usize = 2;
+
+/// The remedy line every contract error carries.
+const REBUILD_HINT: &str =
+    "rebuild the artifacts: cd python && python -m compile.aot --out-dir ../artifacts --force \
+     (or `make artifacts`)";
+
+/// Check a parsed manifest's `contract_version` against this build.
+/// Manifests predating the field are contract v1. Pure (no engine, no
+/// I/O) so the stale-manifest regression test can exercise it directly.
+pub fn validate_contract(j: &Json, origin: &str) -> Result<usize> {
+    let found = j.get("contract_version").as_usize().unwrap_or(1);
+    if found != CONTRACT_VERSION {
+        bail!(
+            "{}: artifact manifest is contract v{} but this coordinator needs v{} \
+             (layer_fwd must emit route_expert/route_gate) — {}",
+            origin,
+            found,
+            CONTRACT_VERSION,
+            REBUILD_HINT
+        );
+    }
+    Ok(found)
+}
 
 /// One input/output signature entry.
 #[derive(Debug, Clone, PartialEq)]
@@ -36,6 +74,28 @@ pub struct ArtifactSpec {
     pub file: String,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Position of the named output in the execution result — the only
+    /// sanctioned way to address outputs (contract v2 moved positions;
+    /// names are stable).
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs.iter().position(|o| o.name == name).with_context(|| {
+            format!(
+                "artifact '{}' has no output named '{}' (manifest lists {:?}) — stale artifacts? {}",
+                self.name,
+                name,
+                self.outputs.iter().map(|o| o.name.as_str()).collect::<Vec<_>>(),
+                REBUILD_HINT
+            )
+        })
+    }
+
+    /// The named output's signature entry.
+    pub fn output(&self, name: &str) -> Result<&IoSpec> {
+        Ok(&self.outputs[self.output_index(name)?])
+    }
 }
 
 /// One tensor in the flat parameter layout.
@@ -65,6 +125,7 @@ pub struct ModelArtifacts {
     pub dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
     params: Vec<ParamSpec>,
+    contract_version: usize,
     engine: Engine,
     cache: RefCell<HashMap<String, Rc<ArtifactExe>>>,
 }
@@ -80,6 +141,8 @@ impl ModelArtifacts {
         let text = std::fs::read_to_string(&mpath)
             .with_context(|| format!("reading {} (run `make artifacts`)", mpath.display()))?;
         let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {}", mpath.display(), e))?;
+
+        let contract_version = validate_contract(&j, &mpath.display().to_string())?;
 
         let preset = ModelConfig::from_json(j.get("preset"))
             .map_err(|e| anyhow::anyhow!("bad preset in manifest: {}", e))?;
@@ -138,11 +201,25 @@ impl ModelArtifacts {
             })
             .collect();
 
-        Ok(ModelArtifacts { preset, dir, specs, params, engine, cache: RefCell::new(HashMap::new()) })
+        Ok(ModelArtifacts {
+            preset,
+            dir,
+            specs,
+            params,
+            contract_version,
+            engine,
+            cache: RefCell::new(HashMap::new()),
+        })
     }
 
     pub fn engine(&self) -> &Engine {
         &self.engine
+    }
+
+    /// The manifest's validated contract version (== [`CONTRACT_VERSION`]
+    /// for any successfully loaded manifest).
+    pub fn contract_version(&self) -> usize {
+        self.contract_version
     }
 
     /// Flat parameter layout (artifact argument order).
@@ -193,5 +270,64 @@ mod tests {
         assert_eq!(p.layer(), Some(3));
         let q = ParamSpec { name: "embed".into(), shape: vec![4], sparse: false, numel: 4 };
         assert_eq!(q.layer(), None);
+    }
+
+    /// The v1-manifest regression: a manifest predating the contract
+    /// field must be rejected with an actionable rebuild message, not a
+    /// shape panic deep inside a layer walk.
+    #[test]
+    fn contract_v1_manifest_is_actionable() {
+        let v1 = Json::parse(r#"{"preset": {}, "artifacts": {}, "params": []}"#).unwrap();
+        let err = validate_contract(&v1, "artifacts/deep/manifest.json").unwrap_err();
+        let msg = format!("{}", err);
+        assert!(msg.contains("contract v1"), "names the found version: {}", msg);
+        assert!(
+            msg.contains(&format!("needs v{}", CONTRACT_VERSION)),
+            "names the needed version: {}",
+            msg
+        );
+        assert!(msg.contains("rebuild the artifacts"), "actionable remedy: {}", msg);
+        assert!(msg.contains("compile.aot"), "names the tool: {}", msg);
+    }
+
+    #[test]
+    fn contract_current_manifest_passes() {
+        let j = Json::parse(&format!(r#"{{"contract_version": {}}}"#, CONTRACT_VERSION)).unwrap();
+        assert_eq!(validate_contract(&j, "m").unwrap(), CONTRACT_VERSION);
+    }
+
+    #[test]
+    fn contract_future_manifest_is_rejected_too() {
+        let j = Json::parse(r#"{"contract_version": 99}"#).unwrap();
+        let msg = format!("{}", validate_contract(&j, "m").unwrap_err());
+        assert!(msg.contains("contract v99"), "{}", msg);
+    }
+
+    fn spec_with_outputs(names: &[&str]) -> ArtifactSpec {
+        ArtifactSpec {
+            name: "layer_fwd".into(),
+            file: "layer_fwd.hlo.txt".into(),
+            inputs: vec![],
+            outputs: names
+                .iter()
+                .map(|n| IoSpec { name: n.to_string(), dtype: DType::F32, shape: vec![2, 2] })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn outputs_are_addressed_by_name() {
+        let s = spec_with_outputs(&["y", "aux", "route_expert", "route_gate"]);
+        assert_eq!(s.output_index("y").unwrap(), 0);
+        assert_eq!(s.output_index("route_expert").unwrap(), 2);
+        assert_eq!(s.output("route_gate").unwrap().name, "route_gate");
+    }
+
+    #[test]
+    fn missing_output_names_the_remedy() {
+        let s = spec_with_outputs(&["y", "aux"]); // a v1-shaped signature
+        let msg = format!("{}", s.output_index("route_expert").unwrap_err());
+        assert!(msg.contains("route_expert"), "{}", msg);
+        assert!(msg.contains("rebuild the artifacts"), "{}", msg);
     }
 }

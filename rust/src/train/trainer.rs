@@ -9,10 +9,16 @@
 //! sparse (expert) states on the SSD tier behind the Algorithm-1 CPU
 //! cache, streamed by the **2D (layer × expert) prefetch scheduler**
 //! while per-layer artifacts (`layer_fwd`/`layer_bwd`/`adamw_*`)
-//! execute. The expert axis is driven by routing-ahead: a cheap CPU
-//! proxy router plans the per-layer expert sets before the sweep, the
-//! shadow router (exact dense-prefix recompute) repairs mispredictions
-//! at each layer, and only routed experts (plus the pinned hot set) ever
+//! execute. The expert axis is driven by routing-ahead through the
+//! unified [`RouteSource`] API (contract v2): the embedding-proxy
+//! source plans the per-layer expert sets before the sweep, and the
+//! **kernel itself emits the exact routed set** (`layer_fwd`'s
+//! `route_expert` output) — a plan miss is repaired by demand-fetching
+//! the missed experts and re-running that layer, which is sound because
+//! the routing outputs depend only on the dense prefix, never on the
+//! staged expert weights. The old coordinator-side f64 shadow MHA
+//! recompute is gone from the hot path (it survives only as the parity
+//! oracle in tests); only routed experts (plus the pinned hot set) ever
 //! cross SSD→CPU→device. Experts no batch routes to stay cold on SSD;
 //! their skipped zero-grad AdamW steps are replayed lazily on the next
 //! fetch ([`super::optimizer::cpu_adamw_zero_grad`]) so the math stays
@@ -44,8 +50,10 @@ use super::optimizer::{cpu_adamw, cpu_adamw_zero_grad, init_params, Group, Param
 use crate::comm::MeshHandle;
 use crate::config::train::TrainConfig;
 use crate::metrics::{Phase, Timeline};
-use crate::moe::shadow::{PREDICT_MARGIN, ROUTE_MARGIN};
-use crate::moe::{LoadStats, ShadowRouter};
+use crate::moe::routing::{
+    routed_set_from_ids, EmbeddingProxySource, LayerParamResolver, RouteQuery, RouteSource,
+};
+use crate::moe::LoadStats;
 use crate::prefetch::{RoutePlan, SparseScheduler};
 use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
 use crate::storage::{
@@ -157,8 +165,13 @@ pub struct PrefetchStats {
     pub planned_fetches: u64,
     /// Demand fetches forced when the exact set beat the plan (misses).
     pub demand_fetches: u64,
-    /// Planned fetches the sweep never consumed (plan waste).
+    /// Planned fetches for experts the batch never routed to (plan
+    /// waste: the block was staged and spliced but neither updated nor
+    /// written back).
     pub wasted_fetches: u64,
+    /// Layers re-executed because the plan missed a routed expert
+    /// (contract-v2 repair: splice the missed blocks, run again).
+    pub reruns: u64,
     /// Zero-grad AdamW steps replayed on cold-fetched expert blocks.
     pub catchup_steps: u64,
     /// Dirty expert blocks written back to the store.
@@ -196,8 +209,17 @@ pub struct OffloadTrainer {
     sched: SparseScheduler,
     /// Expert-axis split metadata (clone of the store's).
     layout: SparseLayout,
-    /// Coordinator-side dense-prefix router (exact sets + proxy plan).
-    shadow: ShadowRouter,
+    /// The route planner (contract v2). The trainer keeps the embedding
+    /// proxy: every step is a fresh batch, so carried kernel sets from
+    /// the *previous* batch predict worse than the proxy on this batch's
+    /// own tokens (hot pins already carry the cross-step signal).
+    /// Exact sets come from the kernel during the sweep.
+    route: Box<dyn RouteSource>,
+    /// `layer_fwd` output positions, resolved by name (stale manifests
+    /// fail construction with the rebuild hint).
+    lf_y: usize,
+    lf_aux: usize,
+    lf_route: usize,
     /// Per-layer rolling expert load → hot-set pinning.
     load: Vec<LoadStats>,
     /// Per-layer hot experts, pinned in the CPU cache and unioned into
@@ -266,7 +288,11 @@ impl OffloadTrainer {
         }
         let layout = store.layout().clone();
         let sched = SparseScheduler::spawn(store);
-        let shadow = ShadowRouter::new(model.d_model, model.n_heads, model.n_experts);
+        let route: Box<dyn RouteSource> = Box::new(EmbeddingProxySource::new(
+            model.d_model,
+            model.n_heads,
+            model.n_experts,
+        ));
         let load = (0..model.n_layers)
             .map(|_| LoadStats::new(model.n_experts, 0.5))
             .collect();
@@ -277,10 +303,18 @@ impl OffloadTrainer {
         let corpus =
             SyntheticCorpus::new(model.vocab_size, cfg.corpus_skew, cfg.seed + 1 + 1000 * rank_seed);
 
+        // Contract v2: address the layer outputs by name; a stale
+        // manifest fails here with the rebuild hint instead of slicing
+        // the wrong tensor mid-sweep.
+        let layer_fwd = arts.load_exe("layer_fwd")?;
+        let lf_y = layer_fwd.output_index("y")?;
+        let lf_aux = layer_fwd.output_index("aux")?;
+        let lf_route = layer_fwd.output_index("route_expert")?;
+
         Ok(OffloadTrainer {
             embed_fwd: arts.load_exe("embed_fwd")?,
             embed_bwd: arts.load_exe("embed_bwd")?,
-            layer_fwd: arts.load_exe("layer_fwd")?,
+            layer_fwd,
             layer_bwd: arts.load_exe("layer_bwd")?,
             head_grad: arts.load_exe("head_grad")?,
             adamw_layer: arts.load_exe("adamw_layer")?,
@@ -292,7 +326,10 @@ impl OffloadTrainer {
             layers,
             sched,
             layout,
-            shadow,
+            route,
+            lf_y,
+            lf_aux,
+            lf_route,
             load,
             hot,
             stamps,
@@ -331,7 +368,6 @@ impl OffloadTrainer {
         let model = self.arts.preset.clone();
         let n_layers = model.n_layers;
         let n_experts = model.n_experts;
-        let (b_sz, t_sz) = (model.batch_size, model.seq_len);
         let lookahead = self.cfg.prefetch_depth;
         let expert_prefetch = self.cfg.expert_prefetch;
         let hot_frac = self.cfg.hot_frac;
@@ -344,26 +380,28 @@ impl OffloadTrainer {
         let OffloadTrainer {
             embed_fwd, embed_bwd, layer_fwd, layer_bwd, head_grad,
             adamw_layer: _, adamw_embed: _, adamw_head: _,
-            embed, head, layers, sched, layout, shadow, load, hot, stamps,
-            pstats, mesh, timeline, ..
+            embed, head, layers, sched, layout, route, lf_y, lf_aux, lf_route,
+            load, hot, stamps, pstats, mesh, timeline, ..
         } = self;
+        let (lf_y, lf_aux, lf_route) = (*lf_y, *lf_aux, *lf_route);
 
-        // ---- Routing-ahead: plan the expert axis before the sweep (the
-        // cheap proxy router over the batch's embeddings, unioned with
-        // the pinned hot set). Exactness is not needed here — the shadow
-        // router repairs the plan per layer below.
+        // ---- Routing-ahead: plan the expert axis before the sweep via
+        // the RouteSource (embedding proxy ∪ pinned hot set). Exactness
+        // is not needed here — each layer's own kernel-emitted
+        // `route_expert` output repairs the plan below.
         let plan = timeline.time(Phase::Scheduling, || -> Result<RoutePlan> {
             if !expert_prefetch {
                 return Ok(RoutePlan::full(n_layers, n_experts));
             }
-            let predicted = shadow.predict_from_embeddings(
-                tokens.as_i32()?,
-                embed.p.unpack("embed"),
+            let params = LayerStateParams(layers.as_slice());
+            let q = RouteQuery {
+                tokens: tokens.as_i32()?,
+                embed: embed.p.unpack("embed"),
                 n_layers,
-                |l, name| layers[l].p.unpack(&format!("layer{}.{}", l, name)),
-                PREDICT_MARGIN,
-            );
-            Ok(RoutePlan::new(predicted, hot))
+                n_experts,
+                params: &params,
+            };
+            Ok(RoutePlan::from_source(route.as_mut(), &q, hot).0)
         })?;
 
         // ---- Sparse lane: request the planned window of (layer, expert)
@@ -393,30 +431,6 @@ impl OffloadTrainer {
         let mut live_block_bytes = 0usize;
         let mut aux_total = 0f32;
         for l in 0..n_layers {
-            // The exact routed set for this layer, from the shadow router
-            // over the actual layer input (superset by `ROUTE_MARGIN`).
-            let (exact, counts) = if expert_prefetch {
-                timeline.time(Phase::Scheduling, || -> Result<(Vec<usize>, Vec<usize>)> {
-                    let st = &layers[l];
-                    Ok(shadow.route_layer(
-                        x.as_f32()?,
-                        b_sz,
-                        t_sz,
-                        |name| st.p.unpack(&format!("layer{}.{}", l, name)),
-                        ROUTE_MARGIN,
-                    ))
-                })?
-            } else {
-                ((0..n_experts).collect(), Vec::new())
-            };
-
-            // Demand-fetch what the plan missed for this layer.
-            for &e in &exact {
-                if !pending[l].contains_key(&e) {
-                    pending[l].insert(e, sched.request(l, e));
-                    pstats.demand_fetches += 1;
-                }
-            }
             // Extend the lookahead window with the planned set.
             let nxt = l + lookahead + 1;
             if nxt < n_layers {
@@ -428,34 +442,74 @@ impl OffloadTrainer {
                 }
             }
 
-            // Wait for the routed blocks, replay skipped zero-grad AdamW
-            // steps, splice into the resident fused scratch tail.
+            // Wait for this layer's planned blocks, replay skipped
+            // zero-grad AdamW steps into the fetched *copy*, splice into
+            // the resident fused scratch tail. Store state and stamps
+            // stay untouched here: experts the batch turns out not to
+            // route to are never written back, so the store must keep
+            // its (stale-stamped) truth.
             let off = layers[l].sparse_offset();
-            for &e in &exact {
-                let seq = pending[l].remove(&e).expect("requested");
-                let mut block = timeline.time(Phase::SsdIo, || sched.wait(seq))?;
-                live_block_bytes += block.bytes();
-                pstats.peak_inflight_bytes = pstats.peak_inflight_bytes.max(live_block_bytes);
+            for &e in plan.experts(l) {
+                let seq = pending[l].remove(&e).expect("planned fetch requested");
                 // Forward needs the state the resident math holds after
                 // step-1; this step's update lands in the backward sweep.
-                catch_up(&mut block, stamps[l][e], step_u - 1, lr_v, pstats);
-                stamps[l][e] = step_u - 1;
-                splice_expert(layout, &mut layers[l], off, &block);
-                live_block_bytes -= block.bytes();
+                wait_catch_up_splice(
+                    sched, timeline, layout, &mut layers[l], off, seq,
+                    stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
+                )?;
             }
 
+            // Run the layer. The kernel emits the exact routed set as
+            // the named `route_expert` output (contract v2) — valid even
+            // if the plan missed an expert, because routing depends only
+            // on the dense prefix, never on the staged expert weights.
+            let mut inputs = vec![x.clone()];
+            inputs.extend(layers[l].tensors());
+            let mut out = timeline.time(Phase::Compute, || layer_fwd.run(&inputs))?;
+
+            let (exact, counts) = if expert_prefetch {
+                routed_set_from_ids(out[lf_route].as_i32()?, n_experts)
+            } else {
+                ((0..n_experts).collect(), Vec::new())
+            };
+
             if expert_prefetch {
+                // Repair a plan miss: demand-fetch the missed experts,
+                // splice, and re-run the layer with fresh weights (its
+                // routing outputs were already exact; only `y` needs the
+                // spliced state).
+                let missed: Vec<usize> =
+                    exact.iter().copied().filter(|&e| !plan.contains(l, e)).collect();
+                if !missed.is_empty() {
+                    for &e in &missed {
+                        let seq = sched.request(l, e);
+                        pstats.demand_fetches += 1;
+                        wait_catch_up_splice(
+                            sched, timeline, layout, &mut layers[l], off, seq,
+                            stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
+                        )?;
+                    }
+                    pstats.reruns += 1;
+                    let mut inputs = vec![x.clone()];
+                    inputs.extend(layers[l].tensors());
+                    out = timeline.time(Phase::Compute, || layer_fwd.run(&inputs))?;
+                }
+                // Plan waste: planned experts the batch never routed to.
+                pstats.wasted_fetches += plan
+                    .experts(l)
+                    .iter()
+                    .filter(|&&e| exact.binary_search(&e).is_err())
+                    .count() as u64;
+                // Feed the planner + hot pinning with the kernel counts.
+                route.observe(l, &counts);
                 load[l].record(&counts);
                 hot[l] = load[l].hot_experts(hot_frac);
             }
             used[l] = exact;
 
-            let mut inputs = vec![x.clone()];
-            inputs.extend(layers[l].tensors());
-            let mut out = timeline.time(Phase::Compute, || layer_fwd.run(&inputs))?;
-            aux_total += out[1].scalar()?;
+            aux_total += out[lf_aux].scalar()?;
             xs.push(x);
-            x = out.remove(0);
+            x = out.swap_remove(lf_y);
         }
 
         // ---- Head loss + gradient.
@@ -501,9 +555,10 @@ impl OffloadTrainer {
             // synced gradient. Unrouted experts keep a zero gradient and
             // are caught up lazily on their next fetch.
             let mut update_set = used[l].clone();
-            // Solo ranks can skip the scan: by the shadow superset
-            // guarantee every locally-unrouted expert's grad is exactly
-            // zero, so only a peer rank can make it nonzero.
+            // Solo ranks can skip the scan: `used` is the kernel-emitted
+            // exact routed set, so every locally-unrouted expert
+            // received zero tokens and its grad is exactly zero — only
+            // a peer rank can make it nonzero.
             if expert_prefetch && mesh.is_some() {
                 for e in 0..n_experts {
                     if update_set.contains(&e) {
@@ -517,22 +572,24 @@ impl OffloadTrainer {
                     }
                 }
                 update_set.sort_unstable();
-                // Late demand fetches for peer-routed experts (their
-                // scratch is stale: fetch, catch up, splice).
+                // Late demand fetches for peer-routed experts whose
+                // scratch is stale. Planned experts are skipped too:
+                // the forward splice loop already left exactly the
+                // caught-up state resident for them, so re-fetching
+                // would be a byte-identical redundant SSD read.
                 for &e in &update_set {
-                    if used[l].contains(&e) {
+                    if used[l].contains(&e) || plan.contains(l, e) {
                         continue;
                     }
                     let seq = sched.request(l, e);
-                    let mut block = timeline.time(Phase::SsdIo, || sched.wait(seq))?;
                     pstats.demand_fetches += 1;
-                    live_block_bytes += block.bytes();
-                    pstats.peak_inflight_bytes =
-                        pstats.peak_inflight_bytes.max(live_block_bytes);
-                    catch_up(&mut block, stamps[l][e], step_u - 1, lr_v, pstats);
-                    stamps[l][e] = step_u - 1;
-                    splice_expert(layout, &mut layers[l], off, &block);
-                    live_block_bytes -= block.bytes();
+                    wait_catch_up_splice(
+                        sched, timeline, layout, &mut layers[l], off, seq,
+                        stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
+                    )?;
+                    // No stamp write here: the write-back loop below
+                    // stamps every update_set member `step_u` once the
+                    // block actually returns to the store.
                 }
             }
 
@@ -579,13 +636,14 @@ impl OffloadTrainer {
             cpu_adamw(embed.p.fused_mut(), &eg, &mut embed.m, &mut embed.v, step_f, lr_f)
         });
 
-        // ---- Drain planned-but-unused fetches (plan waste). The blocks
-        // are already en route; consuming them bounds the ready buffer.
+        // ---- Safety drain. Every planned fetch is consumed by its
+        // layer's splice loop above (plan waste is counted there), so
+        // this is empty by construction — but an in-flight block must
+        // never be leaked into the next step's sequence space.
         for p in pending.iter_mut() {
             let leftovers: Vec<u64> = p.drain().map(|(_, s)| s).collect();
             for seq in leftovers {
                 let _ = timeline.time(Phase::SsdIo, || sched.wait(seq))?;
-                pstats.wasted_fetches += 1;
             }
         }
 
@@ -641,6 +699,16 @@ impl OffloadTrainer {
     }
 }
 
+/// [`LayerParamResolver`] over the trainer's per-layer fused states —
+/// the `RouteSource` planning surface (`RouteQuery::params`).
+struct LayerStateParams<'s>(&'s [ParamState]);
+
+impl LayerParamResolver for LayerStateParams<'_> {
+    fn layer_param(&self, layer: usize, name: &str) -> &[f32] {
+        self.0[layer].p.unpack(&format!("layer{}.{}", layer, name))
+    }
+}
+
 fn embed_tensor(state: &ParamState) -> HostTensor {
     let s = &state.members[0];
     HostTensor::from_f32(&s.shape, state.p.unpack(&s.name).to_vec())
@@ -663,6 +731,37 @@ fn splice_expert(layout: &SparseLayout, st: &mut ParamState, off: usize, block: 
     layout.scatter(block.expert, &block.p, &mut st.p.fused_mut()[off..]);
     layout.scatter(block.expert, &block.m, &mut st.m[off..]);
     layout.scatter(block.expert, &block.v, &mut st.v[off..]);
+}
+
+/// Wait for an in-flight (layer, expert) fetch, replay its zero-grad
+/// catch-up **into the fetched copy** through step `through`, and
+/// splice it into the layer's resident scratch, with peak-inflight
+/// accounting. Shared by the three fetch sites of `step_on` (planned
+/// splice, forward repair, backward peer-fetch). The store and the
+/// stamp table are NOT touched here: only callers that subsequently
+/// write the block back may record the catch-up in `stamps` — doing it
+/// for a block that never returns would lie about store state.
+#[allow(clippy::too_many_arguments)]
+fn wait_catch_up_splice(
+    sched: &mut SparseScheduler,
+    timeline: &mut Timeline,
+    layout: &SparseLayout,
+    st: &mut ParamState,
+    off: usize,
+    seq: u64,
+    from_stamp: u64,
+    through: u64,
+    lr: f32,
+    live_block_bytes: &mut usize,
+    pstats: &mut PrefetchStats,
+) -> Result<()> {
+    let mut block = timeline.time(Phase::SsdIo, || sched.wait(seq))?;
+    *live_block_bytes += block.bytes();
+    pstats.peak_inflight_bytes = pstats.peak_inflight_bytes.max(*live_block_bytes);
+    catch_up(&mut block, from_stamp, through, lr, pstats);
+    splice_expert(layout, st, off, &block);
+    *live_block_bytes -= block.bytes();
+    Ok(())
 }
 
 #[cfg(test)]

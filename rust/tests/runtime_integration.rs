@@ -121,6 +121,7 @@ fn embed_fwd_is_row_lookup() {
 #[test]
 fn layer_fwd_shapes_and_determinism() {
     let a = arts();
+    assert_eq!(a.contract_version(), semoe::runtime::CONTRACT_VERSION);
     let exe = a.load_exe("layer_fwd").unwrap();
     let mut rng = Rng::new(11);
     let inputs: Vec<HostTensor> = exe
@@ -131,11 +132,32 @@ fn layer_fwd_shapes_and_determinism() {
         .collect();
     let out1 = exe.run(&inputs).unwrap();
     let out2 = exe.run(&inputs).unwrap();
-    assert_eq!(out1.len(), 2); // y, aux
-    assert_eq!(out1[0].shape, vec![a.preset.batch_size, a.preset.seq_len, a.preset.d_model]);
-    assert_eq!(out1[0], out2[0], "execution must be deterministic");
-    let aux = out1[1].scalar().unwrap();
+    // Contract v2: y, aux, route_expert, route_gate — addressed by name.
+    assert_eq!(out1.len(), 4);
+    let iy = exe.output_index("y").unwrap();
+    let ie = exe.output_index("route_expert").unwrap();
+    let ig = exe.output_index("route_gate").unwrap();
+    let (b, t) = (a.preset.batch_size, a.preset.seq_len);
+    assert_eq!(out1[iy].shape, vec![b, t, a.preset.d_model]);
+    assert_eq!(out1[iy], out2[iy], "execution must be deterministic");
+    let aux = out1[exe.output_index("aux").unwrap()].scalar().unwrap();
     assert!(aux.is_finite() && aux > 0.0);
+    // Routing outputs: every token names a real expert, deterministically.
+    assert_eq!(out1[ie].shape, vec![b, t]);
+    assert_eq!(out1[ie], out2[ie], "routing must be deterministic");
+    let ids = out1[ie].as_i32().unwrap();
+    assert!(ids.iter().all(|&e| e >= 0 && (e as usize) < a.preset.n_experts));
+    let gates = out1[ig].as_f32().unwrap();
+    assert!(gates.iter().all(|&g| (0.0..=1.0).contains(&g)));
+}
+
+#[test]
+fn layer_fwd_missing_output_is_actionable() {
+    let a = arts();
+    let exe = a.load_exe("layer_fwd").unwrap();
+    let err = exe.output_index("no_such_output").unwrap_err();
+    let msg = format!("{}", err);
+    assert!(msg.contains("rebuild the artifacts"), "actionable: {}", msg);
 }
 
 #[test]
