@@ -50,7 +50,8 @@ fn measured(rep: &mut Report) {
 
     let t = rep.table(
         "measured (deep preset, 12 layers, throttled copy stream)",
-        &["mode", "pass ms", "compute ms", "copy ms", "stall ms", "plan ms", "device weights MB"],
+        &["mode", "pass ms", "compute ms", "copy ms", "stall ms", "plan ms", "tail ms",
+          "device weights MB"],
     );
     let reps = if smoke() { 1 } else { 4 };
     for (name, mode, routed) in [
@@ -82,8 +83,10 @@ fn measured(rep: &mut Report) {
                 format!("{:.1}", tm.copy_secs / reps as f64 * 1e3),
                 format!("{:.1}", tm.stall_secs / reps as f64 * 1e3),
                 // contract v2: plan/parse time replaces the old shadow-
-                // recompute column (shadow_secs is asserted 0 below)
+                // recompute column (shadow_secs is asserted 0 below);
+                // contract v3: tail ms is the tail-only repair compute
                 format!("{:.1}", tm.plan_secs / reps as f64 * 1e3),
+                format!("{:.1}", tm.tail_secs / reps as f64 * 1e3),
                 format!("{:.1}", engine.device_weight_bytes() as f64 / 1e6),
             ],
         );
@@ -125,6 +128,12 @@ fn routed_engine(rep: &mut Report) {
         routed.timing.shadow_secs, 0.0,
         "no shadow MHA may run on the routed hot path"
     );
+    // Contract-v3 acceptance: a plan miss repairs the expert tail only —
+    // a full-layer re-run (attention included) never happens.
+    assert_eq!(
+        rs.rerun_layers, 0,
+        "tail-only repair: no full-layer re-runs on the routed hot path"
+    );
     assert!(
         rs.carried_plans >= n_new as u64 - 1,
         "passes after the first must carry kernel-emitted plans: {} of {}",
@@ -133,7 +142,8 @@ fn routed_engine(rep: &mut Report) {
     );
     let t = rep.table(
         "routed vs dense ring (deep preset, identical outputs asserted)",
-        &["pass", "copy MB", "repair MB", "planned experts", "exact experts", "repaired"],
+        &["pass", "copy MB", "repair MB", "planned experts", "exact experts", "repaired",
+          "tail reruns"],
     );
     rep.row(
         t,
@@ -141,6 +151,7 @@ fn routed_engine(rep: &mut Report) {
             "dense".into(),
             format!("{:.2}", db as f64 / 1e6),
             "0.00".into(),
+            "-".into(),
             "-".into(),
             "-".into(),
             "-".into(),
@@ -155,6 +166,7 @@ fn routed_engine(rep: &mut Report) {
             rs.planned_experts.to_string(),
             rs.exact_experts.to_string(),
             rs.repaired_experts.to_string(),
+            rs.rerun_tails.to_string(),
         ],
     );
 }

@@ -121,10 +121,21 @@ fn main() -> anyhow::Result<()> {
     // engine after every decode step — docs/serving.md §Observability).
     let g = |k: &str| s.get(k).as_f64().unwrap_or(0.0);
     println!(
-        "route plan: {:.0} planned / {:.0} exact / {:.0} repaired experts, {:.0} layer reruns, \
-         {:.0} carried plans; ring copy lane {:.1} MB",
+        "route plan: {:.0} planned / {:.0} exact / {:.0} repaired experts, \
+         {:.0} tail reruns ({:.0} full-layer), {:.0} carried plans; ring copy lane {:.1} MB",
         g("route_planned_experts"), g("route_exact_experts"), g("route_repaired_experts"),
-        g("route_rerun_layers"), g("route_carried_plans"), g("ring_copy_bytes") / 1e6
+        g("route_rerun_tails"), g("route_rerun_layers"), g("route_carried_plans"),
+        g("ring_copy_bytes") / 1e6
+    );
+    // Contract v3 / PR-4 ROADMAP item: planner + tail-repair timing
+    // surfaced end to end (engine → gauges → /stats → here).
+    println!(
+        "route timing: plan {:.2} ms, tail reruns {:.2} ms",
+        g("plan_ms"), g("tail_rerun_ms")
+    );
+    assert_eq!(
+        g("route_rerun_layers"), 0.0,
+        "contract v3: plan-miss repairs must be tail-only"
     );
     println!("serve_ring_inference OK");
     Ok(())

@@ -33,7 +33,7 @@ from jax._src.lib import xla_client as xc
 
 from . import model as M
 from .configs import MoEConfig, PRESETS, get_config
-from .layers import layer_param_shapes
+from .layers import layer_param_shapes, N_DENSE_PARAMS
 
 
 def to_hlo_text(lowered) -> str:
@@ -121,20 +121,57 @@ def entry_embed_bwd(cfg):
     return fn, ins, outs
 
 
+# The routing quadruple every layer entry emits (contract v3): argmax
+# expert, its kept softmax prob, capacity slot, keep mask — exactly what
+# `expert_tail` consumes.
+def _route_specs(cfg):
+    B, T = cfg.batch_size, cfg.seq_len
+    return [("route_expert", _spec((B, T), jnp.int32)),
+            ("route_gate", _spec((B, T))),
+            ("route_pos", _spec((B, T), jnp.int32)),
+            ("route_keep", _spec((B, T)))]
+
+
 def entry_layer_fwd(cfg):
     B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
     ins = [("x", _spec((B, T, H)))] + _layer_specs(cfg)
 
     def fn(x, *lps):
-        y, aux, route_expert, route_gate = M.layer_fwd(cfg, x, list(lps))
-        return y, aux, route_expert, route_gate
+        return M.layer_fwd(cfg, x, list(lps))
 
-    # Contract v2: the per-token top-k routing decisions (k = 1, switch
-    # layout) are first-class named outputs — the rust coordinator
-    # addresses them by name, never by position.
-    outs = [("y", _spec((B, T, H))), ("aux", _spec(())),
-            ("route_expert", _spec((B, T), jnp.int32)),
-            ("route_gate", _spec((B, T)))]
+    # Contract v3: the fused fast path. Besides the v2 routing outputs,
+    # the dense-prefix activations (`h`, `moe_in`) ride out so a
+    # plan-miss repair can re-execute ONLY `expert_tail` — the rust
+    # coordinator addresses everything by name, never by position.
+    outs = ([("y", _spec((B, T, H))), ("aux", _spec(()))]
+            + _route_specs(cfg)
+            + [("h", _spec((B, T, H))), ("moe_in", _spec((B, T, H)))])
+    return fn, ins, outs
+
+
+def entry_layer_dense(cfg):
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+    ins = [("x", _spec((B, T, H)))] + _layer_specs(cfg)[:N_DENSE_PARAMS]
+
+    def fn(x, *dps):
+        return M.layer_dense(cfg, x, list(dps))
+
+    outs = ([("h", _spec((B, T, H))), ("moe_in", _spec((B, T, H))),
+             ("aux", _spec(()))] + _route_specs(cfg))
+    return fn, ins, outs
+
+
+def entry_expert_tail(cfg):
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+    ins = ([("h", _spec((B, T, H))), ("moe_in", _spec((B, T, H)))]
+           + _route_specs(cfg)
+           + _layer_specs(cfg)[N_DENSE_PARAMS:])
+
+    def fn(h, moe_in, expert, gate, pos, keep, w1, b1, w2, b2):
+        return (M.expert_tail(cfg, h, moe_in, expert, gate, pos, keep,
+                              w1, b1, w2, b2),)
+
+    outs = [("y", _spec((B, T, H)))]
     return fn, ins, outs
 
 
@@ -248,6 +285,8 @@ ENTRIES = {
     "embed_fwd": entry_embed_fwd,
     "embed_bwd": entry_embed_bwd,
     "layer_fwd": entry_layer_fwd,
+    "layer_dense": entry_layer_dense,
+    "expert_tail": entry_expert_tail,
     "layer_bwd": entry_layer_bwd,
     "head_fwd": entry_head_fwd,
     "head_grad": entry_head_grad,
@@ -266,23 +305,26 @@ ENTRIES = {
 PRESET_ENTRIES = {
     "tiny": list(ENTRIES),
     "small": list(ENTRIES),
-    "deep": ["embed_fwd", "layer_fwd", "head_infer", "head_fwd",
-             "gating", "expert_ffn", "attention"],
+    "deep": ["embed_fwd", "layer_fwd", "layer_dense", "expert_tail",
+             "head_infer", "head_fwd", "gating", "expert_ffn", "attention"],
     "base": ["train_step", "fwd_loss", "embed_fwd", "embed_bwd", "layer_fwd",
-             "layer_bwd", "head_grad", "head_infer", "adamw_layer",
-             "adamw_embed", "adamw_head"],
+             "layer_dense", "expert_tail", "layer_bwd", "head_grad",
+             "head_infer", "adamw_layer", "adamw_embed", "adamw_head"],
 }
 
 
-AOT_CODE_VERSION = 3  # bump to force re-lowering after kernel changes
+AOT_CODE_VERSION = 4  # bump to force re-lowering after kernel changes
 
 # The artifact *contract* version: what the rust coordinator may assume
-# about entry-point signatures. v2 = `layer_fwd` emits the per-token
-# routing decisions (`route_expert`, `route_gate`) as named outputs and
-# every manifest carries this field. The rust side
+# about entry-point signatures. v3 = the layer splits at the
+# dense/sparse boundary: `layer_fwd` (the fused fast path) emits the
+# routing quadruple (`route_expert`/`route_gate`/`route_pos`/
+# `route_keep`) AND the dense-prefix activations (`h`, `moe_in`), and
+# the `layer_dense`/`expert_tail` pair exists so a plan-miss repair
+# re-executes only the MoE block. The rust side
 # (`runtime/registry.rs::CONTRACT_VERSION`) refuses mismatched manifests
 # with a "rebuild artifacts" error instead of shape-panicking mid-run.
-CONTRACT_VERSION = 2
+CONTRACT_VERSION = 3
 
 
 def _fingerprint(cfg: MoEConfig, entry: str) -> str:

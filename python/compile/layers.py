@@ -25,6 +25,12 @@ LAYER_PARAM_NAMES = [
 
 N_LAYER_PARAMS = len(LAYER_PARAM_NAMES)
 
+# The dense prefix owns the first N_DENSE_PARAMS entries (ln1 → MHA →
+# ln2 → router); the expert tail owns the trailing sparse four
+# (w1/b1/w2/b2). Contract v3 splits the layer artifacts at exactly this
+# boundary.
+N_DENSE_PARAMS = sum(1 for _, sp in LAYER_PARAM_NAMES if not sp)
+
 
 def layer_param_shapes(cfg: MoEConfig):
     """[(name, shape, is_sparse)] for one decoder layer."""
@@ -62,17 +68,68 @@ def mha_block(cfg: MoEConfig, x, wq, bq, wk, bk, wv, bv, wo, bo):
     return o @ wo + bo
 
 
+def dense_prefix(cfg: MoEConfig, x, dense_params):
+    """The layer's dense half: ln1 → causal MHA → residual → ln2 → router.
+
+    `dense_params` is the first `N_DENSE_PARAMS` entries of the layer
+    list (everything but the expert tensors). Returns
+    `(h, moe_in, aux, expert, gate, pos, keep)`:
+
+    - `h [B,T,H]`       post-attention residual hidden (the value the
+                        MoE output is added onto),
+    - `moe_in [B,T,H]`  ln2-normalized `h` — the dispatch input,
+    - `aux` scalar      load-balancing loss (depends only on the gate),
+    - `expert [B,T] i32`, `gate [B,T] f32`, `pos [B,T] i32`,
+      `keep [B,T] f32`  the full per-token routing decision (argmax
+                        expert, its kept softmax prob, capacity slot,
+                        keep mask).
+
+    None of these depend on the expert weights — the property every
+    repair path (contract v2's splice-and-rerun, contract v3's
+    tail-only re-execution) is built on.
+    """
+    (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
+     ln2_s, ln2_b, rw, rb) = dense_params
+    B, T, H = x.shape
+    a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b), wq, bq, wk, bk, wv, bv, wo, bo)
+    h = x + a
+    moe_in = layer_norm(h, ln2_s, ln2_b)
+    logits = moe_in.reshape(B * T, H) @ rw + rb          # [BT, E]
+    expert, gate, pos, keep, me, ce = K.top1_gating(logits, cfg.expert_capacity)
+    aux = K.ref.aux_loss_ref(me, ce)
+    return (h, moe_in, aux, expert.reshape(B, T), gate.reshape(B, T),
+            pos.reshape(B, T), keep.reshape(B, T))
+
+
+def expert_tail(cfg: MoEConfig, h, moe_in, expert, gate, pos, keep,
+                w1, b1, w2, b2):
+    """The layer's sparse half: dispatch → expert FFN → gated combine →
+    residual. Parameterized by ONLY the expert weights; everything else
+    arrives as activations from [`dense_prefix`] (or as the equivalent
+    `layer_fwd` outputs). Returns `y [B,T,H]` — the layer output.
+
+    Re-executing this with repaired expert weights is bit-identical to
+    re-running the whole layer: the dense prefix is deterministic in
+    `x`, and unrouted experts' buffers are never read by the one-hot
+    combine.
+    """
+    B, T, H = h.shape
+    E, C = cfg.n_experts, cfg.expert_capacity
+    flat_e, flat_g = expert.reshape(B * T), gate.reshape(B * T)
+    flat_p, flat_k = pos.reshape(B * T), keep.reshape(B * T)
+    buf = K.dispatch(moe_in.reshape(B * T, H), flat_e, flat_p, flat_k, E, C)
+    y_buf = K.expert_ffn(buf, w1, b1, w2, b2)            # pallas hot spot
+    m = K.combine(y_buf, flat_e, flat_p, flat_k, flat_g)  # [BT,H]
+    return h + m.reshape(B, T, H)
+
+
 def moe_block(cfg: MoEConfig, x, router_w, router_b, w1, b1, w2, b2):
-    """Switching-FFN: top-1 gate -> dispatch -> grouped FFN -> combine.
+    """Switching-FFN over an already-normalized input: top-1 gate ->
+    dispatch -> grouped FFN -> combine (no residual).
 
     Returns (y [B,T,H], aux_loss scalar, expert [B,T] i32, gate [B,T] f32).
-
-    `expert`/`gate` are the per-token routing decisions (contract-v2
-    "kernel-emitted routed set"): `expert[t]` is the argmax expert of
-    token t — valid whatever the expert weights hold, since the router
-    logits depend only on the dense prefix — and `gate[t]` is the
-    softmax probability of that expert, zeroed for capacity-dropped
-    tokens (the gating kernel's `gate * keep`).
+    Kept as the standalone MoE surface for tests; the layer entry points
+    compose [`dense_prefix`] and [`expert_tail`] instead.
     """
     B, T, H = x.shape
     E, C = cfg.n_experts, cfg.expert_capacity
@@ -87,19 +144,28 @@ def moe_block(cfg: MoEConfig, x, router_w, router_b, w1, b1, w2, b2):
             expert.reshape(B, T), gate.reshape(B, T))
 
 
+def decoder_layer_split(cfg: MoEConfig, x, layer_params):
+    """One pre-norm decoder block as the dense ∘ tail composition —
+    the contract-v3 `layer_fwd` output set.
+
+    Returns (y, aux, expert, gate, pos, keep, h, moe_in). The fused
+    artifact and the split `layer_dense`/`expert_tail` artifacts lower
+    the SAME jaxpr pieces, so `layer_dense ∘ expert_tail ≡ layer_fwd`
+    bit for bit (asserted by `tests/test_contract.py`).
+    """
+    dense, sparse = layer_params[:N_DENSE_PARAMS], layer_params[N_DENSE_PARAMS:]
+    h, moe_in, aux, expert, gate, pos, keep = dense_prefix(cfg, x, dense)
+    y = expert_tail(cfg, h, moe_in, expert, gate, pos, keep, *sparse)
+    return y, aux, expert, gate, pos, keep, h, moe_in
+
+
 def decoder_layer_routed(cfg: MoEConfig, x, layer_params):
     """One pre-norm decoder block, routing decisions included.
 
-    Returns (y [B,T,H], aux_loss scalar, expert [B,T] i32, gate [B,T] f32)
-    — the contract-v2 `layer_fwd` output set.
+    Returns (y [B,T,H], aux_loss scalar, expert [B,T] i32, gate [B,T] f32).
     """
-    (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
-     ln2_s, ln2_b, rw, rb, w1, b1, w2, b2) = layer_params
-    a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b), wq, bq, wk, bk, wv, bv, wo, bo)
-    x = x + a
-    m, aux, expert, gate = moe_block(
-        cfg, layer_norm(x, ln2_s, ln2_b), rw, rb, w1, b1, w2, b2)
-    return x + m, aux, expert, gate
+    y, aux, expert, gate, _, _, _, _ = decoder_layer_split(cfg, x, layer_params)
+    return y, aux, expert, gate
 
 
 def decoder_layer(cfg: MoEConfig, x, layer_params):

@@ -10,8 +10,14 @@ Entry points (each becomes one HLO artifact; see aot.py):
   fwd_loss       forward + loss (eval)
   embed_fwd/bwd  embedding lookup and its gradient (one-hot matmul)
   layer_fwd/bwd  single decoder layer; fwd also emits the per-token
-                 routing decisions (contract v2); bwd recomputes fwd
-                 (checkpointing)
+                 routing decisions AND the dense-prefix activations
+                 (contract v3); bwd recomputes fwd (checkpointing)
+  layer_dense    the layer's dense half alone (ln1 → MHA → residual →
+                 ln2 → router/gating) — no expert weights in its
+                 signature
+  expert_tail    the layer's sparse half alone (dispatch → expert FFN →
+                 gated combine → residual) — only expert weights in its
+                 signature; re-executed on plan-miss repairs
   head_fwd       final LN + logits + loss
   head_grad      head loss + gradients (dx and head param grads)
   head_infer     greedy next-token ids
@@ -23,7 +29,8 @@ import jax.numpy as jnp
 
 from . import kernels as K
 from .configs import MoEConfig
-from .layers import (decoder_layer, decoder_layer_routed, layer_norm,
+from .layers import (decoder_layer, decoder_layer_split, dense_prefix,
+                     expert_tail as _expert_tail, layer_norm,
                      layer_param_shapes, N_LAYER_PARAMS)
 
 
@@ -163,18 +170,41 @@ def train_step(cfg: MoEConfig, params, ms, vs, step, lr, tokens, labels):
 # ---------------------------------------------------------------------------
 
 def layer_fwd(cfg: MoEConfig, x, layer_params):
-    """Single decoder layer forward — contract v2.
+    """Single decoder layer forward — contract v3 (the fused fast path).
 
     Returns (y [B,T,H], aux scalar, route_expert [B,T] i32,
-    route_gate [B,T] f32): the per-token top-k routing decisions (k = 1
-    in the switch layout) ride out of the kernel as first-class outputs,
-    so the coordinator learns the exact routed set as a byproduct of the
-    forward instead of re-deriving it with an f64 shadow recompute.
-    `route_expert` depends only on the dense prefix (ln1 → MHA →
-    residual → ln2 → router), so it is valid even when stale expert
-    weights were staged — the repair path relies on exactly this.
+    route_gate [B,T] f32, route_pos [B,T] i32, route_keep [B,T] f32,
+    h [B,T,H], moe_in [B,T,H]): besides the per-token routing decisions
+    (contract v2), the dense-prefix activations ride out as first-class
+    outputs — `h` is the post-attention residual hidden, `moe_in` its
+    ln2 normalization (the dispatch input). Together with the routing
+    quadruple they are exactly the `expert_tail` input set, so a
+    plan-miss repair re-executes ONLY the MoE block with the missed
+    expert weights spliced in — no second attention pass. All emitted
+    values depend only on the dense prefix, never on the staged expert
+    weights.
     """
-    return decoder_layer_routed(cfg, x, layer_params)
+    return decoder_layer_split(cfg, x, layer_params)
+
+
+def layer_dense(cfg: MoEConfig, x, dense_params):
+    """The layer's dense half — contract v3's `layer_dense` artifact.
+
+    Takes only the `N_DENSE_PARAMS` dense tensors. Returns
+    (h, moe_in, aux, route_expert, route_gate, route_pos, route_keep).
+    """
+    return dense_prefix(cfg, x, dense_params)
+
+
+def expert_tail(cfg: MoEConfig, h, moe_in, expert, gate, pos, keep,
+                w1, b1, w2, b2):
+    """The layer's sparse half — contract v3's `expert_tail` artifact.
+
+    Activations + routing from `layer_dense`/`layer_fwd`, parameters =
+    the expert tensors only. Returns y [B,T,H].
+    """
+    return _expert_tail(cfg, h, moe_in, expert, gate, pos, keep,
+                        w1, b1, w2, b2)
 
 
 def layer_bwd(cfg: MoEConfig, x, layer_params, dy, daux):

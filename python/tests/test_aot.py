@@ -63,16 +63,41 @@ def test_manifest_declares_current_contract(preset):
     assert man.get("contract_version") == CONTRACT_VERSION
 
 
-def test_layer_fwd_manifest_outputs_are_contract_v2():
-    """Built layer_fwd artifacts must list the routed outputs by name."""
+def test_layer_fwd_manifest_outputs_are_contract_v3():
+    """Built layer_fwd artifacts must list the routed outputs AND the
+    dense-prefix activations by name."""
     man = _manifest("deep")
     cfg = get_config("deep")
     outs = {o["name"]: o for o in man["artifacts"]["layer_fwd"]["outputs"]}
-    assert set(outs) == {"y", "aux", "route_expert", "route_gate"}
+    assert set(outs) == {"y", "aux", "route_expert", "route_gate",
+                         "route_pos", "route_keep", "h", "moe_in"}
+    bt = [cfg.batch_size, cfg.seq_len]
+    bth = bt + [cfg.d_model]
     assert outs["route_expert"]["dtype"] == "i32"
-    assert outs["route_expert"]["shape"] == [cfg.batch_size, cfg.seq_len]
+    assert outs["route_expert"]["shape"] == bt
+    assert outs["route_pos"]["dtype"] == "i32"
     assert outs["route_gate"]["dtype"] == "f32"
-    assert outs["route_gate"]["shape"] == [cfg.batch_size, cfg.seq_len]
+    assert outs["route_keep"]["shape"] == bt
+    assert outs["h"]["shape"] == bth and outs["moe_in"]["shape"] == bth
+
+
+def test_split_layer_manifest_signatures_are_contract_v3():
+    """The layer_dense/expert_tail pair must be present with the split
+    signatures the tail-only repair paths address by name."""
+    man = _manifest("deep")
+    cfg = get_config("deep")
+    bth = [cfg.batch_size, cfg.seq_len, cfg.d_model]
+    dense = man["artifacts"]["layer_dense"]
+    # only dense params in the signature: x + 14 tensors, no w1/b1/w2/b2
+    in_names = [i["name"] for i in dense["inputs"]]
+    assert in_names[0] == "x" and len(in_names) == 15
+    assert not any(n in in_names for n in ("w1", "b1", "w2", "b2"))
+    tail = man["artifacts"]["expert_tail"]
+    t_in = [i["name"] for i in tail["inputs"]]
+    assert t_in == ["h", "moe_in", "route_expert", "route_gate",
+                    "route_pos", "route_keep", "w1", "b1", "w2", "b2"]
+    t_out = {o["name"]: o for o in tail["outputs"]}
+    assert list(t_out) == ["y"] and t_out["y"]["shape"] == bth
 
 
 def test_layer_artifacts_share_shapes_across_layers():

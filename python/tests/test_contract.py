@@ -1,44 +1,52 @@
-"""Artifact-contract v2: `layer_fwd` emits the routing decisions.
+"""Artifact-contract v3: the layer splits at the dense/sparse boundary.
 
 This is the Python half of the contract the rust coordinator depends on
 (`runtime/registry.rs::CONTRACT_VERSION`): output names, dtypes and
-shapes of the v2 `layer_fwd` entry, plus the two semantic invariants the
-route-repair path is built on —
+shapes of the v3 `layer_fwd` / `layer_dense` / `expert_tail` entries,
+plus the semantic invariants the tail-only repair path is built on —
 
-  1. the emitted top-1 set equals a dense-prefix recompute (the shadow
-     oracle's argmax), and
-  2. the routing outputs do NOT depend on the expert weights, so they
-     are valid even when stale expert tensors were staged (the engine
-     repairs by splicing the missed experts and re-running the layer).
+  1. `layer_dense ∘ expert_tail` is BIT-IDENTICAL to the fused
+     `layer_fwd`, across routing patterns (balanced, skewed,
+     capacity-dropping),
+  2. the routing quadruple and the dense-prefix activations
+     (`h`, `moe_in`) do NOT depend on the expert weights, so they are
+     valid even when stale expert tensors were staged, and
+  3. feeding `expert_tail` the activations a stale-weight `layer_fwd`
+     emitted, with the TRUE expert weights spliced in, reproduces the
+     true fused output bit for bit — the contract-v3 repair: no second
+     attention pass, ever.
 """
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from compile import model as M
-from compile.aot import CONTRACT_VERSION, entry_layer_fwd
+from compile.aot import (CONTRACT_VERSION, entry_expert_tail,
+                         entry_layer_dense, entry_layer_fwd)
 from compile.configs import get_config
-from compile.layers import LAYER_PARAM_NAMES, layer_norm, mha_block
+from compile.layers import (LAYER_PARAM_NAMES, N_DENSE_PARAMS, layer_norm,
+                            mha_block)
 
 
-def _tiny():
+def _tiny(seed=7, scale=0.5):
     cfg = get_config("tiny")
     params = M.init_params(cfg, 0)
     _, layers, _ = M.split_params(cfg, params)
-    r = np.random.default_rng(7)
+    r = np.random.default_rng(seed)
     x = jnp.asarray(
-        r.normal(size=(cfg.batch_size, cfg.seq_len, cfg.d_model)) * 0.5,
+        r.normal(size=(cfg.batch_size, cfg.seq_len, cfg.d_model)) * scale,
         jnp.float32)
     return cfg, layers[0], x
 
 
-def test_contract_version_is_two():
-    assert CONTRACT_VERSION == 2
+def test_contract_version_is_three():
+    assert CONTRACT_VERSION == 3
 
 
 def test_layer_fwd_entry_matches_documented_contract():
-    """Names, order, dtypes and shapes of the v2 `layer_fwd` outputs."""
+    """Names, order, dtypes and shapes of the v3 `layer_fwd` outputs."""
     cfg = get_config("tiny")
     _, ins, outs = entry_layer_fwd(cfg)
     B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
@@ -50,18 +58,76 @@ def test_layer_fwd_entry_matches_documented_contract():
         ("aux", (), jnp.float32),
         ("route_expert", (B, T), jnp.int32),
         ("route_gate", (B, T), jnp.float32),
+        ("route_pos", (B, T), jnp.int32),
+        ("route_keep", (B, T), jnp.float32),
+        ("h", (B, T, H), jnp.float32),
+        ("moe_in", (B, T, H), jnp.float32),
     ]
+
+
+def test_split_entries_match_documented_contract():
+    """`layer_dense` takes only dense params; `expert_tail` only expert
+    params + the dense activations/routing — the split the repair paths
+    rely on."""
+    cfg = get_config("tiny")
+    B, T, H = cfg.batch_size, cfg.seq_len, cfg.d_model
+
+    _, d_ins, d_outs = entry_layer_dense(cfg)
+    dense_names = [n for n, sp in LAYER_PARAM_NAMES if not sp]
+    assert [n for n, _ in d_ins] == ["x"] + dense_names
+    assert [(n, tuple(s.shape), s.dtype) for n, s in d_outs] == [
+        ("h", (B, T, H), jnp.float32),
+        ("moe_in", (B, T, H), jnp.float32),
+        ("aux", (), jnp.float32),
+        ("route_expert", (B, T), jnp.int32),
+        ("route_gate", (B, T), jnp.float32),
+        ("route_pos", (B, T), jnp.int32),
+        ("route_keep", (B, T), jnp.float32),
+    ]
+
+    _, t_ins, t_outs = entry_expert_tail(cfg)
+    sparse_names = [n for n, sp in LAYER_PARAM_NAMES if sp]
+    assert [n for n, _ in t_ins] == (
+        ["h", "moe_in", "route_expert", "route_gate", "route_pos",
+         "route_keep"] + sparse_names)
+    assert sparse_names == ["w1", "b1", "w2", "b2"]
+    assert [(n, tuple(s.shape)) for n, s in t_outs] == [("y", (B, T, H))]
+
+
+@pytest.mark.parametrize("seed,scale", [(7, 0.5), (11, 0.05), (23, 4.0)])
+def test_dense_tail_composition_is_bit_identical_to_fused(seed, scale):
+    """The tentpole invariant: layer_dense ∘ expert_tail ≡ layer_fwd,
+    bitwise, across routing patterns (the large-scale input drives
+    skewed routing and capacity drops)."""
+    cfg, lp, x = _tiny(seed, scale)
+    fused = M.layer_fwd(cfg, x, lp)
+    h, moe_in, aux, e, g, p, k = M.layer_dense(cfg, x, lp[:N_DENSE_PARAMS])
+    y = M.expert_tail(cfg, h, moe_in, e, g, p, k, *lp[N_DENSE_PARAMS:])
+    for name, a, b in [
+        ("y", fused[0], y), ("aux", fused[1], aux),
+        ("route_expert", fused[2], e), ("route_gate", fused[3], g),
+        ("route_pos", fused[4], p), ("route_keep", fused[5], k),
+        ("h", fused[6], h), ("moe_in", fused[7], moe_in),
+    ]:
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=f"{name} must be bit-identical between fused and split")
 
 
 def test_layer_fwd_returns_routing_in_range():
     cfg, lp, x = _tiny()
-    y, aux, expert, gate = M.layer_fwd(cfg, x, lp)
-    assert y.shape == x.shape
+    y, aux, expert, gate, pos, keep, h, moe_in = M.layer_fwd(cfg, x, lp)
+    assert y.shape == x.shape and h.shape == x.shape and moe_in.shape == x.shape
     e = np.asarray(expert)
     g = np.asarray(gate)
+    p = np.asarray(pos)
+    k = np.asarray(keep)
     assert e.shape == (cfg.batch_size, cfg.seq_len)
-    assert e.dtype == np.int32
+    assert e.dtype == np.int32 and p.dtype == np.int32
     assert (e >= 0).all() and (e < cfg.n_experts).all()
+    assert ((k == 0.0) | (k == 1.0)).all()
+    # kept tokens sit inside their expert's capacity buffer
+    assert (p[k == 1.0] < cfg.expert_capacity).all() and (p >= 0).all()
     # gate = softmax prob of the chosen expert × keep ∈ [0, 1]; a top-1
     # softmax winner over E logits is always at least 1/E when kept.
     assert (g >= 0.0).all() and (g <= 1.0).all()
@@ -72,7 +138,7 @@ def test_layer_fwd_returns_routing_in_range():
 def test_emitted_routing_matches_dense_prefix_recompute():
     """Kernel-emitted set == the shadow oracle's argmax (parity)."""
     cfg, lp, x = _tiny()
-    _, _, expert, _ = M.layer_fwd(cfg, x, lp)
+    _, _, expert, *_ = M.layer_fwd(cfg, x, lp)
     (ln1_s, ln1_b, wq, bq, wk, bk, wv, bv, wo, bo,
      ln2_s, ln2_b, rw, rb, *_rest) = lp
     a = mha_block(cfg, layer_norm(x, ln1_s, ln1_b),
@@ -83,18 +149,75 @@ def test_emitted_routing_matches_dense_prefix_recompute():
                                   np.asarray(want))
 
 
-def test_routing_outputs_ignore_expert_weights():
+def test_routing_and_activations_ignore_expert_weights():
     """The repair-path invariant: staging stale (here: zeroed) expert
-    weights changes `y` but NOT `route_expert`/`route_gate`."""
+    weights changes `y` but NOT the routing quadruple or the
+    dense-prefix activations."""
     cfg, lp, x = _tiny()
-    y, _, expert, gate = M.layer_fwd(cfg, x, lp)
+    true_out = M.layer_fwd(cfg, x, lp)
     stale = list(lp)
     names = [n for n, _ in LAYER_PARAM_NAMES]
     for n in ("w1", "b1", "w2", "b2"):
         i = names.index(n)
         stale[i] = jnp.zeros_like(stale[i])
-    y2, _, expert2, gate2 = M.layer_fwd(cfg, x, stale)
-    np.testing.assert_array_equal(np.asarray(expert), np.asarray(expert2))
-    np.testing.assert_array_equal(np.asarray(gate), np.asarray(gate2))
-    assert not np.allclose(np.asarray(y), np.asarray(y2)), \
+    stale_out = M.layer_fwd(cfg, x, stale)
+    for i, name in enumerate(["route_expert", "route_gate", "route_pos",
+                              "route_keep", "h", "moe_in"], start=2):
+        np.testing.assert_array_equal(
+            np.asarray(true_out[i]), np.asarray(stale_out[i]),
+            err_msg=f"{name} must not depend on expert weights")
+    assert not np.allclose(np.asarray(true_out[0]), np.asarray(stale_out[0])), \
         "expert weights must matter for y (sanity)"
+
+
+def test_tail_rerun_repairs_a_stale_forward_bitwise():
+    """The contract-v3 repair, end to end: a fused forward ran with
+    stale expert weights; `expert_tail` on its emitted activations with
+    the TRUE expert weights reproduces the true fused `y` bit for bit —
+    the dense prefix (attention included) is never recomputed."""
+    cfg, lp, x = _tiny(seed=5)
+    stale = list(lp)
+    for i in range(N_DENSE_PARAMS, len(lp)):
+        stale[i] = jnp.zeros_like(stale[i])
+    stale_out = M.layer_fwd(cfg, x, stale)
+    true_out = M.layer_fwd(cfg, x, lp)
+    y_rep = M.expert_tail(
+        cfg, stale_out[6], stale_out[7], stale_out[2], stale_out[3],
+        stale_out[4], stale_out[5], *lp[N_DENSE_PARAMS:])
+    np.testing.assert_array_equal(
+        np.asarray(y_rep), np.asarray(true_out[0]),
+        err_msg="tail re-execution must equal the full-layer re-run")
+
+
+def test_tail_ignores_unrouted_expert_weights():
+    """Zero-inertness at tail granularity: corrupting an expert NO token
+    routes to leaves the tail output bit-identical (the basis for
+    splicing only missed experts), while corrupting a routed one flips
+    it (sensitivity)."""
+    cfg, lp, x = _tiny(seed=9)
+    # Force an unrouted expert: a large negative router bias keeps the
+    # argmax away from expert 0 whatever the tokens are.
+    names = [n for n, _ in LAYER_PARAM_NAMES]
+    rb_idx = names.index("router_b")
+    lp = list(lp)
+    lp[rb_idx] = lp[rb_idx].at[0].set(-1e9)
+    out = M.layer_fwd(cfg, x, lp)
+    e_ids = np.asarray(out[2]).reshape(-1)
+    routed = set(int(v) for v in e_ids)
+    unrouted = [e for e in range(cfg.n_experts) if e not in routed]
+    assert 0 in unrouted, "biased-out expert must be unrouted"
+    tail = list(lp[N_DENSE_PARAMS:])
+    w1_idx = names[N_DENSE_PARAMS:].index("w1")
+    corrupt = tail[w1_idx].at[unrouted[0]].set(1e6)
+    tail_c = list(tail)
+    tail_c[w1_idx] = corrupt
+    y_c = M.expert_tail(cfg, out[6], out[7], out[2], out[3], out[4], out[5],
+                        *tail_c)
+    np.testing.assert_array_equal(np.asarray(y_c), np.asarray(out[0]))
+    r = next(iter(routed))
+    tail_r = list(tail)
+    tail_r[w1_idx] = tail[w1_idx].at[r].set(1e6)
+    y_r = M.expert_tail(cfg, out[6], out[7], out[2], out[3], out[4], out[5],
+                        *tail_r)
+    assert not np.array_equal(np.asarray(y_r), np.asarray(out[0])), \
+        "a routed expert's weights must matter (sanity)"

@@ -67,7 +67,7 @@ def test_layer_chain_equals_fused_forward(tiny):
     x = M.embed_fwd(tok, embed)
     aux_total = 0.0
     for lp in layers:
-        x, aux, _, _ = M.layer_fwd(cfg, x, lp)
+        x, aux, *_ = M.layer_fwd(cfg, x, lp)
         aux_total += aux
     ce = M.head_fwd(cfg, x, lnf_s, lnf_b, wout, lab)
     loss_chain = ce + cfg.aux_loss_weight * aux_total
@@ -85,7 +85,7 @@ def test_layer_bwd_matches_autodiff(tiny):
     dx, dps = M.layer_bwd(cfg, x, layers[0], dy, jnp.float32(0.0))
 
     def f(xx, lps):
-        y, aux, _, _ = M.layer_fwd(cfg, xx, lps)
+        y, aux, *_ = M.layer_fwd(cfg, xx, lps)
         return jnp.sum(y * dy)
 
     dx_ref, dps_ref = jax.grad(f, argnums=(0, 1))(x, list(layers[0]))

@@ -9,4 +9,4 @@ pub mod presets;
 
 pub use cluster::{ClusterConfig, LinkKind};
 pub use model::ModelConfig;
-pub use train::TrainConfig;
+pub use train::{RouteSourceChoice, TrainConfig};

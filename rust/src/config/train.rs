@@ -12,6 +12,45 @@ pub enum ParamResidency {
     Offload,
 }
 
+/// Which `moe::RouteSource` plans the offload trainer's expert axis —
+/// the A/B knob for repeated-corpus workloads. Every step the planner's
+/// hit rate against the kernel-emitted exact sets is counted in
+/// `PrefetchStats::{plan_hit_experts,plan_missed_experts}`, so the two
+/// choices are directly comparable on a live run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteSourceChoice {
+    /// Predict each step from the batch's own token embeddings (router
+    /// over ln2-normalized embeddings, attention skipped). The right
+    /// default: every training step is a fresh batch.
+    EmbeddingProxy,
+    /// Carry the previous step's kernel-emitted exact sets (falling
+    /// back to the proxy until a full sweep has been observed). Wins
+    /// when consecutive batches repeat routing — epoch-scale repeated
+    /// corpora, curriculum replays.
+    CarriedKernel,
+}
+
+impl RouteSourceChoice {
+    /// Strict parse — `None` for anything but the two accepted names.
+    /// CLI surfaces bail on `None` (a typo must not silently fall back
+    /// to the proxy and invalidate the A/B); `from_json` stays lenient
+    /// like the rest of the config family.
+    pub fn parse(s: &str) -> Option<RouteSourceChoice> {
+        match s {
+            "proxy" => Some(RouteSourceChoice::EmbeddingProxy),
+            "carried" => Some(RouteSourceChoice::CarriedKernel),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouteSourceChoice::EmbeddingProxy => "proxy",
+            RouteSourceChoice::CarriedKernel => "carried",
+        }
+    }
+}
+
 #[derive(Debug, Clone, PartialEq)]
 pub struct TrainConfig {
     pub preset: String,
@@ -30,6 +69,8 @@ pub struct TrainConfig {
     /// Fraction of per-layer routed load whose experts get pinned in the
     /// CPU cache (`LoadStats::hot_experts` coverage).
     pub hot_frac: f64,
+    /// Which planner predicts the expert axis (see [`RouteSourceChoice`]).
+    pub route_source: RouteSourceChoice,
     /// CPU cache capacity as a fraction of total sparse bytes.
     pub cpu_cache_frac: f64,
     /// Zipf skew of the synthetic corpus (0 = uniform tokens).
@@ -50,6 +91,7 @@ impl Default for TrainConfig {
             prefetch_depth: 1,
             expert_prefetch: true,
             hot_frac: 0.5,
+            route_source: RouteSourceChoice::EmbeddingProxy,
             cpu_cache_frac: 0.5,
             corpus_skew: 1.05,
             log_every: 10,
@@ -73,6 +115,11 @@ impl TrainConfig {
             prefetch_depth: j.get("prefetch_depth").as_usize().unwrap_or(d.prefetch_depth),
             expert_prefetch: j.get("expert_prefetch").as_bool().unwrap_or(d.expert_prefetch),
             hot_frac: j.get("hot_frac").as_f64().unwrap_or(d.hot_frac),
+            route_source: j
+                .get("route_source")
+                .as_str()
+                .and_then(RouteSourceChoice::parse)
+                .unwrap_or(d.route_source),
             cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
             corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
             log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
@@ -96,6 +143,7 @@ impl TrainConfig {
             ("prefetch_depth", Json::num(self.prefetch_depth as f64)),
             ("expert_prefetch", Json::Bool(self.expert_prefetch)),
             ("hot_frac", Json::num(self.hot_frac)),
+            ("route_source", Json::str(self.route_source.as_str())),
             ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
             ("corpus_skew", Json::num(self.corpus_skew)),
             ("log_every", Json::num(self.log_every as f64)),
@@ -111,6 +159,7 @@ mod tests {
     fn roundtrip() {
         let mut c = TrainConfig::default();
         c.residency = ParamResidency::Offload;
+        c.route_source = RouteSourceChoice::CarriedKernel;
         c.steps = 300;
         let back = TrainConfig::from_json(&c.to_json());
         assert_eq!(c, back);

@@ -15,11 +15,18 @@
 //! expert as the named `route_expert` output, which is valid even when
 //! stale expert weights were staged (routing depends only on the dense
 //! prefix). A layer whose plan missed an expert is repaired by
-//! demand-splicing the missed slices and re-running that layer, so
-//! decode outputs stay bit-identical to the dense path — and the old
-//! coordinator-side f64 shadow recompute is gone from the hot path
-//! (`PassTiming::shadow_secs` stays 0; the shadow router survives only
-//! as the parity test oracle).
+//! demand-splicing the missed slices and re-executing ONLY the layer's
+//! **expert tail** (contract v3: the fused `layer_fwd` emits the
+//! dense-prefix activations `h`/`moe_in` alongside the routing
+//! quadruple, and the `expert_tail` artifact re-runs dispatch → expert
+//! FFN → gated combine over them) — the attention prefix is never
+//! recomputed on a repair, so decode outputs stay bit-identical to the
+//! dense path at the cost of the MoE block alone
+//! (`RouteRepairStats::rerun_tails`, `PassTiming::tail_secs`;
+//! `RouteRepairStats::rerun_layers` counts the legacy full-layer
+//! re-runs and stays 0). The old coordinator-side f64 shadow recompute
+//! is gone from the hot path (`PassTiming::shadow_secs` stays 0; the
+//! shadow router survives only as the parity test oracle).
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -79,10 +86,15 @@ pub struct RouteRepairStats {
     pub repaired_experts: u64,
     /// Bytes those demand splices moved (visible, un-overlapped copy).
     pub repair_bytes: u64,
-    /// Layers re-executed because their plan missed a routed expert
-    /// (the contract-v2 repair: splice, then run the layer again — its
-    /// routing outputs were already exact).
+    /// Whole layers re-executed on a plan miss — the contract-v2 legacy
+    /// repair (splice, then run the fused layer again, attention
+    /// included). Contract v3 repairs tail-only, so this stays 0 on the
+    /// hot path (asserted in tests and the fig10 ablation).
     pub rerun_layers: u64,
+    /// `expert_tail` re-executions on a plan miss — the contract-v3
+    /// repair: splice the missed experts, re-run ONLY dispatch → expert
+    /// FFN → combine over the already-emitted dense-prefix activations.
+    pub rerun_tails: u64,
     /// Passes planned from the previous pass's kernel-emitted sets
     /// instead of the embedding proxy (the decode-step carry-over).
     pub carried_plans: u64,
@@ -102,6 +114,11 @@ pub struct PassTiming {
     /// Coordinator-side route planning time (RouteSource plan + kernel
     /// route_expert parsing) — the cheap replacement for `shadow_secs`.
     pub plan_secs: f64,
+    /// Device time spent re-executing `expert_tail` on plan-miss
+    /// repairs (contract v3). Kept out of `compute_secs` so the repair
+    /// cost is visible on its own — the Fig 10 "tail" bar; priced
+    /// analytically by `sim::CostModel::rerun_secs_tail`.
+    pub tail_secs: f64,
 }
 
 /// One member tensor's slot within a layer's fused weight buffer.
@@ -233,6 +250,13 @@ impl CpuWeightStore {
         Ok(bytes)
     }
 
+    /// Position of a member tensor (by short name) within the staged
+    /// per-layer weight vector — how the tail-repair path picks the
+    /// expert tensors out of a ring slot.
+    pub fn member_index(&self, name: &str) -> Option<usize> {
+        self.members.iter().position(|m| m.name == name)
+    }
+
     /// The route-planning parameter surface: the store IS the resolver
     /// (`RouteQuery::params`).
     pub fn as_resolver(&self) -> &dyn LayerParamResolver {
@@ -290,6 +314,10 @@ pub struct InferenceEngine {
     pub arts: Rc<ModelArtifacts>,
     embed_fwd: Rc<ArtifactExe>,
     layer_fwd: Rc<ArtifactExe>,
+    /// The layer's sparse half alone (contract v3): dispatch → expert
+    /// FFN → gated combine over the fused entry's emitted activations.
+    /// Plan-miss repairs re-execute this instead of the whole layer.
+    expert_tail: Rc<ArtifactExe>,
     head_infer: Rc<ArtifactExe>,
     embed: HostTensor,
     head: Vec<HostTensor>, // lnf_scale, lnf_bias, wout
@@ -306,6 +334,19 @@ pub struct InferenceEngine {
     /// manifest (stale artifacts fail here with a rebuild error).
     y_out: usize,
     route_out: usize,
+    /// The remaining `expert_tail` feed: gate/pos/keep routing outputs
+    /// and the dense-prefix activations h / moe_in.
+    gate_out: usize,
+    pos_out: usize,
+    keep_out: usize,
+    h_out: usize,
+    moe_in_out: usize,
+    /// `expert_tail`'s y output position.
+    tail_y: usize,
+    /// Positions of the expert tensors within a staged layer weight
+    /// vector, in `expert_tail` input order (resolved by name at
+    /// construction — a drifted signature fails loudly, not silently).
+    tail_weight_idx: Vec<usize>,
     /// Per-layer rolling expert load → hot-set pinning for routed plans.
     load: Vec<LoadStats>,
     hot: Vec<Vec<usize>>,
@@ -350,14 +391,35 @@ impl InferenceEngine {
             InferMode::Ring { k } => Some(RingMemory::new(k, n_layers, store.loader(), throttle)),
         };
         let layer_fwd = arts.load_exe("layer_fwd").context("layer_fwd")?;
-        // Contract v2: address the layer outputs by name. Artifacts
-        // built under v1 fail right here with the rebuild hint instead
-        // of mis-slicing tensors mid-decode.
+        // Contract v3: address the layer outputs by name. Artifacts
+        // built under an older contract fail right here with the
+        // rebuild hint instead of mis-slicing tensors mid-decode.
         let y_out = layer_fwd.output_index("y")?;
         let route_out = layer_fwd.output_index("route_expert")?;
+        let gate_out = layer_fwd.output_index("route_gate")?;
+        let pos_out = layer_fwd.output_index("route_pos")?;
+        let keep_out = layer_fwd.output_index("route_keep")?;
+        let h_out = layer_fwd.output_index("h")?;
+        let moe_in_out = layer_fwd.output_index("moe_in")?;
+        let expert_tail = arts.load_exe("expert_tail").context("expert_tail")?;
+        let tail_y = expert_tail.output_index("y")?;
+        // Every tail input that names a layer member is an expert
+        // tensor; record where it sits in a staged weight vector.
+        let tail_weight_idx: Vec<usize> = expert_tail
+            .spec
+            .inputs
+            .iter()
+            .filter_map(|s| store.member_index(&s.name))
+            .collect();
+        anyhow::ensure!(
+            tail_weight_idx.len() == 4,
+            "expert_tail must take exactly the four expert tensors, found {}",
+            tail_weight_idx.len()
+        );
         Ok(InferenceEngine {
             embed_fwd: arts.load_exe("embed_fwd").context("embed_fwd")?,
             layer_fwd,
+            expert_tail,
             head_infer: arts.load_exe("head_infer").context("head_infer")?,
             arts,
             embed: embed.context("embed param")?,
@@ -370,6 +432,13 @@ impl InferenceEngine {
             )),
             y_out,
             route_out,
+            gate_out,
+            pos_out,
+            keep_out,
+            h_out,
+            moe_in_out,
+            tail_y,
+            tail_weight_idx,
             load: (0..n_layers).map(|_| LoadStats::new(n_experts, 0.5)).collect(),
             hot: vec![Vec::new(); n_layers],
             routed: RoutedRingConfig::default(),
@@ -451,14 +520,24 @@ impl InferenceEngine {
                 route_stats,
                 timing,
                 layer_fwd,
+                expert_tail,
                 embed,
                 y_out,
                 route_out,
+                gate_out,
+                pos_out,
+                keep_out,
+                h_out,
+                moe_in_out,
+                tail_y,
+                tail_weight_idx,
                 ..
             } = self;
             let ring = ring.as_mut().unwrap();
             let store: &CpuWeightStore = store;
             let (y_out, route_out) = (*y_out, *route_out);
+            let (gate_out, pos_out, keep_out) = (*gate_out, *pos_out, *keep_out);
+            let (h_out, moe_in_out, tail_y) = (*h_out, *moe_in_out, *tail_y);
 
             // Plan the expert axis for this pass one ring slot ahead via
             // the RouteSource: the previous pass's kernel-emitted exact
@@ -500,14 +579,14 @@ impl InferenceEngine {
                 let mut out = run(&weights, &x)?;
                 timing.compute_secs += tc.elapsed().as_secs_f64();
                 if routed.enabled {
-                    // The exact routed set, emitted by the kernel itself
-                    // (contract v2). It is valid even though unplanned
+                    // The exact routed set, emitted by the kernel
+                    // itself. It is valid even though unplanned
                     // experts' staged slices are zero-filled: routing
                     // depends only on the dense prefix. Misses are
                     // repaired by splicing the missing experts from the
-                    // CPU tier and re-running this layer — the visible
-                    // repair cost, counted separately from the
-                    // overlapped copy lane.
+                    // CPU tier and re-executing only the expert tail —
+                    // the visible repair cost, counted separately from
+                    // the overlapped copy lane.
                     let ts = Instant::now();
                     let (exact, counts) =
                         routed_set_from_ids(out[route_out].as_i32()?, n_experts);
@@ -530,10 +609,26 @@ impl InferenceEngine {
                             route_stats.repair_bytes +=
                                 store.copy_expert_into(l, e, &mut weights)? as u64;
                         }
-                        route_stats.rerun_layers += 1;
+                        // Contract v3: re-execute ONLY the expert tail.
+                        // The fused run already emitted the dense-prefix
+                        // activations (h, moe_in) and the full routing
+                        // quadruple — all valid despite the stale expert
+                        // slices — so the repair costs dispatch → FFN →
+                        // combine, never a second attention pass.
+                        route_stats.rerun_tails += 1;
                         let tr = Instant::now();
-                        out = run(&weights, &x)?;
-                        timing.compute_secs += tr.elapsed().as_secs_f64();
+                        let mut tail_in: Vec<&HostTensor> = vec![
+                            &out[h_out],
+                            &out[moe_in_out],
+                            &out[route_out],
+                            &out[gate_out],
+                            &out[pos_out],
+                            &out[keep_out],
+                        ];
+                        tail_in.extend(tail_weight_idx.iter().map(|&wi| &weights[wi]));
+                        let y = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
+                        timing.tail_secs += tr.elapsed().as_secs_f64();
+                        out[y_out] = y;
                     }
                 }
                 x = out.swap_remove(y_out);
@@ -636,7 +731,12 @@ impl DecodeModel for InferenceEngine {
         reg.gauge("route.repaired_experts").set(rs.repaired_experts);
         reg.gauge("route.repair_bytes").set(rs.repair_bytes);
         reg.gauge("route.rerun_layers").set(rs.rerun_layers);
+        reg.gauge("route.rerun_tails").set(rs.rerun_tails);
         reg.gauge("route.carried_plans").set(rs.carried_plans);
+        // Timing gauges travel as integer microseconds (the registry is
+        // u64-valued); `/stats` renders them back as milliseconds.
+        reg.gauge("route.plan_us").set((self.timing.plan_secs * 1e6) as u64);
+        reg.gauge("route.tail_rerun_us").set((self.timing.tail_secs * 1e6) as u64);
         if let Some(r) = self.ring_stats() {
             reg.gauge("ring.copy_bytes").set(r.copy_bytes);
             reg.gauge("ring.loads").set(r.loads);
@@ -696,6 +796,36 @@ mod tests {
         let rs = routed.route_stats();
         assert!(rs.exact_experts > 0, "exact sets must have been computed");
         assert!(rs.planned_experts > 0, "plans must have been produced");
+        assert_eq!(
+            rs.rerun_layers, 0,
+            "contract v3: a plan miss repairs the expert tail, never the whole layer"
+        );
+    }
+
+    /// The contract-v3 acceptance: force a miss on EVERY routed layer
+    /// (a planner that predicts almost nothing) and the repair path —
+    /// splice + `expert_tail` re-execution, no second attention pass —
+    /// must still decode bit-identically to the dense ring.
+    #[test]
+    fn forced_misses_repair_via_expert_tail_bitwise() {
+        use crate::moe::routing::EmptyPlanSource;
+
+        let mut dense = engine(InferMode::Ring { k: 3 });
+        let mut routed = engine(InferMode::Ring { k: 3 });
+        routed.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.0 });
+        routed.set_route_source(Box::new(EmptyPlanSource));
+        let model = dense.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 11 + 3; 5]).collect();
+        let a = dense.generate(&prompts, 3).unwrap();
+        let b = routed.generate(&prompts, 3).unwrap();
+        assert_eq!(a, b, "tail-only repair must not change decode numerics");
+        let rs = routed.route_stats();
+        assert!(rs.rerun_tails > 0, "forced misses must have repaired via the tail");
+        assert_eq!(rs.rerun_layers, 0, "no full-layer re-run may happen on the repair path");
+        assert!(rs.repaired_experts > 0 && rs.repair_bytes > 0);
+        assert!(routed.timing.tail_secs > 0.0, "tail repair time is accounted");
+        assert_eq!(routed.timing.shadow_secs, 0.0);
     }
 
     /// Routed mode through the serving slot path: same numerics as

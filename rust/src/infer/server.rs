@@ -506,7 +506,12 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("route_repaired_experts", Json::num(reg.gauge("route.repaired_experts").get() as f64)),
         ("route_repair_bytes", Json::num(reg.gauge("route.repair_bytes").get() as f64)),
         ("route_rerun_layers", Json::num(reg.gauge("route.rerun_layers").get() as f64)),
+        ("route_rerun_tails", Json::num(reg.gauge("route.rerun_tails").get() as f64)),
         ("route_carried_plans", Json::num(reg.gauge("route.carried_plans").get() as f64)),
+        // Planner/repair timing: published as integer microseconds
+        // (gauges are u64), rendered here as milliseconds.
+        ("plan_ms", Json::num(reg.gauge("route.plan_us").get() as f64 / 1e3)),
+        ("tail_rerun_ms", Json::num(reg.gauge("route.tail_rerun_us").get() as f64 / 1e3)),
         ("ring_copy_bytes", Json::num(reg.gauge("ring.copy_bytes").get() as f64)),
         ("counters", reg.snapshot()),
     ])
@@ -687,8 +692,11 @@ mod tests {
                 reg.gauge("route.exact_experts").set(5 * self.steps);
                 reg.gauge("route.repaired_experts").set(self.steps);
                 reg.gauge("route.repair_bytes").set(4096 * self.steps);
-                reg.gauge("route.rerun_layers").set(self.steps);
+                reg.gauge("route.rerun_layers").set(0);
+                reg.gauge("route.rerun_tails").set(self.steps);
                 reg.gauge("route.carried_plans").set(self.steps.saturating_sub(1));
+                reg.gauge("route.plan_us").set(1500 * self.steps);
+                reg.gauge("route.tail_rerun_us").set(2500 * self.steps);
                 reg.gauge("ring.copy_bytes").set(1 << 20);
             }
         }
@@ -713,8 +721,12 @@ mod tests {
         assert!(n("route_exact_experts") >= 5.0);
         assert!(n("route_repaired_experts") >= 1.0);
         assert!(n("route_repair_bytes") >= 4096.0);
-        assert!(n("route_rerun_layers") >= 1.0);
+        assert_eq!(n("route_rerun_layers"), 0.0, "tail-only repairs: no full-layer reruns");
+        assert!(n("route_rerun_tails") >= 1.0);
         assert!(n("route_carried_plans") >= 0.0);
+        // 1500 µs/step published → ≥1.5 ms rendered after the first step.
+        assert!(n("plan_ms") >= 1.5, "plan timing surfaced in ms: {}", n("plan_ms"));
+        assert!(n("tail_rerun_ms") >= 2.5, "tail timing surfaced in ms: {}", n("tail_rerun_ms"));
         assert_eq!(n("ring_copy_bytes"), (1u64 << 20) as f64);
         server.stop();
     }
@@ -731,7 +743,10 @@ mod tests {
             "route_repaired_experts",
             "route_repair_bytes",
             "route_rerun_layers",
+            "route_rerun_tails",
             "route_carried_plans",
+            "plan_ms",
+            "tail_rerun_ms",
             "ring_copy_bytes",
         ] {
             assert_eq!(s.get(k).as_f64(), Some(0.0), "{} must default to 0", k);

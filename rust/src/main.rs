@@ -17,7 +17,7 @@ use semoe::config::presets::{
     cluster_for_gpus, fig10_model, fig11_model, table1_model, table1_rows, table2_model,
     table2_rows, table3_setup,
 };
-use semoe::config::train::{ParamResidency, TrainConfig};
+use semoe::config::train::{ParamResidency, RouteSourceChoice, TrainConfig};
 use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, RoutedRingConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
@@ -65,6 +65,7 @@ fn print_usage() {
                 OptSpec { name: "steps", help: "training steps", default: Some("20"), is_flag: false },
                 OptSpec { name: "lr", help: "learning rate", default: Some("1e-3"), is_flag: false },
                 OptSpec { name: "offload", help: "use hierarchical offload trainer", default: None, is_flag: true },
+                OptSpec { name: "route-source", help: "expert-axis planner: proxy|carried (offload train)", default: Some("proxy"), is_flag: false },
                 OptSpec { name: "ring", help: "ring slots K for inference offload", default: Some("0=resident"), is_flag: false },
                 OptSpec { name: "routed", help: "routed-expert ring passes (copy only planned expert subsets)", default: None, is_flag: true },
                 OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
@@ -101,6 +102,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.u64("seed", 0),
         residency: if args.flag("offload") { ParamResidency::Offload } else { ParamResidency::Resident },
         prefetch_depth: args.usize("prefetch-depth", 1),
+        route_source: {
+            let raw = args.str("route-source", "proxy");
+            RouteSourceChoice::parse(&raw).ok_or_else(|| {
+                anyhow::anyhow!("unknown --route-source '{}' (accepted: proxy|carried)", raw)
+            })?
+        },
         log_every: args.usize("log-every", 5),
         ..Default::default()
     };
@@ -129,6 +136,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         println!(
             "2D prefetch: {} planned, {} demand, {} wasted, {} writebacks, {} catch-up steps",
             ps.planned_fetches, ps.demand_fetches, ps.wasted_fetches, ps.writebacks, ps.catchup_steps
+        );
+        let decided = ps.plan_hit_experts + ps.plan_missed_experts;
+        println!(
+            "route plan [{}]: {:.0}% hit rate ({}/{} experts), {} tail reruns \
+             ({} full-layer), {} carried plans",
+            cfg.route_source.as_str(),
+            100.0 * ps.plan_hit_experts as f64 / decided.max(1) as f64,
+            ps.plan_hit_experts, decided, ps.tail_reruns, ps.reruns, ps.carried_plans
         );
     } else {
         let mut tr = ResidentTrainer::new(arts, cfg.clone())?;
@@ -179,9 +194,10 @@ fn cmd_infer(args: &Args) -> Result<()> {
         let rp = engine.route_stats();
         println!(
             "ring copy lane: {:.1} MB moved; routed plan/exact/repaired experts {}/{}/{} \
-             (carried plans {}, layer reruns {})",
+             (carried plans {}, tail reruns {} in {:.2}s, full-layer reruns {})",
             rs.copy_bytes as f64 / 1e6, rp.planned_experts, rp.exact_experts,
-            rp.repaired_experts, rp.carried_plans, rp.rerun_layers
+            rp.repaired_experts, rp.carried_plans, rp.rerun_tails,
+            engine.timing.tail_secs, rp.rerun_layers
         );
     }
     Ok(())

@@ -256,6 +256,27 @@ impl RouteSource for ShadowOracleSource {
     }
 }
 
+/// Test fixture: a planner that predicts an EMPTY set for every layer,
+/// so every kernel-routed expert is a plan miss — the stress case for
+/// the contract-v3 tail-only repair paths. Shared by the engine and
+/// trainer forced-miss tests.
+#[cfg(test)]
+pub(crate) struct EmptyPlanSource;
+
+#[cfg(test)]
+impl RouteSource for EmptyPlanSource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::EmbeddingProxy
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        PlannedRoute {
+            per_layer: vec![Vec::new(); q.n_layers],
+            provenance: RouteSourceKind::EmbeddingProxy,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -2,11 +2,14 @@
 //! the AOT pipeline) and hands out compiled executables plus the flat
 //! parameter layout (the "parameter management unit"'s source of truth).
 //!
-//! The manifest carries a **contract version** (v2: `layer_fwd` emits
-//! the per-token routing decisions as named outputs). Loading a manifest
-//! written under another contract fails up front with an actionable
-//! "rebuild artifacts" error instead of shape-panicking mid-run, and
-//! `layer_fwd` consumers address its outputs **by name**
+//! The manifest carries a **contract version** (v3: the decoder layer
+//! splits at the dense/sparse boundary — `layer_fwd` emits the routing
+//! quadruple AND the dense-prefix activations `h`/`moe_in`, and the
+//! `layer_dense`/`expert_tail` artifact pair exists so a plan-miss
+//! repair re-executes only the MoE block). Loading a manifest written
+//! under another contract fails up front with an actionable "rebuild
+//! artifacts" error instead of shape-panicking mid-run, and `layer_fwd`
+//! consumers address its outputs **by name**
 //! ([`ArtifactSpec::output_index`]) so a signature change is a load-time
 //! error, never a silently transposed tensor. (Entries whose signatures
 //! are unchanged since v1 — `head_grad`, `layer_bwd`, the adamw group —
@@ -28,7 +31,7 @@ use crate::util::json::Json;
 
 /// The artifact contract this coordinator build understands. Mirrors
 /// `python/compile/aot.py::CONTRACT_VERSION`; bump both sides together.
-pub const CONTRACT_VERSION: usize = 2;
+pub const CONTRACT_VERSION: usize = 3;
 
 /// The remedy line every contract error carries.
 const REBUILD_HINT: &str =
@@ -43,7 +46,9 @@ pub fn validate_contract(j: &Json, origin: &str) -> Result<usize> {
     if found != CONTRACT_VERSION {
         bail!(
             "{}: artifact manifest is contract v{} but this coordinator needs v{} \
-             (layer_fwd must emit route_expert/route_gate) — {}",
+             (layer_fwd must emit the routing quadruple plus the dense-prefix \
+             activations h/moe_in, and the layer_dense/expert_tail pair must be \
+             built for tail-only repairs) — {}",
             origin,
             found,
             CONTRACT_VERSION,
@@ -296,6 +301,26 @@ mod tests {
         assert_eq!(validate_contract(&j, "m").unwrap(), CONTRACT_VERSION);
     }
 
+    /// The v2-manifest regression (the contract-v3 bump): a manifest
+    /// built under the previous contract — `layer_fwd` without the
+    /// dense-prefix activations, no `layer_dense`/`expert_tail` pair —
+    /// must be rejected with the rebuild message, never loaded.
+    #[test]
+    fn contract_v2_manifest_is_rejected_with_rebuild_message() {
+        let v2 = Json::parse(r#"{"contract_version": 2, "artifacts": {}, "params": []}"#).unwrap();
+        let err = validate_contract(&v2, "artifacts/deep/manifest.json").unwrap_err();
+        let msg = format!("{}", err);
+        assert!(msg.contains("contract v2"), "names the found version: {}", msg);
+        assert!(
+            msg.contains(&format!("needs v{}", CONTRACT_VERSION)),
+            "names the needed version: {}",
+            msg
+        );
+        assert!(msg.contains("expert_tail"), "names the missing artifact pair: {}", msg);
+        assert!(msg.contains("rebuild the artifacts"), "actionable remedy: {}", msg);
+        assert!(msg.contains("compile.aot"), "names the tool: {}", msg);
+    }
+
     #[test]
     fn contract_future_manifest_is_rejected_too() {
         let j = Json::parse(r#"{"contract_version": 99}"#).unwrap();
@@ -317,10 +342,13 @@ mod tests {
 
     #[test]
     fn outputs_are_addressed_by_name() {
-        let s = spec_with_outputs(&["y", "aux", "route_expert", "route_gate"]);
+        let s = spec_with_outputs(&[
+            "y", "aux", "route_expert", "route_gate", "route_pos", "route_keep", "h", "moe_in",
+        ]);
         assert_eq!(s.output_index("y").unwrap(), 0);
         assert_eq!(s.output_index("route_expert").unwrap(), 2);
-        assert_eq!(s.output("route_gate").unwrap().name, "route_gate");
+        assert_eq!(s.output_index("h").unwrap(), 6);
+        assert_eq!(s.output("moe_in").unwrap().name, "moe_in");
     }
 
     #[test]

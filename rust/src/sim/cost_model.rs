@@ -185,8 +185,60 @@ impl CostModel {
         let m = &self.model;
         let tokens = (m.batch_size * m.seq_len) as f64;
         let parse = m.n_layers as f64 * tokens * PARSE_OPS_PER_TOKEN / COORD_CPU_FLOPS;
-        let rerun = miss_rate.clamp(0.0, 1.0) * self.step_cost().t_fwd_compute;
+        let rerun =
+            miss_rate.clamp(0.0, 1.0) * m.n_layers as f64 * self.rerun_secs_layer();
         parse + rerun
+    }
+
+    /// Contract-v3 planner cost: same parse, but a miss re-executes only
+    /// the layer's **expert tail** ([`Self::rerun_secs_tail`]) instead
+    /// of the whole layer — the dense-recompute waste the split
+    /// artifact deletes.
+    pub fn plan_secs_kernel_tail(&self, miss_rate: f64) -> f64 {
+        let m = &self.model;
+        let tokens = (m.batch_size * m.seq_len) as f64;
+        let parse = m.n_layers as f64 * tokens * PARSE_OPS_PER_TOKEN / COORD_CPU_FLOPS;
+        let rerun =
+            miss_rate.clamp(0.0, 1.0) * m.n_layers as f64 * self.rerun_secs_tail();
+        parse + rerun
+    }
+
+    // --------------------------------------------------- repair lane
+
+    /// Forward FLOPs per token of ONE layer's expert tail alone:
+    /// dispatch/combine one-hot matmuls + the top-1 expert FFN — no
+    /// attention, no router. The device cost a contract-v3 repair pays.
+    pub fn flops_per_token_tail_layer(&self) -> f64 {
+        let m = &self.model;
+        let (h, f) = (m.d_model as f64, m.d_ff as f64);
+        // dispatch + combine move one [H] row each through the one-hot
+        // product; the FFN is the 4·H·F hot spot.
+        4.0 * h * f + 4.0 * h
+    }
+
+    /// Forward FLOPs per token of ONE whole layer (attention + router +
+    /// expert FFN) — what a contract-v2 full-layer repair pays.
+    pub fn flops_per_token_full_layer(&self) -> f64 {
+        self.flops_per_token_fwd() / self.model.n_layers as f64
+    }
+
+    /// Device seconds to re-execute ONE layer fused (the contract-v2
+    /// repair unit).
+    pub fn rerun_secs_layer(&self) -> f64 {
+        let c = self.step_cost();
+        c.tokens_per_device * self.flops_per_token_full_layer()
+            / self.cluster.effective_flops()
+    }
+
+    /// Device seconds to re-execute ONE layer's expert tail (the
+    /// contract-v3 repair unit). Strictly below
+    /// [`Self::rerun_secs_layer`] — the gap is the attention + router
+    /// compute a tail-only repair never spends (asserted at every
+    /// Table-1 scale).
+    pub fn rerun_secs_tail(&self) -> f64 {
+        let c = self.step_cost();
+        c.tokens_per_device * self.flops_per_token_tail_layer()
+            / self.cluster.effective_flops()
     }
 
     /// Tokens/s for a given per-step wall time (whole job).
@@ -320,6 +372,46 @@ mod tests {
             // at least an order of magnitude above the parse cost, or
             // the ROADMAP's complaint made no sense.
             assert!(shadow > 10.0 * clean, "{} vs {}", shadow, clean);
+        }
+    }
+
+    /// Contract-v3 pricing: a tail-only repair must cost strictly less
+    /// device time than a full-layer re-run — at every Table-1 scale —
+    /// and the v3 planner must price at or below the v2 planner for any
+    /// miss rate (equal only when nothing misses).
+    #[test]
+    fn tail_rerun_prices_below_full_layer_at_table1_scale() {
+        for row in table1_rows() {
+            let cm = CostModel::new(
+                table1_model(row.n_experts, row.batch_size),
+                cluster_for_gpus(row.gpus),
+            );
+            let tail = cm.rerun_secs_tail();
+            let layer = cm.rerun_secs_layer();
+            assert!(tail > 0.0 && layer > 0.0);
+            assert!(
+                tail < layer,
+                "tail repair must undercut the full-layer re-run: {} vs {}",
+                tail,
+                layer
+            );
+            // The saving is the attention+router share — material, not
+            // a rounding artifact (at the table-1 backbone dims the
+            // dense prefix is ~36% of a layer's forward FLOPs).
+            assert!(
+                layer > 1.5 * tail,
+                "the dense prefix must be a material share: {} vs {}",
+                layer,
+                tail
+            );
+            assert_eq!(cm.plan_secs_kernel_tail(0.0), cm.plan_secs_kernel(0.0));
+            for miss in [0.05, 0.25, 1.0] {
+                assert!(
+                    cm.plan_secs_kernel_tail(miss) < cm.plan_secs_kernel(miss),
+                    "v3 planning must beat v2 at miss rate {}",
+                    miss
+                );
+            }
         }
     }
 

@@ -10,12 +10,19 @@
 //! cache, streamed by the **2D (layer × expert) prefetch scheduler**
 //! while per-layer artifacts (`layer_fwd`/`layer_bwd`/`adamw_*`)
 //! execute. The expert axis is driven by routing-ahead through the
-//! unified [`RouteSource`] API (contract v2): the embedding-proxy
-//! source plans the per-layer expert sets before the sweep, and the
-//! **kernel itself emits the exact routed set** (`layer_fwd`'s
-//! `route_expert` output) — a plan miss is repaired by demand-fetching
-//! the missed experts and re-running that layer, which is sound because
-//! the routing outputs depend only on the dense prefix, never on the
+//! unified [`RouteSource`] API: the configured planner
+//! ([`RouteSourceChoice`]: embedding proxy by default, carried kernel
+//! sets for repeated-corpus workloads) plans the per-layer expert sets
+//! before the sweep, and the **kernel itself emits the exact routed
+//! set** (`layer_fwd`'s `route_expert` output) — a plan miss is
+//! repaired by demand-fetching the missed experts and re-executing
+//! ONLY the layer's **expert tail** (contract v3: the fused entry also
+//! emits the dense-prefix activations `h`/`moe_in` plus the routing
+//! quadruple, which with the spliced expert weights are exactly the
+//! `expert_tail` artifact's inputs). The attention prefix is never
+//! recomputed on a repair (`PrefetchStats::tail_reruns`; the legacy
+//! full-layer `reruns` counter stays 0), which is sound because the
+//! routing outputs depend only on the dense prefix, never on the
 //! staged expert weights. The old coordinator-side f64 shadow MHA
 //! recompute is gone from the hot path (it survives only as the parity
 //! oracle in tests); only routed experts (plus the pinned hot set) ever
@@ -48,10 +55,11 @@ fn sync_grad(mesh: &mut Option<MeshHandle>, grad: &mut [f32]) {
 }
 use super::optimizer::{cpu_adamw, cpu_adamw_zero_grad, init_params, Group, ParamState};
 use crate::comm::MeshHandle;
-use crate::config::train::TrainConfig;
+use crate::config::train::{RouteSourceChoice, TrainConfig};
 use crate::metrics::{Phase, Timeline};
 use crate::moe::routing::{
-    routed_set_from_ids, EmbeddingProxySource, LayerParamResolver, RouteQuery, RouteSource,
+    routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource, LayerParamResolver,
+    RouteQuery, RouteSource, RouteSourceKind,
 };
 use crate::moe::LoadStats;
 use crate::prefetch::{RoutePlan, SparseScheduler};
@@ -169,9 +177,26 @@ pub struct PrefetchStats {
     /// waste: the block was staged and spliced but neither updated nor
     /// written back).
     pub wasted_fetches: u64,
-    /// Layers re-executed because the plan missed a routed expert
-    /// (contract-v2 repair: splice the missed blocks, run again).
+    /// Whole layers re-executed on a plan miss — the contract-v2 legacy
+    /// repair (attention included). Tail-only repair (contract v3)
+    /// keeps this at 0; it survives as the regression counter.
     pub reruns: u64,
+    /// `expert_tail` re-executions on a plan miss (contract v3): splice
+    /// the missed blocks, re-run only dispatch → expert FFN → combine
+    /// over the already-emitted dense-prefix activations.
+    pub tail_reruns: u64,
+    /// Kernel-exact routed experts the pre-sweep plan covered — the
+    /// per-run numerator of the plan hit rate
+    /// (`plan_hit_experts / (plan_hit_experts + plan_missed_experts)`),
+    /// the A/B metric for [`RouteSourceChoice`].
+    pub plan_hit_experts: u64,
+    /// Kernel-exact routed experts the plan missed (each one forced a
+    /// demand fetch + a tail re-execution on its layer).
+    pub plan_missed_experts: u64,
+    /// Sweeps planned from the previous step's kernel-emitted sets
+    /// instead of a fresh prediction ([`RouteSourceChoice::CarriedKernel`]
+    /// after its first observed sweep).
+    pub carried_plans: u64,
     /// Zero-grad AdamW steps replayed on cold-fetched expert blocks.
     pub catchup_steps: u64,
     /// Dirty expert blocks written back to the store.
@@ -188,6 +213,10 @@ pub struct OffloadTrainer {
     embed_fwd: Rc<ArtifactExe>,
     embed_bwd: Rc<ArtifactExe>,
     layer_fwd: Rc<ArtifactExe>,
+    /// The layer's sparse half alone (contract v3) — the plan-miss
+    /// repair executable: dispatch → expert FFN → gated combine over
+    /// the fused entry's emitted activations.
+    expert_tail: Rc<ArtifactExe>,
     layer_bwd: Rc<ArtifactExe>,
     head_grad: Rc<ArtifactExe>,
     /// AdamW artifacts retained for parity testing against `cpu_adamw`
@@ -209,17 +238,29 @@ pub struct OffloadTrainer {
     sched: SparseScheduler,
     /// Expert-axis split metadata (clone of the store's).
     layout: SparseLayout,
-    /// The route planner (contract v2). The trainer keeps the embedding
-    /// proxy: every step is a fresh batch, so carried kernel sets from
-    /// the *previous* batch predict worse than the proxy on this batch's
-    /// own tokens (hot pins already carry the cross-step signal).
-    /// Exact sets come from the kernel during the sweep.
+    /// The route planner, chosen by [`TrainConfig::route_source`]. The
+    /// embedding proxy is the default — every step is a fresh batch, so
+    /// carried kernel sets from the *previous* batch usually predict
+    /// worse than the proxy on this batch's own tokens (hot pins
+    /// already carry the cross-step signal) — but repeated-corpus
+    /// workloads can A/B [`RouteSourceChoice::CarriedKernel`] against
+    /// it and read the answer off the `PrefetchStats` hit-rate
+    /// counters. Exact sets come from the kernel during the sweep.
     route: Box<dyn RouteSource>,
     /// `layer_fwd` output positions, resolved by name (stale manifests
     /// fail construction with the rebuild hint).
     lf_y: usize,
     lf_aux: usize,
     lf_route: usize,
+    /// The rest of the `expert_tail` feed: routing quadruple +
+    /// dense-prefix activations (contract v3).
+    lf_gate: usize,
+    lf_pos: usize,
+    lf_keep: usize,
+    lf_h: usize,
+    lf_moe_in: usize,
+    /// `expert_tail`'s y output position.
+    tail_y: usize,
     /// Per-layer rolling expert load → hot-set pinning.
     load: Vec<LoadStats>,
     /// Per-layer hot experts, pinned in the CPU cache and unioned into
@@ -244,8 +285,8 @@ impl OffloadTrainer {
         mesh: Option<MeshHandle>,
     ) -> Result<OffloadTrainer> {
         for needed in [
-            "embed_fwd", "embed_bwd", "layer_fwd", "layer_bwd", "head_grad",
-            "adamw_layer", "adamw_embed", "adamw_head",
+            "embed_fwd", "embed_bwd", "layer_fwd", "expert_tail", "layer_bwd",
+            "head_grad", "adamw_layer", "adamw_embed", "adamw_head",
         ] {
             if !arts.has(needed) {
                 anyhow::bail!("preset {} lacks artifact '{}'", arts.preset.name, needed);
@@ -288,11 +329,19 @@ impl OffloadTrainer {
         }
         let layout = store.layout().clone();
         let sched = SparseScheduler::spawn(store);
-        let route: Box<dyn RouteSource> = Box::new(EmbeddingProxySource::new(
-            model.d_model,
-            model.n_heads,
-            model.n_experts,
-        ));
+        let route: Box<dyn RouteSource> = match cfg.route_source {
+            RouteSourceChoice::EmbeddingProxy => Box::new(EmbeddingProxySource::new(
+                model.d_model,
+                model.n_heads,
+                model.n_experts,
+            )),
+            RouteSourceChoice::CarriedKernel => Box::new(CarriedKernelSource::with_proxy(
+                model.n_layers,
+                model.d_model,
+                model.n_heads,
+                model.n_experts,
+            )),
+        };
         let load = (0..model.n_layers)
             .map(|_| LoadStats::new(model.n_experts, 0.5))
             .collect();
@@ -303,18 +352,26 @@ impl OffloadTrainer {
         let corpus =
             SyntheticCorpus::new(model.vocab_size, cfg.corpus_skew, cfg.seed + 1 + 1000 * rank_seed);
 
-        // Contract v2: address the layer outputs by name; a stale
+        // Contract v3: address the layer outputs by name; a stale
         // manifest fails here with the rebuild hint instead of slicing
         // the wrong tensor mid-sweep.
         let layer_fwd = arts.load_exe("layer_fwd")?;
         let lf_y = layer_fwd.output_index("y")?;
         let lf_aux = layer_fwd.output_index("aux")?;
         let lf_route = layer_fwd.output_index("route_expert")?;
+        let lf_gate = layer_fwd.output_index("route_gate")?;
+        let lf_pos = layer_fwd.output_index("route_pos")?;
+        let lf_keep = layer_fwd.output_index("route_keep")?;
+        let lf_h = layer_fwd.output_index("h")?;
+        let lf_moe_in = layer_fwd.output_index("moe_in")?;
+        let expert_tail = arts.load_exe("expert_tail")?;
+        let tail_y = expert_tail.output_index("y")?;
 
         Ok(OffloadTrainer {
             embed_fwd: arts.load_exe("embed_fwd")?,
             embed_bwd: arts.load_exe("embed_bwd")?,
             layer_fwd,
+            expert_tail,
             layer_bwd: arts.load_exe("layer_bwd")?,
             head_grad: arts.load_exe("head_grad")?,
             adamw_layer: arts.load_exe("adamw_layer")?,
@@ -330,6 +387,12 @@ impl OffloadTrainer {
             lf_y,
             lf_aux,
             lf_route,
+            lf_gate,
+            lf_pos,
+            lf_keep,
+            lf_h,
+            lf_moe_in,
+            tail_y,
             load,
             hot,
             stamps,
@@ -350,6 +413,15 @@ impl OffloadTrainer {
     /// Expert-axis split metadata of the sparse tail.
     pub fn sparse_layout(&self) -> &SparseLayout {
         &self.layout
+    }
+
+    /// Swap the route planner behind the [`RouteSource`] API. The
+    /// config-driven choice happens in [`Self::new`]
+    /// ([`TrainConfig::route_source`]); tests inject degenerate
+    /// planners here to force plan misses. Any carried state is the
+    /// new source's concern — the kernel keeps feeding `observe`.
+    pub fn set_route_source(&mut self, src: Box<dyn RouteSource>) {
+        self.route = src;
     }
 
 
@@ -378,16 +450,19 @@ impl OffloadTrainer {
 
         // Disjoint field borrows for the timed closures below.
         let OffloadTrainer {
-            embed_fwd, embed_bwd, layer_fwd, layer_bwd, head_grad,
+            embed_fwd, embed_bwd, layer_fwd, expert_tail, layer_bwd, head_grad,
             adamw_layer: _, adamw_embed: _, adamw_head: _,
             embed, head, layers, sched, layout, route, lf_y, lf_aux, lf_route,
+            lf_gate, lf_pos, lf_keep, lf_h, lf_moe_in, tail_y,
             load, hot, stamps, pstats, mesh, timeline, ..
         } = self;
         let (lf_y, lf_aux, lf_route) = (*lf_y, *lf_aux, *lf_route);
+        let (lf_gate, lf_pos, lf_keep) = (*lf_gate, *lf_pos, *lf_keep);
+        let (lf_h, lf_moe_in, tail_y) = (*lf_h, *lf_moe_in, *tail_y);
 
         // ---- Routing-ahead: plan the expert axis before the sweep via
-        // the RouteSource (embedding proxy ∪ pinned hot set). Exactness
-        // is not needed here — each layer's own kernel-emitted
+        // the configured RouteSource (prediction ∪ pinned hot set).
+        // Exactness is not needed here — each layer's own kernel-emitted
         // `route_expert` output repairs the plan below.
         let plan = timeline.time(Phase::Scheduling, || -> Result<RoutePlan> {
             if !expert_prefetch {
@@ -401,7 +476,11 @@ impl OffloadTrainer {
                 n_experts,
                 params: &params,
             };
-            Ok(RoutePlan::from_source(route.as_mut(), &q, hot).0)
+            let (p, provenance) = RoutePlan::from_source(route.as_mut(), &q, hot);
+            if provenance == RouteSourceKind::KernelEmitted {
+                pstats.carried_plans += 1;
+            }
+            Ok(p)
         })?;
 
         // ---- Sparse lane: request the planned window of (layer, expert)
@@ -459,10 +538,12 @@ impl OffloadTrainer {
                 )?;
             }
 
-            // Run the layer. The kernel emits the exact routed set as
-            // the named `route_expert` output (contract v2) — valid even
-            // if the plan missed an expert, because routing depends only
-            // on the dense prefix, never on the staged expert weights.
+            // Run the layer (the fused fast path). The kernel emits the
+            // exact routed set as the named `route_expert` output —
+            // valid even if the plan missed an expert, because routing
+            // depends only on the dense prefix, never on the staged
+            // expert weights — plus the dense-prefix activations the
+            // tail-only repair below reuses.
             let mut inputs = vec![x.clone()];
             inputs.extend(layers[l].tensors());
             let mut out = timeline.time(Phase::Compute, || layer_fwd.run(&inputs))?;
@@ -475,11 +556,16 @@ impl OffloadTrainer {
 
             if expert_prefetch {
                 // Repair a plan miss: demand-fetch the missed experts,
-                // splice, and re-run the layer with fresh weights (its
-                // routing outputs were already exact; only `y` needs the
-                // spliced state).
+                // splice, and re-execute ONLY the expert tail (contract
+                // v3). The fused run already emitted the dense-prefix
+                // activations and the routing quadruple — all valid
+                // despite the stale expert scratch — so the repair
+                // costs dispatch → FFN → combine, never a second
+                // attention pass.
                 let missed: Vec<usize> =
                     exact.iter().copied().filter(|&e| !plan.contains(l, e)).collect();
+                pstats.plan_hit_experts += (exact.len() - missed.len()) as u64;
+                pstats.plan_missed_experts += missed.len() as u64;
                 if !missed.is_empty() {
                     for &e in &missed {
                         let seq = sched.request(l, e);
@@ -489,10 +575,25 @@ impl OffloadTrainer {
                             stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
                         )?;
                     }
-                    pstats.reruns += 1;
-                    let mut inputs = vec![x.clone()];
-                    inputs.extend(layers[l].tensors());
-                    out = timeline.time(Phase::Compute, || layer_fwd.run(&inputs))?;
+                    pstats.tail_reruns += 1;
+                    // Borrow the activations straight out of the fused
+                    // run (run_ref — no clones); only the spliced
+                    // expert tensors are materialized, as any layer run
+                    // must.
+                    let tail_weights = sparse_tensors(&layers[l]);
+                    let mut tail_in: Vec<&HostTensor> = vec![
+                        &out[lf_h],
+                        &out[lf_moe_in],
+                        &out[lf_route],
+                        &out[lf_gate],
+                        &out[lf_pos],
+                        &out[lf_keep],
+                    ];
+                    tail_in.extend(tail_weights.iter());
+                    let y = timeline
+                        .time(Phase::Compute, || expert_tail.run_ref(&tail_in))?
+                        .swap_remove(tail_y);
+                    out[lf_y] = y;
                 }
                 // Plan waste: planned experts the batch never routed to.
                 pstats.wasted_fetches += plan
@@ -714,6 +815,16 @@ fn embed_tensor(state: &ParamState) -> HostTensor {
     HostTensor::from_f32(&s.shape, state.p.unpack(&s.name).to_vec())
 }
 
+/// The four expert tensors of a layer's resident state, in member
+/// (w1/b1/w2/b2) order — the `expert_tail` artifact's parameter feed.
+fn sparse_tensors(st: &ParamState) -> Vec<HostTensor> {
+    st.members
+        .iter()
+        .filter(|s| s.sparse)
+        .map(|s| HostTensor::from_f32(&s.shape, st.p.unpack(&s.name).to_vec()))
+        .collect()
+}
+
 /// Replay the zero-grad AdamW steps an expert missed while cold on SSD,
 /// bringing `block` current **through** optimizer step `through`
 /// (inclusive). Owns the stamp/replay range arithmetic for all three
@@ -873,6 +984,103 @@ mod tests {
         );
         assert!(ps.planned_fetches > 0);
         assert!(ps.writebacks > 0);
+    }
+
+    /// The contract-v3 acceptance, trainer side: force a miss on every
+    /// layer every step (a planner that predicts nothing) — repairs run
+    /// ONLY `expert_tail`, never the whole layer, and the math stays
+    /// bit-equal to the well-planned run.
+    #[test]
+    fn plan_miss_repairs_execute_only_the_expert_tail() {
+        use crate::moe::routing::EmptyPlanSource;
+
+        let arts = Rc::new(ModelArtifacts::load("tiny").unwrap());
+        let m = arts.preset.clone();
+        let data = batches(2, 77, &m);
+        // Step 1's plan is exactly empty (no hot pins recorded yet), so
+        // every routed expert of every layer misses; later steps' plans
+        // hold only the hot-pin union — most of the routed set still
+        // misses and repairs through the tail.
+        let mut planned = OffloadTrainer::new(arts.clone(), cfg(2), None).unwrap();
+        let mut unplanned = OffloadTrainer::new(arts.clone(), cfg(2), None).unwrap();
+        unplanned.set_route_source(Box::new(EmptyPlanSource));
+        for (t, l) in &data {
+            let a = planned.step_on(t.clone(), l.clone()).unwrap();
+            let b = unplanned.step_on(t.clone(), l.clone()).unwrap();
+            assert_eq!(a.loss, b.loss, "tail-only repair must not change the math");
+            assert_eq!(a.ce, b.ce);
+        }
+        let ps = unplanned.prefetch_stats();
+        assert!(ps.tail_reruns > 0, "forced misses must have repaired via the tail");
+        assert_eq!(ps.reruns, 0, "no full-layer re-run may happen on the repair path");
+        assert!(ps.plan_missed_experts > 0);
+        assert_eq!(
+            planned.prefetch_stats().reruns,
+            0,
+            "the well-planned run repairs tail-only too"
+        );
+    }
+
+    /// The route-source A/B (ROADMAP item): on a repeated-corpus
+    /// workload — the same batch step after step, lr = 0 so routing is
+    /// frozen — the carried-kernel planner reaches a 100% plan hit rate
+    /// from its second sweep on, while staying numerics-neutral
+    /// against the embedding proxy.
+    #[test]
+    fn carried_kernel_source_wins_on_repeated_batches() {
+        use crate::config::train::RouteSourceChoice;
+
+        let arts = Rc::new(ModelArtifacts::load("tiny").unwrap());
+        let m = arts.preset.clone();
+        let mut corpus = SyntheticCorpus::new(m.vocab_size, 1.05, 31);
+        let (tok, lab) = corpus.next_batch(m.batch_size, m.seq_len);
+        let t = HostTensor::from_i32(&[m.batch_size, m.seq_len], tok);
+        let l = HostTensor::from_i32(&[m.batch_size, m.seq_len], lab);
+
+        let mut mk = |src: RouteSourceChoice| {
+            let mut c = cfg(3);
+            c.lr = 0.0; // freeze params → identical routing every step
+            c.route_source = src;
+            OffloadTrainer::new(arts.clone(), c, None).unwrap()
+        };
+        let mut proxy = mk(RouteSourceChoice::EmbeddingProxy);
+        let mut carried = mk(RouteSourceChoice::CarriedKernel);
+
+        // Step 1: the carried source has observed nothing — it falls
+        // back to the proxy, so both trainers are identical so far.
+        let a1 = proxy.step_on(t.clone(), l.clone()).unwrap();
+        let b1 = carried.step_on(t.clone(), l.clone()).unwrap();
+        assert_eq!(a1.loss, b1.loss, "planner choice must be numerics-neutral");
+        let miss_after_1 = carried.prefetch_stats().plan_missed_experts;
+
+        // Steps 2..: the carried plan IS the previous sweep's exact set
+        // — on a repeated batch with frozen weights, a perfect plan.
+        for _ in 0..2 {
+            let a = proxy.step_on(t.clone(), l.clone()).unwrap();
+            let b = carried.step_on(t.clone(), l.clone()).unwrap();
+            assert_eq!(a.loss, b.loss);
+        }
+        let ps = carried.prefetch_stats();
+        assert_eq!(ps.carried_plans, 2, "every sweep after the first carries kernel sets");
+        assert_eq!(
+            ps.plan_missed_experts, miss_after_1,
+            "carried plans must not miss on a repeated batch (100% hit rate)"
+        );
+        assert!(ps.plan_hit_experts > 0);
+        // The A/B readout: the carried planner's hit rate dominates the
+        // proxy's on this workload (ties allowed — tiny routes almost
+        // everything — but it must never be worse).
+        let pp = proxy.prefetch_stats();
+        let rate = |s: &PrefetchStats| {
+            s.plan_hit_experts as f64
+                / (s.plan_hit_experts + s.plan_missed_experts).max(1) as f64
+        };
+        assert!(
+            rate(&ps) >= rate(&pp),
+            "carried {} must be >= proxy {} on a repeated corpus",
+            rate(&ps),
+            rate(&pp)
+        );
     }
 
     #[test]

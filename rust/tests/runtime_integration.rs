@@ -132,13 +132,16 @@ fn layer_fwd_shapes_and_determinism() {
         .collect();
     let out1 = exe.run(&inputs).unwrap();
     let out2 = exe.run(&inputs).unwrap();
-    // Contract v2: y, aux, route_expert, route_gate — addressed by name.
-    assert_eq!(out1.len(), 4);
+    // Contract v3: y, aux, the routing quadruple, and the dense-prefix
+    // activations h/moe_in — addressed by name.
+    assert_eq!(out1.len(), 8);
     let iy = exe.output_index("y").unwrap();
     let ie = exe.output_index("route_expert").unwrap();
     let ig = exe.output_index("route_gate").unwrap();
+    let ih = exe.output_index("h").unwrap();
     let (b, t) = (a.preset.batch_size, a.preset.seq_len);
     assert_eq!(out1[iy].shape, vec![b, t, a.preset.d_model]);
+    assert_eq!(out1[ih].shape, vec![b, t, a.preset.d_model]);
     assert_eq!(out1[iy], out2[iy], "execution must be deterministic");
     let aux = out1[exe.output_index("aux").unwrap()].scalar().unwrap();
     assert!(aux.is_finite() && aux > 0.0);
@@ -149,6 +152,92 @@ fn layer_fwd_shapes_and_determinism() {
     assert!(ids.iter().all(|&e| e >= 0 && (e as usize) < a.preset.n_experts));
     let gates = out1[ig].as_f32().unwrap();
     assert!(gates.iter().all(|&g| (0.0..=1.0).contains(&g)));
+}
+
+/// The contract-v3 composition, on the REAL artifacts: running
+/// `expert_tail` on the fused `layer_fwd`'s emitted activations with the
+/// same expert weights must reproduce `y` bit for bit — this is the
+/// soundness basis of tail-only plan-miss repair in both engines.
+#[test]
+fn expert_tail_composes_bitwise_with_layer_fwd() {
+    let a = arts();
+    let fused = a.load_exe("layer_fwd").unwrap();
+    let tail = a.load_exe("expert_tail").unwrap();
+    let mut rng = Rng::new(17);
+    let inputs: Vec<HostTensor> = fused
+        .spec
+        .inputs
+        .iter()
+        .map(|s| {
+            if s.dtype == semoe::runtime::DType::I32 {
+                HostTensor::from_i32(&s.shape, vec![0; s.shape.iter().product::<usize>().max(1)])
+            } else {
+                HostTensor::randn(&s.shape, 0.05, &mut rng)
+            }
+        })
+        .collect();
+    let out = fused.run(&inputs).unwrap();
+    // Tail inputs by name: the activations/routing from the fused run,
+    // then the expert tensors from the fused input list.
+    let mut tail_in: Vec<HostTensor> = Vec::new();
+    for name in ["h", "moe_in", "route_expert", "route_gate", "route_pos", "route_keep"] {
+        tail_in.push(out[fused.output_index(name).unwrap()].clone());
+    }
+    for name in ["w1", "b1", "w2", "b2"] {
+        let pos = fused
+            .spec
+            .inputs
+            .iter()
+            .position(|i| i.name == name)
+            .expect("expert weight in layer_fwd signature");
+        tail_in.push(inputs[pos].clone());
+    }
+    let y_tail = tail.run(&tail_in).unwrap().remove(tail.output_index("y").unwrap());
+    let iy = fused.output_index("y").unwrap();
+    assert_eq!(y_tail, out[iy], "expert_tail ∘ layer_fwd activations must equal fused y");
+}
+
+/// `layer_dense` carries no expert weights in its signature, and its
+/// outputs agree bitwise with the fused entry's dense-prefix outputs.
+#[test]
+fn layer_dense_signature_and_parity() {
+    let a = arts();
+    let fused = a.load_exe("layer_fwd").unwrap();
+    let dense = a.load_exe("layer_dense").unwrap();
+    for banned in ["w1", "b1", "w2", "b2"] {
+        assert!(
+            !dense.spec.inputs.iter().any(|i| i.name == banned),
+            "layer_dense must not take expert weights ({})",
+            banned
+        );
+    }
+    let mut rng = Rng::new(23);
+    let inputs: Vec<HostTensor> = fused
+        .spec
+        .inputs
+        .iter()
+        .map(|s| HostTensor::randn(&s.shape, 0.05, &mut rng))
+        .collect();
+    let fused_out = fused.run(&inputs).unwrap();
+    // layer_dense's inputs are a prefix-by-name of layer_fwd's.
+    let dense_in: Vec<HostTensor> = dense
+        .spec
+        .inputs
+        .iter()
+        .map(|s| {
+            let pos = fused.spec.inputs.iter().position(|i| i.name == s.name).unwrap();
+            inputs[pos].clone()
+        })
+        .collect();
+    let dense_out = dense.run(&dense_in).unwrap();
+    for name in ["h", "moe_in", "aux", "route_expert", "route_gate", "route_pos", "route_keep"] {
+        assert_eq!(
+            dense_out[dense.output_index(name).unwrap()],
+            fused_out[fused.output_index(name).unwrap()],
+            "layer_dense '{}' must match the fused dense prefix",
+            name
+        );
+    }
 }
 
 #[test]

@@ -26,18 +26,23 @@ echo "== tier1: admission-queue property + ring stress regression tests (smoke)"
 SEMOE_SMOKE=1 cargo test -q prop_admission_queue_invariants
 SEMOE_SMOKE=1 cargo test -q stress_aborted_routed_and_slow_passes
 
-echo "== tier1: artifact-contract regression (v1 manifest → actionable rebuild error)"
+echo "== tier1: artifact-contract regression (v1/v2 manifests → actionable rebuild error)"
 cargo test -q contract_v1_manifest_is_actionable
+cargo test -q contract_v2_manifest_is_rejected_with_rebuild_message
 cargo test -q missing_output_names_the_remedy
 
-echo "== tier1: python-side layer_fwd contract check (v2 output set)"
+echo "== tier1: tail-only repair regression (contract v3: no full-layer re-runs)"
+cargo test -q forced_misses_repair_via_expert_tail_bitwise
+cargo test -q plan_miss_repairs_execute_only_the_expert_tail
+
+echo "== tier1: python-side layer contract check (v3: split + composition bit-identity)"
 if python3 -c "import jax" >/dev/null 2>&1; then
     (cd python && python3 -m pytest tests/test_contract.py -q)
 else
     echo "tier1: jax unavailable — skipping python contract check" >&2
 fi
 
-echo "== tier1: 2D-prefetch ablation smoke (asserts 2D < 1D bytes under skew, v2 planner < v1 shadow cost)"
+echo "== tier1: 2D-prefetch ablation smoke (asserts 2D < 1D bytes under skew, v2 planner < v1 shadow cost, v3 tail rerun < v2 full-layer rerun)"
 SEMOE_SMOKE=1 cargo bench --bench ablation_prefetch
 
 echo "== tier1: routed-vs-dense ring ablation smoke (asserts routed < dense bytes under skew)"
