@@ -1,0 +1,207 @@
+//! `BENCH_tier1.json` — the persistent perf-trajectory stub tier1 writes
+//! after its smoke benches (ROADMAP item 5 wants a per-PR perf history,
+//! and this file is the first point on that curve).
+//!
+//! The smoke benches already save structured reports under `reports/`
+//! (`Report::save` → `{name, tables: [{title, columns, rows}], notes}`);
+//! this module re-reads three of them and distils headline numbers:
+//!
+//! - `tokens_per_s` — measured continuous-batching serving throughput
+//!   (`table2_inference`).
+//! - `ring_copy_mb` / `plan_hit_rate` — routed ring traffic and the
+//!   planned-vs-repaired expert ratio (`fig10_ring_offload`).
+//! - `plan_cost_ms` / `tail_repair_ms` — v3 planner cost and the
+//!   expert-tail repair price (`ablation_prefetch`).
+//!
+//! Extraction is deliberately lenient: a missing report, table, column,
+//! or row yields `null` for that field, never an error — smoke-mode runs
+//! on a loaded CI box must not fail the gate over a report shape drift.
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+
+/// Repo-relative output path.
+pub const BENCH_STUB_PATH: &str = "BENCH_tier1.json";
+
+/// The reports the stub distils (under `reports/`).
+pub const SOURCE_REPORTS: [&str; 3] =
+    ["table2_inference.json", "fig10_ring_offload.json", "ablation_prefetch.json"];
+
+/// The numeric value at (first table whose title contains `title_frag`,
+/// first row whose label cell contains `row_frag`, first column whose
+/// header contains `col_frag`). `None` on any miss.
+pub fn cell(report: &Json, title_frag: &str, row_frag: &str, col_frag: &str) -> Option<f64> {
+    for t in report.get("tables").as_arr()? {
+        let title = match t.get("title").as_str() {
+            Some(s) => s,
+            None => continue,
+        };
+        if !title.contains(title_frag) {
+            continue;
+        }
+        let cols = t.get("columns").as_arr()?;
+        let ci = cols
+            .iter()
+            .position(|c| c.as_str().map(|s| s.contains(col_frag)).unwrap_or(false))?;
+        for row in t.get("rows").as_arr()? {
+            let label = row.at(0).as_str().unwrap_or("");
+            if label.contains(row_frag) {
+                return super::num_prefix(row.at(ci).as_str().unwrap_or(""));
+            }
+        }
+    }
+    None
+}
+
+fn opt(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => Json::num(x),
+        None => Json::Null,
+    }
+}
+
+fn load_report(dir: &Path, name: &str) -> Option<Json> {
+    let text = std::fs::read_to_string(dir.join(name)).ok()?;
+    Json::parse(&text).ok()
+}
+
+/// Build the stub Json from whatever reports exist under `root/reports`.
+pub fn build_stub(root: &Path) -> Json {
+    let dir = root.join("reports");
+    let mut sources = Vec::new();
+    let (table2, fig10, ablation) = {
+        let mut get = |name: &str| match load_report(&dir, name) {
+            Some(j) => {
+                sources.push(name.to_string());
+                j
+            }
+            None => Json::Null,
+        };
+        (get(SOURCE_REPORTS[0]), get(SOURCE_REPORTS[1]), get(SOURCE_REPORTS[2]))
+    };
+
+    let ring = "routed vs dense ring (deep preset";
+    let exact = cell(&fig10, ring, "routed", "exact experts");
+    let repaired = cell(&fig10, ring, "routed", "repaired");
+    let plan_hit_rate = match (exact, repaired) {
+        (Some(e), Some(r)) if e > 0.0 => Some(1.0 - r / e),
+        _ => None,
+    };
+
+    let unix = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0);
+    Json::obj(vec![
+        ("schema", Json::str("semoe-bench-tier1/v1")),
+        ("generated_unix", Json::num(unix as f64)),
+        ("tokens_per_s", opt(cell(&table2, "measured serving", "continuous", "useful tokens/s"))),
+        ("ring_copy_mb", opt(cell(&fig10, ring, "routed", "copy MB"))),
+        ("plan_hit_rate", opt(plan_hit_rate)),
+        ("plan_cost_ms", opt(cell(&ablation, "route-planner cost", "(v3)", "cost ms"))),
+        ("tail_repair_ms", opt(cell(&ablation, "plan-miss repair", "expert tail", "cost ms"))),
+        ("sources", Json::arr(sources.into_iter().map(Json::str))),
+    ])
+}
+
+/// Write `BENCH_tier1.json` at the repo root; returns the path written.
+pub fn write_bench_stub(root: &Path) -> Result<PathBuf> {
+    let stub = build_stub(root);
+    let path = root.join(BENCH_STUB_PATH);
+    std::fs::write(&path, stub.pretty() + "\n")
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(title: &str, columns: &[&str], rows: Vec<Vec<&str>>) -> Json {
+        Json::obj(vec![
+            ("name", Json::str("t")),
+            (
+                "tables",
+                Json::arr([Json::obj(vec![
+                    ("title", Json::str(title)),
+                    ("columns", Json::arr(columns.iter().map(|c| Json::str(*c)))),
+                    (
+                        "rows",
+                        Json::arr(
+                            rows.into_iter()
+                                .map(|r| Json::arr(r.into_iter().map(Json::str))),
+                        ),
+                    ),
+                ])]),
+            ),
+            ("notes", Json::arr([])),
+        ])
+    }
+
+    #[test]
+    fn cell_finds_by_fragments_and_parses_suffixed_numbers() {
+        let r = report(
+            "routed vs dense ring (deep preset, identical outputs asserted)",
+            &["pass", "copy MB", "repair MB", "planned experts", "exact experts", "repaired"],
+            vec![
+                vec!["dense", "512.0", "0.0", "-", "-", "-"],
+                vec!["routed", "113.5", "2.2", "460", "448", "12"],
+            ],
+        );
+        assert_eq!(cell(&r, "routed vs dense ring (deep preset", "routed", "copy MB"), Some(113.5));
+        assert_eq!(cell(&r, "routed vs dense ring", "routed", "exact experts"), Some(448.0));
+        assert_eq!(cell(&r, "no such table", "routed", "copy MB"), None);
+        assert_eq!(cell(&r, "routed vs dense", "routed", "no such column"), None);
+        assert_eq!(cell(&r, "routed vs dense", "dense", "planned experts"), None, "non-numeric");
+    }
+
+    #[test]
+    fn stub_from_empty_reports_dir_is_all_null_but_valid() {
+        let dir = tmp_dir("empty");
+        let stub = build_stub(&dir);
+        assert_eq!(stub.get("schema").as_str(), Some("semoe-bench-tier1/v1"));
+        assert!(stub.get("tokens_per_s").is_null());
+        assert!(stub.get("plan_hit_rate").is_null());
+        assert_eq!(stub.get("sources").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn stub_distils_headline_numbers_and_writes_parseable_json() {
+        let dir = tmp_dir("full");
+        let reports = dir.join("reports");
+        std::fs::create_dir_all(&reports).unwrap();
+        let t2 = report(
+            "measured serving (deep preset): 12 mixed-length requests, 4 slots",
+            &["schedule", "decode steps", "wall s", "useful tokens/s"],
+            vec![
+                vec!["batch-synchronous", "40", "1.9", "21.0"],
+                vec!["continuous", "31", "1.2", "33.5"],
+            ],
+        );
+        let f10 = report(
+            "routed vs dense ring (deep preset, identical outputs asserted)",
+            &["pass", "copy MB", "repair MB", "planned experts", "exact experts", "repaired",
+              "tail reruns"],
+            vec![vec!["routed", "113.5", "2.2", "460", "448", "112", "3"]],
+        );
+        std::fs::write(reports.join("table2_inference.json"), t2.to_string()).unwrap();
+        std::fs::write(reports.join("fig10_ring_offload.json"), f10.to_string()).unwrap();
+
+        let path = write_bench_stub(&dir).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.get("tokens_per_s").as_f64(), Some(33.5));
+        assert_eq!(back.get("ring_copy_mb").as_f64(), Some(113.5));
+        let hit = back.get("plan_hit_rate").as_f64().unwrap();
+        assert!((hit - (1.0 - 112.0 / 448.0)).abs() < 1e-9, "hit = {}", hit);
+        assert!(back.get("plan_cost_ms").is_null(), "ablation report absent");
+        assert_eq!(back.get("sources").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("semoe_bench_stub_{}_{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}

@@ -1,0 +1,671 @@
+//! Passes A (contract drift) and B (positional output addressing).
+//!
+//! Pass A parses the python lowering side (`python/compile/aot.py` for the
+//! version constants and the `entry_layer_fwd` / `entry_layer_dense` /
+//! `entry_expert_tail` named-output sets, `python/compile/layers.py` for
+//! the `decoder_layer_split` return arity) and cross-checks it against the
+//! rust side (`runtime/registry.rs::CONTRACT_VERSION` and every
+//! `output_index("…")` call in `infer/engine.rs`, `train/trainer.rs` and
+//! `runtime/`). Pass B flags raw `out[<literal>]` indexing in those same
+//! runtime consumers — the bug class named addressing exists to kill.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{str_args, strip_code, Diagnostic, SrcFile, Tree};
+
+/// `CONTRACT_VERSION` differs between aot.py and registry.rs.
+pub const RULE_VERSION_SKEW: &str = "CONTRACT001";
+/// A consumer resolves an output name no kernel entry emits.
+pub const RULE_UNKNOWN_OUTPUT: &str = "CONTRACT002";
+/// A kernel entry emits an output name with zero consumers.
+pub const RULE_UNCONSUMED_OUTPUT: &str = "CONTRACT003";
+/// `layers.py::decoder_layer_split` arity drifted from `entry_layer_fwd`.
+pub const RULE_ARITY_DRIFT: &str = "CONTRACT004";
+/// `AOT_CODE_VERSION` missing or regressed below `CONTRACT_VERSION`.
+pub const RULE_CODE_VERSION: &str = "CONTRACT005";
+/// Raw positional `out[<literal>]` indexing in a runtime consumer.
+pub const RULE_POSITIONAL_INDEX: &str = "ADDR001";
+
+pub const AOT_PATH: &str = "python/compile/aot.py";
+pub const LAYERS_PATH: &str = "python/compile/layers.py";
+pub const REGISTRY_PATH: &str = "rust/src/runtime/registry.rs";
+
+const REBUILD_REMEDY: &str =
+    "bump both constants together, then rebuild the artifacts (make artifacts)";
+
+/// The contract entries whose named outputs pass A tracks.
+const ENTRIES: [&str; 3] = ["layer_fwd", "layer_dense", "expert_tail"];
+
+/// Rust files whose `output_index("…")` calls count as contract consumers.
+fn consumer_files<'a>(tree: &'a Tree) -> Vec<&'a SrcFile> {
+    tree.files
+        .iter()
+        .filter(|f| {
+            f.path.ends_with("rust/src/infer/engine.rs")
+                || f.path.ends_with("rust/src/train/trainer.rs")
+                || f.path.contains("rust/src/runtime/")
+        })
+        .collect()
+}
+
+pub fn check_contract(tree: &Tree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let (aot, registry) = match (tree.file(AOT_PATH), tree.file(REGISTRY_PATH)) {
+        (Some(a), Some(r)) => (a, r),
+        _ => {
+            let gone = if tree.file(AOT_PATH).is_none() { AOT_PATH } else { REGISTRY_PATH };
+            out.push(missing_file(gone));
+            return out;
+        }
+    };
+
+    // ---- Version constants.
+    let py_contract = py_int_const(aot, "CONTRACT_VERSION");
+    let py_code = py_int_const(aot, "AOT_CODE_VERSION");
+    let rs_contract = rust_int_const(registry, "CONTRACT_VERSION");
+    match (py_contract, rs_contract) {
+        (Some((pl, pv)), Some((rl, rv))) => {
+            if pv != rv {
+                out.push(Diagnostic {
+                    rule: RULE_VERSION_SKEW,
+                    file: registry.path.clone(),
+                    line: rl,
+                    msg: format!(
+                        "contract version skew: {}:{} has CONTRACT_VERSION = {} but {}:{} has \
+                         CONTRACT_VERSION = {}",
+                        aot.path, pl, pv, registry.path, rl, rv
+                    ),
+                    remedy: REBUILD_REMEDY.to_string(),
+                    snippet: registry.lines.get(rl - 1).map(|l| l.trim().to_string()).unwrap_or_default(),
+                });
+            }
+        }
+        (py, rs) => {
+            let (file, what) = if py.is_none() {
+                (aot, "CONTRACT_VERSION not found in")
+            } else {
+                (registry, "const CONTRACT_VERSION not found in")
+            };
+            let _ = rs;
+            out.push(Diagnostic {
+                rule: RULE_VERSION_SKEW,
+                file: file.path.clone(),
+                line: 1,
+                msg: format!("{} {}", what, file.path),
+                remedy: "declare the contract version constant on both sides".to_string(),
+                snippet: String::new(),
+            });
+        }
+    }
+    match (py_code, py_contract) {
+        (Some((_, code)), Some((cl, contract))) if code < contract => {
+            out.push(Diagnostic {
+                rule: RULE_CODE_VERSION,
+                file: aot.path.clone(),
+                line: cl,
+                msg: format!(
+                    "AOT_CODE_VERSION = {} is below CONTRACT_VERSION = {}: a contract bump \
+                     must force re-lowering",
+                    code, contract
+                ),
+                remedy: "bump AOT_CODE_VERSION to at least the contract version".to_string(),
+                snippet: aot.lines.get(cl - 1).map(|l| l.trim().to_string()).unwrap_or_default(),
+            });
+        }
+        (None, _) => {
+            out.push(Diagnostic {
+                rule: RULE_CODE_VERSION,
+                file: aot.path.clone(),
+                line: 1,
+                msg: "AOT_CODE_VERSION not found".to_string(),
+                remedy: "declare AOT_CODE_VERSION next to CONTRACT_VERSION".to_string(),
+                snippet: String::new(),
+            });
+        }
+        _ => {}
+    }
+
+    // ---- Emitted output names per entry.
+    let route = route_spec_names(aot);
+    let mut emitted: BTreeMap<&str, (usize, Vec<String>)> = BTreeMap::new();
+    for entry in ENTRIES {
+        match entry_out_names(aot, entry, &route) {
+            Some((line, names)) => {
+                emitted.insert(entry, (line, names));
+            }
+            None => out.push(Diagnostic {
+                rule: RULE_UNKNOWN_OUTPUT,
+                file: aot.path.clone(),
+                line: 1,
+                msg: format!("could not parse the `outs` list of entry_{}", entry),
+                remedy: "keep the `outs = […]` literal list shape in the entry function".to_string(),
+                snippet: String::new(),
+            }),
+        }
+    }
+    let union: BTreeSet<&str> =
+        emitted.values().flat_map(|(_, ns)| ns.iter().map(|s| s.as_str())).collect();
+
+    // ---- Consumers: every output_index("…") in the runtime surface.
+    let mut consumed: BTreeSet<String> = BTreeSet::new();
+    for f in consumer_files(tree) {
+        let lines = f.code_lines();
+        for (i, line) in lines.iter().enumerate() {
+            for (col, name) in str_args(line, ".output_index(\"") {
+                consumed.insert(name.clone());
+                let recv = super::receiver_before(line, col);
+                let entry = if recv.contains("tail") {
+                    Some("expert_tail")
+                } else if recv.contains("dense") {
+                    Some("layer_dense")
+                } else if recv.contains("layer_fwd") {
+                    Some("layer_fwd")
+                } else {
+                    None
+                };
+                let known = match entry.and_then(|e| emitted.get(e)) {
+                    Some((_, names)) => names.iter().any(|n| n == &name),
+                    None => union.contains(name.as_str()),
+                };
+                if !known {
+                    let scope = entry.unwrap_or("any contract entry");
+                    out.push(Diagnostic {
+                        rule: RULE_UNKNOWN_OUTPUT,
+                        file: f.path.clone(),
+                        line: i + 1,
+                        msg: format!(
+                            "output '{}' is consumed here but {} emits no such name \
+                             (emitted: {})",
+                            name,
+                            scope,
+                            entry
+                                .and_then(|e| emitted.get(e))
+                                .map(|(_, ns)| ns.join(", "))
+                                .unwrap_or_else(|| union.iter().copied().collect::<Vec<_>>().join(", "))
+                        ),
+                        remedy: format!(
+                            "use an emitted name or add '{}' to the entry outs in {}",
+                            name, AOT_PATH
+                        ),
+                        snippet: f.lines.get(i).map(|l| l.trim().to_string()).unwrap_or_default(),
+                    });
+                }
+            }
+        }
+    }
+
+    // ---- Emitted-but-never-consumed (name level across the union, so a
+    // name consumed via any entry counts for all of them).
+    for (entry, (line, names)) in &emitted {
+        for n in names {
+            if !consumed.contains(n) {
+                out.push(Diagnostic {
+                    rule: RULE_UNCONSUMED_OUTPUT,
+                    file: aot.path.clone(),
+                    line: *line,
+                    msg: format!(
+                        "entry_{} emits output '{}' but no runtime consumer resolves it via \
+                         output_index",
+                        entry, n
+                    ),
+                    remedy: "consume the output by name or drop it from the entry outs".to_string(),
+                    snippet: aot.lines.get(line - 1).map(|l| l.trim().to_string()).unwrap_or_default(),
+                });
+            }
+        }
+    }
+
+    // ---- Python-side arity: decoder_layer_split must return exactly the
+    // layer_fwd output tuple.
+    if let (Some(layers), Some((_, lf_names))) = (tree.file(LAYERS_PATH), emitted.get("layer_fwd")) {
+        if let Some((line, arity)) = split_return_arity(layers) {
+            if arity != lf_names.len() {
+                out.push(Diagnostic {
+                    rule: RULE_ARITY_DRIFT,
+                    file: layers.path.clone(),
+                    line,
+                    msg: format!(
+                        "decoder_layer_split returns {} values but entry_layer_fwd names {} \
+                         outputs ({})",
+                        arity,
+                        lf_names.len(),
+                        lf_names.join(", ")
+                    ),
+                    remedy: "keep decoder_layer_split and entry_layer_fwd outs in lockstep"
+                        .to_string(),
+                    snippet: layers.lines.get(line - 1).map(|l| l.trim().to_string()).unwrap_or_default(),
+                });
+            }
+        }
+    }
+
+    out
+}
+
+/// Pass B: raw `out[<literal>]` / `outs[<literal>]` / `outputs[<literal>]`
+/// indexing in runtime consumers (infer/, train/, runtime/; tests excluded).
+pub fn check_positional(tree: &Tree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    for f in tree.files.iter().filter(|f| {
+        f.path.contains("rust/src/infer/")
+            || f.path.contains("rust/src/train/")
+            || f.path.contains("rust/src/runtime/")
+    }) {
+        let stripped = strip_code(&f.code_lines());
+        for (i, line) in stripped.iter().enumerate() {
+            let b: Vec<char> = line.chars().collect();
+            let mut j = 0;
+            while j < b.len() {
+                if super::is_ident_char(b[j]) {
+                    let start = j;
+                    while j < b.len() && super::is_ident_char(b[j]) {
+                        j += 1;
+                    }
+                    let ident: String = b[start..j].iter().collect();
+                    if matches!(ident.as_str(), "out" | "outs" | "outputs")
+                        && b.get(j) == Some(&'[')
+                    {
+                        let idx_start = j + 1;
+                        let mut k = idx_start;
+                        while k < b.len() && b[k] != ']' {
+                            k += 1;
+                        }
+                        let idx: String = b[idx_start..k].iter().collect();
+                        if !idx.is_empty() && idx.chars().all(|c| c.is_ascii_digit()) {
+                            out.push(Diagnostic {
+                                rule: RULE_POSITIONAL_INDEX,
+                                file: f.path.clone(),
+                                line: i + 1,
+                                msg: format!(
+                                    "positional output indexing `{}[{}]` — contract outputs \
+                                     moved across versions; address them by name",
+                                    ident, idx
+                                ),
+                                remedy: "resolve the position via output_index(\"…\"), or \
+                                         allowlist with a justification in rust/lint_allow.txt"
+                                    .to_string(),
+                                snippet: f
+                                    .lines
+                                    .get(i)
+                                    .map(|l| l.trim().to_string())
+                                    .unwrap_or_default(),
+                            });
+                        }
+                    }
+                } else {
+                    j += 1;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn missing_file(path: &str) -> Diagnostic {
+    Diagnostic {
+        rule: RULE_VERSION_SKEW,
+        file: path.to_string(),
+        line: 1,
+        msg: format!("{} not found in the scanned tree", path),
+        remedy: "run lint from a full checkout (or set SEMOE_REPO)".to_string(),
+        snippet: String::new(),
+    }
+}
+
+/// `NAME = <int>` at statement level in a python file → (1-based line, value).
+fn py_int_const(f: &SrcFile, name: &str) -> Option<(usize, i64)> {
+    for (i, l) in f.lines.iter().enumerate() {
+        let t = l.trim_start();
+        if let Some(rest) = t.strip_prefix(name) {
+            if let Some(rest) = rest.trim_start().strip_prefix('=') {
+                let num: String =
+                    rest.trim_start().chars().take_while(|c| c.is_ascii_digit()).collect();
+                if let Ok(v) = num.parse() {
+                    return Some((i + 1, v));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// `const NAME: … = <int>;` in a rust file → (1-based line, value).
+fn rust_int_const(f: &SrcFile, name: &str) -> Option<(usize, i64)> {
+    let stripped = strip_code(&f.lines);
+    for (i, l) in stripped.iter().enumerate() {
+        if l.contains("const ") && l.contains(name) {
+            if let Some(eq) = l.find('=') {
+                let num: String =
+                    l[eq + 1..].trim_start().chars().take_while(|c| c.is_ascii_digit()).collect();
+                if let Ok(v) = num.parse() {
+                    return Some((i + 1, v));
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Indented block of `def <name>(…):` — the lines until the next
+/// column-0 statement. Returns (0-based start index, line slice).
+fn py_block<'a>(f: &'a SrcFile, def: &str) -> Option<(usize, &'a [String])> {
+    let start = f.lines.iter().position(|l| l.starts_with(def))?;
+    let mut end = f.lines.len();
+    for (i, l) in f.lines.iter().enumerate().skip(start + 1) {
+        let first = l.chars().next();
+        if let Some(c) = first {
+            if !c.is_whitespace() && c != '#' {
+                end = i;
+                break;
+            }
+        }
+    }
+    Some((start, &f.lines[start..end]))
+}
+
+/// Tuple-element string names of `_route_specs` (the routing quadruple).
+fn route_spec_names(aot: &SrcFile) -> Vec<String> {
+    match py_block(aot, "def _route_specs(") {
+        Some((_, block)) => tuple_first_strings(&block.join(" ")),
+        None => Vec::new(),
+    }
+}
+
+/// The named outputs of `entry_<name>`: the `outs = …` region's tuple
+/// names, with `_route_specs(…)` spliced in. Returns (1-based line of
+/// the `outs =` statement, names in order).
+fn entry_out_names(aot: &SrcFile, entry: &str, route: &[String]) -> Option<(usize, Vec<String>)> {
+    let (start, block) = py_block(aot, &format!("def entry_{}(", entry))?;
+    let rel = block.iter().position(|l| {
+        let t = l.trim_start();
+        t.starts_with("outs =") || t.starts_with("outs=")
+    })?;
+    // Accumulate the statement until bracket depth returns to zero.
+    let mut region = String::new();
+    let mut depth = 0i64;
+    let mut seen_bracket = false;
+    for l in &block[rel..] {
+        let code = l.split('#').next().unwrap_or("");
+        region.push_str(code);
+        region.push(' ');
+        for c in code.chars() {
+            match c {
+                '(' | '[' => {
+                    depth += 1;
+                    seen_bracket = true;
+                }
+                ')' | ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if seen_bracket && depth <= 0 {
+            break;
+        }
+    }
+    let mut names = Vec::new();
+    let b: Vec<char> = region.chars().collect();
+    let splice: Vec<char> = "_route_specs(".chars().collect();
+    let mut i = 0;
+    while i < b.len() {
+        // `("name",` — a spec tuple's first element.
+        if b[i] == '(' && b.get(i + 1) == Some(&'"') {
+            let mut k = i + 2;
+            while k < b.len() && b[k] != '"' {
+                k += 1;
+            }
+            if b.get(k + 1) == Some(&',') {
+                names.push(b[i + 2..k].iter().collect());
+            }
+            i = k + 1;
+            continue;
+        }
+        // `_route_specs(` — splice the quadruple at this position.
+        if b[i..].starts_with(&splice) && (i == 0 || !super::is_ident_char(b[i - 1])) {
+            names.extend(route.iter().cloned());
+            i += splice.len();
+            continue;
+        }
+        i += 1;
+    }
+    Some((start + rel + 1, names))
+}
+
+/// `("name", …)` first-element strings anywhere in `text`.
+fn tuple_first_strings(text: &str) -> Vec<String> {
+    let b: Vec<char> = text.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == '(' && b.get(i + 1) == Some(&'"') {
+            let mut k = i + 2;
+            while k < b.len() && b[k] != '"' {
+                k += 1;
+            }
+            if b.get(k + 1) == Some(&',') {
+                out.push(b[i + 2..k].iter().collect());
+            }
+            i = k + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Arity of `decoder_layer_split`'s return tuple → (1-based line, arity).
+fn split_return_arity(layers: &SrcFile) -> Option<(usize, usize)> {
+    let (start, block) = py_block(layers, "def decoder_layer_split(")?;
+    let rel = block.iter().rposition(|l| {
+        let t = l.trim_start();
+        t.starts_with("return ") || t.starts_with("return(")
+    })?;
+    let mut expr = String::new();
+    let mut depth = 0i64;
+    for l in &block[rel..] {
+        let code = l.split('#').next().unwrap_or("");
+        expr.push_str(code.trim_start().strip_prefix("return").unwrap_or(code));
+        for c in code.chars() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth -= 1,
+                _ => {}
+            }
+        }
+        if depth <= 0 {
+            break;
+        }
+    }
+    let expr = expr.trim();
+    let expr = expr.strip_prefix('(').and_then(|e| e.strip_suffix(')')).unwrap_or(expr);
+    let mut commas = 0;
+    let mut d = 0i64;
+    for c in expr.chars() {
+        match c {
+            '(' | '[' => d += 1,
+            ')' | ']' => d -= 1,
+            ',' if d == 0 => commas += 1,
+            _ => {}
+        }
+    }
+    if expr.is_empty() {
+        return None;
+    }
+    // Tolerate a trailing comma.
+    let arity = if expr.trim_end().ends_with(',') { commas } else { commas + 1 };
+    Some((start + rel + 1, arity))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Tree;
+    use super::*;
+
+    /// A minimal-but-faithful fixture of both sides of the contract.
+    fn fixture(py_version: i64, rs_version: i64, consume: &str, emit_extra: &str) -> Tree {
+        let aot = format!(
+            "import json\n\
+             AOT_CODE_VERSION = 4\n\
+             CONTRACT_VERSION = {py}\n\
+             \n\
+             def _route_specs(cfg):\n\
+             \x20   return [(\"route_expert\", _spec((B, T), jnp.int32)),\n\
+             \x20           (\"route_gate\", _spec((B, T)))]\n\
+             \n\
+             def entry_layer_fwd(cfg):\n\
+             \x20   ins = [(\"x\", _spec((B, T, H)))]\n\
+             \x20   outs = ([(\"y\", _spec((B, T, H))), (\"aux\", _spec(()))]\n\
+             \x20           + _route_specs(cfg){extra})\n\
+             \x20   return fn, ins, outs\n\
+             \n\
+             def entry_layer_dense(cfg):\n\
+             \x20   outs = [(\"h\", _spec((B, T, H)))] + _route_specs(cfg)\n\
+             \x20   return fn, ins, outs\n\
+             \n\
+             def entry_expert_tail(cfg):\n\
+             \x20   ins = [(\"h\", _spec((B, T, H)))] + _route_specs(cfg)\n\
+             \x20   outs = [(\"y\", _spec((B, T, H)))]\n\
+             \x20   return fn, ins, outs\n",
+            py = py_version,
+            extra = emit_extra,
+        );
+        let layers = "def decoder_layer_split(cfg, x, layer_params):\n\
+                      \x20   h = dense(x)\n\
+                      \x20   return y, aux, route_expert, route_gate\n"
+            .to_string();
+        let registry = format!(
+            "pub const CONTRACT_VERSION: usize = {};\n\
+             pub struct ArtifactSpec;\n",
+            rs_version
+        );
+        let engine = format!(
+            "fn wire(layer_fwd: &Exe, expert_tail: &Exe) {{\n\
+             \x20   let y = layer_fwd.output_index(\"y\")?;\n\
+             \x20   let aux = layer_fwd.output_index(\"aux\")?;\n\
+             \x20   let r = layer_fwd.output_index(\"route_expert\")?;\n\
+             \x20   let g = layer_fwd.output_index(\"route_gate\")?;\n\
+             \x20   let h = dense.output_index(\"h\")?;\n\
+             \x20   let ty = expert_tail.output_index(\"{}\")?;\n\
+             }}\n",
+            consume
+        );
+        Tree::from_files(vec![
+            super::super::SrcFile::new("python/compile/aot.py", &aot),
+            super::super::SrcFile::new("python/compile/layers.py", &layers),
+            super::super::SrcFile::new("rust/src/runtime/registry.rs", &registry),
+            super::super::SrcFile::new("rust/src/infer/engine.rs", &engine),
+        ])
+    }
+
+    #[test]
+    fn clean_fixture_has_no_findings() {
+        let d = check_contract(&fixture(3, 3, "y", ""));
+        assert!(d.is_empty(), "expected clean, got: {:?}", d);
+    }
+
+    #[test]
+    fn version_skew_names_both_files_and_both_values() {
+        let d = check_contract(&fixture(3, 4, "y", ""));
+        let skew: Vec<_> = d.iter().filter(|d| d.rule == RULE_VERSION_SKEW).collect();
+        assert_eq!(skew.len(), 1, "got: {:?}", d);
+        let m = &skew[0].msg;
+        assert!(m.contains("python/compile/aot.py"), "{}", m);
+        assert!(m.contains("rust/src/runtime/registry.rs"), "{}", m);
+        assert!(m.contains("= 3"), "python value named: {}", m);
+        assert!(m.contains("= 4"), "rust value named: {}", m);
+        assert_eq!(skew[0].file, "rust/src/runtime/registry.rs");
+        assert_eq!(skew[0].line, 1);
+    }
+
+    #[test]
+    fn consumed_name_never_emitted_is_flagged_per_entry() {
+        // `expert_tail.output_index("h")` — h is emitted by layer_fwd's
+        // sibling but NOT by expert_tail; receiver attribution catches it.
+        let d = check_contract(&fixture(3, 3, "h", ""));
+        let unknown: Vec<_> = d.iter().filter(|d| d.rule == RULE_UNKNOWN_OUTPUT).collect();
+        assert_eq!(unknown.len(), 1, "got: {:?}", d);
+        assert!(unknown[0].msg.contains("'h'"));
+        assert!(unknown[0].msg.contains("expert_tail"));
+        assert_eq!(unknown[0].file, "rust/src/infer/engine.rs");
+    }
+
+    #[test]
+    fn emitted_name_with_zero_consumers_is_flagged() {
+        let d = check_contract(&fixture(3, 3, "y", " + [(\"moe_in\", _spec((B, T, H)))]"));
+        let un: Vec<_> = d.iter().filter(|d| d.rule == RULE_UNCONSUMED_OUTPUT).collect();
+        assert_eq!(un.len(), 1, "got: {:?}", d);
+        assert!(un[0].msg.contains("'moe_in'"));
+        assert_eq!(un[0].file, "python/compile/aot.py");
+        assert!(un[0].line > 1, "anchored at the outs statement");
+    }
+
+    #[test]
+    fn python_arity_drift_is_flagged() {
+        // Fixture layers.py returns 4 values; grow layer_fwd to 5 names.
+        let d = check_contract(&fixture(3, 3, "y", " + [(\"h\", _spec((B, T, H)))]"));
+        let ar: Vec<_> = d.iter().filter(|d| d.rule == RULE_ARITY_DRIFT).collect();
+        assert_eq!(ar.len(), 1, "got: {:?}", d);
+        assert!(ar[0].msg.contains("4 values"), "{}", ar[0].msg);
+        assert!(ar[0].msg.contains("5 outputs"), "{}", ar[0].msg);
+        assert_eq!(ar[0].file, "python/compile/layers.py");
+    }
+
+    #[test]
+    fn code_version_regression_is_flagged() {
+        let mut t = fixture(3, 3, "y", "");
+        // Rewrite AOT_CODE_VERSION below the contract version.
+        let aot = t.files.iter_mut().find(|f| f.path.ends_with("aot.py")).unwrap();
+        aot.lines[1] = "AOT_CODE_VERSION = 2".to_string();
+        let d = check_contract(&t);
+        let cv: Vec<_> = d.iter().filter(|d| d.rule == RULE_CODE_VERSION).collect();
+        assert_eq!(cv.len(), 1, "got: {:?}", d);
+    }
+
+    #[test]
+    fn positional_indexing_is_flagged_and_named_indexing_is_not() {
+        let src = "fn f(out: Vec<T>, idx: usize) {\n\
+                   \x20   let a = out[0].clone();\n\
+                   \x20   let b = out[idx].clone();\n\
+                   \x20   let c = layout[0];\n\
+                   \x20   let d = outs[12].clone();\n\
+                   }\n";
+        let t = Tree::from_files(vec![super::super::SrcFile::new(
+            "rust/src/train/trainer.rs",
+            src,
+        )]);
+        let d = check_positional(&t);
+        assert_eq!(d.len(), 2, "out[0] and outs[12] only: {:?}", d);
+        assert!(d[0].msg.contains("out[0]"));
+        assert_eq!(d[0].line, 2);
+        assert!(d[1].msg.contains("outs[12]"));
+    }
+
+    #[test]
+    fn positional_indexing_in_test_mods_is_ignored() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   fn t(out: Vec<T>) { let a = out[0].clone(); }\n\
+                   }\n";
+        let t =
+            Tree::from_files(vec![super::super::SrcFile::new("rust/src/infer/engine.rs", src)]);
+        assert!(check_positional(&t).is_empty());
+    }
+
+    #[test]
+    fn real_route_specs_shape_parses() {
+        // The exact textual shape aot.py uses today.
+        let aot = super::super::SrcFile::new(
+            "python/compile/aot.py",
+            "def _route_specs(cfg):\n\
+             \x20   B, T = cfg.batch_size, cfg.seq_len\n\
+             \x20   return [(\"route_expert\", _spec((B, T), jnp.int32)),\n\
+             \x20           (\"route_gate\", _spec((B, T))),\n\
+             \x20           (\"route_pos\", _spec((B, T), jnp.int32)),\n\
+             \x20           (\"route_keep\", _spec((B, T)))]\n",
+        );
+        assert_eq!(
+            route_spec_names(&aot),
+            vec!["route_expert", "route_gate", "route_pos", "route_keep"]
+        );
+    }
+}

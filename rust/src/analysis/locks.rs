@@ -1,0 +1,484 @@
+//! Pass C — thread discipline in the threaded modules.
+//!
+//! A brace-scope scan (strings/comments stripped) builds held-lock scopes:
+//! a `let g = ….lock().unwrap();` whose statement ends right after the
+//! unwrap/expect chain holds its `MutexGuard` until the enclosing block
+//! closes (or an explicit `drop(g)`); a chained use like
+//! `….lock().unwrap().clone()` is a transient guard that dies at the end
+//! of the statement. With the live-guard set in hand the pass diagnoses:
+//!
+//! - **LOCK001** — a blocking channel `send`/`recv` while a guard is live
+//!   (the classic serving-stack deadlock: the consumer needs the lock the
+//!   producer is holding while blocked).
+//! - **LOCK002** — `Condvar::wait` (an argument-taking `.wait(…)`) outside
+//!   a `while`/`loop` predicate re-check. `Barrier::wait()` (no argument)
+//!   and `wait_while`/`wait_timeout_while` are exempt.
+//! - **LOCK003** — a cycle in the cross-module lock-acquisition graph
+//!   (edges recorded whenever any lock is acquired while a guard is live).
+//!
+//! Known limits (documented in `docs/analysis.md`): lock statements split
+//! across lines are not tracked, and guards created by `for`-expression
+//! temporaries live longer than the scan assumes — both err toward
+//! missing a finding, never toward a false positive.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::{receiver_before, strip_code, Diagnostic, SrcFile, Tree};
+
+pub const RULE_SEND_UNDER_LOCK: &str = "LOCK001";
+pub const RULE_WAIT_WITHOUT_LOOP: &str = "LOCK002";
+pub const RULE_LOCK_CYCLE: &str = "LOCK003";
+
+/// The threaded modules pass C scans (path suffixes).
+pub const THREADED_MODULES: [&str; 6] = [
+    "rust/src/infer/ring_memory.rs",
+    "rust/src/infer/server.rs",
+    "rust/src/prefetch/scheduler.rs",
+    "rust/src/storage/ssd_store.rs",
+    "rust/src/comm/mesh.rs",
+    "rust/src/metrics/counters.rs",
+];
+
+#[derive(Debug)]
+struct Guard {
+    name: String,
+    path: String,
+    /// Frame-stack depth at declaration; dies when the stack shrinks below.
+    depth: usize,
+    line: usize,
+}
+
+#[derive(Debug)]
+struct Frame {
+    is_loop: bool,
+}
+
+/// One lock-acquired-while-holding-another observation.
+#[derive(Debug, Clone)]
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: usize,
+}
+
+pub fn check_locks(tree: &Tree) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let mut edges: Vec<Edge> = Vec::new();
+    for f in tree
+        .files
+        .iter()
+        .filter(|f| THREADED_MODULES.iter().any(|m| f.path.ends_with(m)))
+    {
+        scan_file(f, &mut out, &mut edges);
+    }
+    out.extend(find_cycles(&edges));
+    out
+}
+
+fn scan_file(f: &SrcFile, out: &mut Vec<Diagnostic>, edges: &mut Vec<Edge>) {
+    let raw = f.code_lines();
+    let stripped = strip_code(&raw);
+    let mut frames: Vec<Frame> = Vec::new();
+    let mut guards: Vec<Guard> = Vec::new();
+    // Statement header since the last `;` — only consulted when a `{`
+    // opens, to tag loop bodies. Deliberately NOT cleared on `}` so that
+    // destructuring braces in `while let Ok(Msg { .. }) = rx.recv()`
+    // headers keep the `while` visible for the body brace.
+    let mut header = String::new();
+
+    for (i, line) in stripped.iter().enumerate() {
+        let snippet = || raw.get(i).map(|l| l.trim().to_string()).unwrap_or_default();
+
+        // ---- Guard deaths by explicit drop.
+        if let Some(rest) = line.trim_start().strip_prefix("drop(") {
+            if let Some(name) = rest.split(')').next() {
+                let name = name.trim();
+                guards.retain(|g| g.name != name);
+            }
+        }
+
+        // ---- Lock acquisitions.
+        let mut from = 0;
+        while let Some(rel) = line[from..].find(".lock(") {
+            let col = from + rel;
+            let path = receiver_before(line, col);
+            for g in &guards {
+                if g.path != path {
+                    edges.push(Edge {
+                        from: g.path.clone(),
+                        to: path.clone(),
+                        file: f.path.clone(),
+                        line: i + 1,
+                    });
+                }
+            }
+            if is_held_decl(line) {
+                if let Some(name) = let_binding_name(line) {
+                    guards.push(Guard { name, path: path.clone(), depth: frames.len(), line: i + 1 });
+                }
+            }
+            from = col + ".lock(".len();
+        }
+
+        // ---- Blocking channel traffic under a live guard.
+        for needle in [".send(", ".recv(", ".recv_timeout("] {
+            let mut from = 0;
+            while let Some(rel) = line[from..].find(needle) {
+                let col = from + rel;
+                let recv = receiver_before(line, col);
+                let is_try = needle == ".recv(" && line[..col].ends_with("try_");
+                if !is_try && !recv.is_empty() {
+                    if let Some(g) = guards.last() {
+                        out.push(Diagnostic {
+                            rule: RULE_SEND_UNDER_LOCK,
+                            file: f.path.clone(),
+                            line: i + 1,
+                            msg: format!(
+                                "blocking `{}{}…)` while the MutexGuard `{}` (lock `{}`, taken at \
+                                 line {}) is still held",
+                                recv, needle, g.name, g.path, g.line
+                            ),
+                            remedy: "move the channel op out of the locked scope (clone the \
+                                     sender / drop the guard first)"
+                                .to_string(),
+                            snippet: snippet(),
+                        });
+                    }
+                }
+                from = col + needle.len();
+            }
+        }
+
+        // ---- Condvar waits need a predicate loop.
+        for needle in [".wait(", ".wait_timeout("] {
+            let mut from = 0;
+            while let Some(rel) = line[from..].find(needle) {
+                let col = from + rel;
+                let after = &line[col + needle.len()..];
+                let has_arg = !after.trim_start().starts_with(')');
+                if has_arg && !guards.is_empty() && !frames.iter().any(|fr| fr.is_loop) {
+                    out.push(Diagnostic {
+                        rule: RULE_WAIT_WITHOUT_LOOP,
+                        file: f.path.clone(),
+                        line: i + 1,
+                        msg: "Condvar::wait outside a while/loop predicate re-check — spurious \
+                              wakeups will observe a stale predicate"
+                            .to_string(),
+                        remedy: "wrap the wait in `while !predicate { g = cv.wait(g)…; }` (or \
+                                 use wait_while)"
+                            .to_string(),
+                        snippet: snippet(),
+                    });
+                }
+                from = col + needle.len();
+            }
+        }
+
+        // ---- Scope bookkeeping.
+        for c in line.chars() {
+            match c {
+                '{' => {
+                    let is_loop = has_word(&header, "while") || has_word(&header, "loop");
+                    frames.push(Frame { is_loop });
+                }
+                '}' => {
+                    frames.pop();
+                    let depth = frames.len();
+                    guards.retain(|g| g.depth <= depth);
+                }
+                ';' => header.clear(),
+                _ => header.push(c),
+            }
+        }
+    }
+}
+
+/// Does this statement bind a held guard? `let g = ….lock().unwrap();` —
+/// the chain after `.lock()` may only be unwrap/expect and must end the
+/// statement on this line. Chained calls (`.clone()`, `.add(…)`) make the
+/// guard a temporary that dies at the `;`.
+fn is_held_decl(line: &str) -> bool {
+    let t = line.trim_start();
+    if !t.starts_with("let ") {
+        return false;
+    }
+    let at = match line.find(".lock(") {
+        Some(a) => a,
+        None => return false,
+    };
+    let mut rest = &line[at + ".lock(".len()..];
+    rest = match rest.find(')') {
+        Some(p) => &rest[p + 1..],
+        None => return false,
+    };
+    loop {
+        let r = rest.trim_start();
+        if let Some(after) = r.strip_prefix(".unwrap()") {
+            rest = after;
+        } else if let Some(after) = r.strip_prefix(".expect(") {
+            rest = match after.find(')') {
+                Some(p) => &after[p + 1..],
+                None => return false,
+            };
+        } else if let Some(after) = r.strip_prefix('?') {
+            rest = after;
+        } else {
+            return r.trim_start().starts_with(';');
+        }
+    }
+}
+
+fn let_binding_name(line: &str) -> Option<String> {
+    let t = line.trim_start().strip_prefix("let ")?;
+    let t = t.trim_start().strip_prefix("mut ").unwrap_or(t.trim_start());
+    let name: String = t.chars().take_while(|&c| super::is_ident_char(c)).collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn has_word(hay: &str, word: &str) -> bool {
+    let b: Vec<char> = hay.chars().collect();
+    let w: Vec<char> = word.chars().collect();
+    let mut i = 0;
+    while i + w.len() <= b.len() {
+        if b[i..i + w.len()] == w[..]
+            && (i == 0 || !super::is_ident_char(b[i - 1]))
+            && (i + w.len() == b.len() || !super::is_ident_char(b[i + w.len()]))
+        {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// DFS cycle detection over the acquired-while-held graph; one finding
+/// per distinct node cycle.
+fn find_cycles(edges: &[Edge]) -> Vec<Diagnostic> {
+    let mut adj: BTreeMap<&str, Vec<&Edge>> = BTreeMap::new();
+    for e in edges {
+        adj.entry(e.from.as_str()).or_default().push(e);
+    }
+    let mut seen_cycles: BTreeSet<Vec<String>> = BTreeSet::new();
+    let mut out = Vec::new();
+    for start in adj.keys().copied().collect::<Vec<_>>() {
+        let mut stack: Vec<(&str, &Edge)> = Vec::new();
+        dfs(start, &adj, &mut Vec::new(), &mut stack, &mut |cycle: &[&Edge]| {
+            let mut nodes: Vec<String> = cycle.iter().map(|e| e.from.clone()).collect();
+            nodes.sort();
+            if seen_cycles.insert(nodes) {
+                let first = cycle[0];
+                let chain: Vec<String> = cycle
+                    .iter()
+                    .map(|e| format!("{} → {} ({}:{})", e.from, e.to, e.file, e.line))
+                    .collect();
+                out.push(Diagnostic {
+                    rule: RULE_LOCK_CYCLE,
+                    file: first.file.clone(),
+                    line: first.line,
+                    msg: format!("lock acquisition cycle: {}", chain.join(", ")),
+                    remedy: "pick one global acquisition order for these locks and stick to it"
+                        .to_string(),
+                    snippet: String::new(),
+                });
+            }
+        });
+    }
+    out
+}
+
+fn dfs<'a>(
+    node: &'a str,
+    adj: &BTreeMap<&'a str, Vec<&'a Edge>>,
+    path: &mut Vec<&'a str>,
+    stack: &mut Vec<(&'a str, &'a Edge)>,
+    emit: &mut impl FnMut(&[&'a Edge]),
+) {
+    if let Some(pos) = path.iter().position(|&n| n == node) {
+        let cycle: Vec<&Edge> = stack[pos..].iter().map(|(_, e)| *e).collect();
+        if !cycle.is_empty() {
+            emit(&cycle);
+        }
+        return;
+    }
+    path.push(node);
+    if let Some(nexts) = adj.get(node) {
+        for e in nexts {
+            stack.push((node, e));
+            dfs(e.to.as_str(), adj, path, stack, emit);
+            stack.pop();
+        }
+    }
+    path.pop();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SrcFile, Tree};
+    use super::*;
+
+    fn tree(path: &str, src: &str) -> Tree {
+        Tree::from_files(vec![SrcFile::new(path, src)])
+    }
+
+    #[test]
+    fn send_under_held_guard_is_flagged() {
+        let t = tree(
+            "rust/src/infer/server.rs",
+            "fn publish(&self) {\n\
+             \x20   let state = self.state.lock().unwrap();\n\
+             \x20   self.tx.send(Msg::Update(state.seq)).unwrap();\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
+        assert_eq!(d[0].line, 3);
+        assert!(d[0].msg.contains("`state`"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn transient_guard_then_send_is_clean() {
+        // The server's actual idiom: clone the sender out of the lock,
+        // send after the temporary guard died.
+        let t = tree(
+            "rust/src/infer/server.rs",
+            "fn conn(&self) {\n\
+             \x20   let tx = self.job_tx.lock().unwrap().clone();\n\
+             \x20   tx.send(Msg::Hello).unwrap();\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+
+    #[test]
+    fn scoped_guard_then_barrier_is_clean() {
+        // mesh.rs's exchange(): guards die with their `{ }` scope before
+        // the barrier; empty-arg `.wait()` is Barrier, not Condvar.
+        let t = tree(
+            "rust/src/comm/mesh.rs",
+            "fn exchange(&mut self) {\n\
+             \x20   {\n\
+             \x20       let mut slots = self.shared.slots.lock().unwrap();\n\
+             \x20       slots[self.rank] = None;\n\
+             \x20   }\n\
+             \x20   self.shared.barrier.wait();\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+
+    #[test]
+    fn recv_under_guard_is_flagged_but_try_recv_is_not() {
+        let t = tree(
+            "rust/src/prefetch/scheduler.rs",
+            "fn drain(&self) {\n\
+             \x20   let q = self.queue.lock().unwrap();\n\
+             \x20   while let Ok(m) = self.rx.try_recv() { q.push(m); }\n\
+             \x20   let m = self.rx.recv().unwrap();\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "try_recv exempt, recv flagged: {:?}", d);
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn condvar_wait_without_loop_is_flagged() {
+        let t = tree(
+            "rust/src/storage/ssd_store.rs",
+            "fn park(&self) {\n\
+             \x20   let mut g = self.mu.lock().unwrap();\n\
+             \x20   if !*g {\n\
+             \x20       g = self.cv.wait(g).unwrap();\n\
+             \x20   }\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_WAIT_WITHOUT_LOOP);
+        assert_eq!(d[0].line, 4);
+    }
+
+    #[test]
+    fn condvar_wait_inside_while_predicate_is_clean() {
+        let t = tree(
+            "rust/src/storage/ssd_store.rs",
+            "fn park(&self) {\n\
+             \x20   let mut g = self.mu.lock().unwrap();\n\
+             \x20   while !*g {\n\
+             \x20       g = self.cv.wait(g).unwrap();\n\
+             \x20   }\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+
+    #[test]
+    fn while_let_recv_loop_header_is_clean() {
+        // ring_memory.rs's staging loop: destructuring braces in the
+        // header must not hide the `while` from the body frame.
+        let t = tree(
+            "rust/src/infer/ring_memory.rs",
+            "fn staging(&self) {\n\
+             \x20   while let Ok(Msg::Load { layer, experts }) = rx_req.recv() {\n\
+             \x20       let _ = tx_rep.send(Loaded { layer });\n\
+             \x20   }\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+
+    #[test]
+    fn cross_module_lock_cycle_is_flagged() {
+        let a = SrcFile::new(
+            "rust/src/infer/server.rs",
+            "fn a(&self) {\n\
+             \x20   let g = self.alpha.lock().unwrap();\n\
+             \x20   let h = self.beta.lock().unwrap();\n\
+             }\n",
+        );
+        let b = SrcFile::new(
+            "rust/src/comm/mesh.rs",
+            "fn b(&self) {\n\
+             \x20   let h = self.beta.lock().unwrap();\n\
+             \x20   let g = self.alpha.lock().unwrap();\n\
+             }\n",
+        );
+        let d = check_locks(&Tree::from_files(vec![a, b]));
+        let cyc: Vec<_> = d.iter().filter(|d| d.rule == RULE_LOCK_CYCLE).collect();
+        assert_eq!(cyc.len(), 1, "one deduped cycle: {:?}", d);
+        assert!(cyc[0].msg.contains("alpha"), "{}", cyc[0].msg);
+        assert!(cyc[0].msg.contains("beta"), "{}", cyc[0].msg);
+    }
+
+    #[test]
+    fn nested_acquisition_without_cycle_is_clean() {
+        // counters.rs snapshot(): inner → gauges only, no reverse edge.
+        let t = tree(
+            "rust/src/metrics/counters.rs",
+            "fn snapshot(&self) {\n\
+             \x20   let m = self.inner.lock().unwrap();\n\
+             \x20   for (k, g) in self.gauges.lock().unwrap().iter() { use_it(k, g); }\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+
+    #[test]
+    fn drop_releases_the_guard() {
+        let t = tree(
+            "rust/src/infer/server.rs",
+            "fn f(&self) {\n\
+             \x20   let g = self.state.lock().unwrap();\n\
+             \x20   drop(g);\n\
+             \x20   self.tx.send(Msg::Go).unwrap();\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
+    }
+}

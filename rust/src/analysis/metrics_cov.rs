@@ -1,0 +1,206 @@
+//! Pass D — metrics coverage.
+//!
+//! Every `Counter`/`Gauge` name registered anywhere in `rust/src`
+//! (string-literal argument to `.counter("…")` / `.gauge("…")`, test
+//! modules stripped) must be:
+//!
+//! - **METRIC001** — surfaced by the `/stats` endpoint: the quoted name
+//!   must appear in `infer/server.rs` non-test code (the `stats_json`
+//!   builder). The blanket `("counters", reg.snapshot())` dump does not
+//!   count — operators grep the documented stable fields.
+//! - **METRIC002** — documented: the dotted name must appear somewhere in
+//!   `docs/serving.md` or `docs/training.md`.
+//!
+//! `rust/src/analysis/` itself is excluded from collection: this pass's
+//! own needle literals (and fixture sources in tests) would self-match.
+
+use std::collections::BTreeMap;
+
+use super::{str_args, Diagnostic, Tree};
+
+pub const RULE_NOT_IN_STATS: &str = "METRIC001";
+pub const RULE_UNDOCUMENTED: &str = "METRIC002";
+
+/// Where the `/stats` surface lives (path suffix).
+pub const STATS_SUFFIX: &str = "rust/src/infer/server.rs";
+
+/// Where metrics must be documented (path suffixes).
+pub const DOC_SUFFIXES: [&str; 2] = ["docs/serving.md", "docs/training.md"];
+
+struct Site {
+    kind: &'static str,
+    file: String,
+    line: usize,
+    snippet: String,
+}
+
+pub fn check_metrics(tree: &Tree) -> Vec<Diagnostic> {
+    // First registration site per name, name-sorted for stable output.
+    let mut metrics: BTreeMap<String, Site> = BTreeMap::new();
+    for f in tree.files.iter().filter(|f| {
+        f.path.starts_with("rust/src/")
+            && f.path.ends_with(".rs")
+            && !f.path.starts_with("rust/src/analysis/")
+    }) {
+        for (i, line) in f.code_lines().iter().enumerate() {
+            for (kind, needle) in [("counter", ".counter(\""), ("gauge", ".gauge(\"")] {
+                for (_, name) in str_args(line, needle) {
+                    metrics.entry(name).or_insert_with(|| Site {
+                        kind,
+                        file: f.path.clone(),
+                        line: i + 1,
+                        snippet: line.trim().to_string(),
+                    });
+                }
+            }
+        }
+    }
+    if metrics.is_empty() {
+        return Vec::new();
+    }
+
+    let stats_text = tree
+        .file(STATS_SUFFIX)
+        .map(|f| f.code_lines().join("\n"))
+        .unwrap_or_default();
+    let docs_text = DOC_SUFFIXES
+        .iter()
+        .filter_map(|s| tree.file(s))
+        .map(|f| f.lines.join("\n"))
+        .collect::<Vec<_>>()
+        .join("\n");
+
+    let mut out = Vec::new();
+    for (name, site) in &metrics {
+        let quoted = format!("\"{}\"", name);
+        if !stats_text.contains(&quoted) {
+            out.push(Diagnostic {
+                rule: RULE_NOT_IN_STATS,
+                file: site.file.clone(),
+                line: site.line,
+                msg: format!(
+                    "{} `{}` is registered but not surfaced as a stable /stats field in {}",
+                    site.kind, name, STATS_SUFFIX
+                ),
+                remedy: "add an explicit field for it in stats_json (or delete the metric)"
+                    .to_string(),
+                snippet: site.snippet.clone(),
+            });
+        }
+        if !docs_text.contains(name.as_str()) {
+            out.push(Diagnostic {
+                rule: RULE_UNDOCUMENTED,
+                file: site.file.clone(),
+                line: site.line,
+                msg: format!(
+                    "{} `{}` is registered but documented in neither {} nor {}",
+                    site.kind, name, DOC_SUFFIXES[0], DOC_SUFFIXES[1]
+                ),
+                remedy: "add it to the metrics reference table in docs/serving.md".to_string(),
+                snippet: site.snippet.clone(),
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SrcFile, Tree};
+    use super::*;
+
+    fn server(extra: &str) -> SrcFile {
+        SrcFile::new(
+            "rust/src/infer/server.rs",
+            &format!(
+                "fn stats_json(reg: &Registry) {{\n\
+                 \x20   let s = reg.counter(\"serve.steps\").count();\n\
+                 {}\n\
+                 }}\n",
+                extra
+            ),
+        )
+    }
+
+    fn docs(body: &str) -> SrcFile {
+        SrcFile::new("docs/serving.md", body)
+    }
+
+    #[test]
+    fn surfaced_and_documented_metric_is_clean() {
+        let t = Tree::from_files(vec![
+            server(""),
+            docs("| `serve.steps` | counter | decode steps |"),
+        ]);
+        assert!(check_metrics(&t).is_empty());
+    }
+
+    #[test]
+    fn undocumented_counter_is_flagged() {
+        let t = Tree::from_files(vec![server(""), docs("nothing relevant")]);
+        let d = check_metrics(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_UNDOCUMENTED);
+        assert!(d[0].msg.contains("serve.steps"), "{}", d[0].msg);
+        assert_eq!(d[0].file, "rust/src/infer/server.rs");
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn metric_missing_from_stats_surface_is_flagged() {
+        let t = Tree::from_files(vec![
+            server(""),
+            SrcFile::new(
+                "rust/src/infer/session.rs",
+                "fn new(reg: &Registry) { reg.counter(\"serve.admitted\").add(1); }\n",
+            ),
+            docs("`serve.steps` and `serve.admitted` are documented here"),
+        ]);
+        let d = check_metrics(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_NOT_IN_STATS);
+        assert!(d[0].msg.contains("serve.admitted"), "{}", d[0].msg);
+        assert_eq!(d[0].file, "rust/src/infer/session.rs");
+    }
+
+    #[test]
+    fn test_mod_registrations_are_ignored() {
+        let t = Tree::from_files(vec![
+            server(""),
+            SrcFile::new(
+                "rust/src/metrics/counters.rs",
+                "#[cfg(test)]\n\
+                 mod tests {\n\
+                 \x20   fn t(reg: &Registry) { reg.counter(\"test.only\").add(1); }\n\
+                 }\n",
+            ),
+            docs("`serve.steps`"),
+        ]);
+        assert!(check_metrics(&t).is_empty());
+    }
+
+    #[test]
+    fn analysis_module_needles_are_excluded() {
+        let t = Tree::from_files(vec![
+            server(""),
+            SrcFile::new(
+                "rust/src/analysis/metrics_cov.rs",
+                "fn scan() { let needle = x.counter(\"phantom.name\"); }\n",
+            ),
+            docs("`serve.steps`"),
+        ]);
+        assert!(check_metrics(&t).is_empty());
+    }
+
+    #[test]
+    fn gauges_are_collected_too() {
+        let t = Tree::from_files(vec![
+            server("    let g = reg.gauge(\"ring.loads\").get();"),
+            docs("`serve.steps` only"),
+        ]);
+        let d = check_metrics(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_UNDOCUMENTED);
+        assert!(d[0].msg.contains("gauge `ring.loads`"), "{}", d[0].msg);
+    }
+}

@@ -1,0 +1,689 @@
+//! `semoe lint` — dependency-free static analysis over both source trees.
+//!
+//! The contract between the Python lowering side (`python/compile/`) and
+//! this coordinator is textual: version constants that must match, output
+//! names that must exist on both sides, thread discipline that reviewers
+//! used to audit by hand. This module machine-checks those invariants with
+//! plain line/token scanning (same no-deps posture as `util/json.rs`):
+//!
+//! - [`contract`] — **pass A** (contract drift: `CONTRACT_VERSION` /
+//!   `AOT_CODE_VERSION` skew, consumed-but-never-emitted output names,
+//!   emitted-but-never-consumed names, python arity drift) and **pass B**
+//!   (positional `outputs[<literal>]` addressing in runtime consumers).
+//! - [`locks`] — **pass C** (thread discipline in the threaded modules:
+//!   channel send/recv under a held `MutexGuard`, `Condvar::wait` outside
+//!   a predicate loop, cross-module lock-acquisition cycles).
+//! - [`metrics_cov`] — **pass D** (every registered `Counter`/`Gauge`
+//!   name must be surfaced by `/stats` and documented in the docs).
+//! - [`bench_stub`] — the tier1 perf-trajectory stub (`BENCH_tier1.json`).
+//!
+//! Passes take a [`Tree`] of [`SrcFile`]s so fixture tests can seed one
+//! violation per rule without touching the filesystem; `semoe lint` runs
+//! them over the real tree (see `docs/analysis.md` for the rule ids and
+//! the allowlist format).
+
+pub mod bench_stub;
+pub mod contract;
+pub mod locks;
+pub mod metrics_cov;
+
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Stale allowlist entry (matches no current diagnostic).
+pub const RULE_STALE_ALLOW: &str = "ALLOW001";
+
+/// Repo-relative path of the checked-in allowlist.
+pub const ALLOWLIST_PATH: &str = "rust/lint_allow.txt";
+
+/// One finding. `file` is repo-relative (forward slashes), `line` 1-based.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+    pub remedy: String,
+    /// Trimmed source line the finding anchors to (allowlist matching).
+    pub snippet: String,
+}
+
+impl Diagnostic {
+    pub fn render(&self) -> String {
+        format!("{}:{} [{}] {} — {}", self.file, self.line, self.rule, self.msg, self.remedy)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(self.rule)),
+            ("file", Json::str(self.file.clone())),
+            ("line", Json::num(self.line as f64)),
+            ("msg", Json::str(self.msg.clone())),
+            ("remedy", Json::str(self.remedy.clone())),
+        ])
+    }
+}
+
+/// One source file, split into lines (line numbers are index + 1).
+#[derive(Debug, Clone)]
+pub struct SrcFile {
+    pub path: String,
+    pub lines: Vec<String>,
+}
+
+impl SrcFile {
+    pub fn new(path: &str, text: &str) -> SrcFile {
+        SrcFile { path: path.to_string(), lines: text.lines().map(|l| l.to_string()).collect() }
+    }
+
+    /// Lines with `#[cfg(test)] mod … { … }` bodies blanked; numbering
+    /// (and hence diagnostic anchors) is preserved.
+    pub fn code_lines(&self) -> Vec<String> {
+        strip_test_mods(&self.lines)
+    }
+}
+
+/// The file set a lint run sees. Built from the real repo by [`Tree::load`]
+/// or assembled in-memory by fixture tests.
+#[derive(Debug, Clone, Default)]
+pub struct Tree {
+    pub files: Vec<SrcFile>,
+}
+
+impl Tree {
+    pub fn from_files(files: Vec<SrcFile>) -> Tree {
+        Tree { files }
+    }
+
+    /// Load the scanned surface from a repo checkout: all of `rust/src`,
+    /// the python lowering entry points, and the docs pass D checks.
+    pub fn load(root: &Path) -> Result<Tree> {
+        let mut files = Vec::new();
+        let mut rs_paths = Vec::new();
+        walk_rs(&root.join("rust").join("src"), &mut rs_paths)
+            .context("walking rust/src")?;
+        rs_paths.sort();
+        for p in rs_paths {
+            files.push(read_rel(root, &p)?);
+        }
+        for rel in [
+            "python/compile/aot.py",
+            "python/compile/layers.py",
+            "docs/serving.md",
+            "docs/training.md",
+        ] {
+            files.push(read_rel(root, &root.join(rel))?);
+        }
+        Ok(Tree { files })
+    }
+
+    /// The file whose repo-relative path ends with `suffix`.
+    pub fn file(&self, suffix: &str) -> Option<&SrcFile> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+
+    /// All files whose repo-relative path starts with `prefix`.
+    pub fn under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a SrcFile> {
+        self.files.iter().filter(move |f| f.path.starts_with(prefix))
+    }
+}
+
+fn walk_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read_dir {}", dir.display()))? {
+        let p = entry?.path();
+        if p.is_dir() {
+            walk_rs(&p, out)?;
+        } else if p.extension().map(|e| e == "rs").unwrap_or(false) {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn read_rel(root: &Path, path: &Path) -> Result<SrcFile> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let rel = rel.to_string_lossy().replace('\\', "/");
+    Ok(SrcFile::new(&rel, &text))
+}
+
+/// Locate the repo root: `$SEMOE_REPO`, else walk up from the current dir
+/// (and from the build-time manifest dir) looking for both source trees.
+pub fn repo_root() -> Result<PathBuf> {
+    if let Ok(p) = std::env::var("SEMOE_REPO") {
+        return Ok(p.into());
+    }
+    let is_root =
+        |d: &Path| d.join("rust/src/lib.rs").is_file() && d.join("python/compile/aot.py").is_file();
+    let mut starts = vec![std::env::current_dir().unwrap_or_else(|_| ".".into())];
+    starts.push(PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    for start in starts {
+        let mut dir = start;
+        loop {
+            if is_root(&dir) {
+                return Ok(dir);
+            }
+            if !dir.pop() {
+                break;
+            }
+        }
+    }
+    anyhow::bail!(
+        "repo root not found (no rust/src/lib.rs + python/compile/aot.py above the cwd); \
+         set SEMOE_REPO"
+    )
+}
+
+// ---------------------------------------------------------------- allowlist
+
+/// One allowlist entry: `rule path-suffix content-token  # justification`.
+#[derive(Debug, Clone)]
+pub struct AllowEntry {
+    pub rule: String,
+    pub file: String,
+    pub token: String,
+    pub justification: String,
+    /// 1-based line in the allowlist file (stale-entry anchor).
+    pub line: usize,
+}
+
+impl AllowEntry {
+    pub fn matches(&self, d: &Diagnostic) -> bool {
+        d.rule == self.rule && d.file.ends_with(&self.file) && d.snippet.contains(&self.token)
+    }
+}
+
+/// Parse the allowlist text. Blank lines and `#`-leading comment lines are
+/// skipped; every entry must carry a non-empty `# justification`.
+pub fn parse_allowlist(text: &str) -> Result<Vec<AllowEntry>, String> {
+    let mut out = Vec::new();
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (head, just) = match line.split_once('#') {
+            Some((h, j)) => (h.trim(), j.trim()),
+            None => return Err(format!("allowlist line {}: missing `# justification`", i + 1)),
+        };
+        if just.is_empty() {
+            return Err(format!("allowlist line {}: empty justification", i + 1));
+        }
+        let fields: Vec<&str> = head.split_whitespace().collect();
+        if fields.len() != 3 {
+            return Err(format!(
+                "allowlist line {}: expected `rule path-suffix token  # why`, got {} field(s)",
+                i + 1,
+                fields.len()
+            ));
+        }
+        out.push(AllowEntry {
+            rule: fields[0].to_string(),
+            file: fields[1].to_string(),
+            token: fields[2].to_string(),
+            justification: just.to_string(),
+            line: i + 1,
+        });
+    }
+    Ok(out)
+}
+
+/// Load the checked-in allowlist; a missing file means an empty list.
+pub fn load_allowlist(root: &Path) -> Result<Vec<AllowEntry>> {
+    let path = root.join(ALLOWLIST_PATH);
+    if !path.is_file() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(&path)?;
+    parse_allowlist(&text).map_err(|e| anyhow::anyhow!(e))
+}
+
+// ------------------------------------------------------------------ report
+
+/// The outcome of a full lint run.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub diagnostics: Vec<Diagnostic>,
+    /// Findings suppressed by allowlist entries.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("diagnostics", Json::arr(self.diagnostics.iter().map(|d| d.to_json()))),
+            ("suppressed", Json::num(self.suppressed as f64)),
+        ])
+    }
+}
+
+/// Run all four passes over `tree`, then apply the allowlist: matched
+/// findings are suppressed, and entries matching nothing become
+/// `ALLOW001` findings so the allowlist can never rot silently.
+pub fn run_all(tree: &Tree, allow: &[AllowEntry]) -> LintReport {
+    let mut diags = Vec::new();
+    diags.extend(contract::check_contract(tree));
+    diags.extend(contract::check_positional(tree));
+    diags.extend(locks::check_locks(tree));
+    diags.extend(metrics_cov::check_metrics(tree));
+
+    let mut used = vec![false; allow.len()];
+    let mut kept = Vec::new();
+    let mut suppressed = 0;
+    for d in diags {
+        let mut hit = false;
+        for (i, e) in allow.iter().enumerate() {
+            if e.matches(&d) {
+                used[i] = true;
+                hit = true;
+            }
+        }
+        if hit {
+            suppressed += 1;
+        } else {
+            kept.push(d);
+        }
+    }
+    for (i, e) in allow.iter().enumerate() {
+        if !used[i] {
+            kept.push(Diagnostic {
+                rule: RULE_STALE_ALLOW,
+                file: ALLOWLIST_PATH.to_string(),
+                line: e.line,
+                msg: format!(
+                    "allowlist entry `{} {} {}` matches no current finding",
+                    e.rule, e.file, e.token
+                ),
+                remedy: "delete the stale entry".to_string(),
+                snippet: format!("{} {} {}", e.rule, e.file, e.token),
+            });
+        }
+    }
+    LintReport { diagnostics: kept, suppressed }
+}
+
+/// Convenience: load the tree + allowlist from a checkout and run.
+pub fn lint_repo(root: &Path) -> Result<LintReport> {
+    let tree = Tree::load(root)?;
+    let allow = load_allowlist(root)?;
+    Ok(run_all(&tree, &allow))
+}
+
+// ------------------------------------------------------- scanning helpers
+
+/// Strip comments and literal bodies from rust-ish source for structural
+/// scans (brace depth, `.lock()` / `.send(` tokens): `//` and `/* */`
+/// comments are removed, `"…"` / raw `r#"…"#` string bodies and char
+/// literals are removed (quotes and all). Output aligns 1:1 with input
+/// lines; string/comment state carries across lines.
+pub fn strip_code(lines: &[String]) -> Vec<String> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        BlockComment,
+        Str { raw_hashes: Option<usize> },
+    }
+    let mut st = St::Code;
+    let mut out = Vec::with_capacity(lines.len());
+    for line in lines {
+        let b: Vec<char> = line.chars().collect();
+        let mut o = String::with_capacity(line.len());
+        let mut i = 0;
+        while i < b.len() {
+            match st {
+                St::BlockComment => {
+                    if b[i] == '*' && i + 1 < b.len() && b[i + 1] == '/' {
+                        st = St::Code;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                St::Str { raw_hashes } => match raw_hashes {
+                    Some(n) => {
+                        // Raw string: ends at `"` followed by n hashes.
+                        if b[i] == '"' && b[i + 1..].iter().take(n).filter(|&&c| c == '#').count() == n {
+                            st = St::Code;
+                            i += 1 + n;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                    None => {
+                        if b[i] == '\\' {
+                            i += 2; // escaped char (incl. \" and line-continuation \)
+                        } else if b[i] == '"' {
+                            st = St::Code;
+                            i += 1;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                },
+                St::Code => {
+                    let c = b[i];
+                    if c == '/' && i + 1 < b.len() && b[i + 1] == '/' {
+                        break; // rest of line is a comment
+                    }
+                    if c == '/' && i + 1 < b.len() && b[i + 1] == '*' {
+                        st = St::BlockComment;
+                        i += 2;
+                        continue;
+                    }
+                    if c == '"' {
+                        st = St::Str { raw_hashes: None };
+                        i += 1;
+                        continue;
+                    }
+                    // Raw string start: r"…" or r#"…"# (not part of an identifier).
+                    if c == 'r' && (i == 0 || !is_ident_char(b[i - 1])) {
+                        let mut j = i + 1;
+                        let mut hashes = 0;
+                        while j < b.len() && b[j] == '#' {
+                            hashes += 1;
+                            j += 1;
+                        }
+                        if j < b.len() && b[j] == '"' {
+                            st = St::Str { raw_hashes: Some(hashes) };
+                            i = j + 1;
+                            continue;
+                        }
+                    }
+                    if c == '\'' {
+                        // Char literal or lifetime. A char literal is 'x' or
+                        // an escape '\…'; anything else (e.g. 'static) is a
+                        // lifetime — emit nothing, keep scanning.
+                        if i + 1 < b.len() && b[i + 1] == '\\' {
+                            // '\n', '\\', '\'' … : skip to the closing quote.
+                            let mut j = i + 3;
+                            while j < b.len() && b[j] != '\'' {
+                                j += 1;
+                            }
+                            i = (j + 1).min(b.len());
+                        } else if i + 2 < b.len() && b[i + 2] == '\'' {
+                            i += 3;
+                        } else {
+                            i += 1; // lifetime tick
+                        }
+                        continue;
+                    }
+                    o.push(c);
+                    i += 1;
+                }
+            }
+        }
+        // Unterminated non-raw strings don't span lines in practice unless
+        // continued with a trailing backslash; either way the body stays
+        // stripped, which is the conservative choice for scans.
+        out.push(o);
+    }
+    out
+}
+
+pub(crate) fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Blank every line belonging to a `#[cfg(test)] mod … { … }` block
+/// (attribute line included), preserving line numbering.
+pub fn strip_test_mods(lines: &[String]) -> Vec<String> {
+    let stripped = strip_code(lines);
+    let mut out = lines.to_vec();
+    let mut depth: i64 = 0;
+    let mut pending = false;
+    let mut skip_from: Option<i64> = None;
+    for i in 0..lines.len() {
+        let trimmed = lines[i].trim();
+        if skip_from.is_some() {
+            out[i] = String::new();
+        } else if trimmed.starts_with("#[cfg(test)]") {
+            pending = true;
+            out[i] = String::new();
+        } else if pending {
+            let is_mod = {
+                let s = &stripped[i];
+                (s.contains("mod ") || s.trim_start().starts_with("mod")) && s.contains('{')
+            };
+            if is_mod {
+                skip_from = Some(depth);
+                out[i] = String::new();
+            } else if trimmed.is_empty() || trimmed.starts_with("#[") {
+                // other attributes between cfg(test) and the item: keep waiting
+                out[i] = String::new();
+            } else {
+                // #[cfg(test)] on a non-mod item (fn, use, …): blank the
+                // single item conservatively only if it is one line; else
+                // stop skipping (rare in this tree).
+                pending = false;
+            }
+        }
+        for c in stripped[i].chars() {
+            match c {
+                '{' => depth += 1,
+                '}' => depth -= 1,
+                _ => {}
+            }
+        }
+        if let Some(d) = skip_from {
+            if depth <= d && stripped[i].contains('}') {
+                skip_from = None;
+                pending = false;
+            }
+        }
+    }
+    out
+}
+
+/// Byte offset where a `//` comment starts on this line (outside string
+/// literals), if any.
+pub fn comment_start(line: &str) -> Option<usize> {
+    let b: Vec<char> = line.chars().collect();
+    let mut i = 0;
+    let mut in_str = false;
+    let mut byte = 0;
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if c == '\\' {
+                byte += c.len_utf8() + b.get(i + 1).map(|x| x.len_utf8()).unwrap_or(0);
+                i += 2;
+                continue;
+            }
+            if c == '"' {
+                in_str = false;
+            }
+        } else {
+            if c == '"' {
+                in_str = true;
+            } else if c == '/' && b.get(i + 1) == Some(&'/') {
+                return Some(byte);
+            }
+        }
+        byte += c.len_utf8();
+        i += 1;
+    }
+    None
+}
+
+/// Occurrences of `needle` followed immediately by a string literal on
+/// this line, outside `//` comments. `needle` should end with `("` so the
+/// literal starts right after it. Returns (byte_col_of_needle, literal).
+pub fn str_args(line: &str, needle: &str) -> Vec<(usize, String)> {
+    let cut = comment_start(line).unwrap_or(line.len());
+    let scan = &line[..cut];
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = scan[from..].find(needle) {
+        let at = from + rel;
+        let rest = &scan[at + needle.len()..];
+        if let Some(end) = rest.find('"') {
+            out.push((at, rest[..end].to_string()));
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+/// The dotted identifier chain ending just before byte `col` (e.g. the
+/// receiver of a method call at `col`), `self.`-prefix stripped.
+pub fn receiver_before(line: &str, col: usize) -> String {
+    let head = &line.as_bytes()[..col];
+    let mut start = col;
+    while start > 0 {
+        let c = head[start - 1] as char;
+        if is_ident_char(c) || c == '.' {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    let r = line[start..col].trim_matches('.');
+    r.strip_prefix("self.").unwrap_or(r).to_string()
+}
+
+/// Leading numeric value of a report cell like `"123"`, `"1.23x"`,
+/// `"12.3%"`; `None` for `"-"` and other non-numeric cells.
+pub fn num_prefix(s: &str) -> Option<f64> {
+    let t = s.trim();
+    let mut end = 0;
+    for (i, c) in t.char_indices() {
+        if c.is_ascii_digit() || c == '.' || (i == 0 && c == '-') {
+            end = i + c.len_utf8();
+        } else {
+            break;
+        }
+    }
+    if end == 0 {
+        return None;
+    }
+    t[..end].parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lines(src: &str) -> Vec<String> {
+        src.lines().map(|l| l.to_string()).collect()
+    }
+
+    #[test]
+    fn strip_code_removes_strings_comments_and_chars() {
+        let src = lines(
+            "let a = \"{ not a brace }\"; // { comment }\n\
+             let b = '{'; let lt: &'static str = \"x\";\n\
+             let r = r#\"{\"k\": [1]}\"#;",
+        );
+        let s = strip_code(&src);
+        assert!(!s[0].contains('{'), "string + comment braces stripped: {:?}", s[0]);
+        assert!(!s[1].contains('{'), "char literal brace stripped: {:?}", s[1]);
+        assert!(s[1].contains("static"), "lifetime survives: {:?}", s[1]);
+        assert!(!s[2].contains('{'), "raw string braces stripped: {:?}", s[2]);
+    }
+
+    #[test]
+    fn strip_code_carries_string_continuation_across_lines() {
+        let src = lines("const H: &str =\n    \"part one \\\n     part { two }\";\nlet x = 1;");
+        let s = strip_code(&src);
+        assert!(!s[2].contains('{'), "continued string stays stripped: {:?}", s[2]);
+        assert_eq!(s[3].trim(), "let x = 1;");
+    }
+
+    #[test]
+    fn strip_test_mods_blanks_bodies_and_keeps_numbering() {
+        let src = lines(
+            "fn real() { reg.counter(\"live.name\"); }\n\
+             #[cfg(test)]\n\
+             mod tests {\n\
+                 use super::*;\n\
+                 fn t() { reg.counter(\"test.only\"); }\n\
+             }\n\
+             fn after() {}",
+        );
+        let out = strip_test_mods(&src);
+        assert_eq!(out.len(), src.len());
+        assert!(out[0].contains("live.name"));
+        assert!(out[4].is_empty(), "test body blanked");
+        assert!(out[6].contains("after"), "code after the test mod survives");
+    }
+
+    #[test]
+    fn str_args_skips_comments_and_extracts_literals() {
+        let l = r#"let y = exe.output_index("y")?; // exe.output_index("z")"#;
+        let args = str_args(l, ".output_index(\"");
+        assert_eq!(args.len(), 1);
+        assert_eq!(args[0].1, "y");
+        assert_eq!(receiver_before(l, args[0].0), "exe");
+    }
+
+    #[test]
+    fn receiver_strips_self_prefix() {
+        let l = "        let g = self.shared.slots.lock().unwrap();";
+        let col = l.find(".lock()").unwrap();
+        assert_eq!(receiver_before(l, col), "shared.slots");
+    }
+
+    #[test]
+    fn allowlist_roundtrip_and_errors() {
+        let a = parse_allowlist(
+            "# header comment\n\
+             ADDR001 rust/src/train/trainer.rs out[0]  # head grads are positional\n",
+        )
+        .unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].rule, "ADDR001");
+        assert_eq!(a[0].token, "out[0]");
+        assert_eq!(a[0].line, 2);
+        assert!(parse_allowlist("ADDR001 f.rs out[0]\n").is_err(), "missing justification");
+        assert!(parse_allowlist("ADDR001 f.rs out[0] extra # why\n").is_err(), "field count");
+    }
+
+    #[test]
+    fn stale_allowlist_entries_become_findings() {
+        let tree = Tree::from_files(vec![]);
+        let allow = parse_allowlist("LOCK001 nowhere.rs nothing  # obsolete\n").unwrap();
+        let rep = run_all(&tree, &allow);
+        // Empty trees trip the contract pass (files missing) — find the
+        // stale-entry finding specifically.
+        let stale: Vec<_> =
+            rep.diagnostics.iter().filter(|d| d.rule == RULE_STALE_ALLOW).collect();
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].file, ALLOWLIST_PATH);
+        assert_eq!(stale[0].line, 1);
+    }
+
+    #[test]
+    fn diagnostic_render_and_json_are_stable() {
+        let d = Diagnostic {
+            rule: "CONTRACT001",
+            file: "rust/src/runtime/registry.rs".into(),
+            line: 35,
+            msg: "version skew".into(),
+            remedy: "bump both".into(),
+            snippet: "pub const CONTRACT_VERSION: usize = 3;".into(),
+        };
+        assert_eq!(
+            d.render(),
+            "rust/src/runtime/registry.rs:35 [CONTRACT001] version skew — bump both"
+        );
+        let j = d.to_json();
+        assert_eq!(j.get("rule").as_str(), Some("CONTRACT001"));
+        assert_eq!(j.get("line").as_usize(), Some(35));
+        // Round-trips through the parser (the --json CI surface).
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("file").as_str(), Some("rust/src/runtime/registry.rs"));
+    }
+
+    #[test]
+    fn num_prefix_parses_report_cells() {
+        assert_eq!(num_prefix("123"), Some(123.0));
+        assert_eq!(num_prefix("1.23x"), Some(1.23));
+        assert_eq!(num_prefix(" 12.5% "), Some(12.5));
+        assert_eq!(num_prefix("-3.5"), Some(-3.5));
+        assert_eq!(num_prefix("-"), None);
+        assert_eq!(num_prefix("n/a"), None);
+    }
+}

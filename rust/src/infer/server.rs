@@ -493,6 +493,9 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("steps", Json::num(reg.counter("serve.steps").count() as f64)),
         ("slot_steps", Json::num(reg.counter("serve.slot_steps").count() as f64)),
         ("padded_slot_steps", Json::num(reg.counter("serve.padded_slot_steps").count() as f64)),
+        ("admitted", Json::num(reg.counter("serve.admitted").count() as f64)),
+        ("retired", Json::num(reg.counter("serve.retired").count() as f64)),
+        ("cancelled", Json::num(reg.counter("serve.cancelled").count() as f64)),
         ("slots_total", Json::num(reg.gauge("serve.slots_total").get() as f64)),
         ("slots_live", Json::num(reg.gauge("serve.slots_live").get() as f64)),
         ("queue_depth", Json::num(reg.gauge("serve.queue_depth").get() as f64)),
@@ -513,6 +516,7 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("plan_ms", Json::num(reg.gauge("route.plan_us").get() as f64 / 1e3)),
         ("tail_rerun_ms", Json::num(reg.gauge("route.tail_rerun_us").get() as f64 / 1e3)),
         ("ring_copy_bytes", Json::num(reg.gauge("ring.copy_bytes").get() as f64)),
+        ("ring_loads", Json::num(reg.gauge("ring.loads").get() as f64)),
         ("counters", reg.snapshot()),
     ])
 }
@@ -748,6 +752,10 @@ mod tests {
             "plan_ms",
             "tail_rerun_ms",
             "ring_copy_bytes",
+            "ring_loads",
+            "admitted",
+            "retired",
+            "cancelled",
         ] {
             assert_eq!(s.get(k).as_f64(), Some(0.0), "{} must default to 0", k);
         }

@@ -29,8 +29,12 @@
 //! - [`sim`] — calibrated cluster cost-model simulator and the
 //!   DeepSpeed-like baseline schedule used by the paper's tables.
 //! - [`metrics`] — counters, timelines, report writers.
+//! - [`analysis`] — `semoe lint`: dependency-free static checks of the
+//!   Python↔Rust artifact contract, thread discipline in the serving
+//!   stack, and metrics coverage (`docs/analysis.md`).
 
 pub mod util;
+pub mod analysis;
 pub mod config;
 pub mod runtime;
 pub mod storage;

@@ -8,6 +8,9 @@
 //!   simulate                     paper-scale simulator (table1|table2|fig10|fig11)
 //!   graph                        run the six-step inference graph pipeline
 //!   elastic                      elastic multi-task planner (table3 loads)
+//!   lint                         static analysis: contract drift, thread
+//!                                discipline, metrics coverage (docs/analysis.md)
+//!   perf-stub                    distil reports/*.json into BENCH_tier1.json
 
 use std::rc::Rc;
 
@@ -43,6 +46,8 @@ fn main() {
         Some("simulate") => cmd_simulate(&args),
         Some("graph") => cmd_graph(&args),
         Some("elastic") => cmd_elastic(&args),
+        Some("lint") => cmd_lint(&args),
+        Some("perf-stub") => cmd_perf_stub(&args),
         _ => {
             print_usage();
             Ok(())
@@ -58,7 +63,7 @@ fn print_usage() {
     println!(
         "{}",
         usage(
-            "semoe <info|train|infer|serve|simulate|graph|elastic>",
+            "semoe <info|train|infer|serve|simulate|graph|elastic|lint|perf-stub>",
             ABOUT,
             &[
                 OptSpec { name: "preset", help: "model preset (tiny|small|deep|base)", default: Some("small"), is_flag: false },
@@ -71,6 +76,8 @@ fn print_usage() {
                 OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
                 OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
                 OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
+                OptSpec { name: "root", help: "repo root for lint/perf-stub (default: auto-discover)", default: None, is_flag: false },
+                OptSpec { name: "json", help: "lint: emit diagnostics as JSON (CI diffing)", default: None, is_flag: true },
             ]
         )
     );
@@ -330,5 +337,41 @@ fn cmd_elastic(args: &Args) -> Result<()> {
     let (tt, pt) = bal.throughput(unit);
     println!("analytic:   {:.1} → {:.1} samples/s total; {:.1} → {:.1} per card (+{:.1}%)",
         tb, tt, pb, pt, (pt / pb - 1.0) * 100.0);
+    Ok(())
+}
+
+fn lint_root(args: &Args) -> Result<std::path::PathBuf> {
+    match args.get("root") {
+        Some(p) => Ok(p.into()),
+        None => semoe::analysis::repo_root(),
+    }
+}
+
+fn cmd_lint(args: &Args) -> Result<()> {
+    let root = lint_root(args)?;
+    let report = semoe::analysis::lint_repo(&root)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().pretty());
+    } else {
+        for d in &report.diagnostics {
+            println!("{}", d.render());
+        }
+        println!(
+            "lint: {} finding(s), {} suppressed via {}",
+            report.diagnostics.len(),
+            report.suppressed,
+            semoe::analysis::ALLOWLIST_PATH
+        );
+    }
+    if !report.diagnostics.is_empty() {
+        anyhow::bail!("semoe lint: {} finding(s)", report.diagnostics.len());
+    }
+    Ok(())
+}
+
+fn cmd_perf_stub(args: &Args) -> Result<()> {
+    let root = lint_root(args)?;
+    let path = semoe::analysis::bench_stub::write_bench_stub(&root)?;
+    println!("perf-stub: wrote {}", path.display());
     Ok(())
 }

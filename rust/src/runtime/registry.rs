@@ -30,7 +30,9 @@ use crate::config::ModelConfig;
 use crate::util::json::Json;
 
 /// The artifact contract this coordinator build understands. Mirrors
-/// `python/compile/aot.py::CONTRACT_VERSION`; bump both sides together.
+/// `python/compile/aot.py::CONTRACT_VERSION`; skew between the two sides
+/// is machine-checked by `semoe lint` rule CONTRACT001
+/// (`analysis::contract`, see docs/analysis.md).
 pub const CONTRACT_VERSION: usize = 3;
 
 /// The remedy line every contract error carries.

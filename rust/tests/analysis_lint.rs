@@ -1,0 +1,78 @@
+//! Integration: run the real `semoe lint` passes over this checkout.
+//!
+//! Two invariants the tier1 gate depends on:
+//!
+//! 1. With the checked-in allowlist, the tree lints clean (what
+//!    `semoe lint` asserts in `scripts/tier1.sh`).
+//! 2. Without the allowlist, the only findings are the known, justified
+//!    positional-addressing sites — and each anchors to a real file:line
+//!    whose text still contains the reported snippet, so diagnostics never
+//!    point at stale locations.
+
+use semoe::analysis::{self, contract, load_allowlist, run_all, Tree};
+
+fn repo() -> std::path::PathBuf {
+    analysis::repo_root().expect("repo root (set SEMOE_REPO when running from elsewhere)")
+}
+
+#[test]
+fn tree_lints_clean_with_checked_in_allowlist() {
+    let root = repo();
+    let report = analysis::lint_repo(&root).unwrap();
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.render()).collect();
+    assert!(report.diagnostics.is_empty(), "expected a clean tree, got:\n{}", rendered.join("\n"));
+    assert!(report.suppressed > 0, "the allowlist should be suppressing the known ADDR001 sites");
+}
+
+#[test]
+fn without_allowlist_only_known_positional_sites_fire() {
+    let root = repo();
+    let tree = Tree::load(&root).unwrap();
+    let report = run_all(&tree, &[]);
+    let rendered: Vec<String> = report.diagnostics.iter().map(|d| d.render()).collect();
+    assert!(
+        report.diagnostics.iter().all(|d| d.rule == contract::RULE_POSITIONAL_INDEX),
+        "only ADDR001 may fire un-allowlisted:\n{}",
+        rendered.join("\n")
+    );
+    // The two justified families: head_grad unpacking in the trainer and
+    // the per-device PJRT result layout in the executable.
+    for d in &report.diagnostics {
+        assert!(
+            d.file.ends_with("rust/src/train/trainer.rs")
+                || d.file.ends_with("rust/src/runtime/executable.rs"),
+            "unexpected positional site: {}",
+            d.render()
+        );
+    }
+    assert!(!report.diagnostics.is_empty(), "the known sites should fire without the allowlist");
+
+    // Every anchor must resolve: the file exists, the line is in range, and
+    // the line's text still matches the diagnostic's snippet.
+    for d in &report.diagnostics {
+        let path = root.join(&d.file);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("anchor file {} unreadable: {}", d.file, e));
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(d.line >= 1 && d.line <= lines.len(), "line out of range: {}", d.render());
+        assert_eq!(lines[d.line - 1].trim(), d.snippet, "stale anchor: {}", d.render());
+    }
+}
+
+#[test]
+fn allowlist_parses_and_every_entry_is_used() {
+    let root = repo();
+    let allow = load_allowlist(&root).unwrap();
+    assert!(!allow.is_empty(), "lint_allow.txt should carry the justified ADDR001 entries");
+    for e in &allow {
+        assert!(!e.justification.is_empty());
+    }
+    // run_all turns unused entries into ALLOW001 findings; a clean report
+    // (checked above) therefore implies every entry matched something.
+    let tree = Tree::load(&root).unwrap();
+    let report = run_all(&tree, &allow);
+    assert!(
+        !report.diagnostics.iter().any(|d| d.rule == analysis::RULE_STALE_ALLOW),
+        "stale allowlist entries present"
+    );
+}

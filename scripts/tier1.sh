@@ -19,6 +19,9 @@ cargo test -q
 echo "== tier1: clippy (deny warnings)"
 cargo clippy -q --all-targets -- -D warnings
 
+echo "== tier1: semoe lint (contract drift, thread discipline, metrics coverage)"
+cargo run --release -- lint
+
 echo "== tier1: serving smoke (continuous-batching HTTP path, routed ring passes)"
 cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2 --routed
 
@@ -48,5 +51,8 @@ SEMOE_SMOKE=1 cargo bench --bench ablation_prefetch
 echo "== tier1: routed-vs-dense ring ablation smoke (asserts routed < dense bytes under skew)"
 SEMOE_SMOKE=1 cargo bench --bench fig10_ring_offload
 SEMOE_SMOKE=1 cargo bench --bench table2_inference
+
+echo "== tier1: perf trajectory stub (BENCH_tier1.json from the smoke reports)"
+cargo run --release -- perf-stub
 
 echo "tier1 OK"
