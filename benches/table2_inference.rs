@@ -12,7 +12,10 @@ use semoe::config::presets::{cluster_for_gpus, fig10_model, table2_model, table2
 use semoe::infer::{InferMode, InferenceEngine, ServeSession, SessionConfig};
 use semoe::metrics::{Registry, Report};
 use semoe::runtime::{HostTensor, ModelArtifacts};
-use semoe::sim::{simulate_inference, simulate_routed_ring, simulate_serving, ServeRequest};
+use semoe::sim::{
+    simulate_inference, simulate_pipelined_ring, simulate_routed_ring, simulate_serving,
+    ServeRequest,
+};
 use semoe::util::Rng;
 
 fn smoke() -> bool {
@@ -119,6 +122,41 @@ fn main() {
         zipf_vs_dense.0,
         zipf_vs_dense.1
     );
+
+    // ---- pipelined-vs-fused pass pricing under the same serving
+    // regime: dense prefix executes while only the expert subset
+    // streams. On a copy-bound lane (1/16 PCIe) the split pass must
+    // beat the fused routed pass outright under Zipf skew.
+    let mut slow_cl = routed_cl.clone();
+    slow_cl.pcie.bandwidth /= 16.0;
+    let pt = rep.table(
+        "pipelined ring pricing (58.2B, K=4, 1/16 PCIe): fused vs split passes",
+        &["live tokens", "routing", "fused ms", "pipelined ms", "speedup"],
+    );
+    for tokens in [8.0f64, 64.0] {
+        for (routing, s) in [("uniform", 0.0), ("zipf s=1.2", 1.2)] {
+            let r = simulate_pipelined_ring(&routed_model, &slow_cl, 4, tokens, s);
+            rep.row(
+                pt,
+                vec![
+                    format!("{:.0}", tokens),
+                    routing.to_string(),
+                    format!("{:.1}", r.t_fused * 1e3),
+                    format!("{:.1}", r.t_pipelined * 1e3),
+                    format!("{:.2}x", r.speedup()),
+                ],
+            );
+            assert!(r.t_pipelined <= r.t_fused + 1e-12, "pipelining never loses");
+            if s > 0.0 {
+                assert!(
+                    r.t_pipelined < r.t_fused,
+                    "pipelined pass must beat fused under Zipf skew: {:.4} vs {:.4}",
+                    r.t_pipelined,
+                    r.t_fused
+                );
+            }
+        }
+    }
 
     // ---- measured rows: real engine, real artifacts.
     let arts = Rc::new(ModelArtifacts::load("deep").expect("deep artifacts"));

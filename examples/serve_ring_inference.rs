@@ -12,7 +12,9 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 
 use semoe::infer::server::{http_get, http_post, Server, ServerStats};
-use semoe::infer::{AdmissionConfig, InferMode, InferenceEngine, RoutedRingConfig, SessionConfig};
+use semoe::infer::{
+    AdmissionConfig, InferMode, InferenceEngine, PipelineConfig, RoutedRingConfig, SessionConfig,
+};
 use semoe::runtime::ModelArtifacts;
 use semoe::util::cli::Args;
 use semoe::util::human_bytes;
@@ -23,6 +25,7 @@ fn main() -> anyhow::Result<()> {
     let preset = args.str("preset", "deep");
     let ring = args.usize("ring", 3);
     let routed = args.flag("routed");
+    let pipeline = args.flag("pipeline");
     let n_requests = args.usize("requests", 12);
     let max_tokens = args.usize("tokens", 4);
 
@@ -47,6 +50,9 @@ fn main() -> anyhow::Result<()> {
             if routed && ring > 0 {
                 engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
             }
+            if pipeline && ring > 0 {
+                engine.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
+            }
             let resident = InferenceEngine::new(arts.clone(), InferMode::Resident, 7, None)?;
             let _ = info_tx.send((engine.device_weight_bytes(), resident.device_weight_bytes()));
             drop(resident);
@@ -55,10 +61,11 @@ fn main() -> anyhow::Result<()> {
     )?;
     let addr = server.addr;
     println!(
-        "serving '{}' with ring K={}{} on {}",
+        "serving '{}' with ring K={}{}{} on {}",
         preset,
         ring,
         if routed { " (routed passes)" } else { "" },
+        if pipeline { " (pipelined passes)" } else { "" },
         addr
     );
 
@@ -137,6 +144,21 @@ fn main() -> anyhow::Result<()> {
         g("route_rerun_layers"), 0.0,
         "contract v3: plan-miss repairs must be tail-only"
     );
+    if pipeline && ring > 0 {
+        // PR-7: pipelined split-pass accounting end to end.
+        println!(
+            "pipelined passes: {:.0} dense-prefix layers, overlap {:.2} ms, stalled {:.2} ms",
+            g("route_dense_prefix_layers"), g("overlap_ms"), g("stalled_ms")
+        );
+        assert!(
+            g("route_dense_prefix_layers") > 0.0,
+            "pipelined serving must run layer_dense on every section"
+        );
+        assert_eq!(
+            g("route_rerun_tails"), 0.0,
+            "pipelined passes are exact by construction — no tail reruns"
+        );
+    }
     println!("serve_ring_inference OK");
     Ok(())
 }

@@ -51,6 +51,9 @@ fn main() -> anyhow::Result<()> {
         preset: preset.clone(),
         steps,
         lr,
+        // Pipelined split sweeps (offload only): layer_dense runs while
+        // the planned expert fetches drain — bit-identical to fused.
+        pipelined: args.flag("pipeline"),
         log_every: 10,
         ..Default::default()
     };

@@ -113,6 +113,144 @@ pub fn write_bench_stub(root: &Path) -> Result<PathBuf> {
     Ok(path)
 }
 
+// ------------------------------------------------------------- trajectory
+
+/// Repo-relative perf-trajectory path: one headline entry per tier1 run,
+/// keyed by git sha, bounded at [`TRAJECTORY_CAP`].
+pub const TRAJECTORY_PATH: &str = "BENCH_trajectory.json";
+
+/// Max retained trajectory entries — oldest dropped first.
+pub const TRAJECTORY_CAP: usize = 50;
+
+/// Fractional `tokens_per_s` drop beyond which `semoe perf-compare`
+/// fails (the tier1 regression gate).
+pub const REGRESSION_TOLERANCE: f64 = 0.10;
+
+/// Headline metrics carried per trajectory entry. The bool marks the
+/// gated metric: only `tokens_per_s` can fail the compare — byte and
+/// cost columns are substrate-noisy and stay informational.
+const TRACKED: [(&str, bool); 5] = [
+    ("tokens_per_s", true),
+    ("ring_copy_mb", false),
+    ("plan_hit_rate", false),
+    ("plan_cost_ms", false),
+    ("tail_repair_ms", false),
+];
+
+/// Short git sha of the checkout at `root`; `"unknown"` when git is
+/// unavailable (a detached CI tarball still gets a trajectory point).
+pub fn git_sha(root: &Path) -> String {
+    std::process::Command::new("git")
+        .arg("-C")
+        .arg(root)
+        .args(["rev-parse", "--short", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Append `stub`'s headline numbers to `BENCH_trajectory.json` under
+/// `sha`. An existing entry for the same sha is replaced — repeated
+/// tier1 runs on one commit stay one curve point — and the list is
+/// truncated to the newest [`TRAJECTORY_CAP`] entries.
+pub fn append_trajectory(root: &Path, stub: &Json, sha: &str) -> Result<PathBuf> {
+    let path = root.join(TRAJECTORY_PATH);
+    let mut entries: Vec<Json> = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .and_then(|j| j.get("entries").as_arr().map(|a| a.to_vec()))
+        .unwrap_or_default();
+    entries.retain(|e| e.get("sha").as_str() != Some(sha));
+    let mut fields = vec![
+        ("sha", Json::str(sha)),
+        ("generated_unix", stub.get("generated_unix").clone()),
+    ];
+    for (name, _) in TRACKED {
+        fields.push((name, stub.get(name).clone()));
+    }
+    entries.push(Json::obj(fields));
+    if entries.len() > TRAJECTORY_CAP {
+        let drop = entries.len() - TRAJECTORY_CAP;
+        entries.drain(..drop);
+    }
+    let out = Json::obj(vec![
+        ("schema", Json::str("semoe-bench-trajectory/v1")),
+        ("entries", Json::arr(entries)),
+    ]);
+    std::fs::write(&path, out.pretty() + "\n")
+        .with_context(|| format!("write {}", path.display()))?;
+    Ok(path)
+}
+
+/// One metric's movement between the two newest trajectory points.
+#[derive(Debug, Clone)]
+pub struct PerfDelta {
+    pub metric: String,
+    pub baseline: Option<f64>,
+    pub current: Option<f64>,
+    /// `(current − baseline) / baseline` when both sides are numeric.
+    pub delta_frac: Option<f64>,
+    /// This metric's drop fails the gate.
+    pub regressed: bool,
+}
+
+/// The perf-compare verdict: newest trajectory entry vs its predecessor.
+#[derive(Debug, Clone)]
+pub struct PerfComparison {
+    pub baseline_sha: String,
+    pub current_sha: String,
+    pub deltas: Vec<PerfDelta>,
+    pub regressed: bool,
+}
+
+/// Compare the newest trajectory entry against its predecessor. `None`
+/// with fewer than two points (first run on a branch — nothing to gate).
+/// A gated metric missing on either side never gates: smoke runs with a
+/// shape-drifted report must not hard-fail tier1 over a `null`.
+pub fn perf_compare(root: &Path) -> Result<Option<PerfComparison>> {
+    let path = root.join(TRAJECTORY_PATH);
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(_) => return Ok(None),
+    };
+    let j = Json::parse(&text).with_context(|| format!("parse {}", path.display()))?;
+    let entries = match j.get("entries").as_arr() {
+        Some(a) if a.len() >= 2 => a,
+        _ => return Ok(None),
+    };
+    let base = &entries[entries.len() - 2];
+    let cur = &entries[entries.len() - 1];
+    let mut deltas = Vec::new();
+    let mut regressed = false;
+    for (name, gated) in TRACKED {
+        let b = base.get(name).as_f64();
+        let c = cur.get(name).as_f64();
+        let delta_frac = match (b, c) {
+            (Some(b), Some(c)) if b.abs() > 1e-12 => Some((c - b) / b),
+            _ => None,
+        };
+        let bad = gated && delta_frac.map(|d| d < -REGRESSION_TOLERANCE).unwrap_or(false);
+        regressed |= bad;
+        deltas.push(PerfDelta {
+            metric: name.to_string(),
+            baseline: b,
+            current: c,
+            delta_frac,
+            regressed: bad,
+        });
+    }
+    Ok(Some(PerfComparison {
+        baseline_sha: base.get("sha").as_str().unwrap_or("?").to_string(),
+        current_sha: cur.get("sha").as_str().unwrap_or("?").to_string(),
+        deltas,
+        regressed,
+    }))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,6 +333,62 @@ mod tests {
         assert!((hit - (1.0 - 112.0 / 448.0)).abs() < 1e-9, "hit = {}", hit);
         assert!(back.get("plan_cost_ms").is_null(), "ablation report absent");
         assert_eq!(back.get("sources").as_arr().map(|a| a.len()), Some(2));
+    }
+
+    fn mini_stub(tps: f64) -> Json {
+        Json::obj(vec![
+            ("generated_unix", Json::num(1.0)),
+            ("tokens_per_s", Json::num(tps)),
+            ("ring_copy_mb", Json::num(113.5)),
+        ])
+    }
+
+    #[test]
+    fn trajectory_is_keyed_by_sha_and_bounded() {
+        let dir = tmp_dir("traj");
+        append_trajectory(&dir, &mini_stub(30.0), "aaa").unwrap();
+        append_trajectory(&dir, &mini_stub(31.0), "aaa").unwrap(); // same sha: replace
+        append_trajectory(&dir, &mini_stub(33.0), "bbb").unwrap();
+        let j = Json::parse(&std::fs::read_to_string(dir.join(TRAJECTORY_PATH)).unwrap()).unwrap();
+        let e = j.get("entries").as_arr().unwrap().to_vec();
+        assert_eq!(e.len(), 2, "re-running one commit keeps one curve point");
+        assert_eq!(e[0].get("sha").as_str(), Some("aaa"));
+        assert_eq!(e[0].get("tokens_per_s").as_f64(), Some(31.0));
+        assert_eq!(e[1].get("sha").as_str(), Some("bbb"));
+        assert!(e[0].get("plan_cost_ms").is_null(), "absent stub fields ride as null");
+        for i in 0..TRAJECTORY_CAP + 5 {
+            append_trajectory(&dir, &mini_stub(i as f64), &format!("sha{}", i)).unwrap();
+        }
+        let j = Json::parse(&std::fs::read_to_string(dir.join(TRAJECTORY_PATH)).unwrap()).unwrap();
+        let e = j.get("entries").as_arr().unwrap();
+        assert_eq!(e.len(), TRAJECTORY_CAP, "list stays bounded");
+        assert_eq!(e.last().unwrap().get("sha").as_str(), Some(format!("sha{}", TRAJECTORY_CAP + 4).as_str()));
+    }
+
+    #[test]
+    fn perf_compare_gates_tokens_per_s_regressions_only() {
+        let dir = tmp_dir("cmp");
+        assert!(perf_compare(&dir).unwrap().is_none(), "no trajectory yet");
+        append_trajectory(&dir, &mini_stub(100.0), "base").unwrap();
+        assert!(perf_compare(&dir).unwrap().is_none(), "one point: nothing to gate");
+        append_trajectory(&dir, &mini_stub(95.0), "ok").unwrap();
+        let c = perf_compare(&dir).unwrap().unwrap();
+        assert!(!c.regressed, "-5% stays inside the 10% tolerance");
+        assert_eq!(c.baseline_sha, "base");
+        assert_eq!(c.current_sha, "ok");
+        append_trajectory(&dir, &mini_stub(80.0), "bad").unwrap();
+        let c = perf_compare(&dir).unwrap().unwrap();
+        assert!(c.regressed, "-15.8% vs the previous point must gate");
+        let d = c.deltas.iter().find(|d| d.metric == "tokens_per_s").unwrap();
+        assert!(d.regressed);
+        assert!(d.delta_frac.unwrap() < -REGRESSION_TOLERANCE);
+        // A null gated metric on either side never gates (smoke-run
+        // report drift must not hard-fail tier1).
+        let sparse = Json::obj(vec![("generated_unix", Json::num(1.0))]);
+        append_trajectory(&dir, &sparse, "nul").unwrap();
+        let c = perf_compare(&dir).unwrap().unwrap();
+        assert!(!c.regressed);
+        assert!(c.deltas.iter().all(|d| d.delta_frac.is_none() || !d.regressed));
     }
 
     fn tmp_dir(tag: &str) -> std::path::PathBuf {

@@ -193,6 +193,46 @@ mod tests {
     }
 
     #[test]
+    fn pipelined_pass_gauges_are_covered_when_surfaced_and_documented() {
+        // The PR-7 metric family end to end: engine registers the three
+        // pipelined-pass gauges, server quotes them, docs carry the
+        // dotted names — pass D must stay silent.
+        let engine = SrcFile::new(
+            "rust/src/infer/engine.rs",
+            "fn publish(reg: &Registry) {\n\
+             \x20   reg.gauge(\"route.dense_prefix_layers\").set(1);\n\
+             \x20   reg.gauge(\"route.overlap_us\").set(2);\n\
+             \x20   reg.gauge(\"route.stalled_us\").set(3);\n\
+             }\n",
+        );
+        let srv = server(
+            "    let a = reg.gauge(\"route.dense_prefix_layers\").get();\n\
+             \x20   let b = reg.gauge(\"route.overlap_us\").get();\n\
+             \x20   let c = reg.gauge(\"route.stalled_us\").get();",
+        );
+        let good_docs = docs(
+            "| `serve.steps` | … |\n\
+             | `route.dense_prefix_layers` | layer_dense executions |\n\
+             | `route.overlap_us` | copy hidden behind the prefix |\n\
+             | `route.stalled_us` | copy still exposed |",
+        );
+        assert!(check_metrics(&Tree::from_files(vec![engine.clone(), srv.clone(), good_docs]))
+            .is_empty());
+
+        // Dropping one dotted name from the docs flags exactly that gauge.
+        let bad_docs = docs(
+            "| `serve.steps` | … |\n\
+             | `route.dense_prefix_layers` | … |\n\
+             | `route.overlap_us` | … |",
+        );
+        let d = check_metrics(&Tree::from_files(vec![engine, srv, bad_docs]));
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_UNDOCUMENTED);
+        assert!(d[0].msg.contains("route.stalled_us"), "{}", d[0].msg);
+        assert_eq!(d[0].file, "rust/src/infer/engine.rs");
+    }
+
+    #[test]
     fn gauges_are_collected_too() {
         let t = Tree::from_files(vec![
             server("    let g = reg.gauge(\"ring.loads\").get();"),

@@ -71,6 +71,12 @@ pub struct TrainConfig {
     pub hot_frac: f64,
     /// Which planner predicts the expert axis (see [`RouteSourceChoice`]).
     pub route_source: RouteSourceChoice,
+    /// Pipelined (split) sweeps: run each layer's `layer_dense` prefix
+    /// while that layer's planned SSD fetches drain, then one
+    /// `expert_tail` over the prefix-emitted exact routing — plan
+    /// misses become pre-tail demand fetches instead of tail re-runs.
+    /// When false the fused `layer_fwd` plan/repair sweep runs.
+    pub pipelined: bool,
     /// CPU cache capacity as a fraction of total sparse bytes.
     pub cpu_cache_frac: f64,
     /// Zipf skew of the synthetic corpus (0 = uniform tokens).
@@ -92,6 +98,7 @@ impl Default for TrainConfig {
             expert_prefetch: true,
             hot_frac: 0.5,
             route_source: RouteSourceChoice::EmbeddingProxy,
+            pipelined: false,
             cpu_cache_frac: 0.5,
             corpus_skew: 1.05,
             log_every: 10,
@@ -120,6 +127,7 @@ impl TrainConfig {
                 .as_str()
                 .and_then(RouteSourceChoice::parse)
                 .unwrap_or(d.route_source),
+            pipelined: j.get("pipelined").as_bool().unwrap_or(d.pipelined),
             cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
             corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
             log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
@@ -144,6 +152,7 @@ impl TrainConfig {
             ("expert_prefetch", Json::Bool(self.expert_prefetch)),
             ("hot_frac", Json::num(self.hot_frac)),
             ("route_source", Json::str(self.route_source.as_str())),
+            ("pipelined", Json::Bool(self.pipelined)),
             ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
             ("corpus_skew", Json::num(self.corpus_skew)),
             ("log_every", Json::num(self.log_every as f64)),
@@ -160,6 +169,7 @@ mod tests {
         let mut c = TrainConfig::default();
         c.residency = ParamResidency::Offload;
         c.route_source = RouteSourceChoice::CarriedKernel;
+        c.pipelined = true;
         c.steps = 300;
         let back = TrainConfig::from_json(&c.to_json());
         assert_eq!(c, back);

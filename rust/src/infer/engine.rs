@@ -27,6 +27,18 @@
 //! re-runs and stays 0). The old coordinator-side f64 shadow recompute
 //! is gone from the hot path (`PassTiming::shadow_secs` stays 0; the
 //! shadow router survives only as the parity test oracle).
+//!
+//! Ring passes can additionally be **pipelined** ([`PipelineConfig`],
+//! `set_pipelined`, `docs/serving.md` §Pipelined dense/sparse passes):
+//! each section runs its `layer_dense` prefix straight from the CPU
+//! tier *while* the copy lane streams only that section's planned
+//! expert weights ([`StageKind::SparseOnly`]), then the dense-emitted
+//! exact routing drives a late splice of any unplanned experts before
+//! the single `expert_tail` run. The plan is exact by construction —
+//! there is nothing to re-run, so `rerun_tails` stays 0 and the fused
+//! plan/repair branch survives only as the non-pipelined fallback.
+//! `PassTiming::overlap_secs` / `RouteRepairStats::{overlap_secs,
+//! stalled_secs}` account how much of the copy lane the prefix hid.
 
 use std::rc::Rc;
 use std::sync::Arc;
@@ -34,7 +46,7 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use super::ring_memory::{LayerLoader, RingMemory, RingStats};
+use super::ring_memory::{LayerLoader, RingMemory, RingStats, StageKind};
 use super::session::{self, DecodeModel, SlotState, StepReport};
 use crate::comm::FusionBuffer;
 use crate::metrics::Registry;
@@ -74,6 +86,26 @@ impl Default for RoutedRingConfig {
     }
 }
 
+/// Pipelined-pass knobs. Off by default; only meaningful in `Ring`
+/// mode. A pipelined pass runs each section's `layer_dense` prefix
+/// from the CPU tier while the ring stages only that section's planned
+/// expert weights, late-splices whatever the dense-emitted exact
+/// routing says the plan missed, and runs `expert_tail` exactly once —
+/// plan misses cannot cause re-runs by construction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipelineConfig {
+    pub enabled: bool,
+    /// Routed-load coverage of the pinned hot set unioned into each
+    /// plan (same meaning as [`RoutedRingConfig::hot_frac`]).
+    pub hot_frac: f64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { enabled: false, hot_frac: 0.5 }
+    }
+}
+
 /// Routed-pass plan/repair accounting (inference twin of the trainer's
 /// `PrefetchStats`).
 #[derive(Debug, Clone, Copy, Default)]
@@ -98,6 +130,18 @@ pub struct RouteRepairStats {
     /// Passes planned from the previous pass's kernel-emitted sets
     /// instead of the embedding proxy (the decode-step carry-over).
     pub carried_plans: u64,
+    /// `layer_dense` prefix executions on pipelined passes — the
+    /// runtime proof that the split artifact actually runs (one per
+    /// layer per pipelined pass; stays 0 on fused passes).
+    pub dense_prefix_layers: u64,
+    /// Copy-lane seconds hidden behind compute on ring passes
+    /// (`copy_secs − stall_secs`, clamped at 0, accumulated per pass).
+    pub overlap_secs: f64,
+    /// Copy-lane seconds NOT hidden — the time `get()` blocked the
+    /// compute thread. The pipelined A/B reads as
+    /// `overlap_secs + stalled_secs == copy time` with the pipelined
+    /// path shifting seconds from `stalled` into `overlap`.
+    pub stalled_secs: f64,
 }
 
 /// Per-pass timing: the Fig 10 bars.
@@ -106,6 +150,13 @@ pub struct PassTiming {
     pub compute_secs: f64,
     pub copy_secs: f64,
     pub stall_secs: f64,
+    /// The hidden share of `copy_secs`: staging-thread seconds that ran
+    /// concurrently with compute instead of blocking it. The per-pass
+    /// timing identity `copy_secs == overlap_secs + stall_secs` holds on
+    /// fused AND pipelined ring passes (asserted in tests) — pipelining
+    /// moves seconds from `stall_secs` into this field, it does not
+    /// change their sum.
+    pub overlap_secs: f64,
     /// Coordinator-side f64 shadow-recompute time. Contract v2 removed
     /// the shadow MHA from the hot path, so this stays 0 on routed ring
     /// passes (asserted in the fig10 ablation); the field survives for
@@ -222,6 +273,29 @@ impl CpuWeightStore {
             .collect()
     }
 
+    /// Unfuse a subset of one layer's members, by member position — the
+    /// pipelined pass feeds `layer_dense` exactly its (dense) input
+    /// tensors this way, in artifact input order.
+    pub fn tensors_at(&self, layer: usize, idx: &[usize]) -> Vec<HostTensor> {
+        let fused = &self.layers[layer];
+        idx.iter()
+            .map(|&i| {
+                let m = &self.members[i];
+                HostTensor::from_f32(&m.shape, fused[m.offset..m.offset + m.numel()].to_vec())
+            })
+            .collect()
+    }
+
+    /// Whether the member at `idx` is an expert-leading-dim tensor.
+    pub fn member_sparse(&self, idx: usize) -> bool {
+        self.members[idx].sparse
+    }
+
+    /// Number of member tensors per layer.
+    pub fn member_count(&self) -> usize {
+        self.members.len()
+    }
+
     /// Demand-repair: splice expert `e`'s slices of `layer` into the
     /// staged tensors of a routed pass. Returns the bytes copied.
     pub fn copy_expert_into(
@@ -268,35 +342,50 @@ impl CpuWeightStore {
     /// model). Given an expert subset, only those experts' slices of
     /// sparse members are copied — the rest stay zero, which the
     /// kernel's one-hot combine never observes (no token selects an
-    /// unrouted expert, so its contribution is an exact 0.0).
+    /// unrouted expert, so its contribution is an exact 0.0). Under
+    /// [`StageKind::SparseOnly`] (pipelined passes) dense members are
+    /// staged as zero-byte placeholders: the compute thread runs
+    /// `layer_dense` from these same `Arc`'d buffers directly, so the
+    /// copy lane carries expert weights alone.
     pub fn loader(&self) -> LayerLoader {
         let layers = Arc::clone(&self.layers);
         let members = self.members.clone();
         let n_experts = self.n_experts;
-        Box::new(move |l, experts: Option<&[usize]>| {
+        Box::new(move |l, experts: Option<&[usize]>, kind| {
             let fused = &layers[l];
             let mut out = Vec::with_capacity(members.len());
             let mut copied = 0usize;
             for m in &members {
                 let numel = m.numel();
                 let src = &fused[m.offset..m.offset + numel];
-                match experts {
-                    Some(set) if m.sparse => {
-                        let per_expert = numel / n_experts;
-                        let mut data = vec![0f32; numel];
-                        for &e in set {
-                            if e < n_experts {
-                                data[e * per_expert..(e + 1) * per_expert]
-                                    .copy_from_slice(&src[e * per_expert..(e + 1) * per_expert]);
-                                copied += per_expert * 4;
+                if m.sparse {
+                    match experts {
+                        Some(set) => {
+                            let per_expert = numel / n_experts;
+                            let mut data = vec![0f32; numel];
+                            for &e in set {
+                                if e < n_experts {
+                                    data[e * per_expert..(e + 1) * per_expert].copy_from_slice(
+                                        &src[e * per_expert..(e + 1) * per_expert],
+                                    );
+                                    copied += per_expert * 4;
+                                }
                             }
+                            out.push(HostTensor::from_f32(&m.shape, data));
                         }
-                        out.push(HostTensor::from_f32(&m.shape, data));
+                        None => {
+                            copied += numel * 4;
+                            out.push(HostTensor::from_f32(&m.shape, src.to_vec()));
+                        }
                     }
-                    _ => {
-                        copied += numel * 4;
-                        out.push(HostTensor::from_f32(&m.shape, src.to_vec()));
-                    }
+                } else if kind == StageKind::SparseOnly {
+                    // Placeholder: never read — `layer_dense` takes no
+                    // expert weights and the compute thread feeds it
+                    // from the CPU tier, not from the slot.
+                    out.push(HostTensor::from_f32(&m.shape, vec![0f32; numel]));
+                } else {
+                    copied += numel * 4;
+                    out.push(HostTensor::from_f32(&m.shape, src.to_vec()));
                 }
             }
             (out, copied)
@@ -318,6 +407,10 @@ pub struct InferenceEngine {
     /// FFN → gated combine over the fused entry's emitted activations.
     /// Plan-miss repairs re-execute this instead of the whole layer.
     expert_tail: Rc<ArtifactExe>,
+    /// The layer's dense half alone (ln1 → MHA → residual → ln2 →
+    /// router): the pipelined pass runs this from the CPU tier while
+    /// the section's expert weights are still in flight.
+    layer_dense: Rc<ArtifactExe>,
     head_infer: Rc<ArtifactExe>,
     embed: HostTensor,
     head: Vec<HostTensor>, // lnf_scale, lnf_bias, wout
@@ -347,10 +440,23 @@ pub struct InferenceEngine {
     /// vector, in `expert_tail` input order (resolved by name at
     /// construction — a drifted signature fails loudly, not silently).
     tail_weight_idx: Vec<usize>,
+    /// `layer_dense` output positions, resolved by name (same routing
+    /// quadruple + activations as the fused entry, minus `y`).
+    dense_h_out: usize,
+    dense_moe_in_out: usize,
+    dense_route_out: usize,
+    dense_gate_out: usize,
+    dense_pos_out: usize,
+    dense_keep_out: usize,
+    /// Positions of `layer_dense`'s weight inputs within a layer's
+    /// member vector, in artifact input order (the member-order dense
+    /// prefix — validated at construction).
+    dense_weight_idx: Vec<usize>,
     /// Per-layer rolling expert load → hot-set pinning for routed plans.
     load: Vec<LoadStats>,
     hot: Vec<Vec<usize>>,
     routed: RoutedRingConfig,
+    pipeline: PipelineConfig,
     route_stats: RouteRepairStats,
     /// Reusable flat token scratch for `decode_step`: removes the
     /// per-slot window clones from the serving hot path (one staging
@@ -416,10 +522,34 @@ impl InferenceEngine {
             "expert_tail must take exactly the four expert tensors, found {}",
             tail_weight_idx.len()
         );
+        // The dense half for pipelined passes: same emitted routing
+        // quadruple + activations as the fused entry, no `y`, and its
+        // weight inputs must be exactly the non-expert members.
+        let layer_dense = arts.load_exe("layer_dense").context("layer_dense")?;
+        let dense_h_out = layer_dense.output_index("h")?;
+        let dense_moe_in_out = layer_dense.output_index("moe_in")?;
+        let dense_route_out = layer_dense.output_index("route_expert")?;
+        let dense_gate_out = layer_dense.output_index("route_gate")?;
+        let dense_pos_out = layer_dense.output_index("route_pos")?;
+        let dense_keep_out = layer_dense.output_index("route_keep")?;
+        let dense_weight_idx: Vec<usize> = layer_dense
+            .spec
+            .inputs
+            .iter()
+            .filter_map(|s| store.member_index(&s.name))
+            .collect();
+        anyhow::ensure!(
+            dense_weight_idx.len() + tail_weight_idx.len() == store.member_count()
+                && dense_weight_idx.iter().all(|&i| !store.member_sparse(i)),
+            "layer_dense must take exactly the non-expert members, found {} of {}",
+            dense_weight_idx.len(),
+            store.member_count()
+        );
         Ok(InferenceEngine {
             embed_fwd: arts.load_exe("embed_fwd").context("embed_fwd")?,
             layer_fwd,
             expert_tail,
+            layer_dense,
             head_infer: arts.load_exe("head_infer").context("head_infer")?,
             arts,
             embed: embed.context("embed param")?,
@@ -439,9 +569,17 @@ impl InferenceEngine {
             moe_in_out,
             tail_y,
             tail_weight_idx,
+            dense_h_out,
+            dense_moe_in_out,
+            dense_route_out,
+            dense_gate_out,
+            dense_pos_out,
+            dense_keep_out,
+            dense_weight_idx,
             load: (0..n_layers).map(|_| LoadStats::new(n_experts, 0.5)).collect(),
             hot: vec![Vec::new(); n_layers],
             routed: RoutedRingConfig::default(),
+            pipeline: PipelineConfig::default(),
             route_stats: RouteRepairStats::default(),
             flat: Vec::new(),
             timing: PassTiming::default(),
@@ -462,6 +600,21 @@ impl InferenceEngine {
 
     pub fn routed(&self) -> RoutedRingConfig {
         self.routed
+    }
+
+    /// Configure pipelined ring passes: `layer_dense` per section from
+    /// the CPU tier while the ring stages only that section's planned
+    /// expert subset, exact routing from the dense prefix, late splice,
+    /// one `expert_tail` run. A no-op in `Resident` mode (the resident
+    /// path has no copy lane to hide). Carried routing state is dropped
+    /// — the next pass plans from scratch.
+    pub fn set_pipelined(&mut self, cfg: PipelineConfig) {
+        self.pipeline = cfg;
+        self.route.reset();
+    }
+
+    pub fn pipelined(&self) -> PipelineConfig {
+        self.pipeline
     }
 
     /// Swap the route planner (the `RouteSource` API): tests inject the
@@ -517,10 +670,12 @@ impl InferenceEngine {
                 load,
                 hot,
                 routed,
+                pipeline,
                 route_stats,
                 timing,
                 layer_fwd,
                 expert_tail,
+                layer_dense,
                 embed,
                 y_out,
                 route_out,
@@ -531,6 +686,13 @@ impl InferenceEngine {
                 moe_in_out,
                 tail_y,
                 tail_weight_idx,
+                dense_h_out,
+                dense_moe_in_out,
+                dense_route_out,
+                dense_gate_out,
+                dense_pos_out,
+                dense_keep_out,
+                dense_weight_idx,
                 ..
             } = self;
             let ring = ring.as_mut().unwrap();
@@ -538,14 +700,20 @@ impl InferenceEngine {
             let (y_out, route_out) = (*y_out, *route_out);
             let (gate_out, pos_out, keep_out) = (*gate_out, *pos_out, *keep_out);
             let (h_out, moe_in_out, tail_y) = (*h_out, *moe_in_out, *tail_y);
+            let (dense_h_out, dense_moe_in_out) = (*dense_h_out, *dense_moe_in_out);
+            let (dense_route_out, dense_gate_out) = (*dense_route_out, *dense_gate_out);
+            let (dense_pos_out, dense_keep_out) = (*dense_pos_out, *dense_keep_out);
+            let pipelined = pipeline.enabled;
+            let hot_frac = if pipelined { pipeline.hot_frac } else { routed.hot_frac };
 
             // Plan the expert axis for this pass one ring slot ahead via
             // the RouteSource: the previous pass's kernel-emitted exact
             // sets when observed (decode windows shift one token — the
             // carry-over), the embedding proxy otherwise; hot pins are
             // unioned in either way. Exactness is repaired per layer
-            // below from the kernel's own route_expert output.
-            let plan: Option<RoutePlan> = if routed.enabled {
+            // below from the kernel's own route_expert output — on the
+            // pipelined path the "repair" is the pre-tail late splice.
+            let plan: Option<RoutePlan> = if routed.enabled || pipelined {
                 let ts = Instant::now();
                 let q = RouteQuery {
                     tokens: tokens.as_i32()?,
@@ -566,77 +734,148 @@ impl InferenceEngine {
             };
 
             let before = ring.stats();
+            ring.set_stage_kind(if pipelined { StageKind::SparseOnly } else { StageKind::Full });
             ring.begin_pass(plan.as_ref());
-            for l in 0..n_layers {
-                let mut weights = ring.get(l)?;
-                let run = |weights: &[HostTensor], x: &HostTensor| -> Result<Vec<HostTensor>> {
-                    let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + weights.len());
-                    inputs.push(x);
-                    inputs.extend(weights.iter());
-                    layer_fwd.run_ref(&inputs)
-                };
-                let tc = Instant::now();
-                let mut out = run(&weights, &x)?;
-                timing.compute_secs += tc.elapsed().as_secs_f64();
-                if routed.enabled {
-                    // The exact routed set, emitted by the kernel
-                    // itself. It is valid even though unplanned
-                    // experts' staged slices are zero-filled: routing
-                    // depends only on the dense prefix. Misses are
-                    // repaired by splicing the missing experts from the
-                    // CPU tier and re-executing only the expert tail —
-                    // the visible repair cost, counted separately from
-                    // the overlapped copy lane.
+            if pipelined {
+                // Pipelined pass: section S's dense prefix executes from
+                // the CPU tier while the copy lane is still streaming
+                // S's (and the next K−1 sections') planned expert
+                // weights. The prefix emits the exact routing, so by the
+                // time the tail needs expert weights we know precisely
+                // which staged slices to late-splice — the plan is exact
+                // by construction and nothing ever re-runs.
+                for l in 0..n_layers {
+                    let td = Instant::now();
+                    let dense_w = store.tensors_at(l, dense_weight_idx);
+                    let mut dense_in: Vec<&HostTensor> = Vec::with_capacity(1 + dense_w.len());
+                    dense_in.push(&x);
+                    dense_in.extend(dense_w.iter());
+                    let dout = layer_dense.run_ref(&dense_in)?;
+                    timing.compute_secs += td.elapsed().as_secs_f64();
+                    route_stats.dense_prefix_layers += 1;
+
                     let ts = Instant::now();
                     let (exact, counts) =
-                        routed_set_from_ids(out[route_out].as_i32()?, n_experts);
+                        routed_set_from_ids(dout[dense_route_out].as_i32()?, n_experts);
                     route.observe(l, &counts);
                     load[l].record(&counts);
-                    hot[l] = load[l].hot_experts(routed.hot_frac);
+                    hot[l] = load[l].hot_experts(hot_frac);
                     route_stats.exact_experts += exact.len() as u64;
+                    timing.plan_secs += ts.elapsed().as_secs_f64();
+
+                    // The whole dense prefix ran between begin_pass (or
+                    // release(l−K)) and this get — the overlap window.
+                    let mut weights = ring.get(l)?;
                     let missed: Vec<usize> = match ring.planned(l) {
                         Some(planned) => exact
                             .iter()
                             .copied()
                             .filter(|e| planned.binary_search(e).is_err())
                             .collect(),
-                        None => Vec::new(),
+                        None => exact.clone(),
                     };
-                    timing.plan_secs += ts.elapsed().as_secs_f64();
-                    if !missed.is_empty() {
-                        for &e in &missed {
-                            route_stats.repaired_experts += 1;
-                            route_stats.repair_bytes +=
-                                store.copy_expert_into(l, e, &mut weights)? as u64;
-                        }
-                        // Contract v3: re-execute ONLY the expert tail.
-                        // The fused run already emitted the dense-prefix
-                        // activations (h, moe_in) and the full routing
-                        // quadruple — all valid despite the stale expert
-                        // slices — so the repair costs dispatch → FFN →
-                        // combine, never a second attention pass.
-                        route_stats.rerun_tails += 1;
-                        let tr = Instant::now();
-                        let mut tail_in: Vec<&HostTensor> = vec![
-                            &out[h_out],
-                            &out[moe_in_out],
-                            &out[route_out],
-                            &out[gate_out],
-                            &out[pos_out],
-                            &out[keep_out],
-                        ];
-                        tail_in.extend(tail_weight_idx.iter().map(|&wi| &weights[wi]));
-                        let y = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
-                        timing.tail_secs += tr.elapsed().as_secs_f64();
-                        out[y_out] = y;
+                    for &e in &missed {
+                        route_stats.repaired_experts += 1;
+                        route_stats.repair_bytes +=
+                            store.copy_expert_into(l, e, &mut weights)? as u64;
                     }
+                    // Exactly one tail run per layer — the late splice
+                    // happened before it, so there is no repair re-run
+                    // (rerun_tails stays 0 on the pipelined path).
+                    let tc = Instant::now();
+                    let mut tail_in: Vec<&HostTensor> = vec![
+                        &dout[dense_h_out],
+                        &dout[dense_moe_in_out],
+                        &dout[dense_route_out],
+                        &dout[dense_gate_out],
+                        &dout[dense_pos_out],
+                        &dout[dense_keep_out],
+                    ];
+                    tail_in.extend(tail_weight_idx.iter().map(|&wi| &weights[wi]));
+                    x = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
+                    timing.compute_secs += tc.elapsed().as_secs_f64();
+                    ring.release(l);
                 }
-                x = out.swap_remove(y_out);
-                ring.release(l);
+            } else {
+                for l in 0..n_layers {
+                    let mut weights = ring.get(l)?;
+                    let run = |weights: &[HostTensor], x: &HostTensor| -> Result<Vec<HostTensor>> {
+                        let mut inputs: Vec<&HostTensor> = Vec::with_capacity(1 + weights.len());
+                        inputs.push(x);
+                        inputs.extend(weights.iter());
+                        layer_fwd.run_ref(&inputs)
+                    };
+                    let tc = Instant::now();
+                    let mut out = run(&weights, &x)?;
+                    timing.compute_secs += tc.elapsed().as_secs_f64();
+                    if routed.enabled {
+                        // The exact routed set, emitted by the kernel
+                        // itself. It is valid even though unplanned
+                        // experts' staged slices are zero-filled: routing
+                        // depends only on the dense prefix. Misses are
+                        // repaired by splicing the missing experts from the
+                        // CPU tier and re-executing only the expert tail —
+                        // the visible repair cost, counted separately from
+                        // the overlapped copy lane.
+                        let ts = Instant::now();
+                        let (exact, counts) =
+                            routed_set_from_ids(out[route_out].as_i32()?, n_experts);
+                        route.observe(l, &counts);
+                        load[l].record(&counts);
+                        hot[l] = load[l].hot_experts(hot_frac);
+                        route_stats.exact_experts += exact.len() as u64;
+                        let missed: Vec<usize> = match ring.planned(l) {
+                            Some(planned) => exact
+                                .iter()
+                                .copied()
+                                .filter(|e| planned.binary_search(e).is_err())
+                                .collect(),
+                            None => Vec::new(),
+                        };
+                        timing.plan_secs += ts.elapsed().as_secs_f64();
+                        if !missed.is_empty() {
+                            for &e in &missed {
+                                route_stats.repaired_experts += 1;
+                                route_stats.repair_bytes +=
+                                    store.copy_expert_into(l, e, &mut weights)? as u64;
+                            }
+                            // Contract v3: re-execute ONLY the expert tail.
+                            // The fused run already emitted the dense-prefix
+                            // activations (h, moe_in) and the full routing
+                            // quadruple — all valid despite the stale expert
+                            // slices — so the repair costs dispatch → FFN →
+                            // combine, never a second attention pass.
+                            route_stats.rerun_tails += 1;
+                            let tr = Instant::now();
+                            let mut tail_in: Vec<&HostTensor> = vec![
+                                &out[h_out],
+                                &out[moe_in_out],
+                                &out[route_out],
+                                &out[gate_out],
+                                &out[pos_out],
+                                &out[keep_out],
+                            ];
+                            tail_in.extend(tail_weight_idx.iter().map(|&wi| &weights[wi]));
+                            let y = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
+                            timing.tail_secs += tr.elapsed().as_secs_f64();
+                            out[y_out] = y;
+                        }
+                    }
+                    x = out.swap_remove(y_out);
+                    ring.release(l);
+                }
             }
             let after = ring.stats();
-            timing.copy_secs += after.copy_secs - before.copy_secs;
-            timing.stall_secs += after.stall_secs - before.stall_secs;
+            let copy_delta = after.copy_secs - before.copy_secs;
+            let stall_delta = after.stall_secs - before.stall_secs;
+            timing.copy_secs += copy_delta;
+            timing.stall_secs += stall_delta;
+            // The timing identity: whatever the staging thread spent
+            // that did NOT block get() ran concurrently with compute.
+            let overlap = (copy_delta - stall_delta).max(0.0);
+            timing.overlap_secs += overlap;
+            route_stats.overlap_secs += overlap;
+            route_stats.stalled_secs += stall_delta;
         } else {
             for l in 0..n_layers {
                 let weights = self.store.tensors(l);
@@ -733,10 +972,13 @@ impl DecodeModel for InferenceEngine {
         reg.gauge("route.rerun_layers").set(rs.rerun_layers);
         reg.gauge("route.rerun_tails").set(rs.rerun_tails);
         reg.gauge("route.carried_plans").set(rs.carried_plans);
+        reg.gauge("route.dense_prefix_layers").set(rs.dense_prefix_layers);
         // Timing gauges travel as integer microseconds (the registry is
         // u64-valued); `/stats` renders them back as milliseconds.
         reg.gauge("route.plan_us").set((self.timing.plan_secs * 1e6) as u64);
         reg.gauge("route.tail_rerun_us").set((self.timing.tail_secs * 1e6) as u64);
+        reg.gauge("route.overlap_us").set((rs.overlap_secs * 1e6) as u64);
+        reg.gauge("route.stalled_us").set((rs.stalled_secs * 1e6) as u64);
         if let Some(r) = self.ring_stats() {
             reg.gauge("ring.copy_bytes").set(r.copy_bytes);
             reg.gauge("ring.loads").set(r.loads);
@@ -919,6 +1161,160 @@ mod tests {
         );
         assert!(e.timing.plan_secs > 0.0, "planning time is accounted");
         assert!(rs.exact_experts > 0 && rs.planned_experts > 0);
+    }
+
+    /// The PR-7 tentpole equivalence: pipelined passes (dense prefix
+    /// from the CPU tier + sparse-only staging + late splice + single
+    /// tail) must decode bit-identically to the fused ring while
+    /// actually executing `layer_dense` at runtime and never re-running
+    /// a tail.
+    #[test]
+    fn pipelined_ring_decode_matches_fused_bitwise() {
+        let mut fused = engine(InferMode::Ring { k: 3 });
+        let mut piped = engine(InferMode::Ring { k: 3 });
+        piped.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
+        let model = fused.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 5 + 2; 6]).collect();
+        let n_new = 3;
+        let a = fused.generate(&prompts, n_new).unwrap();
+        let b = piped.generate(&prompts, n_new).unwrap();
+        assert_eq!(a, b, "pipelined split execution must not change decode numerics");
+        let rs = piped.route_stats();
+        assert_eq!(
+            rs.dense_prefix_layers,
+            (model.n_layers * n_new) as u64,
+            "layer_dense must run once per layer per pipelined pass"
+        );
+        assert_eq!(rs.rerun_tails, 0, "pipelined plans are exact by construction");
+        assert_eq!(rs.rerun_layers, 0);
+        assert!(rs.exact_experts > 0, "exact sets come from the dense prefix");
+        let fb = fused.ring_stats().unwrap().copy_bytes;
+        let pb = piped.ring_stats().unwrap().copy_bytes;
+        let repair = rs.repair_bytes;
+        assert!(
+            pb + repair < fb,
+            "sparse-only staging must move fewer bytes than full: {} + {} vs {}",
+            pb,
+            repair,
+            fb
+        );
+        assert_eq!(
+            fused.route_stats().dense_prefix_layers,
+            0,
+            "the fused path never runs the dense prefix"
+        );
+    }
+
+    /// Satellite: the PassTiming identity on BOTH pass kinds. Per pass
+    /// `overlap_secs = max(0, copy − stall)`, so summed over passes
+    /// `overlap + stall ≥ copy` (equality when staging never outruns
+    /// the copy clock) and `overlap ≤ copy` — the accounting can no
+    /// longer drift once overlap is explicit.
+    #[test]
+    fn pass_timing_identity_fused_and_pipelined() {
+        for pipelined in [false, true] {
+            let mut e = engine(InferMode::Ring { k: 2 });
+            if pipelined {
+                e.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
+            }
+            let model = e.arts.preset.clone();
+            let prompts: Vec<Vec<i32>> =
+                (0..model.batch_size).map(|i| vec![i as i32 + 4; 5]).collect();
+            let _ = e.generate(&prompts, 2).unwrap();
+            let t = e.timing;
+            assert!(t.copy_secs > 0.0, "ring passes must account copy time");
+            assert!(t.overlap_secs >= 0.0);
+            assert!(
+                t.overlap_secs <= t.copy_secs + 1e-9,
+                "overlap cannot exceed copy (pipelined={}): {} vs {}",
+                pipelined,
+                t.overlap_secs,
+                t.copy_secs
+            );
+            assert!(
+                t.overlap_secs + t.stall_secs >= t.copy_secs - 1e-9,
+                "copy time must be fully split into overlap + stall (pipelined={}): {} + {} vs {}",
+                pipelined,
+                t.overlap_secs,
+                t.stall_secs,
+                t.copy_secs
+            );
+            let rs = e.route_stats();
+            assert!((rs.overlap_secs - t.overlap_secs).abs() < 1e-9);
+            assert!((rs.stalled_secs - t.stall_secs).abs() < 1e-9);
+        }
+    }
+
+    /// Satellite: the forced-slow-copy-lane stress. With the staging
+    /// thread throttled hard, the fused ring stalls on every section;
+    /// the pipelined ring stages only the routed expert slices AND
+    /// hides them behind the dense prefix, so its stalled share of the
+    /// copy lane must shrink — while outputs stay bit-identical.
+    #[test]
+    fn slow_copy_lane_pipelined_stalls_less_than_fused() {
+        let arts = Rc::new(ModelArtifacts::load("deep").expect("deep artifacts"));
+        let layer_bytes = {
+            let probe = InferenceEngine::new(Rc::clone(&arts), InferMode::Resident, 7, None)
+                .unwrap()
+                .store
+                .layer_bytes() as f64;
+            probe
+        };
+        // ~8ms per full layer on the copy lane — slow enough that the
+        // fused path must stall, fast enough to keep the test quick.
+        let throttle = Some(layer_bytes / 8e-3);
+        let mut fused =
+            InferenceEngine::new(Rc::clone(&arts), InferMode::Ring { k: 2 }, 7, throttle).unwrap();
+        let mut piped =
+            InferenceEngine::new(Rc::clone(&arts), InferMode::Ring { k: 2 }, 7, throttle).unwrap();
+        piped.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
+        let model = fused.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 9 + 1; 5]).collect();
+        let a = fused.generate(&prompts, 2).unwrap();
+        let b = piped.generate(&prompts, 2).unwrap();
+        assert_eq!(a, b, "a slow copy lane must not change numerics on either path");
+        assert!(
+            fused.timing.stall_secs > 0.0,
+            "the throttle must make the fused ring stall"
+        );
+        assert!(
+            piped.route_stats().stalled_secs < fused.route_stats().stalled_secs,
+            "pipelining must shrink the stalled share: {} vs {}",
+            piped.route_stats().stalled_secs,
+            fused.route_stats().stalled_secs
+        );
+    }
+
+    /// The degenerate exact planner: `DensePrefixSource` plans nothing
+    /// because the pipelined pass learns the exact set from its own
+    /// dense prefix. Every expert is late-spliced before the tail, the
+    /// staged copy lane moves zero bytes, and decode stays bit-exact.
+    #[test]
+    fn dense_prefix_source_plans_nothing_and_stays_exact() {
+        use crate::moe::routing::DensePrefixSource;
+
+        let mut fused = engine(InferMode::Ring { k: 3 });
+        let mut piped = engine(InferMode::Ring { k: 3 });
+        piped.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.0 });
+        piped.set_route_source(Box::new(DensePrefixSource));
+        assert_eq!(piped.route_source_kind(), RouteSourceKind::DensePrefix);
+        let model = fused.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 13 + 5; 4]).collect();
+        let a = fused.generate(&prompts, 2).unwrap();
+        let b = piped.generate(&prompts, 2).unwrap();
+        assert_eq!(a, b, "late-splice-everything must still be bit-exact");
+        let rs = piped.route_stats();
+        assert_eq!(rs.planned_experts, 0, "the degenerate planner plans nothing");
+        assert_eq!(rs.rerun_tails, 0, "still no tail re-runs — the splice precedes the tail");
+        assert!(rs.repaired_experts > 0 && rs.repair_bytes > 0);
+        assert_eq!(
+            piped.ring_stats().unwrap().copy_bytes,
+            0,
+            "empty plans + sparse-only staging move zero bytes through the ring"
+        );
     }
 
     #[test]

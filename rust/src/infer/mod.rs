@@ -18,10 +18,11 @@ pub mod server;
 
 pub use batcher::{AdmissionConfig, AdmissionQueue, AdmitError, Request};
 pub use engine::{
-    CpuWeightStore, InferMode, InferenceEngine, PassTiming, RouteRepairStats, RoutedRingConfig,
+    CpuWeightStore, InferMode, InferenceEngine, PassTiming, PipelineConfig, RouteRepairStats,
+    RoutedRingConfig,
 };
 pub use graph::{Graph, GraphPipeline};
-pub use ring_memory::{LayerLoader, RingMemory, RingStats};
+pub use ring_memory::{LayerLoader, RingMemory, RingStats, StageKind};
 pub use session::{
     Completion, DecodeModel, FinishReason, RejectReason, ServeReply, ServeSession, SessionConfig,
     SessionStats, SlotPhase, SlotState, StepReport,

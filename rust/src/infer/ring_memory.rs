@@ -17,6 +17,13 @@
 //! size, exactly like the trainer's 2D prefetch (`docs/training.md`).
 //! With no plan the pass is dense (every expert crosses).
 //!
+//! **Pipelined passes** go one step further ([`StageKind::SparseOnly`]):
+//! the engine runs each section's `layer_dense` prefix straight from the
+//! CPU tier while the copy lane streams only that section's routed
+//! expert weights, so dense members never cross at all and the dense
+//! prefix's compute time hides the sparse copy
+//! (`docs/serving.md` §Pipelined dense/sparse passes).
+//!
 //! On our substrate the copy stream performs the CPU-tier fetch +
 //! unfuse + (optional throttled "PCIe") staging of host tensors; the
 //! compute thread turns staged tensors into device literals as part of
@@ -32,13 +39,28 @@ use anyhow::{Context, Result};
 use crate::prefetch::RoutePlan;
 use crate::runtime::HostTensor;
 
+/// What a staged slot must carry. `Full` is the classic ring pass: the
+/// compute thread reads every weight tensor out of the slot.
+/// `SparseOnly` is the pipelined pass mode: the compute thread runs the
+/// dense prefix straight from the CPU tier (`layer_dense` takes no
+/// expert weights), so the copy lane only has to move the sparse
+/// (expert) members — dense positions are staged as zero-filled
+/// placeholders that cost no copy bytes and are never read.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StageKind {
+    Full,
+    SparseOnly,
+}
+
 /// Loader: produce layer `l`'s weight tensors (artifact input order,
 /// minus the activation input), restricted to the `experts` subset when
-/// one is given (sparse members outside the set zero-filled). Returns
-/// the tensors plus the bytes actually copied from the CPU tier — the
-/// quantity the throttle and [`RingStats::copy_bytes`] account. Runs on
-/// the staging thread.
-pub type LayerLoader = Box<dyn FnMut(usize, Option<&[usize]>) -> (Vec<HostTensor>, usize) + Send>;
+/// one is given (sparse members outside the set zero-filled), and to the
+/// sparse members alone when the stage kind is [`StageKind::SparseOnly`].
+/// Returns the tensors plus the bytes actually copied from the CPU tier
+/// — the quantity the throttle and [`RingStats::copy_bytes`] account.
+/// Runs on the staging thread.
+pub type LayerLoader =
+    Box<dyn FnMut(usize, Option<&[usize]>, StageKind) -> (Vec<HostTensor>, usize) + Send>;
 
 /// Cumulative overlap accounting.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -53,7 +75,7 @@ pub struct RingStats {
 }
 
 enum Msg {
-    Load { layer: usize, experts: Option<Vec<usize>> },
+    Load { layer: usize, experts: Option<Vec<usize>>, kind: StageKind },
     Shutdown,
 }
 
@@ -75,6 +97,9 @@ pub struct RingMemory {
     in_flight: usize,
     /// The current pass's expert plan (None = dense pass).
     plan: Option<RoutePlan>,
+    /// What the copy lane stages per slot (set before `begin_pass`;
+    /// `SparseOnly` for pipelined passes).
+    kind: StageKind,
     stats: RingStats,
     handle: Option<JoinHandle<()>>,
 }
@@ -95,9 +120,9 @@ impl RingMemory {
         let handle = std::thread::Builder::new()
             .name("ring-staging".into())
             .spawn(move || {
-                while let Ok(Msg::Load { layer, experts }) = rx_req.recv() {
+                while let Ok(Msg::Load { layer, experts, kind }) = rx_req.recv() {
                     let t0 = Instant::now();
-                    let (tensors, copy_bytes) = loader(layer, experts.as_deref());
+                    let (tensors, copy_bytes) = loader(layer, experts.as_deref(), kind);
                     if let Some(bw) = throttle {
                         let want = Duration::from_secs_f64(copy_bytes as f64 / bw);
                         let spent = t0.elapsed();
@@ -120,6 +145,7 @@ impl RingMemory {
             ready: HashMap::new(),
             in_flight: 0,
             plan: None,
+            kind: StageKind::Full,
             stats: RingStats::default(),
             handle: Some(handle),
         }
@@ -131,6 +157,17 @@ impl RingMemory {
 
     pub fn stats(&self) -> RingStats {
         self.stats
+    }
+
+    /// Select what the copy lane stages per slot. Takes effect at the
+    /// next `begin_pass` (set it before the pass starts; loads already
+    /// in flight keep their kind and are drained by `begin_pass`).
+    pub fn set_stage_kind(&mut self, kind: StageKind) {
+        self.kind = kind;
+    }
+
+    pub fn stage_kind(&self) -> StageKind {
+        self.kind
     }
 
     /// Device-memory bound of the ring: K slots instead of N layers.
@@ -175,7 +212,7 @@ impl RingMemory {
 
     fn send_load(&mut self, layer: usize) {
         let experts = self.planned(layer).map(|e| e.to_vec());
-        let _ = self.tx.send(Msg::Load { layer, experts });
+        let _ = self.tx.send(Msg::Load { layer, experts, kind: self.kind });
         self.in_flight += 1;
     }
 
@@ -230,7 +267,7 @@ mod tests {
     use crate::util::Rng;
 
     fn loader(layer_bytes: usize) -> LayerLoader {
-        Box::new(move |l, _| {
+        Box::new(move |l, _, _| {
             (
                 vec![HostTensor::from_f32(&[layer_bytes / 4], vec![l as f32; layer_bytes / 4])],
                 layer_bytes,
@@ -303,7 +340,7 @@ mod tests {
     /// total copy time — even with a loader slower than compute.
     #[test]
     fn stall_never_exceeds_copy_under_slow_loader() {
-        let slow: LayerLoader = Box::new(move |l, _| {
+        let slow: LayerLoader = Box::new(move |l, _, _| {
             std::thread::sleep(Duration::from_millis(2));
             (vec![HostTensor::from_f32(&[4], vec![l as f32; 4])], 16)
         });
@@ -378,7 +415,7 @@ mod tests {
     /// layer `l` holds `l*100 + e + 1` everywhere, unplanned experts
     /// stay zero (the inert-filler contract).
     fn expert_loader(slow_every: usize) -> LayerLoader {
-        Box::new(move |l, experts: Option<&[usize]>| {
+        Box::new(move |l, experts: Option<&[usize]>, _| {
             if slow_every > 0 && l % slow_every == 0 {
                 std::thread::sleep(Duration::from_millis(1));
             }
@@ -390,6 +427,35 @@ mod tests {
                 copied += PER * 4;
             }
             (vec![HostTensor::from_f32(&[EXPERTS, PER], data)], copied)
+        })
+    }
+
+    /// Two-member loader (dense `[PER]` + sparse `[EXPERTS, PER]`) that
+    /// honors the stage kind the way `CpuWeightStore::loader` does: a
+    /// `SparseOnly` load stages the dense member as a zero-byte
+    /// placeholder and only the sparse member crosses.
+    fn split_loader() -> LayerLoader {
+        Box::new(move |l, experts: Option<&[usize]>, kind| {
+            let mut copied = 0usize;
+            let dense = if kind == StageKind::SparseOnly {
+                vec![0f32; PER]
+            } else {
+                copied += PER * 4;
+                vec![(l * 10) as f32 + 1.0; PER]
+            };
+            let mut data = vec![0f32; EXPERTS * PER];
+            let all: Vec<usize> = (0..EXPERTS).collect();
+            for &e in experts.unwrap_or(&all) {
+                data[e * PER..(e + 1) * PER].fill((l * 100 + e) as f32 + 1.0);
+                copied += PER * 4;
+            }
+            (
+                vec![
+                    HostTensor::from_f32(&[PER], dense),
+                    HostTensor::from_f32(&[EXPERTS, PER], data),
+                ],
+                copied,
+            )
         })
     }
 
@@ -431,6 +497,41 @@ mod tests {
         }
         let dense_bytes = ring.stats().copy_bytes - 7 * PER as u64 * 4;
         assert_eq!(dense_bytes, (4 * EXPERTS * PER * 4) as u64);
+    }
+
+    /// Pipelined pass mode: a `SparseOnly` pass must stage zero dense
+    /// bytes (the compute thread reads the dense prefix from the CPU
+    /// tier directly), carry exactly the planned sparse subset, and a
+    /// following `Full` pass over the same ring must stage dense members
+    /// again — the kind is per-pass state, not a one-way switch.
+    #[test]
+    fn sparse_only_pass_stages_no_dense_bytes() {
+        let mut ring = RingMemory::new(2, 4, split_loader(), None);
+        let plan = RoutePlan::new(vec![vec![1, 3], vec![0], vec![2, 5, 7], vec![4]], &[]);
+        ring.set_stage_kind(StageKind::SparseOnly);
+        assert_eq!(ring.stage_kind(), StageKind::SparseOnly);
+        ring.begin_pass(Some(&plan));
+        for l in 0..4 {
+            let w = ring.get(l).unwrap();
+            assert_eq!(w[0].as_f32().unwrap()[0], 0.0, "dense member is a placeholder");
+            let data = w[1].as_f32().unwrap();
+            for e in 0..EXPERTS {
+                let want = if plan.contains(l, e) { (l * 100 + e) as f32 + 1.0 } else { 0.0 };
+                assert_eq!(data[e * PER], want, "layer {} expert {}", l, e);
+            }
+            ring.release(l);
+        }
+        // 2 + 1 + 3 + 1 planned experts crossed — and nothing else.
+        assert_eq!(ring.stats().copy_bytes, 7 * PER as u64 * 4);
+        ring.set_stage_kind(StageKind::Full);
+        ring.begin_pass(Some(&plan));
+        for l in 0..4 {
+            let w = ring.get(l).unwrap();
+            assert_eq!(w[0].as_f32().unwrap()[0], (l * 10) as f32 + 1.0, "dense member staged");
+            ring.release(l);
+        }
+        let full_bytes = ring.stats().copy_bytes - 7 * PER as u64 * 4;
+        assert_eq!(full_bytes, (7 + 4) as u64 * PER as u64 * 4, "subset + dense members");
     }
 
     /// Stress: interleave aborted passes, a slow loader, routed-subset

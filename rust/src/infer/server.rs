@@ -511,10 +511,15 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("route_rerun_layers", Json::num(reg.gauge("route.rerun_layers").get() as f64)),
         ("route_rerun_tails", Json::num(reg.gauge("route.rerun_tails").get() as f64)),
         ("route_carried_plans", Json::num(reg.gauge("route.carried_plans").get() as f64)),
+        // Pipelined-pass proof + copy-lane split (docs/serving.md
+        // §Pipelined dense/sparse passes).
+        ("route_dense_prefix_layers", Json::num(reg.gauge("route.dense_prefix_layers").get() as f64)),
         // Planner/repair timing: published as integer microseconds
         // (gauges are u64), rendered here as milliseconds.
         ("plan_ms", Json::num(reg.gauge("route.plan_us").get() as f64 / 1e3)),
         ("tail_rerun_ms", Json::num(reg.gauge("route.tail_rerun_us").get() as f64 / 1e3)),
+        ("overlap_ms", Json::num(reg.gauge("route.overlap_us").get() as f64 / 1e3)),
+        ("stalled_ms", Json::num(reg.gauge("route.stalled_us").get() as f64 / 1e3)),
         ("ring_copy_bytes", Json::num(reg.gauge("ring.copy_bytes").get() as f64)),
         ("ring_loads", Json::num(reg.gauge("ring.loads").get() as f64)),
         ("counters", reg.snapshot()),
@@ -699,8 +704,11 @@ mod tests {
                 reg.gauge("route.rerun_layers").set(0);
                 reg.gauge("route.rerun_tails").set(self.steps);
                 reg.gauge("route.carried_plans").set(self.steps.saturating_sub(1));
+                reg.gauge("route.dense_prefix_layers").set(12 * self.steps);
                 reg.gauge("route.plan_us").set(1500 * self.steps);
                 reg.gauge("route.tail_rerun_us").set(2500 * self.steps);
+                reg.gauge("route.overlap_us").set(4000 * self.steps);
+                reg.gauge("route.stalled_us").set(500 * self.steps);
                 reg.gauge("ring.copy_bytes").set(1 << 20);
             }
         }
@@ -731,6 +739,9 @@ mod tests {
         // 1500 µs/step published → ≥1.5 ms rendered after the first step.
         assert!(n("plan_ms") >= 1.5, "plan timing surfaced in ms: {}", n("plan_ms"));
         assert!(n("tail_rerun_ms") >= 2.5, "tail timing surfaced in ms: {}", n("tail_rerun_ms"));
+        assert!(n("route_dense_prefix_layers") >= 12.0);
+        assert!(n("overlap_ms") >= 4.0, "overlap surfaced in ms: {}", n("overlap_ms"));
+        assert!(n("stalled_ms") >= 0.5, "stall surfaced in ms: {}", n("stalled_ms"));
         assert_eq!(n("ring_copy_bytes"), (1u64 << 20) as f64);
         server.stop();
     }
@@ -749,8 +760,11 @@ mod tests {
             "route_rerun_layers",
             "route_rerun_tails",
             "route_carried_plans",
+            "route_dense_prefix_layers",
             "plan_ms",
             "tail_rerun_ms",
+            "overlap_ms",
+            "stalled_ms",
             "ring_copy_bytes",
             "ring_loads",
             "admitted",

@@ -10,7 +10,10 @@
 //!   elastic                      elastic multi-task planner (table3 loads)
 //!   lint                         static analysis: contract drift, thread
 //!                                discipline, metrics coverage (docs/analysis.md)
-//!   perf-stub                    distil reports/*.json into BENCH_tier1.json
+//!   perf-stub                    distil reports/*.json into BENCH_tier1.json and
+//!                                append the BENCH_trajectory.json curve point
+//!   perf-compare                 gate: newest trajectory point vs its
+//!                                predecessor (>10% tokens/s drop fails)
 
 use std::rc::Rc;
 
@@ -21,7 +24,7 @@ use semoe::config::presets::{
     table2_rows, table3_setup,
 };
 use semoe::config::train::{ParamResidency, RouteSourceChoice, TrainConfig};
-use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, RoutedRingConfig};
+use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, PipelineConfig, RoutedRingConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
 use semoe::train::{ElasticPlan, OffloadTrainer, ResidentTrainer, TaskLoad};
@@ -48,6 +51,7 @@ fn main() {
         Some("elastic") => cmd_elastic(&args),
         Some("lint") => cmd_lint(&args),
         Some("perf-stub") => cmd_perf_stub(&args),
+        Some("perf-compare") => cmd_perf_compare(&args),
         _ => {
             print_usage();
             Ok(())
@@ -63,7 +67,7 @@ fn print_usage() {
     println!(
         "{}",
         usage(
-            "semoe <info|train|infer|serve|simulate|graph|elastic|lint|perf-stub>",
+            "semoe <info|train|infer|serve|simulate|graph|elastic|lint|perf-stub|perf-compare>",
             ABOUT,
             &[
                 OptSpec { name: "preset", help: "model preset (tiny|small|deep|base)", default: Some("small"), is_flag: false },
@@ -73,10 +77,11 @@ fn print_usage() {
                 OptSpec { name: "route-source", help: "expert-axis planner: proxy|carried (offload train)", default: Some("proxy"), is_flag: false },
                 OptSpec { name: "ring", help: "ring slots K for inference offload", default: Some("0=resident"), is_flag: false },
                 OptSpec { name: "routed", help: "routed-expert ring passes (copy only planned expert subsets)", default: None, is_flag: true },
+                OptSpec { name: "pipeline", help: "pipelined dense/sparse passes: layer_dense runs while expert weights stream (infer/serve ring, offload train)", default: None, is_flag: true },
                 OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
                 OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
                 OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
-                OptSpec { name: "root", help: "repo root for lint/perf-stub (default: auto-discover)", default: None, is_flag: false },
+                OptSpec { name: "root", help: "repo root for lint/perf-stub/perf-compare (default: auto-discover)", default: None, is_flag: false },
                 OptSpec { name: "json", help: "lint: emit diagnostics as JSON (CI diffing)", default: None, is_flag: true },
             ]
         )
@@ -108,6 +113,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.f64("lr", 1e-3),
         seed: args.u64("seed", 0),
         residency: if args.flag("offload") { ParamResidency::Offload } else { ParamResidency::Resident },
+        pipelined: args.flag("pipeline"),
         prefetch_depth: args.usize("prefetch-depth", 1),
         route_source: {
             let raw = args.str("route-source", "proxy");
@@ -119,11 +125,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         ..Default::default()
     };
     let arts = Rc::new(ModelArtifacts::load(&cfg.preset)?);
-    println!("training {} ({} params) for {} steps [{}]",
+    println!("training {} ({} params) for {} steps [{}{}]",
         cfg.preset,
         human_count(arts.preset.param_counts().total as u64),
         cfg.steps,
-        if args.flag("offload") { "offload" } else { "resident" });
+        if args.flag("offload") { "offload" } else { "resident" },
+        if cfg.pipelined { ", pipelined" } else { "" });
     let t0 = std::time::Instant::now();
     let mut total_tokens = 0usize;
     if args.flag("offload") {
@@ -152,6 +159,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             100.0 * ps.plan_hit_experts as f64 / decided.max(1) as f64,
             ps.plan_hit_experts, decided, ps.tail_reruns, ps.reruns, ps.carried_plans
         );
+        if cfg.pipelined {
+            println!(
+                "pipelined sweeps: {} dense-prefix layers, overlap {:.2}s, fetch stalls {:.2}s",
+                ps.dense_prefix_layers, ps.overlap_secs, ps.stalled_secs
+            );
+        }
     } else {
         let mut tr = ResidentTrainer::new(arts, cfg.clone())?;
         for s in 0..cfg.steps {
@@ -171,6 +184,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let preset = args.str("preset", "deep");
     let ring = args.usize("ring", 0);
     let routed = args.flag("routed");
+    let pipeline = args.flag("pipeline");
     let n_new = args.usize("tokens", 16);
     let arts = Rc::new(ModelArtifacts::load(&preset)?);
     let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
@@ -178,9 +192,13 @@ fn cmd_infer(args: &Args) -> Result<()> {
     if routed && ring > 0 {
         engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
     }
-    println!("inference [{}{}], device weights {}",
+    if pipeline && ring > 0 {
+        engine.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
+    }
+    println!("inference [{}{}{}], device weights {}",
         if ring > 0 { format!("ring K={}", ring) } else { "resident".into() },
         if routed && ring > 0 { ", routed" } else { "" },
+        if pipeline && ring > 0 { ", pipelined" } else { "" },
         human_bytes(engine.device_weight_bytes() as u64));
     let b = arts.preset.batch_size;
     let prompt: Vec<Vec<i32>> = (0..b).map(|i| vec![(i as i32 + 1) * 3; 4]).collect();
@@ -206,6 +224,12 @@ fn cmd_infer(args: &Args) -> Result<()> {
             rp.repaired_experts, rp.carried_plans, rp.rerun_tails,
             engine.timing.tail_secs, rp.rerun_layers
         );
+        if engine.pipelined().enabled {
+            println!(
+                "pipelined passes: {} dense-prefix layers, overlap {:.2}s, stalled {:.2}s",
+                rp.dense_prefix_layers, rp.overlap_secs, rp.stalled_secs
+            );
+        }
     }
     Ok(())
 }
@@ -215,14 +239,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bind = args.str("bind", "127.0.0.1:8080");
     let ring = args.usize("ring", 3);
     let routed = args.flag("routed");
+    let pipeline = args.flag("pipeline");
     println!(
-        "starting server on {} (preset {}, ring K={}{})",
-        bind, preset, ring, if routed { ", routed passes" } else { "" }
+        "starting server on {} (preset {}, ring K={}{}{})",
+        bind, preset, ring,
+        if routed { ", routed passes" } else { "" },
+        if pipeline { ", pipelined passes" } else { "" }
     );
-    run_server_blocking(&preset, &bind, ring, routed)
+    run_server_blocking(&preset, &bind, ring, routed, pipeline)
 }
 
-fn run_server_blocking(preset: &str, bind: &str, ring: usize, routed: bool) -> Result<()> {
+fn run_server_blocking(
+    preset: &str,
+    bind: &str,
+    ring: usize,
+    routed: bool,
+    pipeline: bool,
+) -> Result<()> {
     use semoe::infer::server::{Server, ServerStats};
     use semoe::infer::SessionConfig;
     use std::sync::Arc;
@@ -237,6 +270,9 @@ fn run_server_blocking(preset: &str, bind: &str, ring: usize, routed: bool) -> R
         let mut engine = InferenceEngine::new(arts, mode, 7, None)?;
         if routed && ring > 0 {
             engine.set_routed(RoutedRingConfig { enabled: true, hot_frac: 0.5 });
+        }
+        if pipeline && ring > 0 {
+            engine.set_pipelined(PipelineConfig { enabled: true, hot_frac: 0.5 });
         }
         Ok(engine)
     })?;
@@ -370,8 +406,49 @@ fn cmd_lint(args: &Args) -> Result<()> {
 }
 
 fn cmd_perf_stub(args: &Args) -> Result<()> {
+    use semoe::analysis::bench_stub;
     let root = lint_root(args)?;
-    let path = semoe::analysis::bench_stub::write_bench_stub(&root)?;
+    let path = bench_stub::write_bench_stub(&root)?;
     println!("perf-stub: wrote {}", path.display());
+    let stub_text = std::fs::read_to_string(&path)?;
+    let stub = semoe::util::json::Json::parse(&stub_text)
+        .map_err(|e| anyhow::anyhow!("re-read {}: {}", path.display(), e))?;
+    let sha = bench_stub::git_sha(&root);
+    let traj = bench_stub::append_trajectory(&root, &stub, &sha)?;
+    println!("perf-stub: appended {} point to {}", sha, traj.display());
+    Ok(())
+}
+
+fn cmd_perf_compare(args: &Args) -> Result<()> {
+    use semoe::analysis::bench_stub;
+    let root = lint_root(args)?;
+    let cmp = match bench_stub::perf_compare(&root)? {
+        Some(c) => c,
+        None => {
+            println!("perf-compare: fewer than two trajectory points — nothing to gate");
+            return Ok(());
+        }
+    };
+    println!("perf-compare: {} → {}", cmp.baseline_sha, cmp.current_sha);
+    println!("{:<16} {:>12} {:>12} {:>8}  gate", "metric", "baseline", "current", "delta");
+    for d in &cmp.deltas {
+        let fmt = |v: Option<f64>| v.map(|x| format!("{:.3}", x)).unwrap_or_else(|| "-".into());
+        println!(
+            "{:<16} {:>12} {:>12} {:>8}  {}",
+            d.metric,
+            fmt(d.baseline),
+            fmt(d.current),
+            d.delta_frac.map(|x| format!("{:+.1}%", x * 100.0)).unwrap_or_else(|| "-".into()),
+            if d.regressed { "FAIL" } else { "ok" }
+        );
+    }
+    if cmp.regressed {
+        anyhow::bail!(
+            "perf-compare: tokens_per_s regressed more than {:.0}% vs {}",
+            bench_stub::REGRESSION_TOLERANCE * 100.0,
+            cmp.baseline_sha
+        );
+    }
+    println!("perf-compare: no gated regression");
     Ok(())
 }

@@ -22,7 +22,8 @@ pub use load_stats::LoadStats;
 pub use placement::ExpertPlacement;
 pub use router::DispatchPlan;
 pub use routing::{
-    routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource, LayerParamResolver,
-    PlannedRoute, RouteQuery, RouteSource, RouteSourceKind, ShadowOracleSource,
+    routed_set_from_ids, CarriedKernelSource, DensePrefixSource, EmbeddingProxySource,
+    LayerParamResolver, PlannedRoute, RouteQuery, RouteSource, RouteSourceKind,
+    ShadowOracleSource,
 };
 pub use shadow::ShadowRouter;

@@ -40,6 +40,10 @@ pub enum RouteSourceKind {
     KernelEmitted,
     /// f64 dense-prefix recompute (parity/test oracle only).
     ShadowOracle,
+    /// The degenerate exact planner of pipelined passes: plans nothing
+    /// up front because the pass's own `layer_dense` prefix emits the
+    /// exact set before any expert weight is needed.
+    DensePrefix,
 }
 
 /// A planned pass: per-layer expert sets (sorted, deduped) plus the
@@ -256,6 +260,32 @@ impl RouteSource for ShadowOracleSource {
     }
 }
 
+// ---------------------------------------------------------------------
+// Dense-prefix degenerate planner (pipelined passes)
+// ---------------------------------------------------------------------
+
+/// The degenerate exact planner pipelined execution enables: plan the
+/// EMPTY set for every layer and let the pass's own `layer_dense`
+/// prefix name the exact routed experts before the tail needs them —
+/// the consumer late-splices everything on demand. Upfront staging
+/// drops to zero; the trade is that no expert copy starts until the
+/// prefix has run, so production pipelined passes usually keep a
+/// predictive source and use this one to measure the floor.
+pub struct DensePrefixSource;
+
+impl RouteSource for DensePrefixSource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::DensePrefix
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        PlannedRoute {
+            per_layer: vec![Vec::new(); q.n_layers],
+            provenance: RouteSourceKind::DensePrefix,
+        }
+    }
+}
+
 /// Test fixture: a planner that predicts an EMPTY set for every layer,
 /// so every kernel-routed expert is a plan miss — the stress case for
 /// the contract-v3 tail-only repair paths. Shared by the engine and
@@ -366,6 +396,21 @@ mod tests {
         assert_eq!(with_query(1, 4, |q| src.plan(q)).per_layer, vec![vec![0]]);
         src.observe(0, &[0, 0, 2, 2]);
         assert_eq!(with_query(1, 4, |q| src.plan(q)).per_layer, vec![vec![2, 3]]);
+    }
+
+    #[test]
+    fn dense_prefix_source_plans_empty_sets() {
+        let mut src = DensePrefixSource;
+        assert_eq!(src.kind(), RouteSourceKind::DensePrefix);
+        let p = with_query(3, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::DensePrefix);
+        assert_eq!(p.per_layer, vec![Vec::<usize>::new(); 3]);
+        // Feedback and reset are deliberate no-ops — the exact set lives
+        // in the pass, not in the planner.
+        src.observe(0, &[1, 2, 0, 0]);
+        src.reset();
+        let p = with_query(3, 4, |q| src.plan(q));
+        assert_eq!(p.per_layer, vec![Vec::<usize>::new(); 3]);
     }
 
     #[test]

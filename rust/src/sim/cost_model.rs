@@ -158,6 +158,57 @@ impl CostModel {
             * 2.0
     }
 
+    /// Per-pass bytes of a **pipelined** ring pass: ONLY the expected
+    /// routed expert subset crosses — dense members never travel, the
+    /// compute thread runs `layer_dense` straight from the CPU tier
+    /// ([`crate::infer::StageKind::SparseOnly`] staging).
+    pub fn ring_bytes_sparse_only(&self, tokens: f64, zipf_s: f64) -> f64 {
+        let c = self.model.param_counts();
+        let frac = self.expected_routed_experts(tokens, zipf_s)
+            / self.model.n_experts.max(1) as f64;
+        self.model.n_layers as f64 * c.per_layer_sparse as f64 * frac * 2.0
+    }
+
+    // ------------------------------------------------- pipelined lane
+
+    /// Device seconds of ONE layer's dense prefix (attention + router —
+    /// everything `layer_dense` runs). By construction
+    /// `dense_prefix_secs + rerun_secs_tail == rerun_secs_layer`.
+    pub fn dense_prefix_secs(&self) -> f64 {
+        self.rerun_secs_layer() - self.rerun_secs_tail()
+    }
+
+    /// Wall seconds of one **fused** routed ring pass at copy bandwidth
+    /// `bw` (bytes/s): each section's full staged copy (dense + routed
+    /// experts) must land before ANY of its compute starts, so the pass
+    /// is the classic two-stage pipeline — the first copy is exposed,
+    /// then copy(l+1) overlaps compute(l) and each section pays
+    /// `max(compute, io)`.
+    pub fn fused_pass_secs(&self, tokens: f64, zipf_s: f64, bw: f64) -> f64 {
+        let l = self.model.n_layers as f64;
+        let io = self.ring_bytes_routed(tokens, zipf_s) / l / bw.max(1e-9);
+        let comp = self.rerun_secs_layer();
+        io + l * comp + (l - 1.0) * (io - comp).max(0.0)
+    }
+
+    /// Wall seconds of one **pipelined** ring pass at copy bandwidth
+    /// `bw`: only expert bytes cross, and each section's dense prefix
+    /// executes while its own copy is still in flight — the copy lane
+    /// only has to beat the compute window it hides behind (the first
+    /// section's dense prefix; dense + tail in steady state), not gate
+    /// the whole section. Never above [`Self::fused_pass_secs`] —
+    /// per section the stall term `max(0, io_sparse − window)` is
+    /// dominated by the fused pass's `io_full`-gated term, since
+    /// `io_sparse ≤ io_full` and the fused window is empty (asserted at
+    /// every Table-1 scale).
+    pub fn pipelined_pass_secs(&self, tokens: f64, zipf_s: f64, bw: f64) -> f64 {
+        let l = self.model.n_layers as f64;
+        let io = self.ring_bytes_sparse_only(tokens, zipf_s) / l / bw.max(1e-9);
+        let dense = self.dense_prefix_secs();
+        let comp = self.rerun_secs_layer(); // dense + tail
+        l * comp + (io - dense).max(0.0) + (l - 1.0) * (io - comp).max(0.0)
+    }
+
     // --------------------------------------------------- planner lane
 
     /// Coordinator CPU seconds to learn ONE pass/step's exact routed
@@ -412,6 +463,53 @@ mod tests {
                     miss
                 );
             }
+        }
+    }
+
+    /// PR-7 pricing: a pipelined ring pass never costs more wall-clock
+    /// than the fused pass, and under Zipf skew with a copy-bound lane
+    /// it is strictly cheaper — the fig10/table2 claim, analytically.
+    #[test]
+    fn pipelined_pass_prices_below_fused_under_skew() {
+        for row in table1_rows() {
+            let cm = CostModel::new(
+                table1_model(row.n_experts, row.batch_size),
+                cluster_for_gpus(row.gpus),
+            );
+            // A copy lane slow enough that the fused pass is io-bound:
+            // full per-layer bytes take 2x a layer's compute.
+            let per_layer = cm.ring_bytes_dense() / cm.model.n_layers as f64;
+            let bw = per_layer / (2.0 * cm.rerun_secs_layer());
+            let tokens = 128.0;
+            for zipf in [0.0, 0.7, 1.2, 2.0] {
+                let fused = cm.fused_pass_secs(tokens, zipf, bw);
+                let piped = cm.pipelined_pass_secs(tokens, zipf, bw);
+                assert!(
+                    piped <= fused + 1e-12,
+                    "pipelined may never price above fused: {} vs {} (zipf {})",
+                    piped,
+                    fused,
+                    zipf
+                );
+                // The compute floor is inviolable.
+                let floor = cm.model.n_layers as f64 * cm.rerun_secs_layer();
+                assert!(piped >= floor - 1e-12);
+            }
+            let fused = cm.fused_pass_secs(tokens, 1.2, bw);
+            let piped = cm.pipelined_pass_secs(tokens, 1.2, bw);
+            assert!(
+                piped < 0.95 * fused,
+                "under skew on a copy-bound lane the overlap must be material: {} vs {}",
+                piped,
+                fused
+            );
+            // Identity: the split halves re-sum to the fused layer.
+            let resum = cm.dense_prefix_secs() + cm.rerun_secs_tail();
+            assert!((resum - cm.rerun_secs_layer()).abs() < 1e-12 * resum.max(1.0));
+            // Sparse-only staging is a strict subset of routed staging.
+            assert!(
+                cm.ring_bytes_sparse_only(tokens, 1.2) < cm.ring_bytes_routed(tokens, 1.2)
+            );
         }
     }
 

@@ -19,7 +19,10 @@ pub mod infer_sim;
 pub use cost_model::{CostModel, StepCost};
 pub use event::pipeline_makespan;
 pub use infer_sim::{
-    simulate_inference, simulate_ring_offload, simulate_routed_ring, simulate_serving,
-    InferReport, RingReport, RoutedRingReport, ScheduleReport, ServeRequest, ServingComparison,
+    simulate_inference, simulate_pipelined_ring, simulate_ring_offload, simulate_routed_ring,
+    simulate_serving, InferReport, PipelinedRingReport, RingReport, RoutedRingReport,
+    ScheduleReport, ServeRequest, ServingComparison,
 };
-pub use train_sim::{simulate_training, Schedule, TrainReport};
+pub use train_sim::{
+    simulate_offload_sweep, simulate_training, OffloadSweepReport, Schedule, TrainReport,
+};

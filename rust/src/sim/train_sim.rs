@@ -102,6 +102,51 @@ pub fn simulate_training(
     }
 }
 
+/// Fused-vs-pipelined pricing of ONE offload-trainer forward sweep
+/// (the PR-7 split-execution A/B on the training hot path): the fused
+/// sweep gates each layer on its full staged fetch, the pipelined sweep
+/// runs `layer_dense` while only the routed expert subset drains from
+/// the SSD/CPU lane.
+#[derive(Debug, Clone, Copy)]
+pub struct OffloadSweepReport {
+    /// Fetch bytes per sweep: fused (dense + routed experts staged)
+    /// vs sparse-only (experts alone; dense never travels).
+    pub bytes_fused: f64,
+    pub bytes_sparse: f64,
+    /// Sweep wall-clock under each execution model.
+    pub t_fused: f64,
+    pub t_pipelined: f64,
+}
+
+impl OffloadSweepReport {
+    /// Fused / pipelined wall-clock ratio (≥ 1: the split never loses).
+    pub fn speedup(&self) -> f64 {
+        self.t_fused / self.t_pipelined.max(1e-12)
+    }
+}
+
+/// Price one forward sweep of the offload trainer at fetch bandwidth
+/// `bw` (bytes/s — the SSD/CPU sparse lane), `tokens` routing decisions
+/// per layer with Zipf(s) expert popularity. Thin wrapper over
+/// [`CostModel::fused_pass_secs`] / [`CostModel::pipelined_pass_secs`]
+/// so the trainer A/B, the sim and the cost model all price the same
+/// schedule.
+pub fn simulate_offload_sweep(
+    model: &ModelConfig,
+    cluster: &ClusterConfig,
+    tokens: f64,
+    zipf_s: f64,
+    bw: f64,
+) -> OffloadSweepReport {
+    let cm = CostModel::new(model.clone(), cluster.clone());
+    OffloadSweepReport {
+        bytes_fused: cm.ring_bytes_routed(tokens, zipf_s),
+        bytes_sparse: cm.ring_bytes_sparse_only(tokens, zipf_s),
+        t_fused: cm.fused_pass_secs(tokens, zipf_s, bw),
+        t_pipelined: cm.pipelined_pass_secs(tokens, zipf_s, bw),
+    }
+}
+
 /// Activation + dispatch-buffer working set per device (fp16):
 /// ~34 activation copies per layer-token plus the E·C·H dispatch and
 /// combine buffers of the capacity-factor routing.
@@ -165,6 +210,37 @@ mod tests {
                 prev
             );
             prev = se.tokens_per_s;
+        }
+    }
+
+    #[test]
+    fn pipelined_sweep_beats_fused_under_skew() {
+        let m = table1_model(32, 32);
+        let cl = cluster_for_gpus(32);
+        let tokens = 128.0;
+        // Copy-bound SSD lane: size bw so a full layer's fetch takes
+        // ~2x the layer's compute — the regime §2.2 offload lives in.
+        let cm = CostModel::new(m.clone(), cl.clone());
+        let per_layer = cm.ring_bytes_dense() / m.n_layers as f64;
+        let bw = per_layer / (2.0 * cm.rerun_secs_layer());
+        let skew = simulate_offload_sweep(&m, &cl, tokens, 1.2, bw);
+        assert!(skew.bytes_sparse < skew.bytes_fused);
+        assert!(
+            skew.t_pipelined < 0.95 * skew.t_fused,
+            "split sweep must win ≥5% on a copy-bound lane: {:.4} vs {:.4}",
+            skew.t_pipelined,
+            skew.t_fused
+        );
+        assert!(skew.speedup() > 1.0);
+        // Never-worse across skew and bandwidth sweeps.
+        for s in [0.0, 0.7, 1.2, 2.0] {
+            for mult in [0.25, 1.0, 4.0, 64.0] {
+                let r = simulate_offload_sweep(&m, &cl, tokens, s, bw * mult);
+                assert!(
+                    r.t_pipelined <= r.t_fused + 1e-12,
+                    "pipelining never loses (zipf {s}, bw x{mult})"
+                );
+            }
         }
     }
 

@@ -23,7 +23,14 @@
 //! recomputed on a repair (`PrefetchStats::tail_reruns`; the legacy
 //! full-layer `reruns` counter stays 0), which is sound because the
 //! routing outputs depend only on the dense prefix, never on the
-//! staged expert weights. The old coordinator-side f64 shadow MHA
+//! staged expert weights. With [`TrainConfig::pipelined`] the sweep is
+//! **split** instead of fused: each layer's `layer_dense` prefix runs
+//! while that layer's planned SSD fetches drain
+//! (`PrefetchStats::overlap_secs`), the prefix-emitted exact set
+//! drives pre-tail demand fetches for whatever the plan missed, and
+//! `expert_tail` runs exactly once — plan misses cannot re-run
+//! anything (`tail_reruns` stays 0 by construction), and the fused
+//! plan/repair branch above survives as the non-pipelined fallback. The old coordinator-side f64 shadow MHA
 //! recompute is gone from the hot path (it survives only as the parity
 //! oracle in tests); only routed experts (plus the pinned hot set) ever
 //! cross SSD→CPU→device. Experts no batch routes to stay cold on SSD;
@@ -201,6 +208,18 @@ pub struct PrefetchStats {
     pub catchup_steps: u64,
     /// Dirty expert blocks written back to the store.
     pub writebacks: u64,
+    /// `layer_dense` prefix executions on pipelined steps — the runtime
+    /// proof the split artifact runs in training (one per layer per
+    /// pipelined step; stays 0 on fused steps).
+    pub dense_prefix_layers: u64,
+    /// Seconds of dense-prefix compute that ran while this layer's
+    /// planned SSD fetches were still draining (the hidden share of the
+    /// sparse lane on pipelined steps).
+    pub overlap_secs: f64,
+    /// Seconds the sweep blocked waiting on expert fetches (planned
+    /// waits + demand fetches). The pipelined A/B reads as seconds
+    /// moving from here into `overlap_secs`.
+    pub stalled_secs: f64,
     /// Peak bytes of fetched blocks alive *concurrently* between wait
     /// and splice — a gauge, not a per-block size, so holding blocks in
     /// a collection (the old layer-granular path kept every layer's
@@ -217,6 +236,11 @@ pub struct OffloadTrainer {
     /// repair executable: dispatch → expert FFN → gated combine over
     /// the fused entry's emitted activations.
     expert_tail: Rc<ArtifactExe>,
+    /// The layer's dense half alone: pipelined steps
+    /// ([`TrainConfig::pipelined`]) run it while the layer's planned
+    /// SSD fetches drain, then feed its emitted activations + exact
+    /// routing into one `expert_tail` run.
+    layer_dense: Rc<ArtifactExe>,
     layer_bwd: Rc<ArtifactExe>,
     head_grad: Rc<ArtifactExe>,
     /// AdamW artifacts retained for parity testing against `cpu_adamw`
@@ -261,6 +285,15 @@ pub struct OffloadTrainer {
     lf_moe_in: usize,
     /// `expert_tail`'s y output position.
     tail_y: usize,
+    /// `layer_dense` output positions (same routing quadruple +
+    /// activations + aux as the fused entry, minus `y`).
+    ld_h: usize,
+    ld_moe_in: usize,
+    ld_aux: usize,
+    ld_route: usize,
+    ld_gate: usize,
+    ld_pos: usize,
+    ld_keep: usize,
     /// Per-layer rolling expert load → hot-set pinning.
     load: Vec<LoadStats>,
     /// Per-layer hot experts, pinned in the CPU cache and unioned into
@@ -285,8 +318,8 @@ impl OffloadTrainer {
         mesh: Option<MeshHandle>,
     ) -> Result<OffloadTrainer> {
         for needed in [
-            "embed_fwd", "embed_bwd", "layer_fwd", "expert_tail", "layer_bwd",
-            "head_grad", "adamw_layer", "adamw_embed", "adamw_head",
+            "embed_fwd", "embed_bwd", "layer_fwd", "expert_tail", "layer_dense",
+            "layer_bwd", "head_grad", "adamw_layer", "adamw_embed", "adamw_head",
         ] {
             if !arts.has(needed) {
                 anyhow::bail!("preset {} lacks artifact '{}'", arts.preset.name, needed);
@@ -366,12 +399,21 @@ impl OffloadTrainer {
         let lf_moe_in = layer_fwd.output_index("moe_in")?;
         let expert_tail = arts.load_exe("expert_tail")?;
         let tail_y = expert_tail.output_index("y")?;
+        let layer_dense = arts.load_exe("layer_dense")?;
+        let ld_h = layer_dense.output_index("h")?;
+        let ld_moe_in = layer_dense.output_index("moe_in")?;
+        let ld_aux = layer_dense.output_index("aux")?;
+        let ld_route = layer_dense.output_index("route_expert")?;
+        let ld_gate = layer_dense.output_index("route_gate")?;
+        let ld_pos = layer_dense.output_index("route_pos")?;
+        let ld_keep = layer_dense.output_index("route_keep")?;
 
         Ok(OffloadTrainer {
             embed_fwd: arts.load_exe("embed_fwd")?,
             embed_bwd: arts.load_exe("embed_bwd")?,
             layer_fwd,
             expert_tail,
+            layer_dense,
             layer_bwd: arts.load_exe("layer_bwd")?,
             head_grad: arts.load_exe("head_grad")?,
             adamw_layer: arts.load_exe("adamw_layer")?,
@@ -393,6 +435,13 @@ impl OffloadTrainer {
             lf_h,
             lf_moe_in,
             tail_y,
+            ld_h,
+            ld_moe_in,
+            ld_aux,
+            ld_route,
+            ld_gate,
+            ld_pos,
+            ld_keep,
             load,
             hot,
             stamps,
@@ -442,6 +491,7 @@ impl OffloadTrainer {
         let n_experts = model.n_experts;
         let lookahead = self.cfg.prefetch_depth;
         let expert_prefetch = self.cfg.expert_prefetch;
+        let pipelined = self.cfg.pipelined;
         let hot_frac = self.cfg.hot_frac;
         let n_tokens = tokens.numel();
         let self_step = self.step;
@@ -450,15 +500,18 @@ impl OffloadTrainer {
 
         // Disjoint field borrows for the timed closures below.
         let OffloadTrainer {
-            embed_fwd, embed_bwd, layer_fwd, expert_tail, layer_bwd, head_grad,
+            embed_fwd, embed_bwd, layer_fwd, expert_tail, layer_dense, layer_bwd, head_grad,
             adamw_layer: _, adamw_embed: _, adamw_head: _,
             embed, head, layers, sched, layout, route, lf_y, lf_aux, lf_route,
             lf_gate, lf_pos, lf_keep, lf_h, lf_moe_in, tail_y,
+            ld_h, ld_moe_in, ld_aux, ld_route, ld_gate, ld_pos, ld_keep,
             load, hot, stamps, pstats, mesh, timeline, ..
         } = self;
         let (lf_y, lf_aux, lf_route) = (*lf_y, *lf_aux, *lf_route);
         let (lf_gate, lf_pos, lf_keep) = (*lf_gate, *lf_pos, *lf_keep);
         let (lf_h, lf_moe_in, tail_y) = (*lf_h, *lf_moe_in, *tail_y);
+        let (ld_h, ld_moe_in, ld_aux) = (*ld_h, *ld_moe_in, *ld_aux);
+        let (ld_route, ld_gate, ld_pos, ld_keep) = (*ld_route, *ld_gate, *ld_pos, *ld_keep);
 
         // ---- Routing-ahead: plan the expert axis before the sweep via
         // the configured RouteSource (prediction ∪ pinned hot set).
@@ -521,13 +574,96 @@ impl OffloadTrainer {
                 }
             }
 
+            let off = layers[l].sparse_offset();
+            if pipelined {
+                // Pipelined step (the PR-7 split): run the layer's dense
+                // prefix FIRST, from resident dense weights, while this
+                // layer's planned SSD fetches are still draining on the
+                // scheduler thread — the overlap the 2D prefetch design
+                // exists for. The prefix emits the exact routed set, so
+                // by the time the tail needs expert weights we know
+                // precisely what to demand-fetch: the plan is exact by
+                // construction and `tail_reruns` stays 0.
+                let td = std::time::Instant::now();
+                let mut dense_in = vec![x.clone()];
+                dense_in.extend(dense_tensors(&layers[l]));
+                let dout = timeline.time(Phase::Compute, || layer_dense.run(&dense_in))?;
+                pstats.overlap_secs += td.elapsed().as_secs_f64();
+                pstats.dense_prefix_layers += 1;
+
+                // Now drain the planned fetches (much of their latency
+                // just ran under the prefix) and splice.
+                let tw = std::time::Instant::now();
+                for &e in plan.experts(l) {
+                    let seq = pending[l].remove(&e).expect("planned fetch requested");
+                    wait_catch_up_splice(
+                        sched, timeline, layout, &mut layers[l], off, seq,
+                        stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
+                    )?;
+                }
+                pstats.stalled_secs += tw.elapsed().as_secs_f64();
+
+                let (exact, counts) = if expert_prefetch {
+                    routed_set_from_ids(dout[ld_route].as_i32()?, n_experts)
+                } else {
+                    ((0..n_experts).collect(), Vec::new())
+                };
+                if expert_prefetch {
+                    // A plan miss here is a pre-tail demand fetch, not a
+                    // re-run: the tail has not executed yet.
+                    let missed: Vec<usize> =
+                        exact.iter().copied().filter(|&e| !plan.contains(l, e)).collect();
+                    pstats.plan_hit_experts += (exact.len() - missed.len()) as u64;
+                    pstats.plan_missed_experts += missed.len() as u64;
+                    let tm = std::time::Instant::now();
+                    for &e in &missed {
+                        let seq = sched.request(l, e);
+                        pstats.demand_fetches += 1;
+                        wait_catch_up_splice(
+                            sched, timeline, layout, &mut layers[l], off, seq,
+                            stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
+                        )?;
+                    }
+                    pstats.stalled_secs += tm.elapsed().as_secs_f64();
+                    pstats.wasted_fetches += plan
+                        .experts(l)
+                        .iter()
+                        .filter(|&&e| exact.binary_search(&e).is_err())
+                        .count() as u64;
+                    route.observe(l, &counts);
+                    load[l].record(&counts);
+                    hot[l] = load[l].hot_experts(hot_frac);
+                }
+                used[l] = exact;
+                aux_total += dout[ld_aux].scalar()?;
+
+                // Exactly one tail run per layer, over the prefix's
+                // emitted activations + routing and the spliced experts.
+                let tail_weights = sparse_tensors(&layers[l]);
+                let mut tail_in: Vec<&HostTensor> = vec![
+                    &dout[ld_h],
+                    &dout[ld_moe_in],
+                    &dout[ld_route],
+                    &dout[ld_gate],
+                    &dout[ld_pos],
+                    &dout[ld_keep],
+                ];
+                tail_in.extend(tail_weights.iter());
+                let y = timeline
+                    .time(Phase::Compute, || expert_tail.run_ref(&tail_in))?
+                    .swap_remove(tail_y);
+                xs.push(x);
+                x = y;
+                continue;
+            }
+
             // Wait for this layer's planned blocks, replay skipped
             // zero-grad AdamW steps into the fetched *copy*, splice into
             // the resident fused scratch tail. Store state and stamps
             // stay untouched here: experts the batch turns out not to
             // route to are never written back, so the store must keep
             // its (stale-stamped) truth.
-            let off = layers[l].sparse_offset();
+            let tw = std::time::Instant::now();
             for &e in plan.experts(l) {
                 let seq = pending[l].remove(&e).expect("planned fetch requested");
                 // Forward needs the state the resident math holds after
@@ -537,6 +673,7 @@ impl OffloadTrainer {
                     stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
                 )?;
             }
+            pstats.stalled_secs += tw.elapsed().as_secs_f64();
 
             // Run the layer (the fused fast path). The kernel emits the
             // exact routed set as the named `route_expert` output —
@@ -567,6 +704,7 @@ impl OffloadTrainer {
                 pstats.plan_hit_experts += (exact.len() - missed.len()) as u64;
                 pstats.plan_missed_experts += missed.len() as u64;
                 if !missed.is_empty() {
+                    let tm = std::time::Instant::now();
                     for &e in &missed {
                         let seq = sched.request(l, e);
                         pstats.demand_fetches += 1;
@@ -575,6 +713,7 @@ impl OffloadTrainer {
                             stamps[l][e], step_u - 1, lr_v, &mut live_block_bytes, pstats,
                         )?;
                     }
+                    pstats.stalled_secs += tm.elapsed().as_secs_f64();
                     pstats.tail_reruns += 1;
                     // Borrow the activations straight out of the fused
                     // run (run_ref — no clones); only the spliced
@@ -825,6 +964,19 @@ fn sparse_tensors(st: &ParamState) -> Vec<HostTensor> {
         .collect()
 }
 
+/// The dense (non-expert) tensors of a layer's resident state, in
+/// member order — the `layer_dense` artifact's parameter feed on
+/// pipelined steps. The contract compiles `layer_dense` over exactly
+/// the member-order dense prefix, so a plain order-preserving filter is
+/// the correct input vector.
+fn dense_tensors(st: &ParamState) -> Vec<HostTensor> {
+    st.members
+        .iter()
+        .filter(|s| !s.sparse)
+        .map(|s| HostTensor::from_f32(&s.shape, st.p.unpack(&s.name).to_vec()))
+        .collect()
+}
+
 /// Replay the zero-grad AdamW steps an expert missed while cold on SSD,
 /// bringing `block` current **through** optimizer step `through`
 /// (inclusive). Owns the stamp/replay range arithmetic for all three
@@ -1018,6 +1170,65 @@ mod tests {
             planned.prefetch_stats().reruns,
             0,
             "the well-planned run repairs tail-only too"
+        );
+    }
+
+    /// The PR-7 trainer A/B: pipelined steps (dense prefix while SSD
+    /// fetches drain, pre-tail demand fetch, single tail) must be
+    /// bit-equal to the fused sweep, actually run `layer_dense`, and
+    /// never re-run a tail — even with a planner that predicts nothing,
+    /// the stress that forces the fused path to re-run on every layer.
+    #[test]
+    fn pipelined_steps_match_fused_and_never_rerun_tails() {
+        use crate::moe::routing::EmptyPlanSource;
+
+        let arts = Rc::new(ModelArtifacts::load("tiny").unwrap());
+        let m = arts.preset.clone();
+        let data = batches(2, 55, &m);
+        let n_steps = data.len();
+        let mut fused = OffloadTrainer::new(arts.clone(), cfg(n_steps), None).unwrap();
+        let mut piped = {
+            let mut c = cfg(n_steps);
+            c.pipelined = true;
+            OffloadTrainer::new(arts.clone(), c, None).unwrap()
+        };
+        let mut piped_unplanned = {
+            let mut c = cfg(n_steps);
+            c.pipelined = true;
+            let mut tr = OffloadTrainer::new(arts.clone(), c, None).unwrap();
+            tr.set_route_source(Box::new(EmptyPlanSource));
+            tr
+        };
+        for (t, l) in &data {
+            let a = fused.step_on(t.clone(), l.clone()).unwrap();
+            let b = piped.step_on(t.clone(), l.clone()).unwrap();
+            let c = piped_unplanned.step_on(t.clone(), l.clone()).unwrap();
+            assert_eq!(a.loss, b.loss, "split execution must not change the math");
+            assert_eq!(a.loss, c.loss, "forced misses pre-tail must not change the math");
+            assert_eq!(a.aux, b.aux, "aux must come out of the dense prefix identically");
+        }
+        let n_layers = m.n_layers as u64;
+        for (name, tr) in [("planned", &piped), ("unplanned", &piped_unplanned)] {
+            let ps = tr.prefetch_stats();
+            assert_eq!(
+                ps.dense_prefix_layers,
+                n_layers * n_steps as u64,
+                "{}: layer_dense must run once per layer per step",
+                name
+            );
+            assert_eq!(ps.tail_reruns, 0, "{}: pipelined plans are exact by construction", name);
+            assert_eq!(ps.reruns, 0, "{}", name);
+            assert!(ps.overlap_secs > 0.0, "{}: prefix time must be accounted as overlap", name);
+        }
+        assert!(
+            piped_unplanned.prefetch_stats().demand_fetches
+                > piped.prefetch_stats().demand_fetches,
+            "the empty planner must force pre-tail demand fetches"
+        );
+        assert_eq!(
+            fused.prefetch_stats().dense_prefix_layers,
+            0,
+            "the fused sweep never runs the dense prefix"
         );
     }
 

@@ -25,9 +25,17 @@ cargo run --release -- lint
 echo "== tier1: serving smoke (continuous-batching HTTP path, routed ring passes)"
 cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2 --routed
 
+echo "== tier1: pipelined serving smoke (layer_dense overlaps the expert copy lane)"
+cargo run --release --example serve_ring_inference -- --requests 8 --ring 3 --tokens 2 --routed --pipeline
+
 echo "== tier1: admission-queue property + ring stress regression tests (smoke)"
 SEMOE_SMOKE=1 cargo test -q prop_admission_queue_invariants
 SEMOE_SMOKE=1 cargo test -q stress_aborted_routed_and_slow_passes
+
+echo "== tier1: pipelined-pass regression (bit-identity to fused, zero tail re-runs, slow-copy-lane overlap)"
+cargo test -q pipelined_ring_decode_matches_fused_bitwise
+cargo test -q pipelined_steps_match_fused_and_never_rerun_tails
+SEMOE_SMOKE=1 cargo test -q slow_copy_lane_pipelined_stalls_less_than_fused
 
 echo "== tier1: artifact-contract regression (v1/v2 manifests → actionable rebuild error)"
 cargo test -q contract_v1_manifest_is_actionable
@@ -52,7 +60,10 @@ echo "== tier1: routed-vs-dense ring ablation smoke (asserts routed < dense byte
 SEMOE_SMOKE=1 cargo bench --bench fig10_ring_offload
 SEMOE_SMOKE=1 cargo bench --bench table2_inference
 
-echo "== tier1: perf trajectory stub (BENCH_tier1.json from the smoke reports)"
+echo "== tier1: perf trajectory stub (BENCH_tier1.json + BENCH_trajectory.json from the smoke reports)"
 cargo run --release -- perf-stub
+
+echo "== tier1: perf regression gate (tokens/s vs previous trajectory point, >10% drop fails)"
+cargo run --release -- perf-compare
 
 echo "tier1 OK"
