@@ -164,6 +164,37 @@ mod tests {
     }
 
     #[test]
+    fn reduce_roundtrip_restores_per_tensor_grads_bitwise() {
+        // deposit → fuse → (collective: average with a peer) → split must
+        // hand every tensor back exactly its own averaged slice.
+        let mut g = GradientBuckets::new(6);
+        g.register("a", 4);
+        g.register("b", 2); // fills the first bucket
+        g.register("c", 3); // second bucket
+        g.start_pass();
+        let grads: [(&str, Vec<f32>); 3] = [
+            ("a", vec![1.0, -2.0, 3.5, 0.25]),
+            ("b", vec![8.0, -9.0]),
+            ("c", vec![0.5, 0.75, -1.25]),
+        ];
+        let mut fired = Vec::new();
+        for (n, v) in &grads {
+            if let Some(r) = g.deposit(n, v) {
+                fired.push(r);
+            }
+        }
+        assert_eq!(fired.len(), g.n_buckets());
+        for ready in fired {
+            let wire: Vec<f32> = ready.data.iter().map(|v| (v + 1.0) / 2.0).collect();
+            for (name, slice) in g.split(ready.index, &wire) {
+                let orig = &grads.iter().find(|(n, _)| *n == name).unwrap().1;
+                let want: Vec<f32> = orig.iter().map(|v| (v + 1.0) / 2.0).collect();
+                assert_eq!(slice, &want[..], "grad '{}' round-trip", name);
+            }
+        }
+    }
+
+    #[test]
     fn deterministic_across_arrival_orders() {
         // Same registration, different arrival order → identical payloads.
         let mk = || {

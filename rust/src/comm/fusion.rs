@@ -147,6 +147,26 @@ mod tests {
     }
 
     #[test]
+    fn chunked_wire_roundtrip_reassembles_bitwise() {
+        // Slices → fused → per-chunk "wire" transfer (chunk boundaries
+        // cross slice edges) → reassembly → unpack must be bit-identical.
+        let layout = [("q", 5usize), ("k", 3), ("v", 6)];
+        let mut fb = FusionBuffer::with_layout(layout);
+        fb.pack("q", &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        fb.pack("k", &[-1.0, -2.0, -3.0]);
+        fb.pack("v", &[10.0, 20.0, 30.0, 40.0, 50.0, 60.0]);
+        let mut wire = vec![0.0f32; fb.len()];
+        for (off, len) in fb.chunked(4) {
+            wire[off..off + len].copy_from_slice(&fb.fused()[off..off + len]);
+        }
+        let mut rx = FusionBuffer::with_layout(layout);
+        rx.load_fused(wire);
+        for (name, _) in layout {
+            assert_eq!(rx.unpack(name), fb.unpack(name), "slice '{}'", name);
+        }
+    }
+
+    #[test]
     #[should_panic]
     fn duplicate_registration_panics() {
         let mut fb = FusionBuffer::new();

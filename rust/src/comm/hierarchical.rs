@@ -273,6 +273,39 @@ mod tests {
     }
 
     #[test]
+    fn empty_and_uneven_chunks_roundtrip_exactly() {
+        // Zero-length chunks (a rank with nothing for some peers) must
+        // survive both phases' length-prefixed payload encoding; the
+        // result stays bit-equal to the flat exchange.
+        let p = 2;
+        let world = 4;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let s = h.rank();
+                    let chunks: Vec<Vec<f32>> = (0..world)
+                        .map(|d| {
+                            if (s + d) % 3 == 0 {
+                                Vec::new()
+                            } else {
+                                vec![(10 * s + d) as f32; (s + d) % 3]
+                            }
+                        })
+                        .collect();
+                    let flat = flat_a2a(&mut h, chunks.clone());
+                    let (hier, _) = hierarchical_a2a(&mut h, p, chunks);
+                    assert_eq!(flat, hier, "rank {}", s);
+                })
+            })
+            .collect();
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
     fn plan_hierarchical_avoids_spine() {
         let topo = Topology::new(ClusterConfig {
             n_clusters: 1,

@@ -57,6 +57,7 @@ use crate::moe::routing::{
 use crate::moe::LoadStats;
 use crate::prefetch::RoutePlan;
 use crate::runtime::{ArtifactExe, HostTensor, ModelArtifacts};
+use crate::train::checkpoint;
 use crate::train::optimizer::{group_of, init_tensor, Group};
 use crate::util::Rng;
 
@@ -170,6 +171,35 @@ pub struct PassTiming {
     /// cost is visible on its own — the Fig 10 "tail" bar; priced
     /// analytically by `sim::CostModel::rerun_secs_tail`.
     pub tail_secs: f64,
+}
+
+/// One queued expert weight update for live hot-swap
+/// ([`InferenceEngine::swap_experts`]).
+#[derive(Debug, Clone)]
+pub struct ExpertUpdate {
+    pub layer: usize,
+    pub expert: usize,
+    /// The expert's concatenated per-sparse-member block in member order
+    /// — the layout `storage::SparseLayout::gather` produces, and
+    /// therefore exactly an incremental checkpoint sparse entry's `p`
+    /// payload.
+    pub data: Vec<f32>,
+}
+
+/// Live expert hot-swap accounting (`/stats` surfaces these as the
+/// `swap.*` gauges — `docs/serving.md` §Expert hot-swap).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapStats {
+    /// Experts queued via [`InferenceEngine::swap_experts`] /
+    /// [`InferenceEngine::swap_experts_from_checkpoint`].
+    pub requested_experts: u64,
+    /// Experts actually spliced into the CPU weight tier at a pass
+    /// boundary.
+    pub applied_experts: u64,
+    /// Bytes those splices moved.
+    pub bytes: u64,
+    /// Pass boundaries at which a pending swap batch was applied.
+    pub passes: u64,
 }
 
 /// One member tensor's slot within a layer's fused weight buffer.
@@ -324,6 +354,67 @@ impl CpuWeightStore {
         Ok(bytes)
     }
 
+    /// Elements in one expert's concatenated block across the layer's
+    /// sparse members — the hot-swap payload unit, identical to the
+    /// trainer's `SparseLayout::expert_len` (both walk the manifest's
+    /// sparse specs in order and slice `[e·per .. (e+1)·per]`).
+    pub fn expert_block_len(&self) -> usize {
+        self.members
+            .iter()
+            .filter(|m| m.sparse)
+            .map(|m| m.numel() / self.n_experts)
+            .sum()
+    }
+
+    /// Read back one expert's concatenated block (sparse members in
+    /// member order) — the inverse of [`Self::set_expert`] and the
+    /// identity-swap test oracle.
+    pub fn expert_block(&self, layer: usize, expert: usize) -> Vec<f32> {
+        assert!(expert < self.n_experts, "expert {} of {}", expert, self.n_experts);
+        let fused = &self.layers[layer];
+        let mut out = Vec::with_capacity(self.expert_block_len());
+        for m in self.members.iter().filter(|m| m.sparse) {
+            let per = m.numel() / self.n_experts;
+            out.extend_from_slice(&fused[m.offset + expert * per..m.offset + (expert + 1) * per]);
+        }
+        out
+    }
+
+    /// Overwrite one expert's slices across `layer`'s sparse members.
+    /// `data` is the concatenated per-member block in member order — the
+    /// layout `storage::SparseLayout::gather` (and therefore a training
+    /// checkpoint's sparse `p` entry) produces. Copy-on-write with the
+    /// same hazard as [`Self::set_layer`]: rebuild any live ring built
+    /// from [`Self::loader`] afterwards. Returns the bytes written.
+    pub fn set_expert(&mut self, layer: usize, expert: usize, data: &[f32]) -> Result<usize> {
+        anyhow::ensure!(expert < self.n_experts, "expert {} of {}", expert, self.n_experts);
+        let want = self.expert_block_len();
+        anyhow::ensure!(
+            data.len() == want,
+            "expert block for layer{}.expert{} has {} elements, layout expects {}",
+            layer,
+            expert,
+            data.len(),
+            want
+        );
+        let n_experts = self.n_experts;
+        let members = &self.members;
+        let layers = Arc::make_mut(&mut self.layers);
+        let fused = layers
+            .get_mut(layer)
+            .with_context(|| format!("swap into layer {} out of range", layer))?;
+        let mut src = 0usize;
+        let mut bytes = 0usize;
+        for m in members.iter().filter(|m| m.sparse) {
+            let per = m.numel() / n_experts;
+            fused[m.offset + expert * per..m.offset + (expert + 1) * per]
+                .copy_from_slice(&data[src..src + per]);
+            src += per;
+            bytes += per * 4;
+        }
+        Ok(bytes)
+    }
+
     /// Position of a member tensor (by short name) within the staged
     /// per-layer weight vector — how the tail-repair path picks the
     /// expert tensors out of a ring slot.
@@ -458,6 +549,15 @@ pub struct InferenceEngine {
     routed: RoutedRingConfig,
     pipeline: PipelineConfig,
     route_stats: RouteRepairStats,
+    /// Emulated CPU→device bandwidth of the copy lane — kept so a ring
+    /// rebuilt after an expert hot-swap preserves the link model.
+    throttle: Option<f64>,
+    /// Expert updates queued by `swap_experts`, applied at the next pass
+    /// boundary (top of `forward`) — never mid-pass, so live decode
+    /// slots are not drained and in-flight passes keep serving one
+    /// consistent weight version.
+    pending_swaps: Vec<ExpertUpdate>,
+    swap_stats: SwapStats,
     /// Reusable flat token scratch for `decode_step`: removes the
     /// per-slot window clones from the serving hot path (one staging
     /// copy into the input `HostTensor` remains — the tensor API owns
@@ -581,6 +681,9 @@ impl InferenceEngine {
             routed: RoutedRingConfig::default(),
             pipeline: PipelineConfig::default(),
             route_stats: RouteRepairStats::default(),
+            throttle,
+            pending_swaps: Vec::new(),
+            swap_stats: SwapStats::default(),
             flat: Vec::new(),
             timing: PassTiming::default(),
         })
@@ -639,6 +742,98 @@ impl InferenceEngine {
         self.route_stats
     }
 
+    /// Queue expert weight updates for live hot-swap. They apply at the
+    /// next **pass boundary** (the top of the next `forward` — which is
+    /// what each `decode_step` drives), never mid-pass: live slots keep
+    /// decoding, no drain, and every pass serves one consistent weight
+    /// version. Experts not named in any update keep serving
+    /// bit-identical weights. `data` layout is
+    /// `storage::SparseLayout::gather`'s (= a checkpoint sparse `p`).
+    pub fn swap_experts(&mut self, updates: Vec<ExpertUpdate>) -> Result<()> {
+        let (n_layers, n_experts) = (self.arts.preset.n_layers, self.arts.preset.n_experts);
+        let want = self.store.expert_block_len();
+        for u in &updates {
+            anyhow::ensure!(
+                u.layer < n_layers && u.expert < n_experts,
+                "swap target layer{}.expert{} outside [{} layers x {} experts]",
+                u.layer,
+                u.expert,
+                n_layers,
+                n_experts
+            );
+            anyhow::ensure!(
+                u.data.len() == want,
+                "swap block for layer{}.expert{} has {} elements, expected {}",
+                u.layer,
+                u.expert,
+                u.data.len(),
+                want
+            );
+        }
+        self.swap_stats.requested_experts += updates.len() as u64;
+        self.pending_swaps.extend(updates);
+        Ok(())
+    }
+
+    /// Queue every sparse expert entry of an incremental training
+    /// checkpoint (`train::checkpoint`) for hot-swap — the serving end
+    /// of the train→serve weight pipeline. Entries are checksummed on
+    /// load; dense entries are skipped (replacing the dense prefix
+    /// requires an engine rebuild). Returns the number of experts queued.
+    pub fn swap_experts_from_checkpoint(&mut self, dir: &std::path::Path) -> Result<usize> {
+        let man = checkpoint::read_manifest(dir)?;
+        anyhow::ensure!(
+            man.preset == self.arts.preset.name,
+            "checkpoint is for preset '{}', engine serves '{}'",
+            man.preset,
+            self.arts.preset.name
+        );
+        let mut updates = Vec::new();
+        for e in &man.entries {
+            if let Some((layer, expert)) = checkpoint::parse_sparse_key(&e.key) {
+                let (p, _m, _v) = checkpoint::load_entry(dir, e)?;
+                updates.push(ExpertUpdate { layer, expert, data: p });
+            }
+        }
+        let n = updates.len();
+        self.swap_experts(updates)?;
+        Ok(n)
+    }
+
+    /// Live hot-swap accounting.
+    pub fn swap_stats(&self) -> SwapStats {
+        self.swap_stats
+    }
+
+    /// Apply queued expert swaps at a pass boundary: splice each block
+    /// into the CPU weight tier (copy-on-write), then rebuild the ring.
+    /// The rebuild is what closes the `set_layer`/`set_expert` hazard —
+    /// the staging thread snapshots the store's `Arc` at `loader()`
+    /// time, so only a fresh loader serves the swapped bytes. Carried
+    /// routing state is reset: new weights may route differently, and a
+    /// stale carried plan would only cost repairs.
+    fn apply_pending_swaps(&mut self) -> Result<()> {
+        if self.pending_swaps.is_empty() {
+            return Ok(());
+        }
+        for u in std::mem::take(&mut self.pending_swaps) {
+            let bytes = self.store.set_expert(u.layer, u.expert, &u.data)?;
+            self.swap_stats.applied_experts += 1;
+            self.swap_stats.bytes += bytes as u64;
+        }
+        self.swap_stats.passes += 1;
+        if let InferMode::Ring { k } = self.mode {
+            self.ring = Some(RingMemory::new(
+                k,
+                self.arts.preset.n_layers,
+                self.store.loader(),
+                self.throttle,
+            ));
+        }
+        self.route.reset();
+        Ok(())
+    }
+
     /// Device-resident weight bytes (the Fig 10 memory comparison).
     pub fn device_weight_bytes(&self) -> usize {
         let per_layer = self.store.layer_bytes();
@@ -651,6 +846,9 @@ impl InferenceEngine {
 
     /// One full forward pass: tokens [B, T] → greedy next token ids [B].
     pub fn forward(&mut self, tokens: &HostTensor) -> Result<Vec<i32>> {
+        // Pass boundary: land any queued expert hot-swaps before the
+        // walk starts, never during it.
+        self.apply_pending_swaps()?;
         let model = &self.arts.preset;
         let (n_layers, n_experts) = (model.n_layers, model.n_experts);
         let t0 = Instant::now();
@@ -979,6 +1177,11 @@ impl DecodeModel for InferenceEngine {
         reg.gauge("route.tail_rerun_us").set((self.timing.tail_secs * 1e6) as u64);
         reg.gauge("route.overlap_us").set((rs.overlap_secs * 1e6) as u64);
         reg.gauge("route.stalled_us").set((rs.stalled_secs * 1e6) as u64);
+        let sw = self.swap_stats;
+        reg.gauge("swap.requested_experts").set(sw.requested_experts);
+        reg.gauge("swap.applied_experts").set(sw.applied_experts);
+        reg.gauge("swap.bytes").set(sw.bytes);
+        reg.gauge("swap.passes").set(sw.passes);
         if let Some(r) = self.ring_stats() {
             reg.gauge("ring.copy_bytes").set(r.copy_bytes);
             reg.gauge("ring.loads").set(r.loads);
@@ -1315,6 +1518,162 @@ mod tests {
             0,
             "empty plans + sparse-only staging move zero bytes through the ring"
         );
+    }
+
+    /// The hot-swap identity acceptance: swapping every expert's own
+    /// current bytes back in at a pass boundary must leave decode
+    /// bit-identical — the strongest form of "untouched experts stay
+    /// bit-identical" — while the counters prove the splice and the
+    /// ring rebuild actually ran.
+    #[test]
+    fn identity_expert_swap_is_bit_exact_and_counted() {
+        let mut plain = engine(InferMode::Ring { k: 3 });
+        let mut swapped = engine(InferMode::Ring { k: 3 });
+        let model = plain.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 3 + 1; 5]).collect();
+        let a = plain.generate(&prompts, 2).unwrap();
+        let updates: Vec<ExpertUpdate> = (0..model.n_layers)
+            .flat_map(|l| (0..model.n_experts).map(move |e| (l, e)))
+            .map(|(l, e)| ExpertUpdate {
+                layer: l,
+                expert: e,
+                data: swapped.store.expert_block(l, e),
+            })
+            .collect();
+        let n = updates.len() as u64;
+        swapped.swap_experts(updates).unwrap();
+        assert_eq!(
+            swapped.swap_stats().applied_experts,
+            0,
+            "swaps apply only at a pass boundary"
+        );
+        let b = swapped.generate(&prompts, 2).unwrap();
+        assert_eq!(a, b, "identity swap must not change decode numerics");
+        let sw = swapped.swap_stats();
+        assert_eq!(sw.requested_experts, n);
+        assert_eq!(sw.applied_experts, n);
+        assert_eq!(sw.passes, 1, "one batch, one pass boundary");
+        assert_eq!(sw.bytes as usize, n as usize * swapped.store.expert_block_len() * 4);
+    }
+
+    /// Swapped-in weights must actually serve: scale one expert's block
+    /// in both a resident and a ring engine — the resident path computes
+    /// straight from the store, so bitwise agreement proves the rebuilt
+    /// ring serves the new bytes too (a stale ring snapshot would
+    /// diverge), and the store read-back proves the splice landed.
+    #[test]
+    fn swapped_weights_serve_through_rebuilt_ring() {
+        let mut res = engine(InferMode::Resident);
+        let mut ring = engine(InferMode::Ring { k: 2 });
+        let model = res.arts.preset.clone();
+        let mk = |store: &CpuWeightStore| -> Vec<ExpertUpdate> {
+            (0..model.n_layers)
+                .map(|l| {
+                    let mut data = store.expert_block(l, 0);
+                    for x in data.iter_mut() {
+                        *x *= 1.5;
+                    }
+                    ExpertUpdate { layer: l, expert: 0, data }
+                })
+                .collect()
+        };
+        let res_updates = mk(&res.store);
+        let want0 = res_updates[0].data.clone();
+        let ring_updates = mk(&ring.store);
+        res.swap_experts(res_updates).unwrap();
+        ring.swap_experts(ring_updates).unwrap();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 7 + 2; 5]).collect();
+        let a = res.generate(&prompts, 3).unwrap();
+        let b = ring.generate(&prompts, 3).unwrap();
+        assert_eq!(a, b, "resident and rebuilt-ring decode must agree on swapped weights");
+        assert_eq!(ring.store.expert_block(0, 0), want0, "scaled block landed in the store");
+        assert!(ring.swap_stats().bytes > 0);
+    }
+
+    /// Live hot-swap: identity-swap experts between decode steps of a
+    /// serving session. Slots keep decoding across the swap — no drain —
+    /// and the completed sequences are bit-equal to an uninterrupted
+    /// engine's.
+    #[test]
+    fn mid_decode_swap_does_not_drain_slots() {
+        use crate::infer::batcher::AdmissionConfig;
+        use crate::infer::session::{ServeSession, SessionConfig};
+        use crate::metrics::Registry;
+        use std::time::Duration;
+
+        let mut res = engine(InferMode::Resident);
+        let model = res.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 2 + 3; 4]).collect();
+        let want = res.generate(&prompts, 4).unwrap();
+
+        let ring = engine(InferMode::Ring { k: 2 });
+        let mut sess = ServeSession::new(
+            ring,
+            SessionConfig {
+                admission: AdmissionConfig { max_queue: 16, linger: Duration::ZERO },
+            },
+            Registry::new(),
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            sess.submit(i as u64 + 1, p.clone(), 4).unwrap();
+        }
+        for _ in 0..2 {
+            let done = sess.tick().unwrap();
+            assert!(done.is_empty(), "nothing may finish before the swap");
+        }
+        let live_before = sess.live();
+        assert!(live_before > 0, "slots must be mid-decode at swap time");
+        let e = 1 % model.n_experts;
+        let updates: Vec<ExpertUpdate> = (0..model.n_layers)
+            .map(|l| ExpertUpdate {
+                layer: l,
+                expert: e,
+                data: sess.model().store.expert_block(l, e),
+            })
+            .collect();
+        sess.model_mut().swap_experts(updates).unwrap();
+        assert_eq!(sess.live(), live_before, "queueing a swap drains nothing");
+        let mut done = sess.run_to_idle().unwrap();
+        done.sort_by_key(|c| c.id);
+        for (c, w) in done.iter().zip(&want) {
+            assert_eq!(&c.tokens, w, "mid-decode identity swap must not disturb sequences");
+        }
+        let sw = sess.model().swap_stats();
+        assert_eq!(sw.applied_experts, model.n_layers as u64);
+        assert_eq!(sw.passes, 1, "the whole batch lands at one pass boundary");
+    }
+
+    /// The train→serve pipeline: `swap_experts_from_checkpoint` reads an
+    /// incremental manifest's sparse entries (checksummed on load) and
+    /// queues them. Identity payloads keep decode bit-exact.
+    #[test]
+    fn checkpoint_driven_swap_roundtrips() {
+        use crate::train::checkpoint::{self, SparseEntry};
+
+        let dir = std::env::temp_dir().join(format!("semoe_swap_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut plain = engine(InferMode::Ring { k: 3 });
+        let mut swapped = engine(InferMode::Ring { k: 3 });
+        let model = plain.arts.preset.clone();
+        let sparse: Vec<SparseEntry> = (0..model.n_layers)
+            .map(|l| {
+                let p = swapped.store.expert_block(l, 0);
+                let n = p.len();
+                SparseEntry { layer: l, expert: 0, stamp: 3, p, m: vec![0.0; n], v: vec![0.0; n] }
+            })
+            .collect();
+        checkpoint::write_incremental(&dir, &model.name, 3, &sparse, &[], None).unwrap();
+        let queued = swapped.swap_experts_from_checkpoint(&dir).unwrap();
+        assert_eq!(queued, model.n_layers);
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 * 5 + 3; 4]).collect();
+        let a = plain.generate(&prompts, 2).unwrap();
+        let b = swapped.generate(&prompts, 2).unwrap();
+        assert_eq!(a, b, "checkpoint identity swap must stay bit-exact");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -18,8 +18,8 @@ pub mod server;
 
 pub use batcher::{AdmissionConfig, AdmissionQueue, AdmitError, Request};
 pub use engine::{
-    CpuWeightStore, InferMode, InferenceEngine, PassTiming, PipelineConfig, RouteRepairStats,
-    RoutedRingConfig,
+    CpuWeightStore, ExpertUpdate, InferMode, InferenceEngine, PassTiming, PipelineConfig,
+    RouteRepairStats, RoutedRingConfig, SwapStats,
 };
 pub use graph::{Graph, GraphPipeline};
 pub use ring_memory::{LayerLoader, RingMemory, RingStats, StageKind};

@@ -522,6 +522,13 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("stalled_ms", Json::num(reg.gauge("route.stalled_us").get() as f64 / 1e3)),
         ("ring_copy_bytes", Json::num(reg.gauge("ring.copy_bytes").get() as f64)),
         ("ring_loads", Json::num(reg.gauge("ring.loads").get() as f64)),
+        // Live expert hot-swap accounting (docs/serving.md §Expert
+        // hot-swap): experts queued/applied, bytes spliced, and the pass
+        // boundaries swap batches landed at.
+        ("swap_requested_experts", Json::num(reg.gauge("swap.requested_experts").get() as f64)),
+        ("swap_applied_experts", Json::num(reg.gauge("swap.applied_experts").get() as f64)),
+        ("swap_bytes", Json::num(reg.gauge("swap.bytes").get() as f64)),
+        ("swap_passes", Json::num(reg.gauge("swap.passes").get() as f64)),
         ("counters", reg.snapshot()),
     ])
 }
@@ -767,6 +774,10 @@ mod tests {
             "stalled_ms",
             "ring_copy_bytes",
             "ring_loads",
+            "swap_requested_experts",
+            "swap_applied_experts",
+            "swap_bytes",
+            "swap_passes",
             "admitted",
             "retired",
             "cancelled",

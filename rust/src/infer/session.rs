@@ -376,6 +376,19 @@ impl<M: DecodeModel> ServeSession<M> {
         self.slots.len()
     }
 
+    /// The underlying model. Read-only companion of [`Self::model_mut`].
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// Mutable access to the underlying model — the live hot-swap hook:
+    /// queue expert updates (`InferenceEngine::swap_experts`) between
+    /// ticks and the next decode step's pass boundary applies them
+    /// without draining any slot.
+    pub fn model_mut(&mut self) -> &mut M {
+        &mut self.model
+    }
+
     /// Slots currently decoding (or holding a just-finished sequence).
     pub fn live(&self) -> usize {
         self.slots.iter().filter(|s| s.is_live()).count()

@@ -2,7 +2,11 @@
 //!
 //! Subcommands:
 //!   info                         artifact + preset inventory
-//!   train                        run the trainer (resident or offload)
+//!   train                        run the trainer (resident or offload);
+//!                                --checkpoint-dir/--checkpoint-every enable
+//!                                expert-granular incremental checkpointing
+//!   checkpoint                   verify an incremental checkpoint directory
+//!                                (manifest + per-entry sha256)
 //!   infer                        run batched greedy generation
 //!   serve                        HTTP serving front end (ring offload)
 //!   simulate                     paper-scale simulator (table1|table2|fig10|fig11)
@@ -44,6 +48,7 @@ fn main() {
     let result = match args.subcommand.as_deref() {
         Some("info") => cmd_info(&args),
         Some("train") => cmd_train(&args),
+        Some("checkpoint") => cmd_checkpoint(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
         Some("simulate") => cmd_simulate(&args),
@@ -67,7 +72,7 @@ fn print_usage() {
     println!(
         "{}",
         usage(
-            "semoe <info|train|infer|serve|simulate|graph|elastic|lint|perf-stub|perf-compare>",
+            "semoe <info|train|checkpoint|infer|serve|simulate|graph|elastic|lint|perf-stub|perf-compare>",
             ABOUT,
             &[
                 OptSpec { name: "preset", help: "model preset (tiny|small|deep|base)", default: Some("small"), is_flag: false },
@@ -75,6 +80,8 @@ fn print_usage() {
                 OptSpec { name: "lr", help: "learning rate", default: Some("1e-3"), is_flag: false },
                 OptSpec { name: "offload", help: "use hierarchical offload trainer", default: None, is_flag: true },
                 OptSpec { name: "route-source", help: "expert-axis planner: proxy|carried (offload train)", default: Some("proxy"), is_flag: false },
+                OptSpec { name: "checkpoint-dir", help: "incremental checkpoint directory (offload train resumes from it; `checkpoint` verifies it)", default: None, is_flag: false },
+                OptSpec { name: "checkpoint-every", help: "flush dirty experts to --checkpoint-dir every N steps (0=only at end)", default: Some("0"), is_flag: false },
                 OptSpec { name: "ring", help: "ring slots K for inference offload", default: Some("0=resident"), is_flag: false },
                 OptSpec { name: "routed", help: "routed-expert ring passes (copy only planned expert subsets)", default: None, is_flag: true },
                 OptSpec { name: "pipeline", help: "pipelined dense/sparse passes: layer_dense runs while expert weights stream (infer/serve ring, offload train)", default: None, is_flag: true },
@@ -134,15 +141,59 @@ fn cmd_train(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let mut total_tokens = 0usize;
     if args.flag("offload") {
-        let mut tr = OffloadTrainer::new(arts, cfg.clone(), None)?;
-        for s in 0..cfg.steps {
+        use semoe::train::checkpoint;
+        let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+        let ckpt_every = args.usize("checkpoint-every", 0);
+        // Resume from the last committed manifest when one exists; the
+        // trainer replays the corpus to the manifest step so the resumed
+        // run is bit-equal to an uninterrupted one (docs/training.md
+        // §Checkpointing).
+        let mut done = 0usize;
+        let mut tr = match &ckpt_dir {
+            Some(dir) if dir.join(checkpoint::MANIFEST_FILE).exists() => {
+                let man = checkpoint::read_manifest(dir)?;
+                done = man.step;
+                println!(
+                    "resuming from {} (step {}, {} entries)",
+                    dir.display(),
+                    man.step,
+                    man.entries.len()
+                );
+                OffloadTrainer::resume_from(arts, cfg.clone(), None, dir)?
+            }
+            _ => OffloadTrainer::new(arts, cfg.clone(), None)?,
+        };
+        let remaining = cfg.steps.saturating_sub(done);
+        for s in 0..remaining {
             let m = tr.step()?;
             total_tokens += m.tokens;
-            if s % cfg.log_every == 0 || s + 1 == cfg.steps {
+            if s % cfg.log_every == 0 || s + 1 == remaining {
                 println!("step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", m.step, m.loss, m.ce, m.aux);
+            }
+            if let Some(dir) = &ckpt_dir {
+                if ckpt_every > 0 && (s + 1) % ckpt_every == 0 {
+                    let rep = tr.checkpoint_to(dir)?;
+                    println!(
+                        "checkpoint @ step {}: {} entries written ({}), {} carried",
+                        m.step,
+                        rep.entries_written,
+                        human_bytes(rep.bytes_written as u64),
+                        rep.entries_carried
+                    );
+                }
             }
         }
         tr.flush()?;
+        if let Some(dir) = &ckpt_dir {
+            let rep = tr.checkpoint_to(dir)?;
+            println!(
+                "final checkpoint → {}: {} entries written ({}), {} carried",
+                dir.display(),
+                rep.entries_written,
+                human_bytes(rep.bytes_written as u64),
+                rep.entries_carried
+            );
+        }
         let ps = tr.prefetch_stats();
         let store = tr.into_store()?;
         let cs = store.cache_stats();
@@ -177,6 +228,26 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let secs = t0.elapsed().as_secs_f64();
     println!("{} tokens in {:.1}s → {:.0} tokens/s", total_tokens, secs, total_tokens as f64 / secs);
+    Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    use semoe::train::checkpoint;
+    let dir: std::path::PathBuf = args
+        .get("checkpoint-dir")
+        .ok_or_else(|| anyhow::anyhow!("semoe checkpoint requires --checkpoint-dir <dir>"))?
+        .into();
+    let s = checkpoint::verify(&dir)?;
+    println!("checkpoint {} — preset {}, step {}", dir.display(), s.preset, s.step);
+    println!(
+        "  {} sparse + {} dense entries, {} on disk, stamps [{}, {}]",
+        s.sparse_entries,
+        s.dense_entries,
+        human_bytes(s.bytes as u64),
+        s.min_stamp,
+        s.max_stamp
+    );
+    println!("  all entry checksums verified");
     Ok(())
 }
 
@@ -415,7 +486,27 @@ fn cmd_perf_stub(args: &Args) -> Result<()> {
         .map_err(|e| anyhow::anyhow!("re-read {}: {}", path.display(), e))?;
     let sha = bench_stub::git_sha(&root);
     let traj = bench_stub::append_trajectory(&root, &stub, &sha)?;
-    println!("perf-stub: appended {} point to {}", sha, traj.display());
+    // Read the trajectory back: tier1 treats a perf-stub run that fails
+    // to seed the curve (even from smoke-only, all-null reports) as a
+    // hard error, not a silent skip.
+    let traj_text = std::fs::read_to_string(&traj)?;
+    let tj = semoe::util::json::Json::parse(&traj_text)
+        .map_err(|e| anyhow::anyhow!("re-read {}: {}", traj.display(), e))?;
+    let n = tj.get("entries").as_arr().map(|a| a.len()).unwrap_or(0);
+    let newest_is_ours = tj
+        .get("entries")
+        .as_arr()
+        .and_then(|a| a.last())
+        .map(|e| e.get("sha").as_str() == Some(sha.as_str()))
+        .unwrap_or(false);
+    if !newest_is_ours {
+        anyhow::bail!(
+            "perf-stub: {} does not end with an entry for {} — trajectory seeding failed",
+            traj.display(),
+            sha
+        );
+    }
+    println!("perf-stub: appended {} point to {} ({} point(s) on the curve)", sha, traj.display(), n);
     Ok(())
 }
 

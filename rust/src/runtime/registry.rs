@@ -60,6 +60,54 @@ pub fn validate_contract(j: &Json, origin: &str) -> Result<usize> {
     Ok(found)
 }
 
+/// Reject an artifact blob whose on-disk bytes do not hash to the
+/// checksum its manifest entry recorded. Shares the checksum helper with
+/// the checkpoint manifest ([`crate::util::sha256::sha256_hex`]) so the
+/// two provenance schemes can never drift. Pure (caller supplies the
+/// bytes) so tests and the loader exercise one code path.
+pub fn check_blob_checksum(
+    origin: &str,
+    artifact: &str,
+    expected_hex: &str,
+    bytes: &[u8],
+) -> Result<()> {
+    let got = crate::util::sha256::sha256_hex(bytes);
+    if got != expected_hex {
+        bail!(
+            "{}: artifact '{}' failed its sha256 content check (manifest {}, disk {}) — \
+             the blob on disk is not the one the manifest was written against \
+             (torn copy, partial rebuild, or hand-edited file) — {}",
+            origin,
+            artifact,
+            expected_hex,
+            got,
+            REBUILD_HINT
+        );
+    }
+    Ok(())
+}
+
+/// Verify every checksummed artifact file under `dir` against its
+/// manifest entry. Entries without a recorded checksum (pre-provenance
+/// manifests) are skipped. Returns the number of blobs actually checked.
+pub fn verify_artifact_files<'a>(
+    dir: &std::path::Path,
+    specs: impl IntoIterator<Item = &'a ArtifactSpec>,
+) -> Result<usize> {
+    let mut checked = 0usize;
+    for spec in specs {
+        if spec.file.is_empty() || spec.sha256.is_empty() {
+            continue;
+        }
+        let path = dir.join(&spec.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading artifact blob {} — {}", path.display(), REBUILD_HINT))?;
+        check_blob_checksum(&path.display().to_string(), &spec.name, &spec.sha256, &bytes)?;
+        checked += 1;
+    }
+    Ok(checked)
+}
+
 /// One input/output signature entry.
 #[derive(Debug, Clone, PartialEq)]
 pub struct IoSpec {
@@ -79,6 +127,11 @@ impl IoSpec {
 pub struct ArtifactSpec {
     pub name: String,
     pub file: String,
+    /// Lowercase-hex sha256 of the artifact file as the AOT pipeline
+    /// wrote it (same helper as the checkpoint manifest,
+    /// [`crate::util::sha256`]). Empty when the manifest predates the
+    /// field — provenance then goes unchecked rather than failing.
+    pub sha256: String,
     pub inputs: Vec<IoSpec>,
     pub outputs: Vec<IoSpec>,
 }
@@ -182,6 +235,7 @@ impl ModelArtifacts {
                     ArtifactSpec {
                         name: name.clone(),
                         file: a.get("file").as_str().unwrap_or("").to_string(),
+                        sha256: a.get("sha256").as_str().unwrap_or("").to_string(),
                         inputs: io(a.get("inputs"))?,
                         outputs: io(a.get("outputs"))?,
                     },
@@ -248,6 +302,13 @@ impl ModelArtifacts {
         let mut v: Vec<String> = self.specs.keys().cloned().collect();
         v.sort();
         v
+    }
+
+    /// Verify every checksummed artifact blob in this preset's directory
+    /// against the manifest ([`verify_artifact_files`]). Returns how many
+    /// blobs were checked.
+    pub fn verify_blobs(&self) -> Result<usize> {
+        verify_artifact_files(&self.dir, self.specs.values())
     }
 
     /// Compile (or fetch cached) an executable by entry name.
@@ -334,6 +395,7 @@ mod tests {
         ArtifactSpec {
             name: "layer_fwd".into(),
             file: "layer_fwd.hlo.txt".into(),
+            sha256: String::new(),
             inputs: vec![],
             outputs: names
                 .iter()
@@ -359,5 +421,60 @@ mod tests {
         let msg = format!("{}", s.output_index("route_expert").unwrap_err());
         assert!(msg.contains("route_expert"), "{}", msg);
         assert!(msg.contains("rebuild the artifacts"), "{}", msg);
+    }
+
+    /// The satellite regression the checkpoint work rides on: a manifest
+    /// entry whose checksum does not match the blob on disk must be
+    /// rejected through the shared sha256 helper, and the error must
+    /// carry the rebuild hint — never a silent load of mismatched bytes.
+    #[test]
+    fn checksum_mismatch_against_disk_is_rejected_with_rebuild_hint() {
+        use crate::util::sha256::sha256_hex;
+
+        let dir = std::env::temp_dir().join(format!("semoe_reg_sha_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let good = b"HloModule layer_fwd, entry_computation_layout={()->f32[2,2]}";
+        std::fs::write(dir.join("layer_fwd.hlo.txt"), good).unwrap();
+
+        let mut spec = spec_with_outputs(&["y"]);
+        spec.sha256 = sha256_hex(good);
+
+        // Matching bytes: verified, counted.
+        assert_eq!(verify_artifact_files(&dir, [&spec]).unwrap(), 1);
+
+        // Rot the blob under the same manifest entry.
+        std::fs::write(dir.join("layer_fwd.hlo.txt"), b"HloModule tampered").unwrap();
+        let err = verify_artifact_files(&dir, [&spec]).unwrap_err();
+        let msg = format!("{}", err);
+        assert!(msg.contains("layer_fwd"), "names the artifact: {}", msg);
+        assert!(msg.contains("sha256"), "names the check: {}", msg);
+        assert!(msg.contains(&spec.sha256), "quotes the manifest digest: {}", msg);
+        assert!(
+            msg.contains(&sha256_hex(b"HloModule tampered")),
+            "quotes the disk digest: {}",
+            msg
+        );
+        assert!(msg.contains("rebuild the artifacts"), "actionable remedy: {}", msg);
+        assert!(msg.contains("compile.aot"), "names the tool: {}", msg);
+
+        // Entries predating the provenance field are skipped, not failed.
+        spec.sha256 = String::new();
+        assert_eq!(verify_artifact_files(&dir, [&spec]).unwrap(), 0);
+
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// A missing blob under a checksummed entry is a load-time error with
+    /// the remedy, not a panic inside the engine.
+    #[test]
+    fn missing_checksummed_blob_names_the_remedy() {
+        let dir = std::env::temp_dir().join(format!("semoe_reg_gone_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut spec = spec_with_outputs(&["y"]);
+        spec.sha256 = "0".repeat(64);
+        let msg = format!("{:#}", verify_artifact_files(&dir, [&spec]).unwrap_err());
+        assert!(msg.contains("layer_fwd.hlo.txt"), "names the blob: {}", msg);
+        assert!(msg.contains("rebuild the artifacts"), "actionable remedy: {}", msg);
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

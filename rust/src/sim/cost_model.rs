@@ -134,6 +134,30 @@ impl CostModel {
         self.prefetch_bytes_1d() * frac
     }
 
+    // ------------------------------------------------- checkpoint lane
+
+    /// Bytes of a **monolithic** checkpoint: every parameter plus both
+    /// Adam moments, fp32, rewritten on every save regardless of what
+    /// the interval's routing actually touched.
+    pub fn checkpoint_bytes_monolithic(&self) -> f64 {
+        let c = self.model.param_counts();
+        c.total as f64 * 12.0
+    }
+
+    /// Bytes of an **incremental, expert-granular** checkpoint interval:
+    /// dense states update every step so they are always rewritten (a
+    /// model-size-independent floor), but each layer re-persists only
+    /// the expected distinct expert set the interval's `tokens` routing
+    /// decisions touched (Zipf(s) popularity; `s = 0` ⇒ uniform) —
+    /// everything else is carried forward by manifest reference. The
+    /// storage twin of [`Self::prefetch_bytes_2d`].
+    pub fn checkpoint_bytes_incremental(&self, tokens: f64, zipf_s: f64) -> f64 {
+        let dense_floor = self.model.dense_params() as f64 * 12.0;
+        let frac = self.expected_routed_experts(tokens, zipf_s)
+            / self.model.n_experts.max(1) as f64;
+        dense_floor + self.model.n_layers as f64 * self.sparse_layer_state_bytes() * frac
+    }
+
     // ------------------------------------------------------- ring lane
 
     /// Per-pass CPU→device bytes of a **dense** ring pass: every layer's
@@ -370,6 +394,50 @@ mod tests {
         assert!(d2_uniform <= d1);
         assert!(d2_skew < d2_uniform, "{} < {}", d2_skew, d2_uniform);
         assert!(d2_skew < 0.9 * d1, "skewed 2D should save ≥10%: {} vs {}", d2_skew, d1);
+    }
+
+    /// PR-8 pricing: expert-granular incremental checkpoints move fewer
+    /// bytes than a monolithic rewrite whenever Zipf-skewed routing
+    /// leaves part of the expert population untouched — at every Table-1
+    /// scale — and converge to the monolithic cost under a uniform
+    /// token flood (the full-baseline regime).
+    #[test]
+    fn incremental_checkpoint_prices_below_monolithic_under_zipf() {
+        for row in table1_rows() {
+            let cm = CostModel::new(
+                table1_model(row.n_experts, row.batch_size),
+                cluster_for_gpus(row.gpus),
+            );
+            let mono = cm.checkpoint_bytes_monolithic();
+            // One flush interval routing ~one token per expert: enough
+            // load to be realistic, small enough that no row saturates
+            // its expert population (256 tokens would touch all 8
+            // experts of the smallest row even under heavy skew).
+            let tokens = row.n_experts as f64;
+            let uniform = cm.checkpoint_bytes_incremental(tokens, 0.0);
+            let skew = cm.checkpoint_bytes_incremental(tokens, 1.2);
+            assert!(uniform <= mono + 1e-6);
+            assert!(skew < uniform, "{} < {}", skew, uniform);
+            assert!(
+                skew < 0.9 * mono,
+                "skewed incremental checkpoint should save ≥10%: {} vs {}",
+                skew,
+                mono
+            );
+            // The dense floor is model-size-independent of routing: even
+            // one token's checkpoint rewrites the dense states.
+            let floor = cm.checkpoint_bytes_incremental(1.0, 0.0);
+            assert!(floor > 0.0 && floor < mono);
+            // A uniform flood touches every expert — incremental
+            // converges to the monolithic cost, never above it.
+            let flood = cm.checkpoint_bytes_incremental(1e7, 0.0);
+            assert!((flood - mono).abs() / mono < 1e-3, "{} vs {}", flood, mono);
+            for s in [0.0, 0.7, 1.2, 2.0] {
+                for t in [1.0, 32.0, 1024.0] {
+                    assert!(cm.checkpoint_bytes_incremental(t, s) <= mono + 1e-6);
+                }
+            }
+        }
     }
 
     #[test]

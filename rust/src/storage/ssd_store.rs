@@ -152,6 +152,47 @@ impl SsdStore {
         }
     }
 
+    /// Delete a record. Missing keys are not an error — the checkpoint
+    /// garbage collector must be idempotent across interrupted runs.
+    pub fn remove(&mut self, key: &str) -> Result<()> {
+        match &self.backend {
+            SsdBackend::Memory => {
+                self.mem.remove(key);
+            }
+            SsdBackend::File { dir } => {
+                let path = Self::key_path(dir, key);
+                if path.exists() {
+                    std::fs::remove_file(&path)
+                        .with_context(|| format!("removing {}", path.display()))?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Keys currently present, sorted. The file backend reports the
+    /// on-disk (separator-mangled) key form; checkpoint keys contain no
+    /// path separators, so for them the two forms coincide.
+    pub fn keys(&self) -> Vec<String> {
+        let mut v: Vec<String> = match &self.backend {
+            SsdBackend::Memory => self.mem.keys().cloned().collect(),
+            SsdBackend::File { dir } => std::fs::read_dir(dir)
+                .map(|rd| {
+                    rd.filter_map(|e| e.ok())
+                        .filter_map(|e| {
+                            e.file_name()
+                                .to_str()
+                                .and_then(|n| n.strip_suffix(".bin"))
+                                .map(String::from)
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+        };
+        v.sort();
+        v
+    }
+
     pub fn stats(&self) -> TierStats {
         self.stats
     }
@@ -219,6 +260,22 @@ mod tests {
         s.write("other", &[2.0]).unwrap();
         assert_eq!(s.erase_count("k"), 5);
         assert_eq!(s.total_erases(), 6);
+    }
+
+    #[test]
+    fn remove_and_keys_both_backends() {
+        let dir = std::env::temp_dir().join(format!("semoe_ssd_rm_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        for mut s in [SsdStore::memory_backed(), SsdStore::file_backed(dir.clone()).unwrap()] {
+            s.write("layer0.expert0.s1", &[1.0]).unwrap();
+            s.write("layer0.expert1.s1", &[2.0]).unwrap();
+            assert_eq!(s.keys(), vec!["layer0.expert0.s1", "layer0.expert1.s1"]);
+            s.remove("layer0.expert0.s1").unwrap();
+            s.remove("layer0.expert0.s1").unwrap(); // idempotent
+            assert!(!s.contains("layer0.expert0.s1"));
+            assert_eq!(s.keys(), vec!["layer0.expert1.s1"]);
+        }
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

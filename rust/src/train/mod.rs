@@ -10,6 +10,7 @@ pub mod elastic;
 pub mod embedding_partition;
 pub mod checkpoint;
 
+pub use checkpoint::{Manifest as CheckpointManifest, WriteReport as CheckpointWriteReport};
 pub use data::SyntheticCorpus;
 pub use elastic::{ElasticPlan, TaskLoad};
 pub use optimizer::ParamState;

@@ -43,11 +43,13 @@
 //! `rust/tests/train_integration.rs` compares loss trajectories step for
 //! step.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{Context, Result};
 
+use super::checkpoint;
 use super::data::SyntheticCorpus;
 
 /// AllReduce-mean a fused gradient across the mesh (no-op solo).
@@ -302,6 +304,11 @@ pub struct OffloadTrainer {
     /// Last optimizer step applied per (layer, expert) — drives the lazy
     /// zero-grad AdamW catch-up on fetch.
     stamps: Vec<Vec<u64>>,
+    /// (layer, expert) blocks written back since the last successful
+    /// incremental checkpoint — the checkpoint write set. Cleared only
+    /// after the manifest rename commits, so a crashed checkpoint
+    /// re-writes the same entries on retry.
+    ckpt_dirty: Vec<Vec<bool>>,
     pstats: PrefetchStats,
 
     mesh: Option<MeshHandle>,
@@ -380,6 +387,7 @@ impl OffloadTrainer {
             .collect();
         let hot = vec![Vec::new(); model.n_layers];
         let stamps = vec![vec![0u64; model.n_experts]; model.n_layers];
+        let ckpt_dirty = vec![vec![false; model.n_experts]; model.n_layers];
 
         let rank_seed = mesh.as_ref().map(|m| m.rank() as u64).unwrap_or(0);
         let corpus =
@@ -445,6 +453,7 @@ impl OffloadTrainer {
             load,
             hot,
             stamps,
+            ckpt_dirty,
             pstats: PrefetchStats::default(),
             mesh,
             corpus,
@@ -505,7 +514,7 @@ impl OffloadTrainer {
             embed, head, layers, sched, layout, route, lf_y, lf_aux, lf_route,
             lf_gate, lf_pos, lf_keep, lf_h, lf_moe_in, tail_y,
             ld_h, ld_moe_in, ld_aux, ld_route, ld_gate, ld_pos, ld_keep,
-            load, hot, stamps, pstats, mesh, timeline, ..
+            load, hot, stamps, ckpt_dirty, pstats, mesh, timeline, ..
         } = self;
         let (lf_y, lf_aux, lf_route) = (*lf_y, *lf_aux, *lf_route);
         let (lf_gate, lf_pos, lf_keep) = (*lf_gate, *lf_pos, *lf_keep);
@@ -854,6 +863,7 @@ impl OffloadTrainer {
             let st = &layers[l];
             for &e in &update_set {
                 stamps[l][e] = step_u;
+                ckpt_dirty[l][e] = true;
                 let block = SparseBlock {
                     layer: l,
                     expert: e,
@@ -924,10 +934,180 @@ impl OffloadTrainer {
                 // post-step state (resident math applied step_u already).
                 catch_up(&mut block, from, step_u, lr, &mut self.pstats);
                 self.stamps[l][e] = step_u;
+                // The store state moved, so the next incremental
+                // checkpoint must re-persist this expert.
+                self.ckpt_dirty[l][e] = true;
                 self.sched.update(block);
             }
         }
         self.sched.flush()
+    }
+
+    /// Write an incremental, expert-granular checkpoint under `dir`.
+    ///
+    /// Only experts written back since the last successful checkpoint
+    /// (plus anything `dir`'s manifest has never seen — the first call
+    /// persists a full baseline) move bytes; everything else is carried
+    /// forward by manifest reference, so steady-state checkpoint traffic
+    /// scales with routed load, not model size. Cold experts are NOT
+    /// caught up first: each record persists its writeback stamp and
+    /// resume replays the lazy zero-grad AdamW catch-up exactly as the
+    /// live trainer would.
+    pub fn checkpoint_to(&mut self, dir: &Path) -> Result<checkpoint::WriteReport> {
+        self.checkpoint_to_with_fault(dir, None)
+    }
+
+    /// [`Self::checkpoint_to`] with a crash-injection hook (tests only).
+    pub fn checkpoint_to_with_fault(
+        &mut self,
+        dir: &Path,
+        fault: Option<checkpoint::Fault>,
+    ) -> Result<checkpoint::WriteReport> {
+        let prev_keys: HashSet<String> = if dir.join(checkpoint::MANIFEST_FILE).exists() {
+            checkpoint::read_manifest(dir)?.entries.iter().map(|e| e.key.clone()).collect()
+        } else {
+            HashSet::new()
+        };
+        let mut sparse = Vec::new();
+        let mut written: Vec<(usize, usize)> = Vec::new();
+        {
+            // Disjoint field borrows for the timed closure, as in step_on.
+            let OffloadTrainer { sched, timeline, stamps, ckpt_dirty, .. } = self;
+            for l in 0..stamps.len() {
+                for e in 0..stamps[l].len() {
+                    if !ckpt_dirty[l][e] && prev_keys.contains(&checkpoint::sparse_key(l, e)) {
+                        continue;
+                    }
+                    // The store (via the scheduler's cache) holds the
+                    // authoritative post-writeback state for this expert.
+                    let seq = sched.request(l, e);
+                    let block = timeline.time(Phase::SsdIo, || sched.wait(seq))?;
+                    sparse.push(checkpoint::SparseEntry {
+                        layer: l,
+                        expert: e,
+                        stamp: stamps[l][e],
+                        p: block.p,
+                        m: block.m,
+                        v: block.v,
+                    });
+                    written.push((l, e));
+                }
+            }
+        }
+        // Dense states update every step, so they are always rewritten —
+        // a small, model-size-independent floor on checkpoint bytes.
+        let mut dense = vec![
+            dense_entry("dense.embed", &self.embed, self.embed.len()),
+            dense_entry("dense.head", &self.head, self.head.len()),
+        ];
+        for (l, st) in self.layers.iter().enumerate() {
+            dense.push(dense_entry(&format!("layer{}.dense", l), st, st.sparse_offset()));
+        }
+        let preset = self.arts.preset.name.clone();
+        let step = self.step;
+        let report = self.timeline.time(Phase::SsdIo, || {
+            checkpoint::write_incremental(dir, &preset, step, &sparse, &dense, fault)
+        })?;
+        // Clear the write set only now: a fault above left the previous
+        // manifest committed, and these entries stay dirty for the retry.
+        for (l, e) in written {
+            self.ckpt_dirty[l][e] = false;
+        }
+        Ok(report)
+    }
+
+    /// Restore trainer state from the last committed checkpoint in
+    /// `dir`: every entry is checksum-verified, sparse records land in
+    /// the hierarchical store with their persisted writeback stamps
+    /// (so lazy catch-up resumes exactly where it left off), dense
+    /// records overwrite the resident states, and the synthetic corpus
+    /// fast-forwards to the checkpoint step. Training continued from
+    /// here is bit-equal to a run that never stopped.
+    pub fn restore_from(&mut self, dir: &Path) -> Result<()> {
+        let man = checkpoint::read_manifest(dir)?;
+        if man.preset != self.arts.preset.name {
+            anyhow::bail!(
+                "checkpoint preset '{}' != trainer preset '{}'",
+                man.preset,
+                self.arts.preset.name
+            );
+        }
+        let expert_len = self.layout.expert_len();
+        for entry in &man.entries {
+            let (p, m, v) = checkpoint::load_entry(dir, entry)?;
+            if let Some((l, e)) = checkpoint::parse_sparse_key(&entry.key) {
+                if l >= self.stamps.len() || e >= self.stamps[l].len() {
+                    anyhow::bail!("checkpoint entry '{}' out of range", entry.key);
+                }
+                if p.len() != expert_len {
+                    anyhow::bail!(
+                        "checkpoint entry '{}': expert block is {} f32, layout wants {}",
+                        entry.key,
+                        p.len(),
+                        expert_len
+                    );
+                }
+                self.stamps[l][e] = entry.stamp;
+                self.sched.update(SparseBlock { layer: l, expert: e, p, m, v });
+            } else if entry.key == "dense.embed" {
+                restore_dense(&mut self.embed, &entry.key, &p, &m, &v)?;
+            } else if entry.key == "dense.head" {
+                restore_dense(&mut self.head, &entry.key, &p, &m, &v)?;
+            } else if let Some(l) = entry
+                .key
+                .strip_prefix("layer")
+                .and_then(|r| r.strip_suffix(".dense"))
+                .and_then(|n| n.parse::<usize>().ok())
+            {
+                let st = self
+                    .layers
+                    .get_mut(l)
+                    .with_context(|| format!("checkpoint entry '{}' out of range", entry.key))?;
+                let off = st.sparse_offset();
+                if p.len() != off {
+                    anyhow::bail!(
+                        "checkpoint entry '{}': dense prefix is {} f32, layer wants {}",
+                        entry.key,
+                        p.len(),
+                        off
+                    );
+                }
+                st.p.fused_mut()[..off].copy_from_slice(&p);
+                st.m[..off].copy_from_slice(&m);
+                st.v[..off].copy_from_slice(&v);
+            } else {
+                anyhow::bail!("checkpoint entry '{}' is not a key this trainer knows", entry.key);
+            }
+        }
+        // Surface any deferred store-update error before trusting state.
+        self.sched.flush()?;
+        self.step = man.step;
+        // Replay the corpus stream to the checkpoint step so `step()`
+        // continues on the batches the crashed run would have drawn.
+        let (b, t) = (self.arts.preset.batch_size, self.arts.preset.seq_len);
+        for _ in 0..man.step {
+            let _ = self.corpus.next_batch(b, t);
+        }
+        // Store and manifest now agree entry for entry.
+        for row in self.ckpt_dirty.iter_mut() {
+            for d in row.iter_mut() {
+                *d = false;
+            }
+        }
+        Ok(())
+    }
+
+    /// Construct a trainer and restore it from `dir` in one move — the
+    /// `semoe train --checkpoint-dir` resume path.
+    pub fn resume_from(
+        arts: Rc<ModelArtifacts>,
+        cfg: TrainConfig,
+        mesh: Option<MeshHandle>,
+        dir: &Path,
+    ) -> Result<OffloadTrainer> {
+        let mut tr = OffloadTrainer::new(arts, cfg, mesh)?;
+        tr.restore_from(dir)?;
+        Ok(tr)
     }
 
     /// Tear down, recovering the hierarchical store for inspection. The
@@ -975,6 +1155,32 @@ fn dense_tensors(st: &ParamState) -> Vec<HostTensor> {
         .filter(|s| !s.sparse)
         .map(|s| HostTensor::from_f32(&s.shape, st.p.unpack(&s.name).to_vec()))
         .collect()
+}
+
+/// Snapshot the first `len` fused values (and moments) of a state as an
+/// incremental-checkpoint dense record — the whole state for embed/head,
+/// the dense prefix for a layer.
+fn dense_entry(key: &str, st: &ParamState, len: usize) -> checkpoint::DenseEntry {
+    checkpoint::DenseEntry {
+        key: key.to_string(),
+        p: st.p.fused()[..len].to_vec(),
+        m: st.m[..len].to_vec(),
+        v: st.v[..len].to_vec(),
+    }
+}
+
+/// Overwrite a whole dense state (embed/head) from a checkpoint record.
+fn restore_dense(st: &mut ParamState, key: &str, p: &[f32], m: &[f32], v: &[f32]) -> Result<()> {
+    if p.len() != st.len() {
+        anyhow::bail!(
+            "checkpoint entry '{}': record is {} f32, state wants {}",
+            key,
+            p.len(),
+            st.len()
+        );
+    }
+    st.load(p.to_vec(), m.to_vec(), v.to_vec());
+    Ok(())
 }
 
 /// Replay the zero-grad AdamW steps an expert missed while cold on SSD,

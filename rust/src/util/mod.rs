@@ -12,6 +12,7 @@ pub mod rng;
 pub mod stats;
 pub mod logging;
 pub mod bytes;
+pub mod sha256;
 
 pub use bytes::{human_bytes, human_count, human_duration};
 pub use json::Json;

@@ -1,0 +1,385 @@
+//! Crash-injection harness for the incremental, expert-granular
+//! checkpoint lane (docs/training.md §Checkpointing).
+//!
+//! Part A drives the write protocol directly — artifact-free — with a
+//! simulated training loop: random expert subsets get dirtied, and
+//! every checkpoint attempt may die at a randomized [`Fault`] point
+//! (mid-blob, between writebacks, mid-publish). After every crash the
+//! previously committed checkpoint must read back bit-equal and fully
+//! checksum-verify, torn leftovers must never be loadable, and a retry
+//! must commit.
+//!
+//! Part B (artifact-gated, tiny preset) proves the trainer contract:
+//! resume from a checkpoint — including one taken right before a
+//! crashed write — continues bit-equal to a run that never stopped.
+
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use semoe::config::train::TrainConfig;
+use semoe::runtime::ModelArtifacts;
+use semoe::train::checkpoint::{self, DenseEntry, Fault, SparseEntry};
+use semoe::train::OffloadTrainer;
+use semoe::util::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("semoe_crash_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+// ------------------------------------------------ Part A: protocol fuzzing
+
+const LAYERS: usize = 2;
+const EXPERTS: usize = 4;
+const BLOCK: usize = 6; // f32 per p/m/v segment
+
+/// The simulated trainer's authoritative state for one record.
+#[derive(Clone, PartialEq, Debug)]
+struct Record {
+    stamp: u64,
+    p: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// After every attempt — crash or commit — the directory must hold
+/// exactly the last *committed* snapshot, bit for bit, and verify clean.
+fn assert_committed(dir: &Path, committed: &Option<(usize, HashMap<String, Record>)>) {
+    match committed {
+        None => assert!(
+            !dir.join(checkpoint::MANIFEST_FILE).exists(),
+            "no checkpoint ever committed, yet a manifest exists"
+        ),
+        Some((cstep, map)) => {
+            let man = checkpoint::read_manifest(dir).unwrap();
+            assert_eq!(man.step, *cstep, "committed step drifted");
+            assert_eq!(man.entries.len(), map.len(), "committed entry set drifted");
+            let s = checkpoint::verify(dir).unwrap();
+            assert_eq!(s.step, *cstep);
+            for (key, rec) in map {
+                let e = man.entry(key).unwrap_or_else(|| panic!("entry '{}' lost", key));
+                assert_eq!(e.stamp, rec.stamp, "stamp drifted for '{}'", key);
+                let (p, m, v) = checkpoint::load_entry(dir, e).unwrap();
+                assert_eq!(p, rec.p, "p drifted for '{}'", key);
+                assert_eq!(m, rec.m, "m drifted for '{}'", key);
+                assert_eq!(v, rec.v, "v drifted for '{}'", key);
+            }
+        }
+    }
+}
+
+fn run_fuzz_case(seed: u64, steps: usize) {
+    let dir = tmp_dir(&format!("fuzz{}", seed));
+    let mut rng = Rng::new(0xC0FFEE ^ (seed * 6151));
+
+    // Live simulated state: every expert starts dirty (first checkpoint
+    // persists a full baseline) plus one always-rewritten dense record.
+    let mut truth: Vec<Vec<Record>> = (0..LAYERS)
+        .map(|l| {
+            (0..EXPERTS)
+                .map(|e| Record {
+                    stamp: 0,
+                    p: vec![(l * EXPERTS + e) as f32; BLOCK],
+                    m: vec![0.0; BLOCK],
+                    v: vec![0.0; BLOCK],
+                })
+                .collect()
+        })
+        .collect();
+    let mut dense = Record { stamp: 0, p: vec![0.5; BLOCK], m: vec![0.0; BLOCK], v: vec![0.0; BLOCK] };
+    let mut dirty: HashSet<(usize, usize)> =
+        (0..LAYERS).flat_map(|l| (0..EXPERTS).map(move |e| (l, e))).collect();
+    let mut committed: Option<(usize, HashMap<String, Record>)> = None;
+
+    for step in 1..=steps {
+        // "Train": route a random expert subset, mutate its state.
+        let routed = rng.range(1, LAYERS * EXPERTS + 1);
+        for _ in 0..routed {
+            let (l, e) = (rng.below(LAYERS), rng.below(EXPERTS));
+            let r = &mut truth[l][e];
+            for i in 0..BLOCK {
+                r.p[i] += rng.normal() as f32 * 0.1;
+                r.m[i] = r.m[i] * 0.9 + rng.normal() as f32 * 0.01;
+                r.v[i] = (r.v[i] * 0.99).abs() + 1e-6;
+            }
+            r.stamp = step as u64;
+            dirty.insert((l, e));
+        }
+        for x in dense.p.iter_mut() {
+            *x += rng.normal() as f32 * 0.05;
+        }
+        dense.stamp = step as u64;
+
+        // Not every step checkpoints; the last one always does, cleanly.
+        let last = step == steps;
+        if !last && rng.below(2) == 0 {
+            continue;
+        }
+        let mut keys: Vec<(usize, usize)> = dirty.iter().copied().collect();
+        keys.sort();
+        let sparse: Vec<SparseEntry> = keys
+            .iter()
+            .map(|&(l, e)| {
+                let r = &truth[l][e];
+                SparseEntry {
+                    layer: l,
+                    expert: e,
+                    stamp: r.stamp,
+                    p: r.p.clone(),
+                    m: r.m.clone(),
+                    v: r.v.clone(),
+                }
+            })
+            .collect();
+        let dense_entries = vec![DenseEntry {
+            key: "dense.embed".into(),
+            p: dense.p.clone(),
+            m: dense.m.clone(),
+            v: dense.v.clone(),
+        }];
+        let pending = sparse.len() + dense_entries.len();
+        let fault = if last {
+            None
+        } else {
+            match rng.below(5) {
+                0 => Some(Fault::TornBlob { index: rng.below(pending) }),
+                1 => Some(Fault::AfterEntries { count: rng.below(pending + 1) }),
+                2 => Some(Fault::ManifestRename),
+                _ => None,
+            }
+        };
+        match checkpoint::write_incremental(&dir, "sim", step, &sparse, &dense_entries, fault) {
+            Ok(rep) => {
+                assert_eq!(rep.entries_written, pending);
+                // Commit: snapshot the full truth (carried entries were
+                // clean, so previous committed values equal truth too).
+                let mut map = HashMap::new();
+                for l in 0..LAYERS {
+                    for e in 0..EXPERTS {
+                        map.insert(checkpoint::sparse_key(l, e), truth[l][e].clone());
+                    }
+                }
+                map.insert(
+                    "dense.embed".into(),
+                    Record { stamp: step as u64, ..dense.clone() },
+                );
+                committed = Some((step, map));
+                dirty.clear();
+            }
+            Err(e) => {
+                // Only the injected crash may fail a write here.
+                assert!(
+                    format!("{}", e).contains("fault injected"),
+                    "unexpected write failure at seed {} step {}: {:#}",
+                    seed,
+                    step,
+                    e
+                );
+            }
+        }
+        assert_committed(&dir, &committed);
+    }
+
+    // The final clean checkpoint committed the full truth; every blob on
+    // disk that looks step-versioned must be referenced (GC left no
+    // torn/superseded leftovers behind).
+    let (cstep, map) = committed.as_ref().expect("final clean checkpoint must commit");
+    assert_eq!(*cstep, steps);
+    assert_eq!(map.len(), LAYERS * EXPERTS + 1);
+    let man = checkpoint::read_manifest(&dir).unwrap();
+    let referenced: HashSet<String> = man.entries.iter().map(|e| e.blob.clone()).collect();
+    for entry in std::fs::read_dir(&dir).unwrap() {
+        let name = entry.unwrap().file_name().into_string().unwrap();
+        if let Some(stem) = name.strip_suffix(".bin") {
+            let versioned = stem
+                .rsplit_once(".s")
+                .map_or(false, |(_, n)| !n.is_empty() && n.bytes().all(|b| b.is_ascii_digit()));
+            if versioned {
+                assert!(referenced.contains(stem), "stale blob '{}' survived GC", name);
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+#[test]
+fn randomized_fault_points_never_lose_a_committed_checkpoint() {
+    let smoke = std::env::var("SEMOE_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let (seeds, steps) = if smoke { (6u64, 8) } else { (24u64, 16) };
+    for seed in 0..seeds {
+        // Panic messages carry the seed (prop.rs harness idiom).
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_fuzz_case(seed, steps)));
+        if let Err(e) = result {
+            panic!("crash-injection fuzz failed at seed {}: {:?}", seed, e);
+        }
+    }
+}
+
+#[test]
+fn torn_committed_blob_is_rejected_with_remedy() {
+    let dir = tmp_dir("torn_commit");
+    let sparse = [SparseEntry {
+        layer: 1,
+        expert: 2,
+        stamp: 4,
+        p: vec![1.0; BLOCK],
+        m: vec![0.1; BLOCK],
+        v: vec![0.01; BLOCK],
+    }];
+    checkpoint::write_incremental(&dir, "sim", 4, &sparse, &[], None).unwrap();
+    let man = checkpoint::read_manifest(&dir).unwrap();
+    let e = man.entry("layer1.expert2").unwrap();
+    // Truncate the committed blob to an aligned half — the torn-write
+    // shape a power loss leaves behind.
+    let path = dir.join(format!("{}.bin", e.blob));
+    let raw = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &raw[..raw.len() / 2 / 4 * 4]).unwrap();
+
+    let msg = format!("{:#}", checkpoint::load_entry(&dir, e).unwrap_err());
+    assert!(msg.contains("layer1.expert2"), "names the entry: {}", msg);
+    assert!(msg.contains("torn write"), "states the fault: {}", msg);
+    assert!(msg.contains("resume from an older checkpoint"), "gives a remedy: {}", msg);
+    assert!(checkpoint::verify(&dir).is_err(), "verify must refuse the torn checkpoint");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+// --------------------------------------- Part B: trainer resume (tiny arts)
+
+fn cfg(steps: usize) -> TrainConfig {
+    TrainConfig { preset: "tiny".into(), steps, lr: 1e-3, ..Default::default() }
+}
+
+fn arts_or_skip() -> Option<Rc<ModelArtifacts>> {
+    match ModelArtifacts::load("tiny") {
+        Ok(a) => Some(Rc::new(a)),
+        Err(_) => None, // artifacts not built; Part A covers the protocol
+    }
+}
+
+/// Order-independent bit-identity fingerprint of a committed checkpoint.
+fn manifest_fingerprint(dir: &Path) -> Vec<(String, String, u64)> {
+    let man = checkpoint::read_manifest(dir).unwrap();
+    let mut fp: Vec<(String, String, u64)> =
+        man.entries.iter().map(|e| (e.key.clone(), e.sha256.clone(), e.stamp)).collect();
+    fp.sort();
+    fp
+}
+
+#[test]
+fn resume_from_mid_run_checkpoint_is_bit_equal_to_uninterrupted() {
+    let arts = match arts_or_skip() {
+        Some(a) => a,
+        None => return,
+    };
+    let dir_mid = tmp_dir("resume_mid");
+    let dir_a = tmp_dir("resume_final_a");
+    let dir_b = tmp_dir("resume_final_b");
+
+    // Uninterrupted reference, dropping a checkpoint after step 3.
+    let mut a = OffloadTrainer::new(arts.clone(), cfg(6), None).unwrap();
+    let mut losses_a = Vec::new();
+    for s in 0..6 {
+        if s == 3 {
+            let rep = a.checkpoint_to(&dir_mid).unwrap();
+            assert!(rep.entries_written > 0, "baseline checkpoint must move bytes");
+        }
+        losses_a.push(a.step().unwrap().loss);
+    }
+    a.flush().unwrap();
+    a.checkpoint_to(&dir_a).unwrap();
+
+    // Restart from the step-3 checkpoint and run the remaining steps.
+    let mut b = OffloadTrainer::resume_from(arts.clone(), cfg(6), None, &dir_mid).unwrap();
+    let mut losses_b = Vec::new();
+    for _ in 3..6 {
+        losses_b.push(b.step().unwrap().loss);
+    }
+    b.flush().unwrap();
+    b.checkpoint_to(&dir_b).unwrap();
+
+    assert_eq!(&losses_a[3..], &losses_b[..], "resumed losses must be bit-equal");
+    assert_eq!(
+        manifest_fingerprint(&dir_a),
+        manifest_fingerprint(&dir_b),
+        "final parameter + optimizer state must be bit-equal"
+    );
+    for d in [dir_mid, dir_a, dir_b] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn crash_mid_checkpoint_then_resume_matches_uninterrupted() {
+    let arts = match arts_or_skip() {
+        Some(a) => a,
+        None => return,
+    };
+    let dir = tmp_dir("crash_resume");
+    let dir_ref = tmp_dir("crash_ref");
+
+    // The run that dies: commit at step 2, train on, crash mid-blob
+    // while checkpointing step 4.
+    let mut tr = OffloadTrainer::new(arts.clone(), cfg(5), None).unwrap();
+    tr.step().unwrap();
+    tr.step().unwrap();
+    tr.checkpoint_to(&dir).unwrap();
+    tr.step().unwrap();
+    tr.step().unwrap();
+    let err = tr.checkpoint_to_with_fault(&dir, Some(Fault::TornBlob { index: 0 })).unwrap_err();
+    assert!(format!("{}", err).contains("fault injected"));
+    drop(tr); // the crash
+
+    // The survivor is the step-2 checkpoint, fully intact.
+    let s = checkpoint::verify(&dir).unwrap();
+    assert_eq!(s.step, 2, "committed checkpoint must survive the crash");
+
+    // Resume it and run to completion.
+    let mut r = OffloadTrainer::resume_from(arts.clone(), cfg(5), None, &dir).unwrap();
+    let mut resumed = Vec::new();
+    for _ in 2..5 {
+        resumed.push(r.step().unwrap().loss);
+    }
+    r.flush().unwrap();
+    r.checkpoint_to(&dir).unwrap();
+
+    // Uninterrupted reference.
+    let mut u = OffloadTrainer::new(arts.clone(), cfg(5), None).unwrap();
+    let mut reference = Vec::new();
+    for _ in 0..5 {
+        reference.push(u.step().unwrap().loss);
+    }
+    u.flush().unwrap();
+    u.checkpoint_to(&dir_ref).unwrap();
+
+    assert_eq!(&reference[2..], &resumed[..], "post-crash losses must be bit-equal");
+    assert_eq!(
+        manifest_fingerprint(&dir),
+        manifest_fingerprint(&dir_ref),
+        "post-crash final state must be bit-equal"
+    );
+    for d in [dir, dir_ref] {
+        let _ = std::fs::remove_dir_all(d);
+    }
+}
+
+#[test]
+fn idle_checkpoint_moves_only_dense_bytes() {
+    let arts = match arts_or_skip() {
+        Some(a) => a,
+        None => return,
+    };
+    let dir = tmp_dir("idle_bytes");
+    let mut tr = OffloadTrainer::new(arts, cfg(2), None).unwrap();
+    tr.step().unwrap();
+    let baseline = tr.checkpoint_to(&dir).unwrap();
+    // Nothing dirtied since: only the always-rewritten dense records
+    // move; every expert is carried forward by manifest reference.
+    let idle = tr.checkpoint_to(&dir).unwrap();
+    assert!(idle.entries_written < baseline.entries_written);
+    assert_eq!(idle.entries_carried, baseline.entries_written - idle.entries_written);
+    assert!(idle.bytes_written < baseline.bytes_written);
+    let _ = std::fs::remove_dir_all(dir);
+}

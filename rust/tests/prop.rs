@@ -305,6 +305,95 @@ fn prop_cache_never_exceeds_capacity_and_loses_no_dirty_data() {
     });
 }
 
+// ---------------------------------------------------- sparse expert layout
+
+/// Randomized layouts for the expert-axis splicing surface shared by the
+/// offload trainer, the checkpoint lane and serving hot-swap
+/// ([`SparseLayout::gather`]/[`scatter`]). Invariants: scatter∘gather is
+/// the identity on the fused tail (bit-exact), every expert's ranges
+/// partition the tail with no overlap (a swapped expert can never alias
+/// a neighbour's bytes), and mutating one expert's block leaves every
+/// other expert's gather bit-unchanged.
+#[test]
+fn prop_sparse_layout_gather_scatter_roundtrip() {
+    use semoe::runtime::ParamSpec;
+    use semoe::storage::SparseLayout;
+
+    for_cases("sparse_layout_roundtrip", |rng| {
+        let n_experts = rng.range(1, 9);
+        let n_members = rng.range(1, 5);
+        let mut specs = Vec::new();
+        for i in 0..n_members {
+            let per = rng.range(1, 17);
+            specs.push(ParamSpec {
+                name: format!("layer0.m{}", i),
+                shape: vec![n_experts, per],
+                sparse: true,
+                numel: n_experts * per,
+            });
+            // Noise the builder must ignore: dense members and layer-1
+            // copies of the same tensors.
+            specs.push(ParamSpec {
+                name: format!("layer0.dense{}", i),
+                shape: vec![per],
+                sparse: false,
+                numel: per,
+            });
+            specs.push(ParamSpec {
+                name: format!("layer1.m{}", i),
+                shape: vec![n_experts, per],
+                sparse: true,
+                numel: n_experts * per,
+            });
+        }
+        let layout = SparseLayout::from_specs(&specs, n_experts).unwrap();
+        assert_eq!(layout.n_experts(), n_experts);
+        assert_eq!(layout.tail_len(), layout.expert_len() * n_experts);
+
+        // The experts' ranges partition the tail: every element owned
+        // exactly once — gather/scatter can never alias a neighbour.
+        let mut owner = vec![usize::MAX; layout.tail_len()];
+        for e in 0..n_experts {
+            let mut total = 0usize;
+            for (off, len) in layout.expert_ranges(e) {
+                total += len;
+                for slot in owner.iter_mut().skip(off).take(len) {
+                    assert_eq!(*slot, usize::MAX, "expert {} aliases expert {}", e, *slot);
+                    *slot = e;
+                }
+            }
+            assert_eq!(total, layout.expert_len());
+        }
+        assert!(owner.iter().all(|&o| o != usize::MAX), "tail fully covered");
+
+        // scatter ∘ gather is the identity, bit for bit.
+        let tail: Vec<f32> = (0..layout.tail_len()).map(|_| rng.normal() as f32).collect();
+        let mut roundtrip = tail.clone();
+        for e in 0..n_experts {
+            let block = layout.gather(e, &tail);
+            assert_eq!(block.len(), layout.expert_len());
+            layout.scatter(e, &block, &mut roundtrip);
+        }
+        assert_eq!(roundtrip, tail, "scatter(gather) must be the identity");
+
+        // Mutating one expert touches exactly its own bytes.
+        let victim = rng.below(n_experts);
+        let before: Vec<Vec<f32>> = (0..n_experts).map(|e| layout.gather(e, &tail)).collect();
+        let swapped: Vec<f32> =
+            (0..layout.expert_len()).map(|_| rng.normal() as f32).collect();
+        let mut tail2 = tail.clone();
+        layout.scatter(victim, &swapped, &mut tail2);
+        for e in 0..n_experts {
+            let got = layout.gather(e, &tail2);
+            if e == victim {
+                assert_eq!(got, swapped, "swapped expert must read back its new bytes");
+            } else {
+                assert_eq!(got, before[e], "expert {} bytes moved by a neighbour swap", e);
+            }
+        }
+    });
+}
+
 // ------------------------------------------------------------------- json
 
 #[test]

@@ -46,6 +46,17 @@ echo "== tier1: tail-only repair regression (contract v3: no full-layer re-runs)
 cargo test -q forced_misses_repair_via_expert_tail_bitwise
 cargo test -q plan_miss_repairs_execute_only_the_expert_tail
 
+echo "== tier1: checkpoint crash-injection suite (randomized fault points, resume bit-equality)"
+SEMOE_SMOKE=1 cargo test -q --test checkpoint_crash
+
+echo "== tier1: checkpoint/resume CLI smoke (train → checkpoint → resume → verify)"
+CKPT_DIR="$(mktemp -d)"
+cargo run --release -- train --offload --preset tiny --steps 4 --checkpoint-dir "$CKPT_DIR" --checkpoint-every 2
+cargo run --release -- checkpoint --checkpoint-dir "$CKPT_DIR"
+cargo run --release -- train --offload --preset tiny --steps 6 --checkpoint-dir "$CKPT_DIR"
+cargo run --release -- checkpoint --checkpoint-dir "$CKPT_DIR"
+rm -rf "$CKPT_DIR"
+
 echo "== tier1: python-side layer contract check (v3: split + composition bit-identity)"
 if python3 -c "import jax" >/dev/null 2>&1; then
     (cd python && python3 -m pytest tests/test_contract.py -q)
@@ -62,6 +73,10 @@ SEMOE_SMOKE=1 cargo bench --bench table2_inference
 
 echo "== tier1: perf trajectory stub (BENCH_tier1.json + BENCH_trajectory.json from the smoke reports)"
 cargo run --release -- perf-stub
+if [ ! -s BENCH_trajectory.json ]; then
+    echo "tier1: BENCH_trajectory.json missing or empty after perf-stub — the trajectory must be seeded even from smoke-only reports" >&2
+    exit 1
+fi
 
 echo "== tier1: perf regression gate (tokens/s vs previous trajectory point, >10% drop fails)"
 cargo run --release -- perf-compare
