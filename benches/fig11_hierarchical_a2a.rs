@@ -6,13 +6,21 @@
 //! Part 2 runs BOTH AlltoAll schedules for real on the in-process mesh
 //! (32 ranks) and verifies they move identical data while the
 //! hierarchical one sends zero cross-rail (spine) bytes.
+//! Part 3 measures real expert-parallel decode (`dist::run_infer_group`,
+//! deep preset): workers × {flat, hierarchical} × {Zipf, uniform}
+//! prompts, with rank 0's outputs asserted bitwise invariant across
+//! every configuration and the multi-worker aggregate asserted at or
+//! above single-worker throughput on the skewed row.
 //!
-//! `cargo bench --bench fig11_hierarchical_a2a`.
+//! `cargo bench --bench fig11_hierarchical_a2a` (SEMOE_SMOKE=1 for the
+//! tier1 quick pass).
 
 use semoe::comm::hierarchical::{flat_a2a, hierarchical_a2a};
 use semoe::comm::{A2aStrategy, AllToAllPlan, Mesh, Topology};
 use semoe::config::presets::{cluster_for_gpus, fig11_model};
+use semoe::dist::{run_infer_group, zipf_prompts, DistConfig};
 use semoe::metrics::Report;
+use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_training, CostModel, Schedule};
 
 fn priced(rep: &mut Report) {
@@ -117,10 +125,94 @@ fn real_mesh(rep: &mut Report) {
     rep.note("in-process wall times reflect memcpy, not fabric: the byte columns are the result");
 }
 
+fn real_workers(rep: &mut Report) {
+    let smoke = std::env::var("SEMOE_SMOKE").is_ok();
+    let preset = "deep";
+    let (vocab, b) = {
+        let arts = ModelArtifacts::load(preset).expect("deep artifacts (run `make artifacts`)");
+        (arts.preset.vocab_size, arts.preset.batch_size)
+    };
+    let n_new = if smoke { 2 } else { 8 };
+    let worker_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let t = rep.table(
+        "measured expert-parallel decode (deep preset)",
+        &["config", "workers", "a2a", "agg tokens/s", "a2a MB", "imbalance max/mean"],
+    );
+    let mut skew_single = 0.0f64;
+    let mut skew_multi_best = 0.0f64;
+    // Rank 0 decodes the same Zipf prompts in every configuration: its
+    // outputs must be bitwise identical whatever the worker count or
+    // AllToAll schedule — sharding moves weights, never math.
+    let mut rank0_ref: Option<Vec<Vec<i32>>> = None;
+    for (label, s) in [("zipf", 1.1f64), ("uniform", 0.0f64)] {
+        for &w in worker_counts {
+            let schedules: &[(A2aStrategy, &str, usize)] = if w == 1 {
+                &[(A2aStrategy::Flat, "flat", 1)]
+            } else {
+                &[(A2aStrategy::Flat, "flat", 1), (A2aStrategy::Hierarchical, "hier", 2)]
+            };
+            for &(strategy, sname, p) in schedules {
+                let cfg = DistConfig { workers: w, strategy, ranks_per_node: p };
+                let prompts: Vec<Vec<Vec<i32>>> = (0..w)
+                    .map(|r| zipf_prompts(vocab, b, 4, s, 1000 + r as u64))
+                    .collect();
+                let g = run_infer_group(preset, &cfg, &prompts, n_new, 7).expect("group run");
+                if label == "zipf" {
+                    match &rank0_ref {
+                        None => rank0_ref = Some(g.ranks[0].outputs.clone()),
+                        Some(want) => assert_eq!(
+                            &g.ranks[0].outputs, want,
+                            "rank 0 diverged at w={} {}",
+                            w, sname
+                        ),
+                    }
+                }
+                if w > 1 {
+                    assert!(g.total_a2a_bytes() > 0, "multi-worker run must move blocks");
+                }
+                let tps = g.aggregate_tokens_per_s();
+                if label == "zipf" {
+                    if w == 1 {
+                        skew_single = tps;
+                    } else {
+                        skew_multi_best = skew_multi_best.max(tps);
+                    }
+                }
+                let imb = g.ranks.iter().map(|r| r.imbalance).fold(0.0f64, f64::max);
+                rep.row(
+                    t,
+                    vec![
+                        format!("w{} {} {}", w, sname, label),
+                        w.to_string(),
+                        sname.to_string(),
+                        format!("{:.1}", tps),
+                        format!("{:.2}", g.total_a2a_bytes() as f64 / 1e6),
+                        format!("{:.2}", imb),
+                    ],
+                );
+            }
+        }
+    }
+    // The acceptance row: ranks decode their own prompts concurrently,
+    // so the group must aggregate at least single-worker throughput on
+    // skewed traffic. Smoke mode skips the timing assert (loaded CI
+    // boxes make sub-second walls noisy) but keeps the bitwise one.
+    if !smoke {
+        assert!(
+            skew_multi_best >= skew_single,
+            "multi-worker aggregate fell below single worker: {:.1} < {:.1} tokens/s",
+            skew_multi_best,
+            skew_single
+        );
+    }
+    rep.note("rank 0 outputs bitwise invariant across workers × schedules (asserted)");
+}
+
 fn main() {
     let mut rep = Report::new("fig11_hierarchical_a2a");
     priced(&mut rep);
     real_mesh(&mut rep);
+    real_workers(&mut rep);
     println!("{}", rep.to_markdown());
     rep.save(std::path::Path::new("reports")).expect("write report");
 }

@@ -12,6 +12,8 @@
 //!   planned-vs-repaired expert ratio (`fig10_ring_offload`).
 //! - `plan_cost_ms` / `tail_repair_ms` — v3 planner cost and the
 //!   expert-tail repair price (`ablation_prefetch`).
+//! - `dist_tokens_per_s` — measured 2-worker expert-parallel aggregate
+//!   decode throughput on skewed prompts (`fig11_hierarchical_a2a`).
 //!
 //! Extraction is deliberately lenient: a missing report, table, column,
 //! or row yields `null` for that field, never an error — smoke-mode runs
@@ -27,8 +29,12 @@ use crate::util::json::Json;
 pub const BENCH_STUB_PATH: &str = "BENCH_tier1.json";
 
 /// The reports the stub distils (under `reports/`).
-pub const SOURCE_REPORTS: [&str; 3] =
-    ["table2_inference.json", "fig10_ring_offload.json", "ablation_prefetch.json"];
+pub const SOURCE_REPORTS: [&str; 4] = [
+    "table2_inference.json",
+    "fig10_ring_offload.json",
+    "ablation_prefetch.json",
+    "fig11_hierarchical_a2a.json",
+];
 
 /// The numeric value at (first table whose title contains `title_frag`,
 /// first row whose label cell contains `row_frag`, first column whose
@@ -72,7 +78,7 @@ fn load_report(dir: &Path, name: &str) -> Option<Json> {
 pub fn build_stub(root: &Path) -> Json {
     let dir = root.join("reports");
     let mut sources = Vec::new();
-    let (table2, fig10, ablation) = {
+    let (table2, fig10, ablation, fig11) = {
         let mut get = |name: &str| match load_report(&dir, name) {
             Some(j) => {
                 sources.push(name.to_string());
@@ -80,7 +86,12 @@ pub fn build_stub(root: &Path) -> Json {
             }
             None => Json::Null,
         };
-        (get(SOURCE_REPORTS[0]), get(SOURCE_REPORTS[1]), get(SOURCE_REPORTS[2]))
+        (
+            get(SOURCE_REPORTS[0]),
+            get(SOURCE_REPORTS[1]),
+            get(SOURCE_REPORTS[2]),
+            get(SOURCE_REPORTS[3]),
+        )
     };
 
     let ring = "routed vs dense ring (deep preset";
@@ -100,6 +111,10 @@ pub fn build_stub(root: &Path) -> Json {
         ("plan_hit_rate", opt(plan_hit_rate)),
         ("plan_cost_ms", opt(cell(&ablation, "route-planner cost", "(v3)", "cost ms"))),
         ("tail_repair_ms", opt(cell(&ablation, "plan-miss repair", "expert tail", "cost ms"))),
+        (
+            "dist_tokens_per_s",
+            opt(cell(&fig11, "measured expert-parallel decode", "w2 flat zipf", "agg tokens/s")),
+        ),
         ("sources", Json::arr(sources.into_iter().map(Json::str))),
     ])
 }
@@ -129,12 +144,15 @@ pub const REGRESSION_TOLERANCE: f64 = 0.10;
 /// Headline metrics carried per trajectory entry. The bool marks the
 /// gated metric: only `tokens_per_s` can fail the compare — byte and
 /// cost columns are substrate-noisy and stay informational.
-const TRACKED: [(&str, bool); 5] = [
+const TRACKED: [(&str, bool); 6] = [
     ("tokens_per_s", true),
     ("ring_copy_mb", false),
     ("plan_hit_rate", false),
     ("plan_cost_ms", false),
     ("tail_repair_ms", false),
+    // Dist aggregate throughput: informational — multi-thread wall
+    // clocks on shared CI boxes are too noisy to gate on.
+    ("dist_tokens_per_s", false),
 ];
 
 /// Short git sha of the checkout at `root`; `"unknown"` when git is

@@ -30,13 +30,15 @@ pub const RULE_WAIT_WITHOUT_LOOP: &str = "LOCK002";
 pub const RULE_LOCK_CYCLE: &str = "LOCK003";
 
 /// The threaded modules pass C scans (path suffixes).
-pub const THREADED_MODULES: [&str; 6] = [
+pub const THREADED_MODULES: [&str; 8] = [
     "rust/src/infer/ring_memory.rs",
     "rust/src/infer/server.rs",
     "rust/src/prefetch/scheduler.rs",
     "rust/src/storage/ssd_store.rs",
     "rust/src/comm/mesh.rs",
     "rust/src/metrics/counters.rs",
+    "rust/src/dist/worker.rs",
+    "rust/src/dist/coordinator.rs",
 ];
 
 #[derive(Debug)]
@@ -339,6 +341,44 @@ mod tests {
         assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
         assert_eq!(d[0].line, 3);
         assert!(d[0].msg.contains("`state`"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn dist_worker_send_under_lock_is_flagged() {
+        // The expert-parallel worker loop is a mesh participant: a rank
+        // that blocks on a channel while holding a shard-table lock
+        // stalls every peer at the next collective. Pass C must cover
+        // dist/ the same way it covers the serving stack.
+        let t = tree(
+            "rust/src/dist/worker.rs",
+            "fn serve(&self) {\n\
+             \x20   loop {\n\
+             \x20       let table = self.shard_table.lock().unwrap();\n\
+             \x20       self.req_tx.send(Fetch { layer: table.next() }).unwrap();\n\
+             \x20   }\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
+        assert_eq!(d[0].line, 4);
+        assert!(d[0].msg.contains("`table`"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn dist_coordinator_collective_only_loop_is_clean() {
+        // The real dist/ idiom: no locks at all — MeshHandle collectives
+        // move everything. The scan must not invent findings for it.
+        let t = tree(
+            "rust/src/dist/coordinator.rs",
+            "fn run(&mut self) {\n\
+             \x20   for b in 0..self.n_buckets {\n\
+             \x20       let wire = self.handle.broadcast(&[], owner);\n\
+             \x20       self.apply(b, &wire);\n\
+             \x20   }\n\
+             }\n",
+        );
+        assert!(check_locks(&t).is_empty());
     }
 
     #[test]

@@ -5,9 +5,16 @@
 //! move real bytes with the same peer pattern as the paper's fabric, and
 //! the topology model prices the pattern separately. All payloads are
 //! plain data (PJRT never crosses threads).
+//!
+//! Failure handling: a rank that panics mid-collective would leave its
+//! peers parked forever on a `std::sync::Barrier`. The mesh instead uses
+//! a poisonable barrier — dropping a [`MeshHandle`] during a panic (or
+//! calling [`MeshHandle::poison`]) marks the mesh dead and wakes every
+//! waiter, which then fails with an actionable error instead of hanging.
+//! See docs/distributed.md §Failure handling.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Per-rank traffic accounting.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -17,9 +24,70 @@ pub struct CommStats {
     pub bytes_received: u64,
 }
 
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: Option<String>,
+}
+
+/// Reusable N-party barrier that can be poisoned: `poison()` wakes every
+/// current and future waiter with the recorded reason, so a dead peer
+/// turns into an error instead of a deadlock.
+struct PoisonBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+impl PoisonBarrier {
+    fn new(n: usize) -> Self {
+        PoisonBarrier {
+            n,
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: None }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Blocks until all `n` ranks arrive. Returns the poison reason if
+    /// the mesh was (or becomes) poisoned while waiting.
+    fn wait(&self) -> Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        if let Some(why) = &st.poisoned {
+            return Err(why.clone());
+        }
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = st.generation;
+        while st.generation == gen && st.poisoned.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        match &st.poisoned {
+            Some(why) => Err(why.clone()),
+            None => Ok(()),
+        }
+    }
+
+    fn poison(&self, why: &str) {
+        let mut st = self.state.lock().unwrap();
+        if st.poisoned.is_none() {
+            st.poisoned = Some(why.to_string());
+        }
+        self.cv.notify_all();
+    }
+
+    fn poisoned(&self) -> Option<String> {
+        self.state.lock().unwrap().poisoned.clone()
+    }
+}
+
 struct Shared {
     n: usize,
-    barrier: Barrier,
+    barrier: PoisonBarrier,
     /// One payload slot per (src rank): each collective round, rank r
     /// deposits its contribution in `slots[r]`.
     slots: Mutex<Vec<Option<Vec<Vec<f32>>>>>,
@@ -33,7 +101,7 @@ impl Mesh {
     pub fn new(n: usize) -> Vec<MeshHandle> {
         let shared = Arc::new(Shared {
             n,
-            barrier: Barrier::new(n),
+            barrier: PoisonBarrier::new(n),
             slots: Mutex::new(vec![None; n]),
             generation: AtomicU64::new(0),
         });
@@ -50,6 +118,17 @@ pub struct MeshHandle {
     stats: CommStats,
 }
 
+impl Drop for MeshHandle {
+    fn drop(&mut self) {
+        // A handle dropped during unwinding means its rank died with
+        // peers possibly parked in a collective — poison so they fail
+        // fast instead of hanging forever.
+        if std::thread::panicking() {
+            self.shared.barrier.poison(&format!("rank {} panicked mid-collective", self.rank));
+        }
+    }
+}
+
 impl MeshHandle {
     pub fn rank(&self) -> usize {
         self.rank
@@ -63,8 +142,29 @@ impl MeshHandle {
         self.stats
     }
 
+    /// Mark the mesh dead. Every rank currently or subsequently blocked
+    /// in a collective fails with `reason` instead of deadlocking.
+    pub fn poison(&self, reason: &str) {
+        self.shared.barrier.poison(&format!("rank {}: {}", self.rank, reason));
+    }
+
+    /// The poison reason, if any rank killed the mesh.
+    pub fn poisoned(&self) -> Option<String> {
+        self.shared.barrier.poisoned()
+    }
+
     pub fn barrier(&self) {
-        self.shared.barrier.wait();
+        self.wait_or_die();
+    }
+
+    fn wait_or_die(&self) {
+        if let Err(why) = self.shared.barrier.wait() {
+            panic!(
+                "mesh poisoned ({}): a peer rank died mid-collective, rank {} cannot make \
+                 progress — see docs/distributed.md §Failure handling",
+                why, self.rank
+            );
+        }
     }
 
     /// Core exchange: every rank deposits `parts` (one Vec per
@@ -76,18 +176,18 @@ impl MeshHandle {
             let mut slots = self.shared.slots.lock().unwrap();
             slots[self.rank] = Some(parts);
         }
-        self.shared.barrier.wait();
+        self.wait_or_die();
         let all: Vec<Vec<Vec<f32>>> = {
             let slots = self.shared.slots.lock().unwrap();
             slots.iter().map(|s| s.clone().expect("slot filled")).collect()
         };
-        self.shared.barrier.wait();
+        self.wait_or_die();
         if self.rank == 0 {
             let mut slots = self.shared.slots.lock().unwrap();
             slots.iter_mut().for_each(|s| *s = None);
             self.shared.generation.fetch_add(1, Ordering::Relaxed);
         }
-        self.shared.barrier.wait();
+        self.wait_or_die();
         let recvd: u64 = all.iter().flat_map(|p| p.iter()).map(|p| p.len() as u64 * 4).sum();
         self.stats.ops += 1;
         self.stats.bytes_sent += sent;
@@ -261,5 +361,62 @@ mod tests {
             assert_eq!(s.bytes_sent, 32);
             assert_eq!(s.bytes_received, 64);
         }
+    }
+
+    #[test]
+    fn panicking_rank_poisons_peers_instead_of_deadlocking() {
+        // Rank 1 dies between collectives. Without poisoning, ranks 0 and
+        // 2 would park forever inside the second all_gather's barrier.
+        let handles = Mesh::new(3);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let r = h.rank();
+                    h.all_gather(&[r as f32]);
+                    if r == 1 {
+                        panic!("injected fault");
+                    }
+                    h.all_gather(&[r as f32]); // must error, not hang
+                })
+            })
+            .collect();
+        let mut poisoned_msgs = 0;
+        let mut failures = 0;
+        for j in joins {
+            let e = match j.join() {
+                Ok(_) => panic!("every rank should fail once rank 1 dies"),
+                Err(e) => e,
+            };
+            failures += 1;
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if msg.contains("mesh poisoned") {
+                // The surviving ranks' error must be actionable.
+                assert!(msg.contains("rank 1 panicked"), "reason carried: {}", msg);
+                poisoned_msgs += 1;
+            }
+        }
+        assert_eq!(failures, 3);
+        assert_eq!(poisoned_msgs, 2, "both survivors see the poison error");
+    }
+
+    #[test]
+    fn explicit_poison_is_observable_and_fatal() {
+        let handles = Mesh::new(2);
+        handles[0].poison("shutdown requested");
+        let why = handles[1].poisoned().expect("poison visible to peers");
+        assert!(why.contains("rank 0"), "{}", why);
+        assert!(why.contains("shutdown requested"), "{}", why);
+        // A collective on a poisoned mesh fails immediately (no peers
+        // needed — it must not even try to rendezvous).
+        let mut h = handles.into_iter().next().unwrap();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            h.all_gather(&[1.0]);
+        }));
+        assert!(err.is_err());
     }
 }

@@ -81,6 +81,12 @@ pub struct TrainConfig {
     pub cpu_cache_frac: f64,
     /// Zipf skew of the synthetic corpus (0 = uniform tokens).
     pub corpus_skew: f64,
+    /// Expert-parallel world size (`train --workers N`): N ranks on
+    /// threads, each owning 1/N of every layer's experts and running
+    /// their AdamW, exchanging updated blocks end-of-step — bit-identical
+    /// to the single-host path (docs/distributed.md §Training). 1 =
+    /// single host. Mutually exclusive with `dp_degree > 1`.
+    pub dist_world: usize,
     /// Log every N steps.
     pub log_every: usize,
 }
@@ -101,6 +107,7 @@ impl Default for TrainConfig {
             pipelined: false,
             cpu_cache_frac: 0.5,
             corpus_skew: 1.05,
+            dist_world: 1,
             log_every: 10,
         }
     }
@@ -130,6 +137,7 @@ impl TrainConfig {
             pipelined: j.get("pipelined").as_bool().unwrap_or(d.pipelined),
             cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
             corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
+            dist_world: j.get("dist_world").as_usize().unwrap_or(d.dist_world),
             log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
         }
     }
@@ -155,6 +163,7 @@ impl TrainConfig {
             ("pipelined", Json::Bool(self.pipelined)),
             ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
             ("corpus_skew", Json::num(self.corpus_skew)),
+            ("dist_world", Json::num(self.dist_world as f64)),
             ("log_every", Json::num(self.log_every as f64)),
         ])
     }
@@ -171,6 +180,7 @@ mod tests {
         c.route_source = RouteSourceChoice::CarriedKernel;
         c.pipelined = true;
         c.steps = 300;
+        c.dist_world = 4;
         let back = TrainConfig::from_json(&c.to_json());
         assert_eq!(c, back);
     }

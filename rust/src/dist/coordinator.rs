@@ -1,0 +1,276 @@
+//! Coordinator: spin up an N-rank expert-parallel group on threads and
+//! drive both hot paths end to end (`semoe infer --workers N`, the
+//! fig11 bench, and the bit-identity tests all come through here).
+//!
+//! The group is symmetric SPMD: every rank loads the same artifacts with
+//! the same seed (so `CpuWeightStore::init` walks the RNG identically),
+//! keeps only the experts its [`ExpertShardPlan`] assigns to it, and
+//! decodes its own prompt set, fetching non-owned expert blocks from
+//! their owner through [`ExpertWorker`]. The coordinator's job is just
+//! to build the mesh, launch the ranks, and fold their reports into a
+//! [`GroupReport`].
+
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::exchange::{DistTrainCtx, DEFAULT_BUCKET_ELEMS};
+use super::shard::ExpertShardPlan;
+use super::worker::DistStats;
+use crate::comm::{A2aStrategy, CommStats, Mesh};
+use crate::config::train::TrainConfig;
+use crate::infer::{InferMode, InferenceEngine};
+use crate::runtime::ModelArtifacts;
+use crate::train::{OffloadTrainer, StepMetrics};
+use crate::util::rng::Rng;
+
+/// How an expert-parallel group is laid out. `workers == 1` degenerates
+/// to the plain single-host path (the worker owns every expert and the
+/// mesh never carries a block).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DistConfig {
+    /// Ranks in the group (threads on this host).
+    pub workers: usize,
+    /// AllToAll schedule for the block round (§4.2).
+    pub strategy: A2aStrategy,
+    /// Node width the hierarchical schedule assumes; must divide
+    /// `workers`.
+    pub ranks_per_node: usize,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        DistConfig { workers: 1, strategy: A2aStrategy::Flat, ranks_per_node: 1 }
+    }
+}
+
+/// One rank's outcome from a group run.
+#[derive(Debug, Clone)]
+pub struct RankReport {
+    pub rank: usize,
+    /// Generated sequences (prompt + new tokens), one per prompt.
+    pub outputs: Vec<Vec<i32>>,
+    /// New tokens this rank decoded.
+    pub tokens: u64,
+    /// Wall-clock seconds for this rank's generate loop.
+    pub secs: f64,
+    pub comm: CommStats,
+    pub dist: DistStats,
+    /// max/mean routed demand across ranks under the shard plan.
+    pub imbalance: f64,
+}
+
+/// All ranks' outcomes; aggregates drive the fig11 table and `/stats`.
+#[derive(Debug, Clone)]
+pub struct GroupReport {
+    pub ranks: Vec<RankReport>,
+}
+
+impl GroupReport {
+    pub fn total_tokens(&self) -> u64 {
+        self.ranks.iter().map(|r| r.tokens).sum()
+    }
+
+    /// Aggregate throughput: total new tokens over the slowest rank's
+    /// wall clock (ranks run concurrently, so the straggler sets the
+    /// group's finish time).
+    pub fn aggregate_tokens_per_s(&self) -> f64 {
+        let secs = self.ranks.iter().map(|r| r.secs).fold(0.0f64, f64::max);
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.total_tokens() as f64 / secs
+    }
+
+    pub fn total_a2a_bytes(&self) -> u64 {
+        self.ranks.iter().map(|r| r.dist.a2a_bytes).sum()
+    }
+}
+
+/// Run `cfg.workers` ranks to completion: each rank decodes
+/// `prompts[rank]` for `n_new` tokens against `preset` with `seed`.
+/// Rank 0's outputs are bit-identical to a single-host engine decoding
+/// `prompts[0]` with the same seed — the shard plan changes where
+/// expert blocks live, never what any rank computes.
+pub fn run_infer_group(
+    preset: &str,
+    cfg: &DistConfig,
+    prompts: &[Vec<Vec<i32>>],
+    n_new: usize,
+    seed: u64,
+) -> Result<GroupReport> {
+    anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+    anyhow::ensure!(
+        prompts.len() == cfg.workers,
+        "got {} prompt sets for {} workers",
+        prompts.len(),
+        cfg.workers
+    );
+    let handles = Mesh::new(cfg.workers);
+    let joins: Vec<_> = handles
+        .into_iter()
+        .zip(prompts.iter().cloned())
+        .map(|(h, my_prompts)| {
+            let preset = preset.to_string();
+            let cfg = *cfg;
+            std::thread::spawn(move || -> Result<RankReport> {
+                let rank = h.rank();
+                // PJRT executables are per-thread; each rank loads its
+                // own copy of the same artifacts.
+                let arts = Rc::new(ModelArtifacts::load(&preset)?);
+                let (n_layers, n_experts) = (arts.preset.n_layers, arts.preset.n_experts);
+                let plan = ExpertShardPlan::balanced(n_layers, n_experts, cfg.workers);
+                let mut eng = InferenceEngine::new(arts, InferMode::Resident, seed, None)?;
+                eng.set_dist(h, plan, cfg.strategy, cfg.ranks_per_node)?;
+                let t0 = Instant::now();
+                let outputs = eng.generate(&my_prompts, n_new)?;
+                let secs = t0.elapsed().as_secs_f64();
+                Ok(RankReport {
+                    rank,
+                    tokens: (my_prompts.len() * n_new) as u64,
+                    secs,
+                    comm: eng.dist_comm_stats().unwrap_or_default(),
+                    dist: eng.dist_stats().unwrap_or_default(),
+                    imbalance: eng.dist_imbalance(),
+                    outputs,
+                })
+            })
+        })
+        .collect();
+    let mut ranks = Vec::with_capacity(cfg.workers);
+    for j in joins {
+        let report = j
+            .join()
+            .map_err(|_| anyhow!("a worker rank panicked — see stderr for the mesh poison"))??;
+        ranks.push(report);
+    }
+    ranks.sort_by_key(|r| r.rank);
+    Ok(GroupReport { ranks })
+}
+
+/// One training rank's outcome from [`run_train_group`].
+#[derive(Debug, Clone)]
+pub struct TrainRankReport {
+    pub rank: usize,
+    /// Per-step metrics — bit-identical across ranks (and to the
+    /// single-host trainer) by the exchange protocol's construction.
+    pub metrics: Vec<StepMetrics>,
+    pub comm: CommStats,
+    pub dist: DistStats,
+}
+
+/// Run `cfg.dist_world` training ranks to completion: each rank
+/// replicates the full step (same corpus seed, same batches) but runs
+/// AdamW only for the experts its shard plan assigns to it, receiving
+/// the rest through the end-of-step exchange. Losses are bit-identical
+/// to a single-host offload trainer with the same config.
+pub fn run_train_group(cfg: &TrainConfig) -> Result<Vec<TrainRankReport>> {
+    anyhow::ensure!(cfg.dist_world > 0, "need at least one worker");
+    anyhow::ensure!(
+        cfg.dp_degree <= 1,
+        "dist expert parallelism and data parallelism are mutually exclusive"
+    );
+    let handles = Mesh::new(cfg.dist_world);
+    let world = cfg.dist_world;
+    let joins: Vec<_> = handles
+        .into_iter()
+        .map(|h| {
+            let cfg = cfg.clone();
+            std::thread::spawn(move || -> Result<TrainRankReport> {
+                let rank = h.rank();
+                let arts = Rc::new(ModelArtifacts::load(&cfg.preset)?);
+                let (n_layers, n_experts) = (arts.preset.n_layers, arts.preset.n_experts);
+                let mut tr = OffloadTrainer::new(arts, cfg.clone(), None)?;
+                let plan = ExpertShardPlan::balanced(n_layers, n_experts, world);
+                tr.set_dist(DistTrainCtx::new(h, plan, DEFAULT_BUCKET_ELEMS))?;
+                let mut metrics = Vec::with_capacity(cfg.steps);
+                for _ in 0..cfg.steps {
+                    metrics.push(tr.step()?);
+                }
+                Ok(TrainRankReport {
+                    rank,
+                    metrics,
+                    comm: tr.dist_comm_stats().unwrap_or_default(),
+                    dist: tr.dist_stats().unwrap_or_default(),
+                })
+            })
+        })
+        .collect();
+    let mut ranks = Vec::with_capacity(world);
+    for j in joins {
+        let report = j
+            .join()
+            .map_err(|_| anyhow!("a training rank panicked — see stderr for the mesh poison"))??;
+        ranks.push(report);
+    }
+    ranks.sort_by_key(|r| r.rank);
+    Ok(ranks)
+}
+
+/// Prompt batch with Zipf-distributed token ids (`s == 0.0` → uniform).
+/// Skewed ids concentrate routing on few experts — the regime where the
+/// capacity-aware plan and hierarchical AllToAll earn their keep.
+pub fn zipf_prompts(vocab: usize, batch: usize, len: usize, s: f64, seed: u64) -> Vec<Vec<i32>> {
+    let mut base = Rng::new(seed);
+    let mut rng = base.split(0x21F5);
+    (0..batch)
+        .map(|_| (0..len).map(|_| rng.zipf(vocab, s) as i32).collect())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_single_host() {
+        let cfg = DistConfig::default();
+        assert_eq!(cfg.workers, 1);
+        assert_eq!(cfg.strategy, A2aStrategy::Flat);
+        assert_eq!(cfg.ranks_per_node, 1);
+    }
+
+    #[test]
+    fn zipf_prompts_shape_and_determinism() {
+        let a = zipf_prompts(100, 3, 8, 1.1, 42);
+        let b = zipf_prompts(100, 3, 8, 1.1, 42);
+        assert_eq!(a, b, "same seed, same prompts");
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|p| p.len() == 8));
+        assert!(a.iter().flatten().all(|&t| t >= 0 && (t as usize) < 100));
+        // Skew shows up as mass on small ids relative to uniform.
+        let mass = |ps: &[Vec<i32>]| {
+            ps.iter().flatten().filter(|&&t| (t as usize) < 10).count()
+        };
+        let skewed = zipf_prompts(100, 32, 32, 1.2, 7);
+        let uniform = zipf_prompts(100, 32, 32, 0.0, 7);
+        assert!(mass(&skewed) > mass(&uniform), "zipf concentrates on the head");
+    }
+
+    #[test]
+    fn prompt_set_count_must_match_workers() {
+        let cfg = DistConfig { workers: 2, ..DistConfig::default() };
+        let err = run_infer_group("deep", &cfg, &[vec![vec![1, 2]]], 1, 7).unwrap_err();
+        assert!(err.to_string().contains("prompt sets"), "{}", err);
+    }
+
+    #[test]
+    fn group_report_aggregates() {
+        let mk = |rank, tokens, secs, a2a| RankReport {
+            rank,
+            outputs: Vec::new(),
+            tokens,
+            secs,
+            comm: CommStats::default(),
+            dist: DistStats { a2a_bytes: a2a, ..DistStats::default() },
+            imbalance: 1.0,
+        };
+        let g = GroupReport { ranks: vec![mk(0, 30, 2.0, 100), mk(1, 30, 3.0, 140)] };
+        assert_eq!(g.total_tokens(), 60);
+        assert!((g.aggregate_tokens_per_s() - 20.0).abs() < 1e-12, "60 tokens / 3 s straggler");
+        assert_eq!(g.total_a2a_bytes(), 240);
+        let empty = GroupReport { ranks: Vec::new() };
+        assert_eq!(empty.aggregate_tokens_per_s(), 0.0);
+    }
+}

@@ -1,0 +1,37 @@
+//! Multi-worker expert parallelism (docs/distributed.md): shard every
+//! layer's experts across N ranks and serve non-owned expert blocks
+//! over the in-process [`crate::comm::Mesh`] on both hot paths.
+//!
+//! - [`shard`] — [`ExpertShardPlan`]: the (layer, expert) → owner-rank
+//!   map, round-robin or capacity-aware from observed demand. The
+//!   per-layer, per-rank generalization of the sim-side single-layer
+//!   [`crate::moe::ExpertPlacement`].
+//! - [`worker`] — [`ExpertWorker`]: the inference-side per-rank
+//!   endpoint; two-round lockstep block fetch ([`FusionBuffer`]-packed,
+//!   flat or hierarchical AllToAll).
+//! - [`exchange`] — [`DistTrainCtx`]: the training-side sharded
+//!   optimizer; owners broadcast updated `p‖m‖v` blocks batched through
+//!   [`GradientBuckets`].
+//! - [`coordinator`] — group launcher: N symmetric ranks on threads,
+//!   folded into a [`GroupReport`].
+//!
+//! Everything here is bit-identical to the single-host fused path by
+//! construction: blocks move as bytes (pack/unpack/broadcast, never a
+//! floating-point reduction), and each rank's compute is exactly the
+//! single-host compute.
+//!
+//! [`FusionBuffer`]: crate::comm::FusionBuffer
+//! [`GradientBuckets`]: crate::comm::GradientBuckets
+
+pub mod shard;
+pub mod worker;
+pub mod exchange;
+pub mod coordinator;
+
+pub use coordinator::{
+    run_infer_group, run_train_group, zipf_prompts, DistConfig, GroupReport, RankReport,
+    TrainRankReport,
+};
+pub use exchange::{DistTrainCtx, DEFAULT_BUCKET_ELEMS};
+pub use shard::ExpertShardPlan;
+pub use worker::{DistStats, ExpertWorker};

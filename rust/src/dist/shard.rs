@@ -1,0 +1,209 @@
+//! Expert shard plans: which rank owns each (layer, expert) pair.
+//!
+//! Every rank holds the full dense stack (replicated) plus the expert
+//! slices it owns; routed experts a rank does not own are fetched from
+//! their owner over the mesh (see [`super::worker`]). Two placement
+//! policies live here:
+//!
+//! * [`ExpertShardPlan::balanced`] — rotation round-robin, load-blind.
+//!   `owner(l, e) = (e + l) % world`, so a hot expert id lands on a
+//!   different rank in every layer instead of hammering one rank.
+//! * [`ExpertShardPlan::capacity_aware`] — greedy longest-processing-time
+//!   placement against observed per-expert loads (§4.1: skewed routing
+//!   makes uniform shards a straggler machine).
+
+/// Immutable layer×expert → owner-rank map, identical on every rank.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpertShardPlan {
+    n_layers: usize,
+    n_experts: usize,
+    world: usize,
+    /// `owner[layer][expert]` = owning rank.
+    owner: Vec<Vec<usize>>,
+}
+
+impl ExpertShardPlan {
+    /// Rotation round-robin: per layer the experts split as evenly as
+    /// possible, and the assignment rotates by one rank per layer.
+    pub fn balanced(n_layers: usize, n_experts: usize, world: usize) -> Self {
+        assert!(world > 0, "world must be at least 1");
+        let owner = (0..n_layers)
+            .map(|l| (0..n_experts).map(|e| (e + l) % world).collect())
+            .collect();
+        ExpertShardPlan { n_layers, n_experts, world, owner }
+    }
+
+    /// Greedy LPT against observed loads: per layer, place experts in
+    /// descending-load order (ties broken by expert id) onto the
+    /// currently least-loaded rank (ties broken by rank id). Both
+    /// tie-breaks are total orders, so every rank derives the identical
+    /// plan from the same load table.
+    pub fn capacity_aware(
+        n_layers: usize,
+        n_experts: usize,
+        world: usize,
+        loads: &[Vec<u64>],
+    ) -> Self {
+        assert!(world > 0, "world must be at least 1");
+        assert_eq!(loads.len(), n_layers, "one load row per layer");
+        let mut owner = vec![vec![0usize; n_experts]; n_layers];
+        for (l, row) in loads.iter().enumerate() {
+            assert_eq!(row.len(), n_experts, "one load per expert");
+            let mut order: Vec<usize> = (0..n_experts).collect();
+            order.sort_by_key(|&e| (std::cmp::Reverse(row[e]), e));
+            let mut rank_load = vec![0u64; world];
+            let mut rank_count = vec![0usize; world];
+            let cap = (n_experts + world - 1) / world;
+            for e in order {
+                // Least-loaded rank with spare capacity (count cap keeps
+                // memory balanced even when load says "put it all on 0").
+                let r = (0..world)
+                    .filter(|&r| rank_count[r] < cap)
+                    .min_by_key(|&r| (rank_load[r], r))
+                    .expect("cap * world >= n_experts");
+                owner[l][e] = r;
+                rank_load[r] += row[e];
+                rank_count[r] += 1;
+            }
+        }
+        ExpertShardPlan { n_layers, n_experts, world, owner }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.n_experts
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Owning rank of `(layer, expert)`.
+    pub fn owner(&self, layer: usize, expert: usize) -> usize {
+        self.owner[layer][expert]
+    }
+
+    /// Experts of `layer` owned by `rank`, ascending.
+    pub fn owned_by(&self, layer: usize, rank: usize) -> Vec<usize> {
+        (0..self.n_experts).filter(|&e| self.owner[layer][e] == rank).collect()
+    }
+
+    /// Per-rank totals of a per-(layer, expert) load table under this plan.
+    pub fn rank_loads(&self, loads: &[Vec<u64>]) -> Vec<u64> {
+        let mut totals = vec![0u64; self.world];
+        for (l, row) in loads.iter().enumerate() {
+            for (e, &v) in row.iter().enumerate() {
+                totals[self.owner[l][e]] += v;
+            }
+        }
+        totals
+    }
+
+    /// max/mean of the per-rank totals — 1.0 is perfect balance. Returns
+    /// 1.0 when nothing has been routed yet.
+    pub fn imbalance_max_over_mean(&self, loads: &[Vec<u64>]) -> f64 {
+        let totals = self.rank_loads(loads);
+        let sum: u64 = totals.iter().sum();
+        if sum == 0 {
+            return 1.0;
+        }
+        let mean = sum as f64 / self.world as f64;
+        let max = *totals.iter().max().unwrap() as f64;
+        max / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_partitions_every_expert_exactly_once() {
+        let plan = ExpertShardPlan::balanced(3, 8, 4);
+        for l in 0..3 {
+            let mut seen = vec![false; 8];
+            for r in 0..4 {
+                for e in plan.owned_by(l, r) {
+                    assert!(!seen[e], "expert {} owned twice in layer {}", e, l);
+                    seen[e] = true;
+                    assert_eq!(plan.owner(l, e), r);
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "layer {} fully covered", l);
+        }
+    }
+
+    #[test]
+    fn balanced_shard_sizes_differ_by_at_most_one() {
+        let plan = ExpertShardPlan::balanced(2, 10, 4);
+        for l in 0..2 {
+            let sizes: Vec<usize> = (0..4).map(|r| plan.owned_by(l, r).len()).collect();
+            let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "sizes {:?}", sizes);
+        }
+    }
+
+    #[test]
+    fn balanced_rotates_hot_expert_across_layers() {
+        // Expert 0 must not live on the same rank in every layer.
+        let plan = ExpertShardPlan::balanced(4, 8, 4);
+        let owners: Vec<usize> = (0..4).map(|l| plan.owner(l, 0)).collect();
+        assert_eq!(owners, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn capacity_aware_beats_round_robin_on_skew() {
+        // Zipf-ish loads: expert e gets ~1/(e+1) of the traffic.
+        let n_experts = 8;
+        let loads: Vec<Vec<u64>> =
+            (0..2).map(|_| (0..n_experts).map(|e| 1000 / (e as u64 + 1)).collect()).collect();
+        let rr = ExpertShardPlan::balanced(2, n_experts, 4);
+        let ca = ExpertShardPlan::capacity_aware(2, n_experts, 4, &loads);
+        let i_rr = rr.imbalance_max_over_mean(&loads);
+        let i_ca = ca.imbalance_max_over_mean(&loads);
+        assert!(
+            i_ca <= i_rr + 1e-9,
+            "capacity-aware {:.3} should not be worse than round-robin {:.3}",
+            i_ca,
+            i_rr
+        );
+        assert!(i_ca < 1.5, "LPT keeps the hot rank under 1.5x mean, got {:.3}", i_ca);
+    }
+
+    #[test]
+    fn capacity_aware_respects_memory_cap() {
+        // Even with all load on one expert, no rank may hold more than
+        // ceil(E/world) experts — memory stays sharded.
+        let mut loads = vec![vec![0u64; 8]; 1];
+        loads[0][3] = 1_000_000;
+        let plan = ExpertShardPlan::capacity_aware(1, 8, 4, &loads);
+        for r in 0..4 {
+            assert!(plan.owned_by(0, r).len() <= 2);
+        }
+    }
+
+    #[test]
+    fn capacity_aware_is_deterministic() {
+        let loads: Vec<Vec<u64>> = vec![vec![5, 5, 5, 5, 5, 5]; 3];
+        let a = ExpertShardPlan::capacity_aware(3, 6, 2, &loads);
+        let b = ExpertShardPlan::capacity_aware(3, 6, 2, &loads);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn imbalance_of_empty_loads_is_unity() {
+        let plan = ExpertShardPlan::balanced(2, 4, 2);
+        assert_eq!(plan.imbalance_max_over_mean(&vec![vec![0; 4]; 2]), 1.0);
+    }
+
+    #[test]
+    fn single_rank_owns_everything() {
+        let plan = ExpertShardPlan::balanced(2, 4, 1);
+        for l in 0..2 {
+            assert_eq!(plan.owned_by(l, 0), vec![0, 1, 2, 3]);
+        }
+    }
+}

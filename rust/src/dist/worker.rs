@@ -1,0 +1,307 @@
+//! Expert worker: the per-rank endpoint of expert-parallel execution.
+//!
+//! Every rank runs the full dense stack locally and owns the expert
+//! slices its [`ExpertShardPlan`] assigns to it. When routing demands an
+//! expert the rank does not own, the worker fetches that expert's fused
+//! parameter block from the owner in one lockstep exchange per layer:
+//!
+//!   1. **request round** — flat AllToAll of the expert ids each rank
+//!      needs from each owner (tiny payloads);
+//!   2. **block round** — AllToAll (flat or hierarchical, §4.2) of the
+//!      fused parameter blocks, each destination's payload packed with
+//!      [`FusionBuffer`] (§2.3: one message per peer, not per expert).
+//!
+//! Both rounds run on every rank every layer — the collective schedule
+//! is a pure function of the (replicated) routing decisions, so ranks
+//! can never disagree about how many exchanges happen.
+
+use std::time::Instant;
+
+use super::shard::ExpertShardPlan;
+use crate::comm::hierarchical::{flat_a2a, hierarchical_a2a};
+use crate::comm::{A2aStrategy, CommStats, FusionBuffer, MeshHandle};
+
+/// Per-rank dist accounting (drives the `dist.*` gauges in `/stats`).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DistStats {
+    /// Bytes this rank pushed through the dist exchanges (both rounds).
+    pub a2a_bytes: u64,
+    /// Wall-clock µs spent inside [`ExpertWorker::fetch_layer`].
+    pub dispatch_us: u64,
+    /// Routed experts served from a remote owner.
+    pub remote_fetches: u64,
+    /// Routed experts this rank already owned.
+    pub local_hits: u64,
+}
+
+/// One rank's expert-parallel endpoint: mesh handle + shard plan +
+/// fetch protocol state.
+pub struct ExpertWorker {
+    handle: MeshHandle,
+    plan: ExpertShardPlan,
+    strategy: A2aStrategy,
+    ranks_per_node: usize,
+    block_len: usize,
+    stats: DistStats,
+    /// Observed routing demand per (layer, expert) — capacity feedback
+    /// for [`ExpertShardPlan::capacity_aware`] replans.
+    loads: Vec<Vec<u64>>,
+}
+
+impl ExpertWorker {
+    /// `block_len` is the fused per-expert parameter block length
+    /// (`CpuWeightStore::expert_block_len`); `ranks_per_node` is the
+    /// node width the hierarchical schedule assumes.
+    pub fn new(
+        handle: MeshHandle,
+        plan: ExpertShardPlan,
+        strategy: A2aStrategy,
+        ranks_per_node: usize,
+        block_len: usize,
+    ) -> Self {
+        assert_eq!(handle.world(), plan.world(), "plan world must match mesh world");
+        assert!(ranks_per_node > 0, "ranks_per_node must be at least 1");
+        assert_eq!(
+            handle.world() % ranks_per_node,
+            0,
+            "world must be a whole number of nodes"
+        );
+        let loads = vec![vec![0u64; plan.n_experts()]; plan.n_layers()];
+        ExpertWorker { handle, plan, strategy, ranks_per_node, block_len, stats: DistStats::default(), loads }
+    }
+
+    pub fn rank(&self) -> usize {
+        self.handle.rank()
+    }
+
+    pub fn world(&self) -> usize {
+        self.handle.world()
+    }
+
+    pub fn plan(&self) -> &ExpertShardPlan {
+        &self.plan
+    }
+
+    pub fn strategy(&self) -> A2aStrategy {
+        self.strategy
+    }
+
+    pub fn stats(&self) -> DistStats {
+        self.stats
+    }
+
+    pub fn comm_stats(&self) -> CommStats {
+        self.handle.stats()
+    }
+
+    /// max/mean routed demand across ranks under this plan, from the
+    /// demand this rank has observed so far.
+    pub fn imbalance_max_over_mean(&self) -> f64 {
+        self.plan.imbalance_max_over_mean(&self.loads)
+    }
+
+    /// Observed per-(layer, expert) demand — input for a capacity-aware
+    /// replan.
+    pub fn observed_loads(&self) -> &[Vec<u64>] {
+        &self.loads
+    }
+
+    /// One lockstep fetch round for `layer`. `need` is the exact routed
+    /// set this rank must materialize (kernel-emitted, contract v3);
+    /// `serve` reads the fused block of an expert this rank owns.
+    /// Returns the remote `(expert, block)` pairs in `need` order;
+    /// owned experts are already resident and are not returned.
+    pub fn fetch_layer(
+        &mut self,
+        layer: usize,
+        need: &[usize],
+        mut serve: impl FnMut(usize) -> Vec<f32>,
+    ) -> Vec<(usize, Vec<f32>)> {
+        let t0 = Instant::now();
+        let world = self.world();
+        let me = self.rank();
+        let sent_before = self.handle.stats().bytes_sent;
+
+        // Round 1: who needs what. chunk[dst] = ids I need from dst.
+        let mut req: Vec<Vec<f32>> = vec![Vec::new(); world];
+        let mut remote: Vec<usize> = Vec::new();
+        for &e in need {
+            let o = self.plan.owner(layer, e);
+            self.loads[layer][e] += 1;
+            if o == me {
+                self.stats.local_hits += 1;
+            } else {
+                req[o].push(e as f32);
+                remote.push(e);
+            }
+        }
+        let incoming = self.handle.all_to_all(req);
+
+        // Round 2: serve every requested owned block, one fused message
+        // per destination.
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); world];
+        for (dst, ids) in incoming.iter().enumerate() {
+            if dst == me || ids.is_empty() {
+                continue;
+            }
+            let names: Vec<String> =
+                ids.iter().map(|&idf| expert_slice_name(idf as usize)).collect();
+            let mut fb =
+                FusionBuffer::with_layout(names.iter().map(|n| (n.as_str(), self.block_len)));
+            for &idf in ids {
+                let e = idf as usize;
+                debug_assert_eq!(self.plan.owner(layer, e), me, "asked for a block I don't own");
+                fb.pack(&expert_slice_name(e), &serve(e));
+            }
+            out[dst] = fb.fused().to_vec();
+        }
+        let recv = match self.strategy {
+            A2aStrategy::Flat => flat_a2a(&mut self.handle, out),
+            A2aStrategy::Hierarchical => {
+                hierarchical_a2a(&mut self.handle, self.ranks_per_node, out).0
+            }
+        };
+
+        // Unfuse: recv[owner] holds my requested blocks in request order.
+        let mut by_owner: Vec<Vec<usize>> = vec![Vec::new(); world];
+        for &e in &remote {
+            by_owner[self.plan.owner(layer, e)].push(e);
+        }
+        let mut recv = recv;
+        let mut rx: Vec<Option<FusionBuffer>> = Vec::with_capacity(world);
+        for o in 0..world {
+            if by_owner[o].is_empty() {
+                rx.push(None);
+                continue;
+            }
+            let names: Vec<String> =
+                by_owner[o].iter().map(|&e| expert_slice_name(e)).collect();
+            let mut fb =
+                FusionBuffer::with_layout(names.iter().map(|n| (n.as_str(), self.block_len)));
+            fb.load_fused(std::mem::take(&mut recv[o]));
+            rx.push(Some(fb));
+        }
+        let fetched: Vec<(usize, Vec<f32>)> = remote
+            .iter()
+            .map(|&e| {
+                let o = self.plan.owner(layer, e);
+                let fb = rx[o].as_mut().expect("owner sent a payload");
+                (e, fb.unpack(&expert_slice_name(e)).to_vec())
+            })
+            .collect();
+
+        self.stats.remote_fetches += fetched.len() as u64;
+        self.stats.a2a_bytes += self.handle.stats().bytes_sent - sent_before;
+        self.stats.dispatch_us += t0.elapsed().as_micros() as u64;
+        fetched
+    }
+}
+
+/// Stable wire name of an expert's fused block within one exchange.
+fn expert_slice_name(expert: usize) -> String {
+    format!("e{}", expert)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Mesh;
+
+    /// Synthetic fused block: a pure function of (layer, expert) so any
+    /// requester can check what the owner must have sent.
+    fn block(layer: usize, e: usize, len: usize) -> Vec<f32> {
+        (0..len).map(|i| (1000 * layer + 10 * e + i) as f32).collect()
+    }
+
+    fn run_fetch(world: usize, strategy: A2aStrategy, p: usize) -> Vec<ExpertWorkerOutcome> {
+        let n_layers = 2;
+        let n_experts = 8;
+        let block_len = 5;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let plan = ExpertShardPlan::balanced(n_layers, n_experts, world);
+                    let mut w = ExpertWorker::new(h, plan, strategy, p, block_len);
+                    let me = w.rank();
+                    let mut all_fetched = Vec::new();
+                    for layer in 0..n_layers {
+                        // Every rank routes to experts {me, me+1, me+4} % 8:
+                        // a mix of owned and remote under the rotation plan.
+                        let need: Vec<usize> =
+                            [me, me + 1, me + 4].iter().map(|&e| e % n_experts).collect();
+                        let fetched = w.fetch_layer(layer, &need, |e| block(layer, e, block_len));
+                        for (e, b) in &fetched {
+                            assert_eq!(b, &block(layer, *e, block_len), "rank {} layer {}", me, layer);
+                        }
+                        all_fetched.push(fetched.len());
+                    }
+                    ExpertWorkerOutcome {
+                        stats: w.stats(),
+                        comm: w.comm_stats(),
+                        fetched_per_layer: all_fetched,
+                    }
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    struct ExpertWorkerOutcome {
+        stats: DistStats,
+        comm: CommStats,
+        fetched_per_layer: Vec<usize>,
+    }
+
+    #[test]
+    fn remote_blocks_arrive_bitwise_from_their_owner() {
+        for outcome in run_fetch(4, A2aStrategy::Flat, 1) {
+            assert!(outcome.stats.remote_fetches > 0, "rotation plan forces remote fetches");
+            assert!(outcome.stats.local_hits > 0, "each rank also routes to an owned expert");
+            assert!(outcome.stats.a2a_bytes > 0);
+            assert!(outcome.comm.bytes_sent > 0);
+            assert_eq!(outcome.fetched_per_layer.len(), 2);
+        }
+    }
+
+    #[test]
+    fn hierarchical_strategy_moves_identical_blocks() {
+        // 4 ranks as 2 nodes × 2: the rail-aligned schedule must deliver
+        // exactly what flat delivers (asserted per-block inside run_fetch).
+        for outcome in run_fetch(4, A2aStrategy::Hierarchical, 2) {
+            assert!(outcome.stats.remote_fetches > 0);
+            assert!(outcome.stats.a2a_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn single_rank_never_goes_remote() {
+        for outcome in run_fetch(1, A2aStrategy::Flat, 1) {
+            assert_eq!(outcome.stats.remote_fetches, 0);
+            assert_eq!(outcome.stats.local_hits, 6); // 3 experts × 2 layers
+        }
+    }
+
+    #[test]
+    fn demand_observation_feeds_imbalance() {
+        let handles = Mesh::new(2);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let plan = ExpertShardPlan::balanced(1, 4, 2);
+                    let mut w = ExpertWorker::new(h, plan, A2aStrategy::Flat, 1, 3);
+                    // Both ranks hammer expert 0 → its owner carries all load.
+                    w.fetch_layer(0, &[0], |e| block(0, e, 3));
+                    (w.imbalance_max_over_mean(), w.observed_loads().to_vec())
+                })
+            })
+            .collect();
+        for j in joins {
+            let (imb, loads) = j.join().unwrap();
+            assert_eq!(loads[0][0], 1);
+            assert_eq!(imb, 2.0, "one of two ranks carries everything");
+        }
+    }
+}

@@ -529,6 +529,17 @@ fn stats_json(stats: &ServerStats) -> Json {
         ("swap_applied_experts", Json::num(reg.gauge("swap.applied_experts").get() as f64)),
         ("swap_bytes", Json::num(reg.gauge("swap.bytes").get() as f64)),
         ("swap_passes", Json::num(reg.gauge("swap.passes").get() as f64)),
+        // Expert-parallel dist accounting (docs/distributed.md): group
+        // width, mesh bytes, fetch wall time (µs gauge → ms here) and
+        // the shard plan's observed load imbalance (stored ×1e3 —
+        // gauges are u64 — rendered back as a ratio).
+        ("dist_workers", Json::num(reg.gauge("dist.workers").get() as f64)),
+        ("dist_a2a_bytes", Json::num(reg.gauge("dist.a2a_bytes").get() as f64)),
+        ("dist_dispatch_ms", Json::num(reg.gauge("dist.dispatch_us").get() as f64 / 1e3)),
+        (
+            "dist_imbalance_max_over_mean",
+            Json::num(reg.gauge("dist.imbalance_max_over_mean").get() as f64 / 1e3),
+        ),
         ("counters", reg.snapshot()),
     ])
 }

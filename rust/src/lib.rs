@@ -20,6 +20,9 @@
 //! - [`moe`] — routing plans, capacity, expert placement, load stats.
 //! - [`train`] — trainer over the runtime, elastic scheduling (§4.1),
 //!   embedding partition in data parallelism (§4.3).
+//! - [`dist`] — multi-worker expert parallelism: shard plans, the
+//!   per-rank block-fetch worker, the sharded-optimizer exchange and
+//!   the N-rank group coordinator (`docs/distributed.md`).
 //! - [`infer`] — ring-memory offload engine (§3.2), the six-step graph
 //!   pipeline (§3.1), and the continuous-batching serving stack: an
 //!   admission queue (linger, backpressure, cancellation) feeding a
@@ -41,6 +44,7 @@ pub mod storage;
 pub mod prefetch;
 pub mod comm;
 pub mod moe;
+pub mod dist;
 pub mod train;
 pub mod infer;
 pub mod sim;

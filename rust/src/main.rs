@@ -27,7 +27,9 @@ use semoe::config::presets::{
     cluster_for_gpus, fig10_model, fig11_model, table1_model, table1_rows, table2_model,
     table2_rows, table3_setup,
 };
+use semoe::comm::A2aStrategy;
 use semoe::config::train::{ParamResidency, RouteSourceChoice, TrainConfig};
+use semoe::dist::{run_infer_group, run_train_group, DistConfig};
 use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, PipelineConfig, RoutedRingConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
@@ -86,6 +88,9 @@ fn print_usage() {
                 OptSpec { name: "routed", help: "routed-expert ring passes (copy only planned expert subsets)", default: None, is_flag: true },
                 OptSpec { name: "pipeline", help: "pipelined dense/sparse passes: layer_dense runs while expert weights stream (infer/serve ring, offload train)", default: None, is_flag: true },
                 OptSpec { name: "tokens", help: "tokens to generate (infer)", default: Some("16"), is_flag: false },
+                OptSpec { name: "workers", help: "expert-parallel worker ranks (infer/train; 1 = single host)", default: Some("1"), is_flag: false },
+                OptSpec { name: "a2a", help: "AllToAll schedule for --workers: flat|hier", default: Some("flat"), is_flag: false },
+                OptSpec { name: "ranks-per-node", help: "node width the hierarchical AllToAll assumes (must divide --workers)", default: Some("1"), is_flag: false },
                 OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
                 OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
                 OptSpec { name: "root", help: "repo root for lint/perf-stub/perf-compare (default: auto-discover)", default: None, is_flag: false },
@@ -113,7 +118,28 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--workers/--a2a/--ranks-per-node` triple.
+fn dist_config(args: &Args) -> Result<DistConfig> {
+    let workers = args.usize("workers", 1);
+    let raw = args.str("a2a", "flat");
+    let strategy = match raw.as_str() {
+        "flat" => A2aStrategy::Flat,
+        "hier" => A2aStrategy::Hierarchical,
+        _ => anyhow::bail!("unknown --a2a '{}' (accepted: flat|hier)", raw),
+    };
+    let ranks_per_node = args.usize("ranks-per-node", 1);
+    anyhow::ensure!(workers > 0, "--workers must be at least 1");
+    anyhow::ensure!(
+        ranks_per_node > 0 && workers % ranks_per_node == 0,
+        "--ranks-per-node ({}) must divide --workers ({})",
+        ranks_per_node,
+        workers
+    );
+    Ok(DistConfig { workers, strategy, ranks_per_node })
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
+    let dc = dist_config(args)?;
     let cfg = TrainConfig {
         preset: args.str("preset", "small"),
         steps: args.usize("steps", 20),
@@ -129,8 +155,45 @@ fn cmd_train(args: &Args) -> Result<()> {
             })?
         },
         log_every: args.usize("log-every", 5),
+        dist_world: dc.workers,
         ..Default::default()
     };
+    if dc.workers > 1 {
+        // Expert-parallel group: every rank replicates the step, runs
+        // AdamW only for its owned experts, and receives the rest in the
+        // end-of-step exchange — losses are bit-identical to the
+        // single-host offload trainer (docs/distributed.md §Training).
+        anyhow::ensure!(
+            args.flag("offload"),
+            "--workers N training shards the offload trainer's expert state — pass --offload"
+        );
+        println!(
+            "training {} for {} steps on {} expert-parallel workers [offload]",
+            cfg.preset, cfg.steps, dc.workers
+        );
+        let t0 = std::time::Instant::now();
+        let ranks = run_train_group(&cfg)?;
+        let r0 = &ranks[0];
+        for (s, m) in r0.metrics.iter().enumerate() {
+            if s % cfg.log_every == 0 || s + 1 == r0.metrics.len() {
+                println!("step {:>4}  loss {:.4}  ce {:.4}  aux {:.3}", m.step, m.loss, m.ce, m.aux);
+            }
+        }
+        let total_tokens: usize = r0.metrics.iter().map(|m| m.tokens).sum::<usize>() * dc.workers;
+        for r in &ranks {
+            println!(
+                "rank {}: exchange {} owned / {} received blocks, {} over the mesh, {} collectives",
+                r.rank,
+                r.dist.local_hits,
+                r.dist.remote_fetches,
+                human_bytes(r.dist.a2a_bytes),
+                r.comm.ops
+            );
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!("{} tokens in {:.1}s → {:.0} tokens/s", total_tokens, secs, total_tokens as f64 / secs);
+        return Ok(());
+    }
     let arts = Rc::new(ModelArtifacts::load(&cfg.preset)?);
     println!("training {} ({} params) for {} steps [{}{}]",
         cfg.preset,
@@ -257,6 +320,14 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let routed = args.flag("routed");
     let pipeline = args.flag("pipeline");
     let n_new = args.usize("tokens", 16);
+    let dc = dist_config(args)?;
+    if dc.workers > 1 {
+        anyhow::ensure!(
+            ring == 0,
+            "--workers runs resident engines (mesh fetch and ring offload don't compose)"
+        );
+        return infer_group(&preset, &dc, n_new, args.u64("seed", 7));
+    }
     let arts = Rc::new(ModelArtifacts::load(&preset)?);
     let mode = if ring > 0 { InferMode::Ring { k: ring } } else { InferMode::Resident };
     let mut engine = InferenceEngine::new(arts.clone(), mode, args.u64("seed", 7), None)?;
@@ -302,6 +373,49 @@ fn cmd_infer(args: &Args) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+/// `semoe infer --workers N`: expert-parallel group decode. Each rank
+/// decodes its own prompt batch; experts are sharded across ranks and
+/// non-owned blocks travel over the mesh (docs/distributed.md).
+fn infer_group(preset: &str, dc: &DistConfig, n_new: usize, seed: u64) -> Result<()> {
+    let b = ModelArtifacts::load(preset)?.preset.batch_size;
+    let prompts: Vec<Vec<Vec<i32>>> = (0..dc.workers)
+        .map(|r| (0..b).map(|i| vec![(i as i32 + 1) * 3 + r as i32; 4]).collect())
+        .collect();
+    println!(
+        "inference [{} expert-parallel workers, {} AllToAll], {} prompts/rank",
+        dc.workers,
+        match dc.strategy {
+            A2aStrategy::Flat => "flat",
+            A2aStrategy::Hierarchical => "hierarchical",
+        },
+        b
+    );
+    let g = run_infer_group(preset, dc, &prompts, n_new, seed)?;
+    for (i, row) in g.ranks[0].outputs.iter().enumerate() {
+        println!("rank 0 seq {}: {:?}", i, row);
+    }
+    for r in &g.ranks {
+        println!(
+            "rank {}: {} tokens in {:.2}s, {} remote / {} local expert fetches, a2a {}, \
+             imbalance {:.2}",
+            r.rank,
+            r.tokens,
+            r.secs,
+            r.dist.remote_fetches,
+            r.dist.local_hits,
+            human_bytes(r.dist.a2a_bytes),
+            r.imbalance
+        );
+    }
+    println!(
+        "aggregate: {} tokens → {:.1} tokens/s, {} over the mesh",
+        g.total_tokens(),
+        g.aggregate_tokens_per_s(),
+        human_bytes(g.total_a2a_bytes())
+    );
     Ok(())
 }
 

@@ -24,6 +24,6 @@ pub use router::DispatchPlan;
 pub use routing::{
     routed_set_from_ids, CarriedKernelSource, DensePrefixSource, EmbeddingProxySource,
     LayerParamResolver, PlannedRoute, RouteQuery, RouteSource, RouteSourceKind,
-    ShadowOracleSource,
+    ShadowOracleSource, ShardedRouteSource,
 };
 pub use shadow::ShadowRouter;

@@ -44,6 +44,10 @@ pub enum RouteSourceKind {
     /// up front because the pass's own `layer_dense` prefix emits the
     /// exact set before any expert weight is needed.
     DensePrefix,
+    /// Expert-parallel (dist) execution: the rank's own dense prefix
+    /// emits the exact set, then non-owned experts are fetched from
+    /// their owner rank over the mesh (`dist::ExpertWorker`).
+    Sharded,
 }
 
 /// A planned pass: per-layer expert sets (sorted, deduped) plus the
@@ -286,6 +290,57 @@ impl RouteSource for DensePrefixSource {
     }
 }
 
+// ---------------------------------------------------------------------
+// Sharded planner (expert-parallel dist execution)
+// ---------------------------------------------------------------------
+
+/// The dist-mode planner: like [`DensePrefixSource`] it plans the EMPTY
+/// set (each rank's own dense prefix emits the exact routed set before
+/// any expert weight is touched), but it also accumulates the observed
+/// per-(layer, expert) demand — the capacity feedback a
+/// `dist::ExpertShardPlan::capacity_aware` replan consumes. Its `kind`
+/// tags `/stats` route provenance as expert-parallel.
+pub struct ShardedRouteSource {
+    counts: Vec<Vec<u64>>,
+}
+
+impl ShardedRouteSource {
+    pub fn new(n_layers: usize, n_experts: usize) -> ShardedRouteSource {
+        ShardedRouteSource { counts: vec![vec![0; n_experts]; n_layers] }
+    }
+
+    /// Observed routed-token demand per (layer, expert) since the last
+    /// `reset`.
+    pub fn observed(&self) -> &[Vec<u64>] {
+        &self.counts
+    }
+}
+
+impl RouteSource for ShardedRouteSource {
+    fn kind(&self) -> RouteSourceKind {
+        RouteSourceKind::Sharded
+    }
+
+    fn plan(&mut self, q: &RouteQuery) -> PlannedRoute {
+        PlannedRoute {
+            per_layer: vec![Vec::new(); q.n_layers],
+            provenance: RouteSourceKind::Sharded,
+        }
+    }
+
+    fn observe(&mut self, layer: usize, counts: &[usize]) {
+        for (acc, &c) in self.counts[layer].iter_mut().zip(counts) {
+            *acc += c as u64;
+        }
+    }
+
+    fn reset(&mut self) {
+        for row in &mut self.counts {
+            row.iter_mut().for_each(|c| *c = 0);
+        }
+    }
+}
+
 /// Test fixture: a planner that predicts an EMPTY set for every layer,
 /// so every kernel-routed expert is a plan miss — the stress case for
 /// the contract-v3 tail-only repair paths. Shared by the engine and
@@ -411,6 +466,22 @@ mod tests {
         src.reset();
         let p = with_query(3, 4, |q| src.plan(q));
         assert_eq!(p.per_layer, vec![Vec::<usize>::new(); 3]);
+    }
+
+    #[test]
+    fn sharded_source_plans_empty_and_accumulates_demand() {
+        let mut src = ShardedRouteSource::new(2, 4);
+        assert_eq!(src.kind(), RouteSourceKind::Sharded);
+        let p = with_query(2, 4, |q| src.plan(q));
+        assert_eq!(p.provenance, RouteSourceKind::Sharded);
+        assert_eq!(p.per_layer, vec![Vec::<usize>::new(); 2]);
+        src.observe(0, &[3, 0, 1, 0]);
+        src.observe(0, &[1, 0, 0, 0]);
+        src.observe(1, &[0, 2, 0, 0]);
+        assert_eq!(src.observed()[0], vec![4, 0, 1, 0]);
+        assert_eq!(src.observed()[1], vec![0, 2, 0, 0]);
+        src.reset();
+        assert_eq!(src.observed()[0], vec![0; 4]);
     }
 
     #[test]

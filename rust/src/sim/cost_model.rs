@@ -193,6 +193,48 @@ impl CostModel {
         self.model.n_layers as f64 * c.per_layer_sparse as f64 * frac * 2.0
     }
 
+    // -------------------------------------------------------- dist lane
+
+    /// Per-pass mesh bytes of **expert-parallel block fetch** with
+    /// `world` ranks (`infer --workers N`): each layer, each rank
+    /// materializes the expected routed distinct expert set, of which
+    /// `(world−1)/world` live on a peer under a balanced shard plan,
+    /// and every remote expert's fused fp32 `p` block crosses the mesh
+    /// once. At `world == 1` everything is local and nothing travels —
+    /// the structural contrast with the ring lane, which re-copies
+    /// weights every pass regardless of placement.
+    pub fn dist_a2a_bytes(&self, tokens: f64, zipf_s: f64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        let routed = self.expected_routed_experts(tokens, zipf_s);
+        let remote_frac = (world - 1) as f64 / world as f64;
+        let block_bytes = self.model.param_counts().per_layer_sparse as f64
+            / self.model.n_experts.max(1) as f64
+            * 4.0;
+        self.model.n_layers as f64 * routed * remote_frac * block_bytes
+    }
+
+    /// Wall seconds of one dist pass's block exchanges under a
+    /// strategy: the pass's total fetch volume spread over the rank
+    /// pairs, priced on the cluster topology (flat pays the rail for
+    /// every cross-rank pair; hierarchical stages intra-node first,
+    /// §4.2).
+    pub fn dist_pass_secs(
+        &self,
+        tokens: f64,
+        zipf_s: f64,
+        world: usize,
+        strategy: A2aStrategy,
+    ) -> f64 {
+        let total = self.dist_a2a_bytes(tokens, zipf_s, world);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let pairs = (world * (world - 1)) as f64;
+        AllToAllPlan::price(&self.topo, total / pairs, strategy).time
+    }
+
     // ------------------------------------------------- pipelined lane
 
     /// Device seconds of ONE layer's dense prefix (attention + router —
@@ -463,6 +505,45 @@ mod tests {
                 assert!(cm.ring_bytes_routed(t, s) <= dense + 1e-6);
             }
         }
+    }
+
+    /// Dist pricing: expert-parallel block fetch vs re-copying weights
+    /// every pass. Sharding keeps every expert resident on exactly one
+    /// rank, so only the remote routed subset ever travels — strictly
+    /// fewer bytes than a 2-rank group's worth of routed ring copies,
+    /// zero at world 1, and monotone in world (more peers → more of the
+    /// routed set is remote).
+    #[test]
+    fn dist_block_fetch_prices_below_ring_copies() {
+        let cm = CostModel::new(table1_model(64, 64), cluster_for_gpus(64));
+        let tokens = 128.0;
+        for s in [0.0, 1.2] {
+            assert_eq!(cm.dist_a2a_bytes(tokens, s, 1), 0.0, "solo rank fetches nothing");
+            let w2 = cm.dist_a2a_bytes(tokens, s, 2);
+            let w4 = cm.dist_a2a_bytes(tokens, s, 4);
+            let w8 = cm.dist_a2a_bytes(tokens, s, 8);
+            assert!(w2 > 0.0);
+            assert!(w2 < w4 && w4 < w8, "{} < {} < {}", w2, w4, w8);
+            // A 2-rank group vs 2 ring engines re-copying routed subsets:
+            // the fetch moves only the remote half of the routed set and
+            // never the dense prefix.
+            assert!(
+                w2 < 2.0 * cm.ring_bytes_routed(tokens, s),
+                "{} vs {}",
+                w2,
+                2.0 * cm.ring_bytes_routed(tokens, s)
+            );
+            // Skew helps the fetch exactly like it helps the ring.
+        }
+        assert!(cm.dist_a2a_bytes(tokens, 1.2, 2) < cm.dist_a2a_bytes(tokens, 0.0, 2));
+        // Hierarchical staging prices at or below flat on the same
+        // volume whenever ranks share nodes (it rides NVLink intra-node
+        // instead of paying the rail per pair).
+        let flat = cm.dist_pass_secs(tokens, 1.2, 8, A2aStrategy::Flat);
+        let hier = cm.dist_pass_secs(tokens, 1.2, 8, A2aStrategy::Hierarchical);
+        assert!(flat > 0.0 && hier > 0.0);
+        assert!(hier <= flat, "hierarchical must not price above flat: {} vs {}", hier, flat);
+        assert_eq!(cm.dist_pass_secs(tokens, 1.2, 1, A2aStrategy::Flat), 0.0);
     }
 
     /// Contract-v2 pricing: obtaining routed sets from the kernel's own

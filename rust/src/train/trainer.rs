@@ -63,8 +63,9 @@ fn sync_grad(mesh: &mut Option<MeshHandle>, grad: &mut [f32]) {
     }
 }
 use super::optimizer::{cpu_adamw, cpu_adamw_zero_grad, init_params, Group, ParamState};
-use crate::comm::MeshHandle;
+use crate::comm::{CommStats, MeshHandle};
 use crate::config::train::{RouteSourceChoice, TrainConfig};
+use crate::dist::{DistStats, DistTrainCtx};
 use crate::metrics::{Phase, Timeline};
 use crate::moe::routing::{
     routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource, LayerParamResolver,
@@ -312,6 +313,11 @@ pub struct OffloadTrainer {
     pstats: PrefetchStats,
 
     mesh: Option<MeshHandle>,
+    /// Sharded-optimizer expert parallelism (`train --workers N`): each
+    /// expert's AdamW runs only on its owner rank, updated blocks are
+    /// broadcast end-of-step (docs/distributed.md §Training). `None` =
+    /// single-host path.
+    dist: Option<DistTrainCtx>,
     corpus: SyntheticCorpus,
     cfg: TrainConfig,
     step: usize,
@@ -456,6 +462,7 @@ impl OffloadTrainer {
             ckpt_dirty,
             pstats: PrefetchStats::default(),
             mesh,
+            dist: None,
             corpus,
             cfg,
             step: 0,
@@ -480,6 +487,42 @@ impl OffloadTrainer {
     /// new source's concern — the kernel keeps feeding `observe`.
     pub fn set_route_source(&mut self, src: Box<dyn RouteSource>) {
         self.route = src;
+    }
+
+    /// Enable sharded-optimizer expert parallelism (`train --workers N`):
+    /// each expert's AdamW update runs only on its owner rank and the
+    /// updated `p‖m‖v` block is broadcast at the end of the step.
+    /// Mutually exclusive with the data-parallel `mesh` — dist ranks
+    /// replicate the batch (same corpus seed) instead of sharding it,
+    /// which is what keeps every rank bit-identical to the single-host
+    /// trainer (docs/distributed.md §Training).
+    pub fn set_dist(&mut self, ctx: DistTrainCtx) -> Result<()> {
+        anyhow::ensure!(
+            self.mesh.is_none(),
+            "dist expert parallelism and the data-parallel mesh are mutually exclusive"
+        );
+        let m = &self.arts.preset;
+        anyhow::ensure!(
+            ctx.plan().n_layers() == m.n_layers && ctx.plan().n_experts() == m.n_experts,
+            "shard plan is {}x{} but preset {} is {}x{}",
+            ctx.plan().n_layers(),
+            ctx.plan().n_experts(),
+            m.name,
+            m.n_layers,
+            m.n_experts
+        );
+        self.dist = Some(ctx);
+        Ok(())
+    }
+
+    /// Dist accounting (exchange bytes/blocks), if dist mode is on.
+    pub fn dist_stats(&self) -> Option<DistStats> {
+        self.dist.as_ref().map(|c| c.stats())
+    }
+
+    /// Mesh-level collective counters for the dist exchange, if on.
+    pub fn dist_comm_stats(&self) -> Option<CommStats> {
+        self.dist.as_ref().map(|c| c.comm_stats())
     }
 
 
@@ -514,7 +557,7 @@ impl OffloadTrainer {
             embed, head, layers, sched, layout, route, lf_y, lf_aux, lf_route,
             lf_gate, lf_pos, lf_keep, lf_h, lf_moe_in, tail_y,
             ld_h, ld_moe_in, ld_aux, ld_route, ld_gate, ld_pos, ld_keep,
-            load, hot, stamps, ckpt_dirty, pstats, mesh, timeline, ..
+            load, hot, stamps, ckpt_dirty, pstats, mesh, dist, timeline, ..
         } = self;
         let (lf_y, lf_aux, lf_route) = (*lf_y, *lf_aux, *lf_route);
         let (lf_gate, lf_pos, lf_keep) = (*lf_gate, *lf_pos, *lf_keep);
@@ -786,6 +829,10 @@ impl OffloadTrainer {
         });
 
         // ---- Backward sweep (recompute inside layer_bwd) + updates.
+        // Dist mode: every update_set member per layer, recorded for the
+        // end-of-step sharded-optimizer exchange. Identical on all ranks
+        // because routing is replicated.
+        let mut dirty_all: Vec<Vec<usize>> = vec![Vec::new(); n_layers];
         let daux = HostTensor::scalar_f32(model.aux_loss_weight as f32);
         for l in (0..n_layers).rev() {
             let mut inputs = vec![xs[l].clone()];
@@ -851,6 +898,12 @@ impl OffloadTrainer {
                 timeline.time(Phase::Compute, || {
                     cpu_adamw(&mut pf[..off], &lg[..off], &mut m[..off], &mut v[..off], step_f, lr_f);
                     for &e in &update_set {
+                        // Sharded optimizer: a non-owned expert's AdamW
+                        // runs on its owner rank only; the exchange
+                        // below lands the owner's exact bytes here.
+                        if dist.as_ref().map(|c| !c.owns(l, e)).unwrap_or(false) {
+                            continue;
+                        }
                         for (o, len) in layout.expert_ranges(e) {
                             let (a, b) = (off + o, off + o + len);
                             cpu_adamw(&mut pf[a..b], &lg[a..b], &mut m[a..b], &mut v[a..b], step_f, lr_f);
@@ -862,6 +915,14 @@ impl OffloadTrainer {
             // Per-expert dirty writeback: only updated experts travel.
             let st = &layers[l];
             for &e in &update_set {
+                if let Some(ctx) = dist.as_ref() {
+                    dirty_all[l].push(e);
+                    if !ctx.owns(l, e) {
+                        // Peer-owned: stale here until the exchange below
+                        // overwrites state, stamp and store together.
+                        continue;
+                    }
+                }
                 stamps[l][e] = step_u;
                 ckpt_dirty[l][e] = true;
                 let block = SparseBlock {
@@ -885,6 +946,57 @@ impl OffloadTrainer {
         timeline.time(Phase::Compute, || {
             cpu_adamw(embed.p.fused_mut(), &eg, &mut embed.m, &mut embed.v, step_f, lr_f)
         });
+
+        // ---- Sharded-optimizer exchange (dist mode): owners broadcast
+        // this step's updated p‖m‖v blocks, bucketed; peers overwrite
+        // their replica byte-for-byte and write the block through to
+        // their own store (docs/distributed.md §Training).
+        if let Some(ctx) = dist.as_mut() {
+            let expert_len = layout.expert_len();
+            // Owned payloads gathered up front: `mine` must not read
+            // `layers` while `apply` holds it mutably.
+            let mut outbox: HashMap<(usize, usize), Vec<f32>> = HashMap::new();
+            for (l, experts) in dirty_all.iter().enumerate() {
+                for &e in experts {
+                    if !ctx.owns(l, e) {
+                        continue;
+                    }
+                    let st = &layers[l];
+                    let off = st.sparse_offset();
+                    let mut block = layout.gather(e, &st.p.fused()[off..]);
+                    block.extend(layout.gather(e, &st.m[off..]));
+                    block.extend(layout.gather(e, &st.v[off..]));
+                    outbox.insert((l, e), block);
+                }
+            }
+            timeline.time(Phase::Communication, || -> Result<()> {
+                ctx.exchange_step(
+                    &dirty_all,
+                    3 * expert_len,
+                    |l, e| outbox.remove(&(l, e)).expect("owned dirty block gathered"),
+                    |l, e, data| {
+                        let st = &mut layers[l];
+                        let off = st.sparse_offset();
+                        let (p_part, rest) = data.split_at(expert_len);
+                        let (m_part, v_part) = rest.split_at(expert_len);
+                        layout.scatter(e, p_part, &mut st.p.fused_mut()[off..]);
+                        layout.scatter(e, m_part, &mut st.m[off..]);
+                        layout.scatter(e, v_part, &mut st.v[off..]);
+                        stamps[l][e] = step_u;
+                        ckpt_dirty[l][e] = true;
+                        sched.update(SparseBlock {
+                            layer: l,
+                            expert: e,
+                            p: p_part.to_vec(),
+                            m: m_part.to_vec(),
+                            v: v_part.to_vec(),
+                        });
+                        pstats.writebacks += 1;
+                        Ok(())
+                    },
+                )
+            })?;
+        }
 
         // ---- Safety drain. Every planned fetch is consumed by its
         // layer's splice loop above (plan waste is counted there), so

@@ -5,6 +5,7 @@ use std::rc::Rc;
 
 use semoe::comm::Mesh;
 use semoe::config::train::TrainConfig;
+use semoe::dist::run_train_group;
 use semoe::runtime::{HostTensor, ModelArtifacts};
 use semoe::train::{checkpoint, OffloadTrainer, ResidentTrainer, SyntheticCorpus};
 
@@ -98,6 +99,40 @@ fn data_parallel_offload_training_converges_and_syncs() {
     let (f1, l1, _) = results[1];
     assert!((f0 - f1).abs() < 1.0, "init losses comparable: {} vs {}", f0, f1);
     assert!((l0 - l1).abs() < 1.0);
+}
+
+#[test]
+fn dist_expert_parallel_training_is_bit_identical_to_single_host() {
+    // The tentpole acceptance check for `train --workers N`: every rank
+    // of an expert-parallel group must produce the exact loss bits of a
+    // single-host offload trainer with the same config — the exchange
+    // moves optimizer state as bytes, never through a floating-point
+    // reduction (docs/distributed.md §Training).
+    for pipelined in [false, true] {
+        let mut c = cfg(3);
+        c.pipelined = pipelined;
+        let solo: Vec<u32> = {
+            let arts = Rc::new(ModelArtifacts::load("tiny").unwrap());
+            let mut tr = OffloadTrainer::new(arts, c.clone(), None).unwrap();
+            (0..c.steps).map(|_| tr.step().unwrap().loss.to_bits()).collect()
+        };
+        c.dist_world = 2;
+        let ranks = run_train_group(&c).unwrap();
+        assert_eq!(ranks.len(), 2);
+        let mut exchanged = 0u64;
+        for r in &ranks {
+            let got: Vec<u32> = r.metrics.iter().map(|m| m.loss.to_bits()).collect();
+            assert_eq!(
+                got, solo,
+                "rank {} diverged from single host (pipelined={})",
+                r.rank, pipelined
+            );
+            exchanged += r.dist.a2a_bytes;
+            assert!(r.dist.remote_fetches > 0, "rank {} received no peer blocks", r.rank);
+            assert!(r.comm.ops > 0, "rank {} fired no collectives", r.rank);
+        }
+        assert!(exchanged > 0, "the exchange must move real bytes");
+    }
 }
 
 #[test]

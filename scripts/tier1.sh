@@ -46,6 +46,17 @@ echo "== tier1: tail-only repair regression (contract v3: no full-layer re-runs)
 cargo test -q forced_misses_repair_via_expert_tail_bitwise
 cargo test -q plan_miss_repairs_execute_only_the_expert_tail
 
+echo "== tier1: expert-parallel bit-identity regression (dist walk == single-host, both hot paths)"
+cargo test -q dist_generate_matches_single_host_bitwise
+cargo test -q dist_expert_parallel_training_is_bit_identical_to_single_host
+
+echo "== tier1: expert-parallel CLI smoke (2 workers, mesh dispatch, poisonable barrier)"
+cargo run --release -- infer --workers 2 --preset tiny --tokens 2
+cargo run --release -- train --workers 2 --offload --preset tiny --steps 2
+
+echo "== tier1: expert-parallel decode bench smoke (workers x a2a x skew table, rank0 bitwise invariant)"
+SEMOE_SMOKE=1 cargo bench --bench fig11_hierarchical_a2a
+
 echo "== tier1: checkpoint crash-injection suite (randomized fault points, resume bit-equality)"
 SEMOE_SMOKE=1 cargo test -q --test checkpoint_crash
 
