@@ -11,6 +11,11 @@
 //! prompts, with rank 0's outputs asserted bitwise invariant across
 //! every configuration and the multi-worker aggregate asserted at or
 //! above single-worker throughput on the skewed row.
+//! Part 4 measures the dispatch-mode comparison on the same hot path:
+//! {weights, tokens, auto} × worlds × {Zipf, uniform}, rank 0 asserted
+//! bitwise invariant across all three lanes AND equal to single host,
+//! tokens at or above weights on the large-expert/small-batch row, and
+//! auto never below the slower fixed lane.
 //!
 //! `cargo bench --bench fig11_hierarchical_a2a` (SEMOE_SMOKE=1 for the
 //! tier1 quick pass).
@@ -18,7 +23,7 @@
 use semoe::comm::hierarchical::{flat_a2a, hierarchical_a2a};
 use semoe::comm::{A2aStrategy, AllToAllPlan, Mesh, Topology};
 use semoe::config::presets::{cluster_for_gpus, fig11_model};
-use semoe::dist::{run_infer_group, zipf_prompts, DistConfig};
+use semoe::dist::{run_infer_group, zipf_prompts, DispatchMode, DistConfig};
 use semoe::metrics::Report;
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_training, CostModel, Schedule};
@@ -152,7 +157,12 @@ fn real_workers(rep: &mut Report) {
                 &[(A2aStrategy::Flat, "flat", 1), (A2aStrategy::Hierarchical, "hier", 2)]
             };
             for &(strategy, sname, p) in schedules {
-                let cfg = DistConfig { workers: w, strategy, ranks_per_node: p };
+                let cfg = DistConfig {
+                    workers: w,
+                    strategy,
+                    ranks_per_node: p,
+                    dispatch: DispatchMode::Weights,
+                };
                 let prompts: Vec<Vec<Vec<i32>>> = (0..w)
                     .map(|r| zipf_prompts(vocab, b, 4, s, 1000 + r as u64))
                     .collect();
@@ -208,11 +218,109 @@ fn real_workers(rep: &mut Report) {
     rep.note("rank 0 outputs bitwise invariant across workers × schedules (asserted)");
 }
 
+fn token_dispatch(rep: &mut Report) {
+    let smoke = std::env::var("SEMOE_SMOKE").is_ok();
+    let preset = "deep";
+    let (vocab, b) = {
+        let arts = ModelArtifacts::load(preset).expect("deep artifacts (run `make artifacts`)");
+        (arts.preset.vocab_size, arts.preset.batch_size)
+    };
+    // Short prompts + few decode steps keep the kept-token payload small
+    // relative to the deep preset's expert blocks: the regime where
+    // shipping activations beats shipping weights.
+    let n_new = if smoke { 2 } else { 6 };
+    let worlds: &[usize] = if smoke { &[2] } else { &[2, 4] };
+    let modes = [DispatchMode::Weights, DispatchMode::Tokens, DispatchMode::Auto];
+    let t = rep.table(
+        "token-dispatch mode comparison (deep preset)",
+        &["config", "mode", "agg tokens/s", "a2a MB", "token MB", "token layers", "weight layers"],
+    );
+    // Rank 0 decodes the same prompts everywhere; gates and residuals are
+    // applied at the home rank, so the dispatch lane must never change
+    // the math — across modes, worlds, and vs a single host.
+    for (label, s) in [("zipf", 1.2f64), ("uniform", 0.0f64)] {
+        let solo_cfg = DistConfig { workers: 1, ..DistConfig::default() };
+        let solo_prompts = vec![zipf_prompts(vocab, b, 4, s, 1000)];
+        let solo = run_infer_group(preset, &solo_cfg, &solo_prompts, n_new, 7).expect("solo run");
+        let want = solo.ranks[0].outputs.clone();
+        for &w in worlds {
+            let mut tps = [0.0f64; 3];
+            for (i, &mode) in modes.iter().enumerate() {
+                let cfg = DistConfig {
+                    workers: w,
+                    strategy: A2aStrategy::Flat,
+                    ranks_per_node: 1,
+                    dispatch: mode,
+                };
+                let prompts: Vec<Vec<Vec<i32>>> = (0..w)
+                    .map(|r| zipf_prompts(vocab, b, 4, s, 1000 + r as u64))
+                    .collect();
+                let g = run_infer_group(preset, &cfg, &prompts, n_new, 7).expect("group run");
+                assert_eq!(
+                    g.ranks[0].outputs, want,
+                    "rank 0 diverged from single host at w={} {} {}",
+                    w,
+                    label,
+                    mode.as_str()
+                );
+                if mode == DispatchMode::Tokens {
+                    let moved: u64 = g.ranks.iter().map(|r| r.dist.token_bytes).sum();
+                    assert!(moved > 0, "token mode must ship activation rows");
+                }
+                tps[i] = g.aggregate_tokens_per_s();
+                let token_mb: f64 =
+                    g.ranks.iter().map(|r| r.dist.token_bytes as f64).sum::<f64>() / 1e6;
+                let (tl, wl) = g.ranks.iter().fold((0u64, 0u64), |(a, c), r| {
+                    (a + r.dist.token_layers, c + r.dist.weight_layers)
+                });
+                rep.row(
+                    t,
+                    vec![
+                        format!("w{} {} {}", w, label, mode.as_str()),
+                        mode.as_str().to_string(),
+                        format!("{:.1}", tps[i]),
+                        format!("{:.2}", g.total_a2a_bytes() as f64 / 1e6),
+                        format!("{:.2}", token_mb),
+                        tl.to_string(),
+                        wl.to_string(),
+                    ],
+                );
+            }
+            // Smoke mode keeps the bitwise asserts but skips timing ones
+            // (sub-second walls on loaded CI boxes are noisy).
+            if !smoke {
+                let (w_tps, t_tps, a_tps) = (tps[0], tps[1], tps[2]);
+                if w == 2 && label == "zipf" {
+                    assert!(
+                        t_tps >= w_tps,
+                        "token dispatch fell below weight dispatch on the \
+                         large-expert/small-batch row: {:.1} < {:.1} tokens/s",
+                        t_tps,
+                        w_tps
+                    );
+                }
+                assert!(
+                    a_tps >= w_tps.min(t_tps),
+                    "auto planner slower than both fixed lanes at w{} {}: \
+                     {:.1} < min({:.1}, {:.1})",
+                    w,
+                    label,
+                    a_tps,
+                    w_tps,
+                    t_tps
+                );
+            }
+        }
+    }
+    rep.note("rank 0 outputs bitwise invariant across dispatch modes and vs single host (asserted)");
+}
+
 fn main() {
     let mut rep = Report::new("fig11_hierarchical_a2a");
     priced(&mut rep);
     real_mesh(&mut rep);
     real_workers(&mut rep);
+    token_dispatch(&mut rep);
     println!("{}", rep.to_markdown());
     rep.save(std::path::Path::new("reports")).expect("write report");
 }

@@ -1,0 +1,186 @@
+"""Python mirror of ``sim::CostModel``'s dispatch-lane arithmetic.
+
+Pure-python re-derivation (no jax needed) of the byte formulas behind
+the adaptive dispatch planner (rust/src/sim/cost_model.rs,
+docs/distributed.md §Token dispatch):
+
+- weight lane:  E[routed experts] x remote fraction x fused block bytes
+- token lane:   2 x kept_tokens x d_model x 4 (rows out + results back)
+- crossover:    tokens win iff the token bill is strictly smaller
+- fabric:       hierarchical AllToAll never slower than flat on the
+                Figure-7 link model
+
+Constants mirror ``local_preset("deep")`` and the default
+``ClusterConfig`` — if either side drifts, this file or the rust tests
+fail, not both.
+"""
+
+import math
+
+# local_preset("deep") — config/presets.rs
+D_MODEL = 128
+D_FF = 512
+N_EXPERTS = 8
+N_LAYERS = 12
+
+# Default ClusterConfig link model — config/cluster.rs
+# (bandwidth bytes/s, latency s)
+LINKS = {
+    "nvlink": (300e9, 2e-6),
+    "tor": (25e9, 5e-6),
+    "leaf": (20e9, 10e-6),
+    "spine": (16e9, 20e-6),
+}
+
+
+def expert_block_bytes(h=D_MODEL, f=D_FF):
+    """Fused expert FFN block: w_in (h,f) + b_in (f) + w_out (f,h) + b_out (h), f32."""
+    return (2 * h * f + f + h) * 4
+
+
+def expected_routed_experts(tokens, zipf_s, e=N_EXPERTS):
+    """E[distinct experts] = sum_e 1 - (1 - w_e/Z)^T, w_e = 1/(e+1)^s."""
+    w = [1.0 / (i + 1) ** zipf_s for i in range(e)]
+    z = sum(w)
+    return sum(1.0 - (1.0 - wi / z) ** tokens for wi in w)
+
+
+def token_dispatch_layer_bytes(tokens, h=D_MODEL):
+    return 2.0 * tokens * h * 4.0
+
+
+def dist_token_a2a_bytes(tokens, world):
+    if world <= 1:
+        return 0.0
+    return N_LAYERS * token_dispatch_layer_bytes(tokens)
+
+
+def weight_dispatch_layer_bytes(tokens, zipf_s, world):
+    if world <= 1:
+        return 0.0
+    routed = expected_routed_experts(tokens, zipf_s)
+    remote_frac = (world - 1) / world
+    return routed * remote_frac * expert_block_bytes()
+
+
+def dist_a2a_bytes(tokens, zipf_s, world):
+    return N_LAYERS * weight_dispatch_layer_bytes(tokens, zipf_s, world)
+
+
+def choose_dispatch(weight_bytes, token_bytes):
+    """dist::choose_dispatch — tokens iff strictly cheaper, ties to weights."""
+    return "tokens" if token_bytes < weight_bytes else "weights"
+
+
+# --------------------------------------------------------------- fabric
+
+def _time_for(link, bytes_):
+    if bytes_ <= 0.0:
+        return 0.0
+    bw, lat = LINKS[link]
+    return lat + bytes_ / bw
+
+
+def a2a_time(bytes_per_pair, strategy, p, n_nodes):
+    """AllToAllPlan::price on a single-cluster fabric (frac_cross_cluster=0)."""
+    b = bytes_per_pair
+    if strategy == "flat":
+        nvlink = (p - 1) * b
+        same_rail = (n_nodes - 1) * b
+        cross_rail = (n_nodes - 1) * (p - 1) * b
+        tor = same_rail + cross_rail
+        leaf = cross_rail  # + same_rail * frac_cross_cluster (= 0 here)
+        spine = cross_rail
+        return max(_time_for("nvlink", nvlink), _time_for("tor", tor),
+                   _time_for("leaf", leaf), _time_for("spine", spine))
+    nvlink = (p - 1) * n_nodes * b
+    rail = (n_nodes - 1) * p * b
+    return _time_for("nvlink", nvlink) + max(_time_for("tor", rail),
+                                             _time_for("leaf", 0.0))
+
+
+def dist_token_pass_secs(tokens, world, strategy, p, n_nodes):
+    total = dist_token_a2a_bytes(tokens, world)
+    if total <= 0.0:
+        return 0.0
+    pairs = world * (world - 1)
+    return a2a_time(total / pairs, strategy, p, n_nodes)
+
+
+# ---------------------------------------------------------------- tests
+
+def test_token_layer_bytes_formula_and_linearity():
+    assert token_dispatch_layer_bytes(1) == 2 * D_MODEL * 4
+    assert token_dispatch_layer_bytes(128) == 128 * token_dispatch_layer_bytes(1)
+    assert token_dispatch_layer_bytes(0) == 0.0
+
+
+def test_token_a2a_bytes_ignore_world_size_above_one():
+    # Payload rides one AllToAll regardless of fan-out: world only
+    # changes who owns what, not how many rows travel.
+    assert dist_token_a2a_bytes(64, 1) == 0.0
+    assert dist_token_a2a_bytes(64, 2) == dist_token_a2a_bytes(64, 8)
+    assert dist_token_a2a_bytes(64, 2) == N_LAYERS * 2 * 64 * D_MODEL * 4
+
+
+def test_expected_routed_experts_bounds_and_skew():
+    assert abs(expected_routed_experts(1, 0.0) - 1.0) < 1e-9
+    assert expected_routed_experts(1e6, 0.0) > N_EXPERTS - 1e-3
+    uni = expected_routed_experts(256, 0.0)
+    z12 = expected_routed_experts(256, 1.2)
+    z20 = expected_routed_experts(256, 2.0)
+    assert uni > z12 > z20 >= 1.0
+
+
+def test_crossover_tracks_batch_vs_block_size():
+    # Mirrors token_dispatch_crossover_tracks_batch_vs_block_size in
+    # rust/src/sim/cost_model.rs: deep preset blocks are ~527 KB, so a
+    # handful of kept rows beats shipping even one block, while a flood
+    # of rows loses to at most E blocks per layer.
+    world = 2
+    trickle, flood = 8, 65536
+    assert choose_dispatch(
+        weight_dispatch_layer_bytes(trickle, 0.0, world),
+        token_dispatch_layer_bytes(trickle),
+    ) == "tokens"
+    assert choose_dispatch(
+        weight_dispatch_layer_bytes(flood, 0.0, world),
+        token_dispatch_layer_bytes(flood),
+    ) == "weights"
+    # Exact threshold: tokens win iff kept < routed_remote*block/(8*H).
+    for s in (0.0, 1.2):
+        for tokens in (4, 64, 1024, 16384):
+            wb = weight_dispatch_layer_bytes(tokens, s, world)
+            tb = token_dispatch_layer_bytes(tokens)
+            threshold = wb / (8.0 * D_MODEL)
+            assert (choose_dispatch(wb, tb) == "tokens") == (tokens < threshold)
+    # Ties go to weights (dist::choose_dispatch).
+    assert choose_dispatch(1.0, 1.0) == "weights"
+
+
+def test_monster_blocks_always_favor_tokens():
+    # table1-scale experts (d_model 4096, d_ff 16384 -> ~537 MB blocks):
+    # no realistic batch reaches the crossover, which is why the rust
+    # crossover test runs on the deep preset instead.
+    block = expert_block_bytes(h=4096, f=16384)
+    tokens = 4096 * 64  # a very large kept batch
+    routed_remote = expected_routed_experts(tokens, 0.0, e=64) * 0.5  # world 2
+    weight_bill = routed_remote * block
+    assert token_dispatch_layer_bytes(tokens, h=4096) < weight_bill
+    # The crossover batch (~routed_remote * block / (8H)) sits beyond
+    # half a million kept rows — far past any preset's B*T.
+    assert weight_bill / (8.0 * 4096) > 5e5
+
+
+def test_hierarchical_never_slower_than_flat():
+    # Single node (cluster_for_gpus(8)): both schedules are pure NVLink
+    # and price identically; multi-node (4x8): flat pays the spine,
+    # hierarchical stays rail-aligned and wins outright at MB scale.
+    for b in (4096.0, 1e6):
+        assert a2a_time(b, "hier", p=8, n_nodes=1) <= a2a_time(b, "flat", p=8, n_nodes=1) + 1e-12
+    assert a2a_time(1e6, "hier", p=8, n_nodes=4) < a2a_time(1e6, "flat", p=8, n_nodes=4)
+    # And through the pass-level wrapper (world = the fabric's 32 GPUs).
+    hier = dist_token_pass_secs(4096, 32, "hier", p=8, n_nodes=4)
+    flat = dist_token_pass_secs(4096, 32, "flat", p=8, n_nodes=4)
+    assert 0.0 < hier <= flat
+    assert dist_token_pass_secs(4096, 1, "flat", p=8, n_nodes=1) == 0.0

@@ -14,6 +14,10 @@
 //!   expert-tail repair price (`ablation_prefetch`).
 //! - `dist_tokens_per_s` — measured 2-worker expert-parallel aggregate
 //!   decode throughput on skewed prompts (`fig11_hierarchical_a2a`).
+//! - `dist_token_dispatch_tokens_per_s` — measured 2-worker aggregate
+//!   decode throughput with token dispatch on skewed prompts
+//!   (`fig11_hierarchical_a2a` Part 4's `w2 zipf tokens` row). Gated:
+//!   a >10% drop fails `semoe perf-compare`.
 //!
 //! Extraction is deliberately lenient: a missing report, table, column,
 //! or row yields `null` for that field, never an error — smoke-mode runs
@@ -115,6 +119,10 @@ pub fn build_stub(root: &Path) -> Json {
             "dist_tokens_per_s",
             opt(cell(&fig11, "measured expert-parallel decode", "w2 flat zipf", "agg tokens/s")),
         ),
+        (
+            "dist_token_dispatch_tokens_per_s",
+            opt(cell(&fig11, "token-dispatch mode comparison", "w2 zipf tokens", "agg tokens/s")),
+        ),
         ("sources", Json::arr(sources.into_iter().map(Json::str))),
     ])
 }
@@ -142,9 +150,11 @@ pub const TRAJECTORY_CAP: usize = 50;
 pub const REGRESSION_TOLERANCE: f64 = 0.10;
 
 /// Headline metrics carried per trajectory entry. The bool marks the
-/// gated metric: only `tokens_per_s` can fail the compare — byte and
-/// cost columns are substrate-noisy and stay informational.
-const TRACKED: [(&str, bool); 6] = [
+/// gated metrics: only throughputs (`tokens_per_s` and the
+/// token-dispatch lane's `dist_token_dispatch_tokens_per_s`) can fail
+/// the compare — byte and cost columns are substrate-noisy and stay
+/// informational, and a `null` on either side never gates.
+const TRACKED: [(&str, bool); 7] = [
     ("tokens_per_s", true),
     ("ring_copy_mb", false),
     ("plan_hit_rate", false),
@@ -153,6 +163,10 @@ const TRACKED: [(&str, bool); 6] = [
     // Dist aggregate throughput: informational — multi-thread wall
     // clocks on shared CI boxes are too noisy to gate on.
     ("dist_tokens_per_s", false),
+    // The token-dispatch lane's headline, by contrast, is gated: it is
+    // the number this lane exists to protect, and a silent 10% slide
+    // would erase the crossover the auto planner banks on.
+    ("dist_token_dispatch_tokens_per_s", true),
 ];
 
 /// Short git sha of the checkout at `root`; `"unknown"` when git is
@@ -407,6 +421,59 @@ mod tests {
         let c = perf_compare(&dir).unwrap().unwrap();
         assert!(!c.regressed);
         assert!(c.deltas.iter().all(|d| d.delta_frac.is_none() || !d.regressed));
+    }
+
+    #[test]
+    fn stub_distils_the_token_dispatch_row() {
+        let dir = tmp_dir("tok");
+        let reports = dir.join("reports");
+        std::fs::create_dir_all(&reports).unwrap();
+        let f11 = report(
+            "token-dispatch mode comparison (deep preset)",
+            &["config", "mode", "agg tokens/s", "a2a MB", "token MB", "token layers",
+              "weight layers"],
+            vec![
+                vec!["w2 zipf weights", "weights", "41.0", "3.10", "0.00", "0", "24"],
+                vec!["w2 zipf tokens", "tokens", "44.5", "2.05", "2.01", "24", "0"],
+                vec!["w2 zipf auto", "auto", "43.9", "2.20", "1.40", "16", "8"],
+            ],
+        );
+        std::fs::write(reports.join("fig11_hierarchical_a2a.json"), f11.to_string()).unwrap();
+        let stub = build_stub(&dir);
+        assert_eq!(stub.get("dist_token_dispatch_tokens_per_s").as_f64(), Some(44.5));
+        assert!(stub.get("dist_tokens_per_s").is_null(), "Part 3 table absent in this fixture");
+    }
+
+    #[test]
+    fn perf_compare_gates_token_dispatch_throughput_too() {
+        fn stub(tok: Option<f64>) -> Json {
+            let mut fields = vec![
+                ("generated_unix", Json::num(1.0)),
+                ("tokens_per_s", Json::num(100.0)),
+            ];
+            if let Some(t) = tok {
+                fields.push(("dist_token_dispatch_tokens_per_s", Json::num(t)));
+            }
+            Json::obj(fields)
+        }
+        let dir = tmp_dir("cmp_tok");
+        append_trajectory(&dir, &stub(Some(100.0)), "base").unwrap();
+        append_trajectory(&dir, &stub(Some(95.0)), "ok").unwrap();
+        assert!(!perf_compare(&dir).unwrap().unwrap().regressed, "-5% inside tolerance");
+        append_trajectory(&dir, &stub(Some(80.0)), "bad").unwrap();
+        let c = perf_compare(&dir).unwrap().unwrap();
+        assert!(c.regressed, "token-dispatch throughput drop must gate");
+        let d = c
+            .deltas
+            .iter()
+            .find(|d| d.metric == "dist_token_dispatch_tokens_per_s")
+            .unwrap();
+        assert!(d.regressed);
+        // A null on either side never gates — the bench not having run
+        // (smoke drift, first Part-4-less trajectory points) is not a
+        // regression.
+        append_trajectory(&dir, &stub(None), "nul").unwrap();
+        assert!(!perf_compare(&dir).unwrap().unwrap().regressed);
     }
 
     fn tmp_dir(tag: &str) -> std::path::PathBuf {

@@ -30,7 +30,7 @@ pub const RULE_WAIT_WITHOUT_LOOP: &str = "LOCK002";
 pub const RULE_LOCK_CYCLE: &str = "LOCK003";
 
 /// The threaded modules pass C scans (path suffixes).
-pub const THREADED_MODULES: [&str; 8] = [
+pub const THREADED_MODULES: [&str; 10] = [
     "rust/src/infer/ring_memory.rs",
     "rust/src/infer/server.rs",
     "rust/src/prefetch/scheduler.rs",
@@ -39,6 +39,8 @@ pub const THREADED_MODULES: [&str; 8] = [
     "rust/src/metrics/counters.rs",
     "rust/src/dist/worker.rs",
     "rust/src/dist/coordinator.rs",
+    "rust/src/dist/token.rs",
+    "rust/src/dist/exchange.rs",
 ];
 
 #[derive(Debug)]
@@ -363,6 +365,39 @@ mod tests {
         assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
         assert_eq!(d[0].line, 4);
         assert!(d[0].msg.contains("`table`"), "{}", d[0].msg);
+    }
+
+    #[test]
+    fn dist_token_collective_send_under_lock_is_flagged() {
+        // The token-dispatch path runs three lockstep collectives per
+        // layer: a rank that parks on a channel while holding a request
+        // map stalls every peer at the next AllToAll. Pass C must cover
+        // dist/token.rs and dist/exchange.rs like the rest of the mesh
+        // participants.
+        let t = tree(
+            "rust/src/dist/token.rs",
+            "fn reply(&self) {\n\
+             \x20   let pending = self.requests.lock().unwrap();\n\
+             \x20   self.row_tx.send(pending.rows()).unwrap();\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
+        assert_eq!(d[0].line, 3);
+        assert!(d[0].msg.contains("`pending`"), "{}", d[0].msg);
+
+        let t = tree(
+            "rust/src/dist/exchange.rs",
+            "fn flush(&self) {\n\
+             \x20   let buckets = self.fired.lock().unwrap();\n\
+             \x20   self.wire_tx.send(buckets.bytes()).unwrap();\n\
+             }\n",
+        );
+        let d = check_locks(&t);
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_SEND_UNDER_LOCK);
+        assert!(d[0].msg.contains("`buckets`"), "{}", d[0].msg);
     }
 
     #[test]

@@ -233,6 +233,40 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_lane_gauges_are_covered_when_surfaced_and_documented() {
+        // The token-dispatch metric pair end to end: engine registers
+        // the lane gauges, server quotes them, docs carry the dotted
+        // names — pass D must stay silent. Dropping the stats field
+        // flags METRIC001 for exactly that gauge.
+        let engine = SrcFile::new(
+            "rust/src/infer/engine.rs",
+            "fn publish(reg: &Registry) {\n\
+             \x20   reg.gauge(\"dist.dispatch_mode\").set(1);\n\
+             \x20   reg.gauge(\"dist.token_bytes\").set(4096);\n\
+             }\n",
+        );
+        let srv = server(
+            "    let m = reg.gauge(\"dist.dispatch_mode\").get();\n\
+             \x20   let b = reg.gauge(\"dist.token_bytes\").get();",
+        );
+        let good_docs = docs(
+            "| `serve.steps` | … |\n\
+             | `dist.dispatch_mode` | 0 weights, 1 tokens, 2 auto |\n\
+             | `dist.token_bytes` | activation payload bytes |",
+        );
+        assert!(check_metrics(&Tree::from_files(vec![engine.clone(), srv, good_docs.clone()]))
+            .is_empty());
+
+        // Server stops quoting one gauge → METRIC001 on that gauge only.
+        let bare_srv = server("    let m = reg.gauge(\"dist.dispatch_mode\").get();");
+        let d = check_metrics(&Tree::from_files(vec![engine, bare_srv, good_docs]));
+        assert_eq!(d.len(), 1, "got: {:?}", d);
+        assert_eq!(d[0].rule, RULE_NOT_IN_STATS);
+        assert!(d[0].msg.contains("dist.token_bytes"), "{}", d[0].msg);
+        assert_eq!(d[0].file, "rust/src/infer/engine.rs");
+    }
+
+    #[test]
     fn gauges_are_collected_too() {
         let t = Tree::from_files(vec![
             server("    let g = reg.gauge(\"ring.loads\").get();"),

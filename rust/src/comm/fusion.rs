@@ -35,6 +35,19 @@ impl FusionBuffer {
         fb
     }
 
+    /// Row-batch layout for ragged token payloads (token dispatch,
+    /// `dist::token`): `n_rows` equal-length rows named `{prefix}0`,
+    /// `{prefix}1`, … — the sender packs each routed activation row,
+    /// the receiver rebuilds the identical layout from the row count
+    /// alone, no per-slice manifest on the wire.
+    pub fn with_rows(prefix: &str, n_rows: usize, row_len: usize) -> Self {
+        Self::with_layout(
+            (0..n_rows).map(|i| (format!("{}{}", prefix, i), row_len)).collect::<Vec<_>>()
+                .iter()
+                .map(|(n, l)| (n.as_str(), *l)),
+        )
+    }
+
     /// Append a slice to the layout; returns its offset.
     pub fn register(&mut self, name: &str, len: usize) -> usize {
         assert!(
@@ -164,6 +177,27 @@ mod tests {
         for (name, _) in layout {
             assert_eq!(rx.unpack(name), fb.unpack(name), "slice '{}'", name);
         }
+    }
+
+    #[test]
+    fn row_batch_layout_roundtrips_ragged_token_payloads() {
+        // Token dispatch packs a variable number of fixed-width rows; the
+        // receiver derives the same layout from the row count and unpacks
+        // bit-identically.
+        let mut tx = FusionBuffer::with_rows("t", 3, 4);
+        assert_eq!(tx.len(), 12);
+        assert_eq!(tx.n_slices(), 3);
+        tx.pack("t0", &[1.0, 2.0, 3.0, 4.0]);
+        tx.pack("t1", &[-1.0, 0.5, 0.25, -0.0]);
+        tx.pack("t2", &[9.0, 8.0, 7.0, 6.0]);
+        let mut rx = FusionBuffer::with_rows("t", 3, 4);
+        rx.load_fused(tx.fused().to_vec());
+        for i in 0..3 {
+            let name = format!("t{}", i);
+            assert_eq!(rx.unpack(&name), tx.unpack(&name), "row {}", i);
+        }
+        let empty = FusionBuffer::with_rows("t", 0, 4);
+        assert!(empty.is_empty());
     }
 
     #[test]

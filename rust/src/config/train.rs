@@ -1,5 +1,6 @@
 //! Training-run options consumed by `train::Trainer` and the examples.
 
+use crate::dist::DispatchMode;
 use crate::util::json::Json;
 
 /// How parameters are held during training.
@@ -87,6 +88,12 @@ pub struct TrainConfig {
     /// to the single-host path (docs/distributed.md §Training). 1 =
     /// single host. Mutually exclusive with `dp_degree > 1`.
     pub dist_world: usize,
+    /// Which lane moves the pipelined sweep's MoE work when
+    /// `dist_world > 1`: `weights` (the replicated store; no mesh
+    /// traffic on the forward), `tokens` (ship routed activations to
+    /// expert owners), or `auto` (byte-cost vote — degenerates to
+    /// `weights` in training, where the weight lane is mesh-free).
+    pub dist_dispatch: DispatchMode,
     /// Log every N steps.
     pub log_every: usize,
 }
@@ -108,6 +115,7 @@ impl Default for TrainConfig {
             cpu_cache_frac: 0.5,
             corpus_skew: 1.05,
             dist_world: 1,
+            dist_dispatch: DispatchMode::Weights,
             log_every: 10,
         }
     }
@@ -138,6 +146,11 @@ impl TrainConfig {
             cpu_cache_frac: j.get("cpu_cache_frac").as_f64().unwrap_or(d.cpu_cache_frac),
             corpus_skew: j.get("corpus_skew").as_f64().unwrap_or(d.corpus_skew),
             dist_world: j.get("dist_world").as_usize().unwrap_or(d.dist_world),
+            dist_dispatch: j
+                .get("dist_dispatch")
+                .as_str()
+                .and_then(DispatchMode::parse)
+                .unwrap_or(d.dist_dispatch),
             log_every: j.get("log_every").as_usize().unwrap_or(d.log_every),
         }
     }
@@ -164,6 +177,7 @@ impl TrainConfig {
             ("cpu_cache_frac", Json::num(self.cpu_cache_frac)),
             ("corpus_skew", Json::num(self.corpus_skew)),
             ("dist_world", Json::num(self.dist_world as f64)),
+            ("dist_dispatch", Json::str(self.dist_dispatch.as_str())),
             ("log_every", Json::num(self.log_every as f64)),
         ])
     }
@@ -181,6 +195,7 @@ mod tests {
         c.pipelined = true;
         c.steps = 300;
         c.dist_world = 4;
+        c.dist_dispatch = DispatchMode::Tokens;
         let back = TrainConfig::from_json(&c.to_json());
         assert_eq!(c, back);
     }

@@ -16,7 +16,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use super::exchange::{DistTrainCtx, DEFAULT_BUCKET_ELEMS};
-use super::shard::ExpertShardPlan;
+use super::shard::{DispatchMode, ExpertShardPlan};
 use super::worker::DistStats;
 use crate::comm::{A2aStrategy, CommStats, Mesh};
 use crate::config::train::TrainConfig;
@@ -37,11 +37,21 @@ pub struct DistConfig {
     /// Node width the hierarchical schedule assumes; must divide
     /// `workers`.
     pub ranks_per_node: usize,
+    /// Which lane moves the MoE work: expert weight blocks to the
+    /// tokens' home ranks (`weights`), routed activations to the
+    /// experts' owner ranks (`tokens`), or a per-layer byte-cost vote
+    /// (`auto`).
+    pub dispatch: DispatchMode,
 }
 
 impl Default for DistConfig {
     fn default() -> Self {
-        DistConfig { workers: 1, strategy: A2aStrategy::Flat, ranks_per_node: 1 }
+        DistConfig {
+            workers: 1,
+            strategy: A2aStrategy::Flat,
+            ranks_per_node: 1,
+            dispatch: DispatchMode::Weights,
+        }
     }
 }
 
@@ -122,7 +132,7 @@ pub fn run_infer_group(
                 let (n_layers, n_experts) = (arts.preset.n_layers, arts.preset.n_experts);
                 let plan = ExpertShardPlan::balanced(n_layers, n_experts, cfg.workers);
                 let mut eng = InferenceEngine::new(arts, InferMode::Resident, seed, None)?;
-                eng.set_dist(h, plan, cfg.strategy, cfg.ranks_per_node)?;
+                eng.set_dist(h, plan, cfg.strategy, cfg.ranks_per_node, cfg.dispatch)?;
                 let t0 = Instant::now();
                 let outputs = eng.generate(&my_prompts, n_new)?;
                 let secs = t0.elapsed().as_secs_f64();
@@ -183,7 +193,10 @@ pub fn run_train_group(cfg: &TrainConfig) -> Result<Vec<TrainRankReport>> {
                 let (n_layers, n_experts) = (arts.preset.n_layers, arts.preset.n_experts);
                 let mut tr = OffloadTrainer::new(arts, cfg.clone(), None)?;
                 let plan = ExpertShardPlan::balanced(n_layers, n_experts, world);
-                tr.set_dist(DistTrainCtx::new(h, plan, DEFAULT_BUCKET_ELEMS))?;
+                tr.set_dist(
+                    DistTrainCtx::new(h, plan, DEFAULT_BUCKET_ELEMS)
+                        .with_dispatch(cfg.dist_dispatch),
+                )?;
                 let mut metrics = Vec::with_capacity(cfg.steps);
                 for _ in 0..cfg.steps {
                     metrics.push(tr.step()?);
@@ -229,6 +242,7 @@ mod tests {
         assert_eq!(cfg.workers, 1);
         assert_eq!(cfg.strategy, A2aStrategy::Flat);
         assert_eq!(cfg.ranks_per_node, 1);
+        assert_eq!(cfg.dispatch, DispatchMode::Weights);
     }
 
     #[test]

@@ -21,9 +21,10 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use super::shard::ExpertShardPlan;
+use super::shard::{DispatchMode, ExpertShardPlan};
+use super::token::dispatch_layer_tokens;
 use super::worker::DistStats;
-use crate::comm::{CommStats, GradientBuckets, MeshHandle};
+use crate::comm::{A2aStrategy, CommStats, GradientBuckets, MeshHandle};
 
 /// Default bucket cap: 1 MiB of f32s per collective.
 pub const DEFAULT_BUCKET_ELEMS: usize = 256 * 1024;
@@ -33,6 +34,7 @@ pub struct DistTrainCtx {
     handle: MeshHandle,
     plan: ExpertShardPlan,
     bucket_elems: usize,
+    dispatch: DispatchMode,
     stats: DistStats,
 }
 
@@ -40,7 +42,27 @@ impl DistTrainCtx {
     pub fn new(handle: MeshHandle, plan: ExpertShardPlan, bucket_elems: usize) -> Self {
         assert_eq!(handle.world(), plan.world(), "plan world must match mesh world");
         assert!(bucket_elems > 0, "bucket capacity must be positive");
-        DistTrainCtx { handle, plan, bucket_elems, stats: DistStats::default() }
+        DistTrainCtx {
+            handle,
+            plan,
+            bucket_elems,
+            dispatch: DispatchMode::Weights,
+            stats: DistStats::default(),
+        }
+    }
+
+    /// Builder: select the forward-sweep dispatch lane
+    /// (`train --workers N --dispatch weights|tokens|auto`). Training
+    /// batches are replicated, so `Auto` needs no per-layer vote — every
+    /// rank computes identical byte estimates and the trainer resolves
+    /// the lane locally ([`DistTrainCtx::resolve_dispatch`]).
+    pub fn with_dispatch(mut self, dispatch: DispatchMode) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
     }
 
     pub fn rank(&self) -> usize {
@@ -66,6 +88,44 @@ impl DistTrainCtx {
     /// Does this rank run the optimizer for `(layer, expert)`?
     pub fn owns(&self, layer: usize, expert: usize) -> bool {
         self.plan.owner(layer, expert) == self.handle.rank()
+    }
+
+    /// Training-side lane resolution. The replicated weight store makes
+    /// the weight lane mesh-free on the forward sweep, so `Auto`
+    /// resolves through `choose_dispatch(0, token_bytes)` — i.e. to
+    /// `Weights` — identically on every rank with no vote collective.
+    /// `Tokens` forces the token sweep (the parity/ablation knob).
+    pub fn resolve_dispatch(&self, token_bytes: f64) -> DispatchMode {
+        match self.dispatch {
+            DispatchMode::Auto => super::shard::choose_dispatch(0.0, token_bytes),
+            m => m,
+        }
+    }
+
+    /// One token-dispatch exchange on the training forward sweep
+    /// (`dist::token`, always the flat schedule — training ranks are
+    /// threads on one host). Replicated batches make every rank's kept
+    /// set bit-identical, so owner-side dedup collapses the world's
+    /// copies to one tail execution per unique row. Accounting matches
+    /// `ExpertWorker::dispatch_tokens`.
+    pub fn dispatch_tokens(
+        &mut self,
+        layer: usize,
+        kept: &[(usize, Vec<f32>)],
+        d_model: usize,
+        run_tail: &mut dyn FnMut(&[(usize, Vec<f32>)]) -> Result<Vec<Vec<f32>>>,
+    ) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let sent_before = self.handle.stats().bytes_sent;
+        let Self { handle, plan, stats, .. } = self;
+        let owner = |e: usize| plan.owner(layer, e);
+        let out =
+            dispatch_layer_tokens(handle, A2aStrategy::Flat, 1, &owner, kept, d_model, run_tail)?;
+        stats.token_bytes += out.payload_bytes;
+        stats.a2a_bytes += handle.stats().bytes_sent - sent_before;
+        stats.token_layers += 1;
+        stats.dispatch_us += t0.elapsed().as_micros() as u64;
+        Ok(out.rows)
     }
 
     /// End-of-step exchange. `dirty[l]` is the step's updated expert set
@@ -227,6 +287,70 @@ mod tests {
         // bucket cap below one block → every block its own broadcast;
         // the protocol must still converge with identical results.
         run_exchange(2, 4);
+    }
+
+    #[test]
+    fn replicated_batches_dedupe_to_one_tail_row_per_unique_request() {
+        // Both ranks keep the *same* rows (replicated training batch):
+        // the owner must see each unique row once, and both ranks'
+        // results and payload accounting must match exactly.
+        let world = 2;
+        let d_model = 2;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let plan = ExpertShardPlan::balanced(1, 4, world);
+                    let mut ctx = DistTrainCtx::new(h, plan, 64)
+                        .with_dispatch(DispatchMode::Tokens);
+                    assert_eq!(
+                        ctx.resolve_dispatch(1e6),
+                        DispatchMode::Tokens
+                    );
+                    let kept: Vec<(usize, Vec<f32>)> =
+                        vec![(0, vec![1.0, 2.0]), (1, vec![3.0, 4.0]), (0, vec![1.0, 2.0])];
+                    let mut served = 0usize;
+                    let rows = ctx
+                        .dispatch_tokens(0, &kept, d_model, &mut |reqs| {
+                            served += reqs.len();
+                            Ok(reqs
+                                .iter()
+                                .map(|(e, r)| r.iter().map(|v| v + *e as f32).collect())
+                                .collect())
+                        })
+                        .unwrap();
+                    let want: Vec<Vec<f32>> = kept
+                        .iter()
+                        .map(|(e, r)| r.iter().map(|v| v + *e as f32).collect())
+                        .collect();
+                    assert_eq!(rows, want);
+                    (ctx.rank(), served, ctx.stats())
+                })
+            })
+            .collect();
+        let mut total_served = 0;
+        for j in joins {
+            let (_, served, stats) = j.join().unwrap();
+            total_served += served;
+            assert_eq!(stats.token_bytes, 2 * 3 * 2 * 4, "exact payload formula");
+            assert_eq!(stats.token_layers, 1);
+        }
+        // 3 kept rows × 2 ranks = 6 requests, but only 2 unique rows
+        // exist group-wide — dedup collapses the rest.
+        assert_eq!(total_served, 2);
+    }
+
+    #[test]
+    fn auto_resolves_to_weights_on_the_mesh_free_training_forward() {
+        let handles = Mesh::new(1);
+        let plan = ExpertShardPlan::balanced(1, 2, 1);
+        let ctx = DistTrainCtx::new(handles.into_iter().next().unwrap(), plan, 64)
+            .with_dispatch(DispatchMode::Auto);
+        assert_eq!(
+            ctx.resolve_dispatch(4096.0),
+            DispatchMode::Weights
+        );
     }
 
     #[test]

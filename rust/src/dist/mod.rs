@@ -8,7 +8,11 @@
 //!   [`crate::moe::ExpertPlacement`].
 //! - [`worker`] — [`ExpertWorker`]: the inference-side per-rank
 //!   endpoint; two-round lockstep block fetch ([`FusionBuffer`]-packed,
-//!   flat or hierarchical AllToAll).
+//!   flat or hierarchical AllToAll), or the token-dispatch lane.
+//! - [`token`] — token dispatch ([`DispatchMode::Tokens`]): ship routed
+//!   `moe_in` activations to expert owners and FFN results back (three
+//!   lockstep collectives), plus the per-layer byte-cost vote behind
+//!   `--dispatch auto` ([`token::vote_dispatch`]).
 //! - [`exchange`] — [`DistTrainCtx`]: the training-side sharded
 //!   optimizer; owners broadcast updated `p‖m‖v` blocks batched through
 //!   [`GradientBuckets`].
@@ -24,6 +28,7 @@
 //! [`GradientBuckets`]: crate::comm::GradientBuckets
 
 pub mod shard;
+pub mod token;
 pub mod worker;
 pub mod exchange;
 pub mod coordinator;
@@ -33,5 +38,8 @@ pub use coordinator::{
     TrainRankReport,
 };
 pub use exchange::{DistTrainCtx, DEFAULT_BUCKET_ELEMS};
-pub use shard::ExpertShardPlan;
+pub use shard::{choose_dispatch, DispatchMode, ExpertShardPlan};
+pub use token::{
+    dispatch_layer_tokens, plan_tail_waves, vote_dispatch, TailWave, TokenDispatchOutcome,
+};
 pub use worker::{DistStats, ExpertWorker};

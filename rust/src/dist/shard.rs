@@ -11,6 +11,64 @@
 //! * [`ExpertShardPlan::capacity_aware`] — greedy longest-processing-time
 //!   placement against observed per-expert loads (§4.1: skewed routing
 //!   makes uniform shards a straggler machine).
+//!
+//! [`DispatchMode`] decides what travels once a plan is fixed: expert
+//! weight blocks to tokens (PR 9's two-round fetch), token activations
+//! to expert owners (`dist::token`), or a per-layer adaptive pick from
+//! measured byte costs ([`choose_dispatch`]).
+
+/// What moves over the mesh each layer: weights to tokens, tokens to
+/// weights, or a per-layer byte-cost vote between the two.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchMode {
+    /// Ship remote expert *weight blocks* to the requesting rank
+    /// (two-round fetch, `ExpertWorker::fetch_layer`). Wins when the
+    /// routed activation batch dwarfs the distinct expert blocks.
+    #[default]
+    Weights,
+    /// Ship routed token *activations* (`moe_in` rows) to the expert
+    /// owners and the FFN results back (`dist::token`). Wins when an
+    /// expert block dwarfs the batch — the paper's large-expert
+    /// serving regime.
+    Tokens,
+    /// Per layer, per pass: compare measured byte costs over a lockstep
+    /// vote and take the cheaper lane (`dist::token::vote_dispatch`).
+    Auto,
+}
+
+impl DispatchMode {
+    /// Strict parse — `None` for anything but the three accepted names;
+    /// CLI surfaces bail on `None` (a typo must not silently fall back
+    /// to weight dispatch and invalidate a mode comparison).
+    pub fn parse(s: &str) -> Option<DispatchMode> {
+        match s {
+            "weights" => Some(DispatchMode::Weights),
+            "tokens" => Some(DispatchMode::Tokens),
+            "auto" => Some(DispatchMode::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DispatchMode::Weights => "weights",
+            DispatchMode::Tokens => "tokens",
+            DispatchMode::Auto => "auto",
+        }
+    }
+}
+
+/// The auto-planner's core decision, shared by the runtime vote and the
+/// cost model: given this layer's measured group-total byte costs, pick
+/// the cheaper dispatch lane. Ties go to `Weights` (the established
+/// path). Never returns `Auto`.
+pub fn choose_dispatch(weight_bytes: f64, token_bytes: f64) -> DispatchMode {
+    if token_bytes < weight_bytes {
+        DispatchMode::Tokens
+    } else {
+        DispatchMode::Weights
+    }
+}
 
 /// Immutable layer×expert → owner-rank map, identical on every rank.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -205,5 +263,24 @@ mod tests {
         for l in 0..2 {
             assert_eq!(plan.owned_by(l, 0), vec![0, 1, 2, 3]);
         }
+    }
+
+    #[test]
+    fn dispatch_mode_parse_roundtrips_and_rejects_typos() {
+        for m in [DispatchMode::Weights, DispatchMode::Tokens, DispatchMode::Auto] {
+            assert_eq!(DispatchMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(DispatchMode::parse("token"), None);
+        assert_eq!(DispatchMode::parse("WEIGHTS"), None);
+        assert_eq!(DispatchMode::parse(""), None);
+        assert_eq!(DispatchMode::default(), DispatchMode::Weights);
+    }
+
+    #[test]
+    fn choose_dispatch_picks_cheaper_lane_and_ties_go_to_weights() {
+        assert_eq!(choose_dispatch(100.0, 10.0), DispatchMode::Tokens);
+        assert_eq!(choose_dispatch(10.0, 100.0), DispatchMode::Weights);
+        assert_eq!(choose_dispatch(64.0, 64.0), DispatchMode::Weights);
+        assert_eq!(choose_dispatch(0.0, 0.0), DispatchMode::Weights);
     }
 }

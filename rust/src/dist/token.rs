@@ -1,0 +1,555 @@
+//! Token dispatch: ship routed *activations* to expert owners instead of
+//! expert weight blocks to tokens — the paper's §4 layout, and the
+//! winning one whenever an expert's fused parameter block dwarfs the
+//! routed activation batch (large-expert / small-batch serving).
+//!
+//! Three lockstep collectives per layer, shared by inference
+//! (`ExpertWorker::dispatch_tokens`) and training
+//! (`DistTrainCtx::dispatch_tokens`):
+//!
+//!   1. **header round** — flat AllToAll of `[n, e0..e_{n-1}]` per
+//!      destination: how many rows follow and which expert each targets;
+//!   2. **payload round** — each rank packs its kept tokens' `moe_in`
+//!      rows into an owner-keyed ragged [`FusionBuffer`]
+//!      (`FusionBuffer::with_rows`) and ships them flat or hierarchical;
+//!   3. **reply round** — owners run the expert FFN locally on resident
+//!      experts (deduplicating bit-identical requests first) and return
+//!      the result rows in each source's request order.
+//!
+//! Gates and the residual are applied back at the *home* rank, so the
+//! combined output stays bit-identical to the single-host path (modulo
+//! IEEE zero signs, which no downstream comparison can observe — see
+//! docs/distributed.md §Token dispatch).
+//!
+//! [`vote_dispatch`] is the adaptive planner's runtime half: a 2-float
+//! lockstep ballot per layer lets every rank pick the same lane even
+//! when per-rank routing (and therefore per-rank byte costs) diverge.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::Result;
+
+use super::shard::{choose_dispatch, DispatchMode};
+use crate::comm::hierarchical::{flat_a2a, hierarchical_a2a};
+use crate::comm::{A2aStrategy, FusionBuffer, MeshHandle};
+
+/// Result of one token-dispatch layer exchange at the home rank.
+pub struct TokenDispatchOutcome {
+    /// FFN result rows, one per `kept` entry, in `kept` order.
+    pub rows: Vec<Vec<f32>>,
+    /// Exact activation payload bytes this rank's tokens put on the
+    /// lanes: `2 × kept_rows × d_model × 4` (rows out + results back;
+    /// self-owned rows ride the collective too). This is the quantity
+    /// `sim::CostModel::token_dispatch_layer_bytes` predicts, asserted
+    /// equal in `rust/tests/prop.rs`.
+    pub payload_bytes: u64,
+}
+
+fn run_a2a(
+    h: &mut MeshHandle,
+    strategy: A2aStrategy,
+    ranks_per_node: usize,
+    chunks: Vec<Vec<f32>>,
+) -> Vec<Vec<f32>> {
+    match strategy {
+        A2aStrategy::Flat => flat_a2a(h, chunks),
+        A2aStrategy::Hierarchical => hierarchical_a2a(h, ranks_per_node, chunks).0,
+    }
+}
+
+fn row_name(i: usize) -> String {
+    format!("t{}", i)
+}
+
+/// One token-dispatch exchange for a layer.
+///
+/// `kept` is this rank's routed activation batch: `(expert, moe_in row)`
+/// per kept token, in home (flat token) order. `owner_of` maps an expert
+/// id to its owning rank (the shard plan). `run_tail` is the owner-side
+/// compute: given deduplicated `(expert, row)` requests — every expert
+/// guaranteed owned by this rank — it returns one FFN result row per
+/// request, same order. Every rank must call this in lockstep with the
+/// same collective schedule (it runs one flat AllToAll plus two
+/// `strategy` AllToAlls, unconditionally).
+pub fn dispatch_layer_tokens(
+    handle: &mut MeshHandle,
+    strategy: A2aStrategy,
+    ranks_per_node: usize,
+    owner_of: &dyn Fn(usize) -> usize,
+    kept: &[(usize, Vec<f32>)],
+    d_model: usize,
+    run_tail: &mut dyn FnMut(&[(usize, Vec<f32>)]) -> Result<Vec<Vec<f32>>>,
+) -> Result<TokenDispatchOutcome> {
+    let world = handle.world();
+
+    // Group kept rows by owning rank, preserving home order per owner.
+    let mut to_dst: Vec<Vec<usize>> = vec![Vec::new(); world];
+    for (i, (e, row)) in kept.iter().enumerate() {
+        assert_eq!(row.len(), d_model, "moe_in row width");
+        let o = owner_of(*e);
+        assert!(o < world, "owner rank out of range");
+        to_dst[o].push(i);
+    }
+
+    // Round 1 — headers: [n, e0..e_{n-1}] per destination (flat: tiny).
+    let req: Vec<Vec<f32>> = (0..world)
+        .map(|dst| {
+            let idxs = &to_dst[dst];
+            let mut h = Vec::with_capacity(1 + idxs.len());
+            h.push(idxs.len() as f32);
+            h.extend(idxs.iter().map(|&i| kept[i].0 as f32));
+            h
+        })
+        .collect();
+    let headers = handle.all_to_all(req);
+
+    // Round 2 — activation rows, owner-keyed ragged fusion buffers.
+    let payload: Vec<Vec<f32>> = (0..world)
+        .map(|dst| {
+            let idxs = &to_dst[dst];
+            let mut fb = FusionBuffer::with_rows("t", idxs.len(), d_model);
+            for (r, &i) in idxs.iter().enumerate() {
+                fb.pack(&row_name(r), &kept[i].1);
+            }
+            fb.fused().to_vec()
+        })
+        .collect();
+    let mut inbound = run_a2a(handle, strategy, ranks_per_node, payload);
+
+    // Owner side: decode every source's requests in (src, position)
+    // order, deduplicate bit-identical (expert, row) pairs — the expert
+    // FFN is a pure row function, so one execution serves every copy
+    // (replicated training batches collapse world-fold) — and run the
+    // tail once over the unique set.
+    let mut uniq: HashMap<(usize, Vec<u32>), usize> = HashMap::new();
+    let mut unique_reqs: Vec<(usize, Vec<f32>)> = Vec::new();
+    let mut src_maps: Vec<Vec<usize>> = vec![Vec::new(); world];
+    for src in 0..world {
+        let hdr = &headers[src];
+        let n = hdr[0] as usize;
+        assert_eq!(hdr.len(), 1 + n, "header shape");
+        assert_eq!(inbound[src].len(), n * d_model, "payload shape from rank {}", src);
+        if n == 0 {
+            continue;
+        }
+        let mut fb = FusionBuffer::with_rows("t", n, d_model);
+        fb.load_fused(std::mem::take(&mut inbound[src]));
+        for r in 0..n {
+            let e = hdr[1 + r] as usize;
+            let row = fb.unpack(&row_name(r));
+            let key = (e, row.iter().map(|v| v.to_bits()).collect::<Vec<u32>>());
+            let ui = match uniq.get(&key) {
+                Some(&ui) => ui,
+                None => {
+                    unique_reqs.push((e, row.to_vec()));
+                    uniq.insert(key, unique_reqs.len() - 1);
+                    unique_reqs.len() - 1
+                }
+            };
+            src_maps[src].push(ui);
+        }
+    }
+    let results =
+        if unique_reqs.is_empty() { Vec::new() } else { run_tail(&unique_reqs)? };
+    assert_eq!(results.len(), unique_reqs.len(), "one result row per unique request");
+
+    // Round 3 — results back, each source's rows in its request order.
+    let reply: Vec<Vec<f32>> = (0..world)
+        .map(|src| {
+            let map = &src_maps[src];
+            let mut fb = FusionBuffer::with_rows("t", map.len(), d_model);
+            for (r, &ui) in map.iter().enumerate() {
+                assert_eq!(results[ui].len(), d_model, "tail result row width");
+                fb.pack(&row_name(r), &results[ui]);
+            }
+            fb.fused().to_vec()
+        })
+        .collect();
+    let mut returned = run_a2a(handle, strategy, ranks_per_node, reply);
+
+    // Home side: scatter replies back into kept order.
+    let mut rows: Vec<Vec<f32>> = vec![Vec::new(); kept.len()];
+    for dst in 0..world {
+        let idxs = &to_dst[dst];
+        if idxs.is_empty() {
+            continue;
+        }
+        let mut fb = FusionBuffer::with_rows("t", idxs.len(), d_model);
+        fb.load_fused(std::mem::take(&mut returned[dst]));
+        for (r, &i) in idxs.iter().enumerate() {
+            rows[i] = fb.unpack(&row_name(r)).to_vec();
+        }
+    }
+    let payload_bytes = 2 * kept.len() as u64 * d_model as u64 * 4;
+    Ok(TokenDispatchOutcome { rows, payload_bytes })
+}
+
+/// Lockstep per-layer mode vote for `--dispatch auto`: every rank
+/// broadcasts its measured `(weight_bytes, token_bytes)` estimate to
+/// every peer, sums the ballots in rank order (deterministic — identical
+/// totals everywhere), and picks the cheaper lane via
+/// [`choose_dispatch`]. The estimates stay well under 2^24 per layer,
+/// so the f32 wire encoding is exact.
+pub fn vote_dispatch(handle: &mut MeshHandle, weight_bytes: f64, token_bytes: f64) -> DispatchMode {
+    let world = handle.world();
+    let ballot = vec![vec![weight_bytes as f32, token_bytes as f32]; world];
+    let ballots = handle.all_to_all(ballot);
+    let mut w_total = 0f64;
+    let mut t_total = 0f64;
+    for b in &ballots {
+        assert_eq!(b.len(), 2, "dispatch ballot is (weight_bytes, token_bytes)");
+        w_total += b[0] as f64;
+        t_total += b[1] as f64;
+    }
+    choose_dispatch(w_total, t_total)
+}
+
+/// One synthetic `expert_tail` execution's worth of owner-side work:
+/// a full-shape `[rows_per_wave]` batch where row i of `moe_in` is a
+/// requested activation row, routed to its expert with gate 1 and a
+/// fresh capacity slot. Padding rows carry `keep = 0` — inert under the
+/// kernel's keep-masked dispatch/combine.
+pub struct TailWave {
+    /// Flat `rows_per_wave × d_model` activation batch (zero padded).
+    pub moe_in: Vec<f32>,
+    /// Per-row routed expert id (0 on padding rows).
+    pub expert: Vec<i32>,
+    /// Per-row gate: 1.0 on filled rows, 0.0 on padding.
+    pub gate: Vec<f32>,
+    /// Per-row capacity slot, fresh sequential per expert, `< capacity`.
+    pub pos: Vec<i32>,
+    /// Per-row keep mask: 1.0 filled, 0.0 padding.
+    pub keep: Vec<f32>,
+    /// Request index served by each filled row, in row order.
+    pub slots: Vec<usize>,
+}
+
+/// Pack owner-side requests into the fewest full-shape tail waves that
+/// respect the kernel's dispatch invariants: at most `rows_per_wave`
+/// rows per wave (the artifact's AOT-fixed batch), at most one group of
+/// ≤ `capacity` rows per expert per wave (two same-expert groups would
+/// collide on capacity slots), positions sequential from 0 per group.
+pub fn plan_tail_waves(
+    requests: &[(usize, Vec<f32>)],
+    rows_per_wave: usize,
+    capacity: usize,
+    d_model: usize,
+) -> Vec<TailWave> {
+    assert!(rows_per_wave >= 1, "wave must hold at least one row");
+    assert!(capacity >= 1, "expert capacity must be at least 1");
+    let max_group = capacity.min(rows_per_wave);
+
+    // Group request indices by expert (BTreeMap: deterministic order),
+    // then chunk each expert's list into capacity-respecting groups.
+    let mut by_expert: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, (e, row)) in requests.iter().enumerate() {
+        assert_eq!(row.len(), d_model, "request row width");
+        by_expert.entry(*e).or_default().push(i);
+    }
+    let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+    for (e, idxs) in &by_expert {
+        for chunk in idxs.chunks(max_group) {
+            groups.push((*e, chunk.to_vec()));
+        }
+    }
+
+    // First-fit pack groups into waves.
+    struct Draft {
+        rows: usize,
+        experts: Vec<usize>,
+        groups: Vec<(usize, Vec<usize>)>,
+    }
+    let mut drafts: Vec<Draft> = Vec::new();
+    for (e, idxs) in groups {
+        let fit = drafts
+            .iter_mut()
+            .find(|d| d.rows + idxs.len() <= rows_per_wave && !d.experts.contains(&e));
+        match fit {
+            Some(d) => {
+                d.rows += idxs.len();
+                d.experts.push(e);
+                d.groups.push((e, idxs));
+            }
+            None => drafts.push(Draft { rows: idxs.len(), experts: vec![e], groups: vec![(e, idxs)] }),
+        }
+    }
+
+    drafts
+        .into_iter()
+        .map(|d| {
+            let mut wave = TailWave {
+                moe_in: vec![0.0; rows_per_wave * d_model],
+                expert: vec![0; rows_per_wave],
+                gate: vec![0.0; rows_per_wave],
+                pos: vec![0; rows_per_wave],
+                keep: vec![0.0; rows_per_wave],
+                slots: Vec::with_capacity(d.rows),
+            };
+            let mut r = 0usize;
+            for (e, idxs) in d.groups {
+                for (pos, &req) in idxs.iter().enumerate() {
+                    wave.moe_in[r * d_model..(r + 1) * d_model]
+                        .copy_from_slice(&requests[req].1);
+                    wave.expert[r] = e as i32;
+                    wave.gate[r] = 1.0;
+                    wave.pos[r] = pos as i32;
+                    wave.keep[r] = 1.0;
+                    wave.slots.push(req);
+                    r += 1;
+                }
+            }
+            wave
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Mesh;
+
+    /// Synthetic owner FFN: a pure function of (expert, row) so any home
+    /// rank can check what the owner must have computed.
+    fn ffn(e: usize, row: &[f32]) -> Vec<f32> {
+        row.iter().map(|v| v * (e as f32 + 1.0) + 0.5).collect()
+    }
+
+    fn run_dispatch(
+        world: usize,
+        strategy: A2aStrategy,
+        p: usize,
+    ) -> Vec<(Vec<Vec<f32>>, u64, usize)> {
+        let n_experts = 8;
+        let d_model = 3;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let me = h.rank();
+                    // Rank r keeps 2 + r tokens routed across experts;
+                    // rows are a pure function of (rank, token).
+                    let kept: Vec<(usize, Vec<f32>)> = (0..2 + me)
+                        .map(|t| {
+                            let e = (me + 3 * t) % n_experts;
+                            (e, (0..d_model).map(|j| (100 * me + 10 * t + j) as f32).collect())
+                        })
+                        .collect();
+                    let owner = move |e: usize| e % world;
+                    let mut served = 0usize;
+                    let out = dispatch_layer_tokens(
+                        &mut h,
+                        strategy,
+                        p,
+                        &owner,
+                        &kept,
+                        d_model,
+                        &mut |reqs| {
+                            served += reqs.len();
+                            for (e, _) in reqs {
+                                assert_eq!(e % world, me, "request routed to a non-owner");
+                            }
+                            Ok(reqs.iter().map(|(e, r)| ffn(*e, r)).collect())
+                        },
+                    )
+                    .unwrap();
+                    // Every home row must be the owner's FFN of the row
+                    // this rank sent, in home order.
+                    assert_eq!(out.rows.len(), kept.len());
+                    for ((e, row), got) in kept.iter().zip(&out.rows) {
+                        assert_eq!(got, &ffn(*e, row), "rank {}", me);
+                    }
+                    (out.rows, out.payload_bytes, served)
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn rows_come_back_from_their_owner_in_home_order() {
+        for (rank, (rows, payload, _)) in run_dispatch(4, A2aStrategy::Flat, 1).into_iter().enumerate() {
+            assert_eq!(rows.len(), 2 + rank);
+            assert_eq!(payload, 2 * (2 + rank as u64) * 3 * 4, "exact payload formula");
+        }
+    }
+
+    #[test]
+    fn hierarchical_strategy_delivers_identical_rows() {
+        let flat = run_dispatch(4, A2aStrategy::Flat, 1);
+        let hier = run_dispatch(4, A2aStrategy::Hierarchical, 2);
+        for ((fr, fb, _), (hr, hb, _)) in flat.iter().zip(&hier) {
+            assert_eq!(fr, hr, "row payloads must not depend on the schedule");
+            assert_eq!(fb, hb);
+        }
+    }
+
+    #[test]
+    fn owners_dedupe_bit_identical_requests() {
+        // Both ranks send the *same* (expert, row) to rank 0 — the owner
+        // must run the tail once, not twice, and both homes still get
+        // the right answer.
+        let world = 2;
+        let d_model = 2;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let kept: Vec<(usize, Vec<f32>)> =
+                        vec![(0, vec![1.5, -2.5]), (0, vec![1.5, -2.5])];
+                    let mut served = 0usize;
+                    let out = dispatch_layer_tokens(
+                        &mut h,
+                        A2aStrategy::Flat,
+                        1,
+                        &|_e| 0,
+                        &kept,
+                        d_model,
+                        &mut |reqs| {
+                            served += reqs.len();
+                            Ok(reqs.iter().map(|(e, r)| ffn(*e, r)).collect())
+                        },
+                    )
+                    .unwrap();
+                    for row in &out.rows {
+                        assert_eq!(row, &ffn(0, &[1.5, -2.5]));
+                    }
+                    (h.rank(), served)
+                })
+            })
+            .collect();
+        for j in joins {
+            let (rank, served) = j.join().unwrap();
+            // 4 identical requests land on rank 0; dedup collapses them
+            // to one tail row. Rank 1 owns nothing.
+            assert_eq!(served, if rank == 0 { 1 } else { 0 });
+        }
+    }
+
+    #[test]
+    fn vote_is_unanimous_and_sums_group_costs() {
+        let handles = Mesh::new(3);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let r = h.rank() as f64;
+                    // Divergent per-rank estimates; summed group totals
+                    // decide. a: 300 vs 303+3r̄ → weights. b: 300 vs 6 →
+                    // tokens, unanimously, despite rank-varying ballots.
+                    let a = vote_dispatch(&mut h, 100.0, 101.0 + r);
+                    let b = vote_dispatch(&mut h, 100.0, 1.0 + r);
+                    (a, b)
+                })
+            })
+            .collect();
+        for j in joins {
+            let (a, b) = j.join().unwrap();
+            assert_eq!(a, DispatchMode::Weights);
+            assert_eq!(b, DispatchMode::Tokens, "3+3+3+... well under 300");
+        }
+    }
+
+    #[test]
+    fn panicking_rank_poisons_token_dispatch_peers_instead_of_deadlocking() {
+        // Rank 1 dies after the header round; ranks 0 and 2 are inside
+        // the payload AllToAll and must fail with the poison reason, not
+        // park forever (satellite: locks/poison coverage for the token
+        // collective path).
+        let world = 3;
+        let d_model = 2;
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    if h.rank() == 1 {
+                        // Participate in round 1 only, then die.
+                        h.all_to_all(vec![vec![0.0]; world]);
+                        panic!("injected fault");
+                    }
+                    let kept: Vec<(usize, Vec<f32>)> = vec![(0, vec![1.0, 2.0])];
+                    let _ = dispatch_layer_tokens(
+                        &mut h,
+                        A2aStrategy::Flat,
+                        1,
+                        &|_e| 0,
+                        &kept,
+                        d_model,
+                        &mut |reqs| Ok(reqs.iter().map(|(e, r)| ffn(*e, r)).collect()),
+                    );
+                    unreachable!("rank 1's death must abort the exchange");
+                })
+            })
+            .collect();
+        let mut poisoned = 0;
+        for j in joins {
+            let e = j.join().expect_err("every rank fails");
+            let msg = e
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| e.downcast_ref::<&str>().copied())
+                .unwrap_or("");
+            if msg.contains("mesh poisoned") {
+                assert!(msg.contains("rank 1 panicked"), "{}", msg);
+                poisoned += 1;
+            }
+        }
+        assert_eq!(poisoned, 2, "both survivors see the poison error");
+    }
+
+    #[test]
+    fn waves_respect_capacity_batch_and_slot_invariants() {
+        let d_model = 2;
+        // 11 requests over 3 experts: expert 0 ×6, expert 1 ×4, expert 2 ×1.
+        let requests: Vec<(usize, Vec<f32>)> = (0..11)
+            .map(|i| {
+                let e = if i < 6 { 0 } else if i < 10 { 1 } else { 2 };
+                (e, vec![i as f32, -(i as f32)])
+            })
+            .collect();
+        let rows_per_wave = 8;
+        let capacity = 4;
+        let waves = plan_tail_waves(&requests, rows_per_wave, capacity, d_model);
+        let mut seen = vec![false; requests.len()];
+        for w in &waves {
+            assert_eq!(w.expert.len(), rows_per_wave);
+            assert_eq!(w.moe_in.len(), rows_per_wave * d_model);
+            assert!(w.slots.len() <= rows_per_wave);
+            let mut per_expert_rows: BTreeMap<i32, Vec<i32>> = BTreeMap::new();
+            for r in 0..rows_per_wave {
+                if r < w.slots.len() {
+                    let req = w.slots[r];
+                    assert!(!seen[req], "request {} served twice", req);
+                    seen[req] = true;
+                    assert_eq!(w.keep[r], 1.0);
+                    assert_eq!(w.gate[r], 1.0);
+                    assert_eq!(w.expert[r] as usize, requests[req].0);
+                    assert!((w.pos[r] as usize) < capacity, "slot within capacity");
+                    assert_eq!(
+                        &w.moe_in[r * d_model..(r + 1) * d_model],
+                        requests[req].1.as_slice()
+                    );
+                    per_expert_rows.entry(w.expert[r]).or_default().push(w.pos[r]);
+                } else {
+                    assert_eq!(w.keep[r], 0.0, "padding rows are keep-masked");
+                    assert_eq!(w.gate[r], 0.0);
+                }
+            }
+            for (_, mut ps) in per_expert_rows {
+                // One group per expert per wave: fresh sequential slots.
+                ps.sort();
+                assert_eq!(ps, (0..ps.len() as i32).collect::<Vec<_>>());
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every request served exactly once");
+        // 6 rows of expert 0 at capacity 4 must split across waves.
+        assert!(waves.len() >= 2);
+    }
+
+    #[test]
+    fn empty_request_set_yields_no_waves() {
+        assert!(plan_tail_waves(&[], 8, 4, 2).is_empty());
+    }
+}

@@ -17,21 +17,31 @@
 
 use std::time::Instant;
 
-use super::shard::ExpertShardPlan;
+use super::shard::{DispatchMode, ExpertShardPlan};
+use super::token::{dispatch_layer_tokens, vote_dispatch};
 use crate::comm::hierarchical::{flat_a2a, hierarchical_a2a};
 use crate::comm::{A2aStrategy, CommStats, FusionBuffer, MeshHandle};
 
 /// Per-rank dist accounting (drives the `dist.*` gauges in `/stats`).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct DistStats {
-    /// Bytes this rank pushed through the dist exchanges (both rounds).
+    /// Bytes this rank pushed through the dist exchanges (all rounds,
+    /// either lane).
     pub a2a_bytes: u64,
-    /// Wall-clock µs spent inside [`ExpertWorker::fetch_layer`].
+    /// Wall-clock µs spent inside [`ExpertWorker::fetch_layer`] /
+    /// [`ExpertWorker::dispatch_tokens`].
     pub dispatch_us: u64,
-    /// Routed experts served from a remote owner.
+    /// Routed experts served from a remote owner (weight lane).
     pub remote_fetches: u64,
-    /// Routed experts this rank already owned.
+    /// Routed experts this rank already owned (weight lane).
     pub local_hits: u64,
+    /// Exact activation payload bytes moved by token dispatch:
+    /// `2 × kept_rows × d_model × 4` per layer (`dist.token_bytes`).
+    pub token_bytes: u64,
+    /// Layer exchanges that ran the token-dispatch lane.
+    pub token_layers: u64,
+    /// Layer exchanges that ran the weight-fetch lane.
+    pub weight_layers: u64,
 }
 
 /// One rank's expert-parallel endpoint: mesh handle + shard plan +
@@ -42,6 +52,7 @@ pub struct ExpertWorker {
     strategy: A2aStrategy,
     ranks_per_node: usize,
     block_len: usize,
+    dispatch: DispatchMode,
     stats: DistStats,
     /// Observed routing demand per (layer, expert) — capacity feedback
     /// for [`ExpertShardPlan::capacity_aware`] replans.
@@ -67,7 +78,26 @@ impl ExpertWorker {
             "world must be a whole number of nodes"
         );
         let loads = vec![vec![0u64; plan.n_experts()]; plan.n_layers()];
-        ExpertWorker { handle, plan, strategy, ranks_per_node, block_len, stats: DistStats::default(), loads }
+        ExpertWorker {
+            handle,
+            plan,
+            strategy,
+            ranks_per_node,
+            block_len,
+            dispatch: DispatchMode::Weights,
+            stats: DistStats::default(),
+            loads,
+        }
+    }
+
+    /// Builder: select the dispatch lane (`--dispatch weights|tokens|auto`).
+    pub fn with_dispatch(mut self, dispatch: DispatchMode) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    pub fn dispatch_mode(&self) -> DispatchMode {
+        self.dispatch
     }
 
     pub fn rank(&self) -> usize {
@@ -193,7 +223,75 @@ impl ExpertWorker {
         self.stats.remote_fetches += fetched.len() as u64;
         self.stats.a2a_bytes += self.handle.stats().bytes_sent - sent_before;
         self.stats.dispatch_us += t0.elapsed().as_micros() as u64;
+        self.stats.weight_layers += 1;
         fetched
+    }
+
+    /// Resolve this layer's dispatch lane. Fixed modes answer locally
+    /// (no collective — the schedule stays a pure function of config);
+    /// `Auto` runs the lockstep byte-cost vote
+    /// ([`super::token::vote_dispatch`]) so every rank picks the same
+    /// lane even when per-rank routing diverges. `need` is the exact
+    /// routed expert set, `kept_rows` this rank's kept-token count.
+    pub fn resolve_mode(
+        &mut self,
+        layer: usize,
+        need: &[usize],
+        kept_rows: usize,
+        d_model: usize,
+    ) -> DispatchMode {
+        match self.dispatch {
+            DispatchMode::Weights => DispatchMode::Weights,
+            DispatchMode::Tokens => DispatchMode::Tokens,
+            DispatchMode::Auto => {
+                let me = self.rank();
+                let remote =
+                    need.iter().filter(|&&e| self.plan.owner(layer, e) != me).count();
+                let weight_bytes = (remote * self.block_len * 4) as f64;
+                let token_bytes = (2 * kept_rows * d_model * 4) as f64;
+                vote_dispatch(&mut self.handle, weight_bytes, token_bytes)
+            }
+        }
+    }
+
+    /// One token-dispatch exchange for `layer` (`dist::token`, three
+    /// lockstep collectives): ship this rank's kept `(expert, moe_in
+    /// row)` activations to their owners, run `run_tail` over the
+    /// deduplicated requests that land here, and return each home row's
+    /// FFN result in `kept` order. Gates/residual stay the caller's job.
+    pub fn dispatch_tokens(
+        &mut self,
+        layer: usize,
+        kept: &[(usize, Vec<f32>)],
+        d_model: usize,
+        run_tail: &mut dyn FnMut(&[(usize, Vec<f32>)]) -> anyhow::Result<Vec<Vec<f32>>>,
+    ) -> anyhow::Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let sent_before = self.handle.stats().bytes_sent;
+        // Same demand-observation semantics as fetch_layer: one count
+        // per distinct routed expert per layer exchange.
+        let mut distinct: Vec<usize> = kept.iter().map(|&(e, _)| e).collect();
+        distinct.sort_unstable();
+        distinct.dedup();
+        for &e in &distinct {
+            self.loads[layer][e] += 1;
+        }
+        let Self { handle, plan, strategy, ranks_per_node, stats, .. } = self;
+        let owner = |e: usize| plan.owner(layer, e);
+        let out = dispatch_layer_tokens(
+            handle,
+            *strategy,
+            *ranks_per_node,
+            &owner,
+            kept,
+            d_model,
+            run_tail,
+        )?;
+        stats.token_bytes += out.payload_bytes;
+        stats.a2a_bytes += handle.stats().bytes_sent - sent_before;
+        stats.token_layers += 1;
+        stats.dispatch_us += t0.elapsed().as_micros() as u64;
+        Ok(out.rows)
     }
 }
 
@@ -280,6 +378,70 @@ mod tests {
         for outcome in run_fetch(1, A2aStrategy::Flat, 1) {
             assert_eq!(outcome.stats.remote_fetches, 0);
             assert_eq!(outcome.stats.local_hits, 6); // 3 experts × 2 layers
+        }
+    }
+
+    #[test]
+    fn token_lane_counts_exact_payload_bytes_and_layers() {
+        let handles = Mesh::new(2);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let plan = ExpertShardPlan::balanced(1, 4, 2);
+                    let mut w = ExpertWorker::new(h, plan, A2aStrategy::Flat, 1, 6)
+                        .with_dispatch(DispatchMode::Tokens);
+                    let me = w.rank();
+                    let d_model = 3;
+                    let kept: Vec<(usize, Vec<f32>)> = vec![
+                        (0, vec![me as f32, 1.0, 2.0]),
+                        (1, vec![me as f32, 3.0, 4.0]),
+                    ];
+                    let rows = w
+                        .dispatch_tokens(0, &kept, d_model, &mut |reqs| {
+                            Ok(reqs.iter().map(|(_, r)| r.iter().map(|v| v * 2.0).collect()).collect())
+                        })
+                        .unwrap();
+                    for ((_, sent), got) in kept.iter().zip(&rows) {
+                        let want: Vec<f32> = sent.iter().map(|v| v * 2.0).collect();
+                        assert_eq!(got, &want);
+                    }
+                    w.stats()
+                })
+            })
+            .collect();
+        for j in joins {
+            let s = j.join().unwrap();
+            assert_eq!(s.token_bytes, 2 * 2 * 3 * 4, "exact payload formula");
+            assert_eq!(s.token_layers, 1);
+            assert_eq!(s.weight_layers, 0);
+            assert!(s.a2a_bytes > 0, "wire accounting still tracks the mesh");
+        }
+    }
+
+    #[test]
+    fn auto_vote_is_unanimous_across_divergent_routing() {
+        let handles = Mesh::new(2);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|h| {
+                std::thread::spawn(move || {
+                    let plan = ExpertShardPlan::balanced(1, 4, 2);
+                    let mut w = ExpertWorker::new(h, plan, A2aStrategy::Flat, 1, 1000)
+                        .with_dispatch(DispatchMode::Auto);
+                    // owner(0, 1) = 1: remote for rank 0, owned by rank 1 —
+                    // per-rank weight estimates diverge (4000 vs 0), the
+                    // vote still lands on one answer everywhere.
+                    let small_batch = w.resolve_mode(0, &[1], 1, 2);
+                    let large_batch = w.resolve_mode(0, &[1], 1000, 2);
+                    (small_batch, large_batch)
+                })
+            })
+            .collect();
+        for j in joins {
+            let (small, large) = j.join().unwrap();
+            assert_eq!(small, DispatchMode::Tokens, "16-byte rows beat a 4 KB block");
+            assert_eq!(large, DispatchMode::Weights, "16 KB of rows loses to the block");
         }
     }
 

@@ -49,11 +49,11 @@ use anyhow::{Context, Result};
 use super::ring_memory::{LayerLoader, RingMemory, RingStats, StageKind};
 use super::session::{self, DecodeModel, SlotState, StepReport};
 use crate::comm::{A2aStrategy, CommStats, FusionBuffer, MeshHandle};
-use crate::dist::{DistStats, ExpertShardPlan, ExpertWorker};
+use crate::dist::{plan_tail_waves, DispatchMode, DistStats, ExpertShardPlan, ExpertWorker};
 use crate::metrics::Registry;
 use crate::moe::routing::{
-    routed_set_from_ids, CarriedKernelSource, LayerParamResolver, RouteQuery, RouteSource,
-    RouteSourceKind, ShardedRouteSource,
+    kept_routed_tokens, routed_set_from_ids, CarriedKernelSource, LayerParamResolver, RouteQuery,
+    RouteSource, RouteSourceKind, ShardedRouteSource,
 };
 use crate::moe::LoadStats;
 use crate::prefetch::RoutePlan;
@@ -793,12 +793,19 @@ impl InferenceEngine {
     /// under the one-hot combine). Requires `Resident` mode — the ring
     /// copy lane and the mesh fetch lane are alternative answers to the
     /// same memory pressure (docs/distributed.md §Fallback).
+    ///
+    /// `dispatch` selects the per-layer lane: `Weights` fetches expert
+    /// blocks to the tokens (above), `Tokens` ships the kept `moe_in`
+    /// activations to the expert owners instead (docs/distributed.md
+    /// §Token dispatch), and `Auto` votes per layer on measured byte
+    /// costs. All three produce bit-identical rank outputs.
     pub fn set_dist(
         &mut self,
         handle: MeshHandle,
         plan: ExpertShardPlan,
         strategy: A2aStrategy,
         ranks_per_node: usize,
+        dispatch: DispatchMode,
     ) -> Result<()> {
         anyhow::ensure!(
             matches!(self.mode, InferMode::Resident),
@@ -832,7 +839,10 @@ impl InferenceEngine {
         }
         let block_len = self.store.expert_block_len();
         self.route = Box::new(ShardedRouteSource::new(model.n_layers, model.n_experts));
-        self.dist = Some(ExpertWorker::new(handle, plan, strategy, ranks_per_node, block_len));
+        self.dist = Some(
+            ExpertWorker::new(handle, plan, strategy, ranks_per_node, block_len)
+                .with_dispatch(dispatch),
+        );
         Ok(())
     }
 
@@ -1202,13 +1212,20 @@ impl InferenceEngine {
         } else if self.dist.is_some() {
             // Expert-parallel walk (docs/distributed.md): the rank's own
             // dense prefix emits the exact routed set (contract v3 —
-            // routing never reads expert weights), the worker fetches the
-            // non-owned routed experts' blocks from their owner ranks,
-            // the fetched bytes are spliced into the staged weights, and
-            // the expert tail runs once. dense ⊕ tail ≡ fused layer
-            // bitwise and unrouted (still-zero) expert slices are inert
-            // under the one-hot combine, so outputs match the
-            // single-host fused path bit-for-bit.
+            // routing never reads expert weights), then one of two lanes
+            // moves the MoE work. **Weights** fetches the non-owned
+            // routed experts' blocks from their owner ranks, splices
+            // them into the staged weights, and runs the expert tail
+            // once. **Tokens** (§Token dispatch) ships the kept tokens'
+            // `moe_in` rows to the experts' owner ranks, runs the tail
+            // there on resident weights, and combines gate + residual
+            // back home. Both lanes match the single-host fused path
+            // bit-for-bit: blocks move as exact bytes, and the expert
+            // FFN is a pure per-row function, so *where* a row's FFN
+            // runs cannot change its value.
+            let (d_model, capacity) =
+                (self.arts.preset.d_model, self.arts.preset.expert_capacity());
+            let (bsz, tsz) = (self.arts.preset.batch_size, self.arts.preset.seq_len);
             let InferenceEngine {
                 store,
                 dist,
@@ -1251,10 +1268,75 @@ impl InferenceEngine {
                 route.observe(l, &counts);
                 load[l].record(&counts);
                 route_stats.exact_experts += exact.len() as u64;
+                let kept_idx =
+                    kept_routed_tokens(dout[dense_route_out].as_i32()?, dout[dense_keep_out].as_f32()?, n_experts);
                 timing.plan_secs += ts.elapsed().as_secs_f64();
 
-                // Stage from the local tier (owned experts real, every
-                // other expert zero), then land the owners' exact bytes.
+                // The per-layer lane decision: fixed modes answer
+                // locally, `auto` runs the lockstep byte-cost vote so
+                // every rank walks the same collective schedule.
+                let mode = dist.resolve_mode(l, &exact, kept_idx.len(), d_model);
+                if mode == DispatchMode::Tokens {
+                    // Token lane: ship kept rows to owners, tail runs
+                    // there in synthetic full-shape waves (h′ = 0,
+                    // gate′ = keep′ = 1, fresh capacity slots), and the
+                    // wave's y = 0 + 1·FFN(row) is exactly the FFN row.
+                    let moe_in = dout[dense_moe_in_out].as_f32()?;
+                    let kept: Vec<(usize, Vec<f32>)> = kept_idx
+                        .iter()
+                        .map(|&(t, e)| (e, moe_in[t * d_model..(t + 1) * d_model].to_vec()))
+                        .collect();
+                    let mut tail_secs = 0f64;
+                    let rows_per_wave = bsz * tsz;
+                    let mut run_tail =
+                        |reqs: &[(usize, Vec<f32>)]| -> Result<Vec<Vec<f32>>> {
+                            let tw = Instant::now();
+                            let weights = store.tensors(l);
+                            let mut out = vec![Vec::new(); reqs.len()];
+                            for w in plan_tail_waves(reqs, rows_per_wave, capacity, d_model) {
+                                let h0 = HostTensor::from_f32(
+                                    &[bsz, tsz, d_model],
+                                    vec![0.0; rows_per_wave * d_model],
+                                );
+                                let mi = HostTensor::from_f32(&[bsz, tsz, d_model], w.moe_in);
+                                let ex = HostTensor::from_i32(&[bsz, tsz], w.expert);
+                                let ga = HostTensor::from_f32(&[bsz, tsz], w.gate);
+                                let po = HostTensor::from_i32(&[bsz, tsz], w.pos);
+                                let ke = HostTensor::from_f32(&[bsz, tsz], w.keep);
+                                let mut tail_in: Vec<&HostTensor> =
+                                    vec![&h0, &mi, &ex, &ga, &po, &ke];
+                                tail_in.extend(tail_weight_idx.iter().map(|&wi| &weights[wi]));
+                                let y = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
+                                let yf = y.as_f32()?;
+                                for (r, &req) in w.slots.iter().enumerate() {
+                                    out[req] = yf[r * d_model..(r + 1) * d_model].to_vec();
+                                }
+                            }
+                            tail_secs += tw.elapsed().as_secs_f64();
+                            Ok(out)
+                        };
+                    let rows = dist.dispatch_tokens(l, &kept, d_model, &mut run_tail)?;
+                    timing.compute_secs += tail_secs;
+
+                    // Home combine: gate + residual on this rank's own
+                    // activations; capacity-dropped tokens keep y = h.
+                    let tc = Instant::now();
+                    let h = dout[dense_h_out].as_f32()?;
+                    let gate = dout[dense_gate_out].as_f32()?;
+                    let mut y = h.to_vec();
+                    for (&(t, _), row) in kept_idx.iter().zip(&rows) {
+                        for j in 0..d_model {
+                            y[t * d_model + j] = h[t * d_model + j] + gate[t] * row[j];
+                        }
+                    }
+                    x = HostTensor::from_f32(&[bsz, tsz, d_model], y);
+                    timing.compute_secs += tc.elapsed().as_secs_f64();
+                    continue;
+                }
+
+                // Weight lane: stage from the local tier (owned experts
+                // real, every other expert zero), then land the owners'
+                // exact bytes.
                 let mut weights = store.tensors(l);
                 let fetched = dist.fetch_layer(l, &exact, |e| store.expert_block(l, e));
                 for (e, block) in &fetched {
@@ -1391,6 +1473,14 @@ impl DecodeModel for InferenceEngine {
             reg.gauge("dist.workers").set(w.world() as u64);
             reg.gauge("dist.a2a_bytes").set(d.a2a_bytes);
             reg.gauge("dist.dispatch_us").set(d.dispatch_us);
+            // Configured lane as an enum gauge: 0 = weights, 1 = tokens,
+            // 2 = auto (`/stats` renders the name back).
+            reg.gauge("dist.dispatch_mode").set(match w.dispatch_mode() {
+                DispatchMode::Weights => 0,
+                DispatchMode::Tokens => 1,
+                DispatchMode::Auto => 2,
+            });
+            reg.gauge("dist.token_bytes").set(d.token_bytes);
             // Ratio gauges travel as integer milli-units (the registry
             // is u64-valued); `/stats` renders them back as a ratio.
             reg.gauge("dist.imbalance_max_over_mean")
@@ -1964,7 +2054,7 @@ mod tests {
                         let plan = ExpertShardPlan::balanced(m.n_layers, m.n_experts, 2);
                         let mut eng =
                             InferenceEngine::new(arts, InferMode::Resident, 7, None).unwrap();
-                        eng.set_dist(h, plan, strategy, 2).unwrap();
+                        eng.set_dist(h, plan, strategy, 2, DispatchMode::Weights).unwrap();
                         let out = eng.generate(&prompts, 3).unwrap();
                         (
                             out,
@@ -2003,11 +2093,12 @@ mod tests {
         let handle = Mesh::new(1).pop().unwrap();
         // A 1-rank mesh with a 2-way plan: rank 0 keeps only its shard.
         let plan = ExpertShardPlan::balanced(model.n_layers, model.n_experts, 2);
-        eng.set_dist(handle, plan.clone(), A2aStrategy::Flat, 1).unwrap_err();
+        eng.set_dist(handle, plan.clone(), A2aStrategy::Flat, 1, DispatchMode::Weights)
+            .unwrap_err();
         // ^ world mismatch must fail loudly; now do it right.
         let handle = Mesh::new(1).pop().unwrap();
         let plan1 = ExpertShardPlan::balanced(model.n_layers, model.n_experts, 1);
-        eng.set_dist(handle, plan1, A2aStrategy::Flat, 1).unwrap();
+        eng.set_dist(handle, plan1, A2aStrategy::Flat, 1, DispatchMode::Weights).unwrap();
         for l in 0..model.n_layers {
             for e in 0..model.n_experts {
                 assert_eq!(
@@ -2027,7 +2118,55 @@ mod tests {
         let model = eng.arts.preset.clone();
         let handle = Mesh::new(1).pop().unwrap();
         let plan = ExpertShardPlan::balanced(model.n_layers, model.n_experts, 1);
-        let err = eng.set_dist(handle, plan, A2aStrategy::Flat, 1).unwrap_err();
+        let err = eng
+            .set_dist(handle, plan, A2aStrategy::Flat, 1, DispatchMode::Weights)
+            .unwrap_err();
         assert!(err.to_string().contains("Resident"), "{}", err);
+    }
+
+    /// The tentpole equivalence for the new lane: token dispatch and the
+    /// auto vote must decode bit-identically to the weight lane (and so
+    /// to single host), with activation bytes actually on the wire.
+    #[test]
+    fn dist_token_and_auto_modes_match_weight_mode_bitwise() {
+        use crate::comm::Mesh;
+
+        let mut solo = engine(InferMode::Resident);
+        let model = solo.arts.preset.clone();
+        let prompts: Vec<Vec<i32>> =
+            (0..model.batch_size).map(|i| vec![i as i32 + 1; 5]).collect();
+        let want = solo.generate(&prompts, 2).unwrap();
+
+        for dispatch in [DispatchMode::Tokens, DispatchMode::Auto] {
+            let handles = Mesh::new(2);
+            let joins: Vec<_> = handles
+                .into_iter()
+                .map(|h| {
+                    let prompts = prompts.clone();
+                    std::thread::spawn(move || {
+                        let arts = Rc::new(ModelArtifacts::load("deep").unwrap());
+                        let m = arts.preset.clone();
+                        let plan = ExpertShardPlan::balanced(m.n_layers, m.n_experts, 2);
+                        let mut eng =
+                            InferenceEngine::new(arts, InferMode::Resident, 7, None).unwrap();
+                        eng.set_dist(h, plan, A2aStrategy::Flat, 1, dispatch).unwrap();
+                        let out = eng.generate(&prompts, 2).unwrap();
+                        (out, eng.dist_stats().unwrap())
+                    })
+                })
+                .collect();
+            for j in joins {
+                let (out, ds) = j.join().unwrap();
+                assert_eq!(out, want, "{:?} must match single-host bitwise", dispatch);
+                if dispatch == DispatchMode::Tokens {
+                    assert!(ds.token_bytes > 0, "kept rows must ride the wire");
+                    assert!(ds.token_layers > 0);
+                    assert_eq!(ds.weight_layers, 0, "fixed token mode never fetches blocks");
+                } else {
+                    // Auto: every layer resolved to exactly one lane.
+                    assert!(ds.token_layers + ds.weight_layers > 0);
+                }
+            }
+        }
     }
 }

@@ -540,6 +540,12 @@ fn stats_json(stats: &ServerStats) -> Json {
             "dist_imbalance_max_over_mean",
             Json::num(reg.gauge("dist.imbalance_max_over_mean").get() as f64 / 1e3),
         ),
+        // Dispatch-lane accounting: which expert-parallel lane ran
+        // (0 = weights, 1 = tokens, 2 = auto) and the exact activation
+        // payload the token lane moved (docs/distributed.md §Token
+        // dispatch).
+        ("dist_dispatch_mode", Json::num(reg.gauge("dist.dispatch_mode").get() as f64)),
+        ("dist_token_bytes", Json::num(reg.gauge("dist.token_bytes").get() as f64)),
         ("counters", reg.snapshot()),
     ])
 }

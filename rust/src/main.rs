@@ -29,7 +29,7 @@ use semoe::config::presets::{
 };
 use semoe::comm::A2aStrategy;
 use semoe::config::train::{ParamResidency, RouteSourceChoice, TrainConfig};
-use semoe::dist::{run_infer_group, run_train_group, DistConfig};
+use semoe::dist::{run_infer_group, run_train_group, DispatchMode, DistConfig};
 use semoe::infer::{GraphPipeline, InferMode, InferenceEngine, PipelineConfig, RoutedRingConfig};
 use semoe::runtime::ModelArtifacts;
 use semoe::sim::{simulate_inference, simulate_ring_offload, simulate_training, Schedule};
@@ -91,6 +91,7 @@ fn print_usage() {
                 OptSpec { name: "workers", help: "expert-parallel worker ranks (infer/train; 1 = single host)", default: Some("1"), is_flag: false },
                 OptSpec { name: "a2a", help: "AllToAll schedule for --workers: flat|hier", default: Some("flat"), is_flag: false },
                 OptSpec { name: "ranks-per-node", help: "node width the hierarchical AllToAll assumes (must divide --workers)", default: Some("1"), is_flag: false },
+                OptSpec { name: "dispatch", help: "expert-parallel lane for --workers: weights|tokens|auto (auto votes per layer on byte costs)", default: Some("weights"), is_flag: false },
                 OptSpec { name: "bind", help: "serve address", default: Some("127.0.0.1:8080"), is_flag: false },
                 OptSpec { name: "target", help: "simulate target (table1|table2|fig10|fig11)", default: Some("table1"), is_flag: false },
                 OptSpec { name: "root", help: "repo root for lint/perf-stub/perf-compare (default: auto-discover)", default: None, is_flag: false },
@@ -118,7 +119,7 @@ fn cmd_info(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Parse the `--workers/--a2a/--ranks-per-node` triple.
+/// Parse the `--workers/--a2a/--ranks-per-node/--dispatch` group.
 fn dist_config(args: &Args) -> Result<DistConfig> {
     let workers = args.usize("workers", 1);
     let raw = args.str("a2a", "flat");
@@ -128,6 +129,10 @@ fn dist_config(args: &Args) -> Result<DistConfig> {
         _ => anyhow::bail!("unknown --a2a '{}' (accepted: flat|hier)", raw),
     };
     let ranks_per_node = args.usize("ranks-per-node", 1);
+    let raw = args.str("dispatch", "weights");
+    let dispatch = DispatchMode::parse(&raw).ok_or_else(|| {
+        anyhow::anyhow!("unknown --dispatch '{}' (accepted: weights|tokens|auto)", raw)
+    })?;
     anyhow::ensure!(workers > 0, "--workers must be at least 1");
     anyhow::ensure!(
         ranks_per_node > 0 && workers % ranks_per_node == 0,
@@ -135,7 +140,7 @@ fn dist_config(args: &Args) -> Result<DistConfig> {
         ranks_per_node,
         workers
     );
-    Ok(DistConfig { workers, strategy, ranks_per_node })
+    Ok(DistConfig { workers, strategy, ranks_per_node, dispatch })
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -156,6 +161,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         log_every: args.usize("log-every", 5),
         dist_world: dc.workers,
+        dist_dispatch: dc.dispatch,
         ..Default::default()
     };
     if dc.workers > 1 {
@@ -385,12 +391,13 @@ fn infer_group(preset: &str, dc: &DistConfig, n_new: usize, seed: u64) -> Result
         .map(|r| (0..b).map(|i| vec![(i as i32 + 1) * 3 + r as i32; 4]).collect())
         .collect();
     println!(
-        "inference [{} expert-parallel workers, {} AllToAll], {} prompts/rank",
+        "inference [{} expert-parallel workers, {} AllToAll, {} dispatch], {} prompts/rank",
         dc.workers,
         match dc.strategy {
             A2aStrategy::Flat => "flat",
             A2aStrategy::Hierarchical => "hierarchical",
         },
+        dc.dispatch.as_str(),
         b
     );
     let g = run_infer_group(preset, dc, &prompts, n_new, seed)?;
@@ -399,14 +406,17 @@ fn infer_group(preset: &str, dc: &DistConfig, n_new: usize, seed: u64) -> Result
     }
     for r in &g.ranks {
         println!(
-            "rank {}: {} tokens in {:.2}s, {} remote / {} local expert fetches, a2a {}, \
-             imbalance {:.2}",
+            "rank {}: {} tokens in {:.2}s, {} remote / {} local expert fetches, \
+             {} weight / {} token layers, a2a {}, token payload {}, imbalance {:.2}",
             r.rank,
             r.tokens,
             r.secs,
             r.dist.remote_fetches,
             r.dist.local_hits,
+            r.dist.weight_layers,
+            r.dist.token_layers,
             human_bytes(r.dist.a2a_bytes),
+            human_bytes(r.dist.token_bytes),
             r.imbalance
         );
     }
@@ -649,7 +659,7 @@ fn cmd_perf_compare(args: &Args) -> Result<()> {
     }
     if cmp.regressed {
         anyhow::bail!(
-            "perf-compare: tokens_per_s regressed more than {:.0}% vs {}",
+            "perf-compare: a gated throughput metric regressed more than {:.0}% vs {}",
             bench_stub::REGRESSION_TOLERANCE * 100.0,
             cmp.baseline_sha
         );

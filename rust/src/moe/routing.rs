@@ -115,6 +115,20 @@ pub fn routed_set_from_ids(ids: &[i32], n_experts: usize) -> (Vec<usize>, Vec<us
     (set, counts)
 }
 
+/// Pair each *kept* token's flat index with its routed expert — the
+/// token-dispatch lane's shipping list (`dist::token`). A token whose
+/// `keep` mask is 0 (capacity overflow) computes no expert FFN anywhere,
+/// so it never rides the wire; out-of-range ids are ignored like
+/// [`routed_set_from_ids`].
+pub fn kept_routed_tokens(ids: &[i32], keep: &[f32], n_experts: usize) -> Vec<(usize, usize)> {
+    assert_eq!(ids.len(), keep.len(), "route/keep length mismatch");
+    ids.iter()
+        .enumerate()
+        .filter(|&(t, &id)| keep[t] != 0.0 && (0..n_experts as i32).contains(&id))
+        .map(|(t, &id)| (t, id as usize))
+        .collect()
+}
+
 // ---------------------------------------------------------------------
 // Embedding proxy
 // ---------------------------------------------------------------------
@@ -378,6 +392,15 @@ mod tests {
         let (set, counts) = routed_set_from_ids(&[], 3);
         assert!(set.is_empty());
         assert_eq!(counts, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn kept_routed_tokens_skips_dropped_and_out_of_range() {
+        let ids = [2, 0, 2, -1, 5, 99];
+        let keep = [1.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        // Token 1 is capacity-dropped, token 3/5 carry impossible ids.
+        assert_eq!(kept_routed_tokens(&ids, &keep, 6), vec![(0, 2), (2, 2), (4, 5)]);
+        assert!(kept_routed_tokens(&[], &[], 6).is_empty());
     }
 
     /// A stub fallback that returns a fixed plan.

@@ -235,6 +235,47 @@ impl CostModel {
         AllToAllPlan::price(&self.topo, total / pairs, strategy).time
     }
 
+    // ---------------------------------------- dist token-dispatch lane
+
+    /// Per-layer mesh bytes of **token dispatch**: every kept token's
+    /// `moe_in` row crosses to its expert's owner and the FFN result row
+    /// crosses back — `2 × tokens × d_model × 4` exactly. This is not an
+    /// expectation: the runtime puts ALL kept rows on the collective
+    /// (self-owned included), so `DistStats::token_bytes` must equal
+    /// this formula to the byte (asserted in `rust/tests/prop.rs`).
+    pub fn token_dispatch_layer_bytes(&self, tokens: f64) -> f64 {
+        2.0 * tokens * self.model.d_model as f64 * 4.0
+    }
+
+    /// Per-pass mesh bytes of token dispatch with `world` ranks: the
+    /// per-layer payload, every layer. Unlike the weight lane this does
+    /// NOT shrink with routing skew — the wire cost is a pure function
+    /// of the kept-token count — which is exactly why the adaptive
+    /// planner exists: tokens win iff
+    /// `2·T·H·4 < routed_remote_experts × block_bytes` per layer.
+    pub fn dist_token_a2a_bytes(&self, tokens: f64, world: usize) -> f64 {
+        if world <= 1 {
+            return 0.0;
+        }
+        self.model.n_layers as f64 * self.token_dispatch_layer_bytes(tokens)
+    }
+
+    /// Wall seconds of one token-dispatch pass's exchanges under a
+    /// strategy — the token-lane twin of [`Self::dist_pass_secs`].
+    pub fn dist_token_pass_secs(
+        &self,
+        tokens: f64,
+        world: usize,
+        strategy: A2aStrategy,
+    ) -> f64 {
+        let total = self.dist_token_a2a_bytes(tokens, world);
+        if total <= 0.0 {
+            return 0.0;
+        }
+        let pairs = (world * (world - 1)) as f64;
+        AllToAllPlan::price(&self.topo, total / pairs, strategy).time
+    }
+
     // ------------------------------------------------- pipelined lane
 
     /// Device seconds of ONE layer's dense prefix (attention + router —
@@ -377,7 +418,7 @@ const PARSE_OPS_PER_TOKEN: f64 = 4.0;
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::presets::{cluster_for_gpus, table1_model, table1_rows};
+    use crate::config::presets::{cluster_for_gpus, local_preset, table1_model, table1_rows};
 
     #[test]
     fn flops_independent_of_expert_count() {
@@ -544,6 +585,48 @@ mod tests {
         assert!(flat > 0.0 && hier > 0.0);
         assert!(hier <= flat, "hierarchical must not price above flat: {} vs {}", hier, flat);
         assert_eq!(cm.dist_pass_secs(tokens, 1.2, 1, A2aStrategy::Flat), 0.0);
+    }
+
+    /// Token-dispatch pricing and the planner crossover: the activation
+    /// lane is an exact linear function of the kept-token count, so it
+    /// undercuts the weight lane exactly when the batch is small
+    /// relative to the expert block — and loses when the batch floods.
+    /// Mirrored in `python/tests/test_cost_model.py`. Uses the local
+    /// `deep` preset (527 KB expert blocks) where both regimes are
+    /// reachable — Table-1 blocks are ~537 MB and tokens always win.
+    #[test]
+    fn token_dispatch_crossover_tracks_batch_vs_block_size() {
+        let cm = CostModel::new(local_preset("deep"), cluster_for_gpus(8));
+        assert_eq!(cm.dist_token_a2a_bytes(128.0, 1), 0.0, "solo rank ships nothing");
+        // Exact per-layer formula, no expectation involved.
+        assert_eq!(
+            cm.token_dispatch_layer_bytes(128.0),
+            2.0 * 128.0 * cm.model.d_model as f64 * 4.0
+        );
+        // Linear in tokens, world-independent above 1 (every kept row
+        // rides the collective regardless of how many peers exist).
+        assert_eq!(
+            cm.dist_token_a2a_bytes(256.0, 2),
+            2.0 * cm.dist_token_a2a_bytes(128.0, 2)
+        );
+        assert_eq!(cm.dist_token_a2a_bytes(128.0, 2), cm.dist_token_a2a_bytes(128.0, 8));
+        // The crossover: per layer, tokens win iff
+        // 2·T·H·4 < routed_remote × block_bytes. The routed expert set
+        // saturates at n_experts while the token payload keeps growing
+        // linearly — below some T tokens must win, above it weights
+        // must win. Probe both regimes rather than hardcode the edge.
+        let world = 8;
+        let small = cm.dist_token_a2a_bytes(8.0, world) < cm.dist_a2a_bytes(8.0, 0.0, world);
+        let flood =
+            cm.dist_token_a2a_bytes(65536.0, world) > cm.dist_a2a_bytes(65536.0, 0.0, world);
+        assert!(small, "8 kept rows must undercut fetching the routed blocks");
+        assert!(flood, "65536 kept rows must cost more than the bounded expert set");
+        // Pricing twin: hierarchical at or below flat, zero solo.
+        let flat = cm.dist_token_pass_secs(128.0, 8, A2aStrategy::Flat);
+        let hier = cm.dist_token_pass_secs(128.0, 8, A2aStrategy::Hierarchical);
+        assert!(flat > 0.0 && hier > 0.0);
+        assert!(hier <= flat, "{} vs {}", hier, flat);
+        assert_eq!(cm.dist_token_pass_secs(128.0, 1, A2aStrategy::Flat), 0.0);
     }
 
     /// Contract-v2 pricing: obtaining routed sets from the kernel's own

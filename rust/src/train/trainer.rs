@@ -65,11 +65,11 @@ fn sync_grad(mesh: &mut Option<MeshHandle>, grad: &mut [f32]) {
 use super::optimizer::{cpu_adamw, cpu_adamw_zero_grad, init_params, Group, ParamState};
 use crate::comm::{CommStats, MeshHandle};
 use crate::config::train::{RouteSourceChoice, TrainConfig};
-use crate::dist::{DistStats, DistTrainCtx};
+use crate::dist::{plan_tail_waves, DispatchMode, DistStats, DistTrainCtx};
 use crate::metrics::{Phase, Timeline};
 use crate::moe::routing::{
-    routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource, LayerParamResolver,
-    RouteQuery, RouteSource, RouteSourceKind,
+    kept_routed_tokens, routed_set_from_ids, CarriedKernelSource, EmbeddingProxySource,
+    LayerParamResolver, RouteQuery, RouteSource, RouteSourceKind,
 };
 use crate::moe::LoadStats;
 use crate::prefetch::{RoutePlan, SparseScheduler};
@@ -690,7 +690,82 @@ impl OffloadTrainer {
                 aux_total += dout[ld_aux].scalar()?;
 
                 // Exactly one tail run per layer, over the prefix's
-                // emitted activations + routing and the spliced experts.
+                // emitted activations + routing and the spliced experts
+                // — locally on the weight lane, or on the experts' owner
+                // ranks when the dist token-dispatch lane is selected
+                // (docs/distributed.md §Token dispatch). The splices
+                // above ran either way: the backward sweep needs every
+                // routed expert's weights resident regardless of where
+                // the forward FFN executed.
+                let token_kept = match dist.as_ref() {
+                    Some(ctx) => {
+                        let kept_idx = kept_routed_tokens(
+                            dout[ld_route].as_i32()?,
+                            dout[ld_keep].as_f32()?,
+                            n_experts,
+                        );
+                        let token_bytes = (2 * kept_idx.len() * model.d_model * 4) as f64;
+                        (ctx.resolve_dispatch(token_bytes) == DispatchMode::Tokens)
+                            .then_some(kept_idx)
+                    }
+                    None => None,
+                };
+                if let Some(kept_idx) = token_kept {
+                    let d_model = model.d_model;
+                    let capacity = model.expert_capacity();
+                    let (bsz, tsz) = (model.batch_size, model.seq_len);
+                    let rows_per_wave = bsz * tsz;
+                    let moe_in = dout[ld_moe_in].as_f32()?;
+                    let kept: Vec<(usize, Vec<f32>)> = kept_idx
+                        .iter()
+                        .map(|&(t, e)| (e, moe_in[t * d_model..(t + 1) * d_model].to_vec()))
+                        .collect();
+                    let ctx = dist.as_mut().expect("token lane implies dist");
+                    let layer = &layers[l];
+                    let rows = timeline.time(Phase::Compute, || {
+                        ctx.dispatch_tokens(l, &kept, d_model, &mut |reqs| {
+                            // Owner-side synthetic waves: h′ = 0 and
+                            // gate′ = keep′ = 1, so each wave's y row is
+                            // exactly the FFN of the requested row.
+                            let tail_weights = sparse_tensors(layer);
+                            let mut out = vec![Vec::new(); reqs.len()];
+                            for w in plan_tail_waves(reqs, rows_per_wave, capacity, d_model) {
+                                let h0 = HostTensor::from_f32(
+                                    &[bsz, tsz, d_model],
+                                    vec![0.0; rows_per_wave * d_model],
+                                );
+                                let mi = HostTensor::from_f32(&[bsz, tsz, d_model], w.moe_in);
+                                let ex = HostTensor::from_i32(&[bsz, tsz], w.expert);
+                                let ga = HostTensor::from_f32(&[bsz, tsz], w.gate);
+                                let po = HostTensor::from_i32(&[bsz, tsz], w.pos);
+                                let ke = HostTensor::from_f32(&[bsz, tsz], w.keep);
+                                let mut tail_in: Vec<&HostTensor> =
+                                    vec![&h0, &mi, &ex, &ga, &po, &ke];
+                                tail_in.extend(tail_weights.iter());
+                                let y = expert_tail.run_ref(&tail_in)?.swap_remove(tail_y);
+                                let yf = y.as_f32()?;
+                                for (r, &req) in w.slots.iter().enumerate() {
+                                    out[req] = yf[r * d_model..(r + 1) * d_model].to_vec();
+                                }
+                            }
+                            Ok(out)
+                        })
+                    })?;
+                    // Home combine: gate + residual on this rank's own
+                    // prefix activations; capacity-dropped tokens keep
+                    // y = h.
+                    let hact = dout[ld_h].as_f32()?;
+                    let gate = dout[ld_gate].as_f32()?;
+                    let mut y = hact.to_vec();
+                    for (&(t, _), row) in kept_idx.iter().zip(&rows) {
+                        for j in 0..d_model {
+                            y[t * d_model + j] = hact[t * d_model + j] + gate[t] * row[j];
+                        }
+                    }
+                    xs.push(x);
+                    x = HostTensor::from_f32(&[bsz, tsz, d_model], y);
+                    continue;
+                }
                 let tail_weights = sparse_tensors(&layers[l]);
                 let mut tail_in: Vec<&HostTensor> = vec![
                     &dout[ld_h],

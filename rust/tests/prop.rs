@@ -245,6 +245,158 @@ fn prop_hierarchical_a2a_equals_flat() {
     }
 }
 
+// ------------------------------------------------------- token dispatch
+
+/// Randomized token-dispatch collectives over a small mesh: every rank
+/// ships a random set of kept activation rows to their expert owners,
+/// owners apply a deterministic per-expert transform, and the replies
+/// must land at home bit-exact and in request order. The measured
+/// `payload_bytes` must equal `CostModel::token_dispatch_layer_bytes`
+/// exactly — the planner's vote is only sound if the accounting it is
+/// based on is.
+#[test]
+fn prop_token_dispatch_payload_matches_cost_model() {
+    use semoe::comm::A2aStrategy;
+    use semoe::config::presets::{cluster_for_gpus, local_preset};
+    use semoe::dist::dispatch_layer_tokens;
+    use semoe::sim::CostModel;
+
+    let preset = local_preset("deep");
+    let d_model = preset.d_model;
+    let cm = CostModel::new(preset, cluster_for_gpus(8));
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xD15 ^ (seed * 7919));
+        let p = rng.range(1, 4);
+        let nodes = rng.range(1, 4);
+        let world = (p * nodes).max(2);
+        let n_experts = world + rng.range(0, 6);
+        let strategy =
+            if rng.next_f64() < 0.5 { A2aStrategy::Flat } else { A2aStrategy::Hierarchical };
+        let handles = Mesh::new(world);
+        let joins: Vec<_> = handles
+            .into_iter()
+            .map(|mut h| {
+                std::thread::spawn(move || {
+                    let me = h.rank();
+                    let mut r = Rng::new(5000 + seed * 100 + me as u64);
+                    let kept: Vec<(usize, Vec<f32>)> = (0..r.range(0, 12))
+                        .map(|_| {
+                            let e = r.below(n_experts);
+                            let row: Vec<f32> =
+                                (0..d_model).map(|_| r.normal() as f32).collect();
+                            (e, row)
+                        })
+                        .collect();
+                    let owner_of = |e: usize| e % world;
+                    let mut run_tail = |reqs: &[(usize, Vec<f32>)]| {
+                        for &(e, _) in reqs {
+                            assert_eq!(owner_of(e), me, "request routed to a non-owner");
+                        }
+                        Ok(reqs
+                            .iter()
+                            .map(|(e, row)| {
+                                row.iter().map(|v| v * (*e as f32 + 1.0)).collect()
+                            })
+                            .collect())
+                    };
+                    let out = dispatch_layer_tokens(
+                        &mut h, strategy, p, &owner_of, &kept, d_model, &mut run_tail,
+                    )
+                    .unwrap();
+                    // replies in request order, transform applied bit-exact
+                    assert_eq!(out.rows.len(), kept.len());
+                    for ((e, row), got) in kept.iter().zip(&out.rows) {
+                        let want: Vec<f32> =
+                            row.iter().map(|v| v * (*e as f32 + 1.0)).collect();
+                        assert_eq!(got, &want, "reply diverged for expert {}", e);
+                    }
+                    (kept.len(), out.payload_bytes)
+                })
+            })
+            .collect();
+        for j in joins {
+            let (kept_rows, payload) = j.join().unwrap();
+            assert_eq!(payload, (2 * kept_rows * d_model * 4) as u64);
+            assert_eq!(
+                payload as f64,
+                cm.token_dispatch_layer_bytes(kept_rows as f64),
+                "measured payload diverged from the cost-model prediction"
+            );
+        }
+    }
+}
+
+/// Randomized worlds × skews × dispatch modes on the real decode path:
+/// weight dispatch, token dispatch and the auto planner must all produce
+/// outputs bitwise equal to each other and to a single host — the lane
+/// moves different bytes, never different math.
+#[test]
+fn prop_dispatch_modes_bitwise_equal_across_random_worlds() {
+    use semoe::dist::{run_infer_group, zipf_prompts, DispatchMode, DistConfig};
+    use semoe::runtime::ModelArtifacts;
+
+    let preset = "tiny";
+    let arts = ModelArtifacts::load(preset).expect("tiny artifacts (run `make artifacts`)");
+    let (vocab, b) = (arts.preset.vocab_size, arts.preset.batch_size);
+    let smoke = std::env::var("SEMOE_SMOKE").map(|v| v == "1").unwrap_or(false);
+    let cases = if smoke { 2 } else { 5 };
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xA2A ^ (seed * 7919));
+        let w = rng.range(2, 5);
+        let s = rng.next_f64() * 1.5;
+        let n_new = rng.range(1, 3);
+        let prompts: Vec<Vec<Vec<i32>>> = (0..w)
+            .map(|r| zipf_prompts(vocab, b, 4, s, 9000 + seed * 100 + r as u64))
+            .collect();
+        let solo = run_infer_group(
+            preset,
+            &DistConfig::default(),
+            std::slice::from_ref(&prompts[0]),
+            n_new,
+            7,
+        )
+        .expect("single-host run");
+        let want_rank0 = solo.ranks[0].outputs.clone();
+        let mut all_ranks_ref: Option<Vec<Vec<Vec<i32>>>> = None;
+        for mode in [DispatchMode::Weights, DispatchMode::Tokens, DispatchMode::Auto] {
+            let cfg = DistConfig { workers: w, dispatch: mode, ..DistConfig::default() };
+            let g = run_infer_group(preset, &cfg, &prompts, n_new, 7).expect("group run");
+            assert_eq!(
+                g.ranks[0].outputs,
+                want_rank0,
+                "rank 0 diverged from single host (seed {} w {} mode {})",
+                seed,
+                w,
+                mode.as_str()
+            );
+            let outs: Vec<Vec<Vec<i32>>> =
+                g.ranks.iter().map(|r| r.outputs.clone()).collect();
+            match &all_ranks_ref {
+                None => all_ranks_ref = Some(outs),
+                Some(want) => assert_eq!(
+                    &outs,
+                    want,
+                    "outputs diverged across dispatch modes (seed {} w {} mode {})",
+                    seed,
+                    w,
+                    mode.as_str()
+                ),
+            }
+            if mode == DispatchMode::Tokens {
+                let moved: u64 = g.ranks.iter().map(|r| r.dist.token_bytes).sum();
+                let row_bytes = (2 * arts.preset.d_model * 4) as u64;
+                assert!(moved > 0, "token mode must ship activation rows");
+                assert_eq!(
+                    moved % row_bytes,
+                    0,
+                    "token payload must be a whole number of round-trip rows"
+                );
+                assert!(g.ranks.iter().all(|r| r.dist.weight_layers == 0));
+            }
+        }
+    }
+}
+
 // ---------------------------------------------------------------- storage
 
 #[test]

@@ -54,6 +54,11 @@ echo "== tier1: expert-parallel CLI smoke (2 workers, mesh dispatch, poisonable 
 cargo run --release -- infer --workers 2 --preset tiny --tokens 2
 cargo run --release -- train --workers 2 --offload --preset tiny --steps 2
 
+echo "== tier1: token-dispatch CLI smoke (activations to expert owners; auto votes per layer)"
+cargo run --release -- infer --workers 2 --preset tiny --tokens 2 --dispatch tokens
+cargo run --release -- infer --workers 2 --preset tiny --tokens 2 --dispatch auto
+cargo run --release -- train --workers 2 --offload --preset tiny --steps 2 --dispatch tokens
+
 echo "== tier1: expert-parallel decode bench smoke (workers x a2a x skew table, rank0 bitwise invariant)"
 SEMOE_SMOKE=1 cargo bench --bench fig11_hierarchical_a2a
 
@@ -70,9 +75,11 @@ rm -rf "$CKPT_DIR"
 
 echo "== tier1: python-side layer contract check (v3: split + composition bit-identity)"
 if python3 -c "import jax" >/dev/null 2>&1; then
-    (cd python && python3 -m pytest tests/test_contract.py -q)
+    (cd python && python3 -m pytest tests/test_contract.py tests/test_cost_model.py -q)
 else
     echo "tier1: jax unavailable — skipping python contract check" >&2
+    # The cost-model mirror is pure python (no jax): always runs.
+    (cd python && python3 -m pytest tests/test_cost_model.py -q)
 fi
 
 echo "== tier1: 2D-prefetch ablation smoke (asserts 2D < 1D bytes under skew, v2 planner < v1 shadow cost, v3 tail rerun < v2 full-layer rerun)"
@@ -84,8 +91,16 @@ SEMOE_SMOKE=1 cargo bench --bench table2_inference
 
 echo "== tier1: perf trajectory stub (BENCH_tier1.json + BENCH_trajectory.json from the smoke reports)"
 cargo run --release -- perf-stub
+if [ ! -s BENCH_tier1.json ]; then
+    echo "tier1: BENCH_tier1.json missing or empty after perf-stub — the snapshot must be written unconditionally" >&2
+    exit 1
+fi
 if [ ! -s BENCH_trajectory.json ]; then
     echo "tier1: BENCH_trajectory.json missing or empty after perf-stub — the trajectory must be seeded even from smoke-only reports" >&2
+    exit 1
+fi
+if ! grep -q dist_token_dispatch_tokens_per_s BENCH_trajectory.json; then
+    echo "tier1: dist_token_dispatch_tokens_per_s missing from BENCH_trajectory.json — perf-stub must track the token-dispatch lane (null when the bench has not run)" >&2
     exit 1
 fi
 
